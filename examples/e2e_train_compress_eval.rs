@@ -1,0 +1,119 @@
+//! END-TO-END DRIVER — proves all three layers compose on a real
+//! workload:
+//!
+//! 1. **Train** a Llama-architecture model from scratch on the
+//!    synthetic corpus by driving the AOT `train_step` artifact
+//!    (fwd+bwd+AdamW in XLA) from rust, logging the loss curve.
+//! 2. **Compress** it one-shot with SLaB through the layer-wise
+//!    pipeline (calibration forwards + the Pallas `decompose`
+//!    artifact) and with the Wanda/SparseGPT baselines natively.
+//! 3. **Evaluate** perplexity + the seven zero-shot suites for every
+//!    variant and print a Table-I-shaped comparison.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_train_compress_eval -- [--model small] [--steps 300]
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use slab::baselines::{Method, SparseGptConfig};
+use slab::coordinator::{compress_model, Engine};
+use slab::eval::{perplexity, zero_shot};
+use slab::experiments::Lab;
+use slab::model::Params;
+use slab::report::Table;
+use slab::slab::SlabConfig;
+use slab::train::train;
+use slab::util::cli::Args;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(false).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let model = args.get_str("model", "small");
+    let artifacts = PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let runs = PathBuf::from(args.get_str("runs", "runs"));
+    let mut lab = Lab::new(&artifacts, &runs)?;
+    lab.task_items = args.get_usize("items", 40).unwrap_or(40);
+
+    let cfg = lab
+        .rt
+        .manifest
+        .config(&model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?
+        .clone();
+    let steps = args
+        .get_usize("steps", lab.default_steps(&model))
+        .unwrap_or(300);
+
+    println!("== e2e: {} ({} params, {} layers, d={}) ==", cfg.name, cfg.n_params(), cfg.n_layers, cfg.dim);
+
+    // ---- 1. train -------------------------------------------------------
+    let corpus = lab.corpus(&model);
+    let init = Params::init(&cfg, 0x1417 ^ slab::experiments::CORPUS_SEED);
+    let (dense, report) = train(&lab.rt, &init, &corpus.train, steps, lab.seed, 20)?;
+    println!(
+        "trained {} steps in {:.1}s ({:.0} tok/s); loss {:.3} → {:.3}",
+        report.steps,
+        report.wall_secs,
+        report.tokens_per_sec,
+        report.loss_curve.first().map(|x| x.1).unwrap_or(f32::NAN),
+        report.final_loss
+    );
+    let mut curve = Table::new("Loss curve", &["step", "loss"]);
+    for (s, l) in &report.loss_curve {
+        curve.push_row(vec![s.to_string(), format!("{l:.4}")]);
+    }
+    curve.print();
+    std::fs::create_dir_all(&runs)?;
+    dense.save(&runs.join(format!("{model}.slabckpt")))?;
+
+    // ---- 2+3. compress & evaluate every method ---------------------------
+    let suites = lab.suites();
+    let mut table = Table::new(
+        &format!("E2E comparison — {model}, US 50% (+ dense reference)"),
+        &["Method", "ppl↓", "acc↑", "compress s"],
+    );
+    let methods: Vec<(Method, Engine)> = vec![
+        (Method::Dense, Engine::Native),
+        (
+            Method::SparseGpt {
+                sparsity: 0.5,
+                pattern: None,
+                cfg: SparseGptConfig::default(),
+            },
+            Engine::Native,
+        ),
+        (
+            Method::Wanda {
+                sparsity: 0.5,
+                pattern: None,
+            },
+            Engine::Native,
+        ),
+        // SLaB through the AOT Pallas decompose artifact — the full
+        // L1→L2→L3 composition.
+        (Method::Slab(SlabConfig::default()), Engine::Artifact),
+    ];
+    for (m, engine) in methods {
+        let t0 = std::time::Instant::now();
+        let params = if matches!(m, Method::Dense) {
+            dense.clone()
+        } else {
+            compress_model(&lab.rt, &dense, &corpus.calib, &m, engine)?.params
+        };
+        let secs = t0.elapsed().as_secs_f64();
+        let ppl = perplexity(&lab.rt, &params, &corpus.valid)?;
+        let (_, acc) = zero_shot(&lab.rt, &params, &suites)?;
+        println!("{:<10} ppl {:>8.3}  acc {:>5.1}%  ({secs:.1}s)", m.name(), ppl, acc * 100.0);
+        table.push_row(vec![
+            m.name(),
+            Table::metric(ppl),
+            Table::pct(acc),
+            format!("{secs:.1}"),
+        ]);
+    }
+    table.print();
+    table.append_to(&runs.join("e2e.md"))?;
+    println!("done — results appended to {}", runs.join("e2e.md").display());
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: decompose one weight matrix with SLaB and inspect what
+//! you get — no artifacts needed (pure native path).
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use slab::slab::{decompose, ActStats, SlabConfig, SlabLayer};
+use slab::tensor::{matmul_bt, Mat};
+use slab::util::rng::Pcg64;
+
+fn main() {
+    // A fake "linear layer": weight (256 out, 512 in) + calibration
+    // activations (1024 samples).
+    let mut rng = Pcg64::seed_from_u64(7);
+    let w = Mat::randn(256, 512, 0.02, &mut rng);
+    let x = Mat::randn(1024, 512, 1.0, &mut rng);
+    let stats = ActStats::from_activations(&x);
+
+    // Decompose at 50% compression (paper defaults: rank 1, 20 iters,
+    // groups (1, Din), FP16 accounting).
+    let cfg = SlabConfig::default();
+    let d = decompose(&w, &stats, &cfg).expect("decompose");
+
+    println!("SLaB quickstart — W (256x512) at CR {:.0}%", cfg.cr * 100.0);
+    println!("  keep fraction (Eq.10): {:.4}", cfg.keep_fraction(256, 512).unwrap());
+    println!("  non-zeros kept in W_S: {} / {}", d.kept, w.numel());
+    println!("  Frobenius error per iteration: {:?}",
+        d.frob_trace.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>());
+
+    // The packed deployment format.
+    let layer = SlabLayer::from_decomposition(&d);
+    let dense_bytes = w.numel() * 4;
+    println!("  deployed bytes: {} (dense f32: {}, ratio {:.2}x)",
+        layer.nbytes_deploy(), dense_bytes,
+        dense_bytes as f64 / layer.nbytes_deploy() as f64);
+
+    // Compressed forward ≡ dense forward with the reconstruction.
+    let xb = Mat::randn(4, 512, 1.0, &mut rng);
+    let y_packed = layer.forward(&xb);
+    let y_dense = matmul_bt(&xb, &layer.reconstruct());
+    println!("  packed-vs-dense forward max |Δ|: {:.2e}",
+        y_packed.sub(&y_dense).max_abs());
+
+    // Compare against plain Wanda at the same CR.
+    let wanda = slab::baselines::wanda_prune(&w, &stats, 0.5, None);
+    println!("  ‖W−Ŵ‖_F: SLaB {:.4} vs Wanda {:.4}",
+        w.frob_dist(&d.reconstruct()), wanda.frob_err);
+}

@@ -1,0 +1,121 @@
+//! Serving demo: dynamic-batched generation over the AOT
+//! prefill/decode artifacts, dense vs SLaB-compressed weights.
+//!
+//! Spawns client threads that submit generation requests; the router
+//! batches them up to `serve_batch`, reports throughput, latency
+//! percentiles, batch occupancy, and the deployed-weight byte ratio.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_compressed -- [--model small] [--requests 24]
+//! ```
+
+use slab::baselines::Method;
+use slab::coordinator::{compress_model, Engine, Request, Server, ServerConfig};
+use slab::experiments::Lab;
+use slab::slab::SlabConfig;
+use slab::util::cli::Args;
+use std::path::PathBuf;
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    sorted[((sorted.len() as f64 - 1.0) * q) as usize]
+}
+
+fn run_server(
+    artifacts: &PathBuf,
+    params: slab::model::Params,
+    prompts: &[Vec<i32>],
+    label: &str,
+) -> anyhow::Result<()> {
+    let server = Server::start(artifacts.clone(), params, ServerConfig::default());
+    // Client threads hammer the queue concurrently.
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            server.submit(Request {
+                prompt: p.clone(),
+                max_new: 16,
+            })
+        })
+        .collect();
+    let mut lat: Vec<f64> = Vec::new();
+    let mut queue: Vec<f64> = Vec::new();
+    let mut toks = 0usize;
+    for rx in rxs {
+        let r = rx.recv()?;
+        lat.push(r.latency_ms);
+        queue.push(r.queue_ms);
+        toks += r.tokens.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown().map_err(|e| anyhow::anyhow!("{e}"))?;
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "[{label}] {} req / {} batches (occ {:.2}) — {:.1} gen-tok/s, latency p50 {:.0} ms p95 {:.0} ms, {} tokens in {:.1}s",
+        stats.requests,
+        stats.batches,
+        stats.occupancy(4),
+        stats.tokens_per_sec(),
+        percentile(&lat, 0.5),
+        percentile(&lat, 0.95),
+        toks,
+        wall
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(false).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let model = args.get_str("model", "small");
+    let n_req = args.get_usize("requests", 24).unwrap_or(24);
+    let artifacts = PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let runs = PathBuf::from(args.get_str("runs", "runs"));
+
+    // IMPORTANT: xla_extension 0.5.1 segfaults when two PJRT CPU
+    // clients coexist in one process, so the compression phase (which
+    // owns a client via Lab) is scoped to finish — and its client to
+    // drop — before each Server spins up its own client in the router
+    // thread.
+    let (dense, compressed, prompts) = {
+        let lab = Lab::new(&artifacts, &runs)?;
+        let dense = lab.dense_params(&model, lab.default_steps(&model))?;
+        let corpus = lab.corpus(&model);
+        let slab_model = compress_model(
+            &lab.rt,
+            &dense,
+            &corpus.calib,
+            &Method::Slab(SlabConfig::default()),
+            Engine::Artifact,
+        )?;
+        // Deployed-weight accounting (packed CSR + bitplane + rank-1).
+        let dense_bytes: usize = slab_model
+            .slab_layers
+            .iter()
+            .map(|(_, l)| l.dout() * l.din() * 4)
+            .sum();
+        let packed_bytes: usize = slab_model
+            .slab_layers
+            .iter()
+            .map(|(_, l)| l.nbytes_deploy())
+            .sum();
+        println!(
+            "compressed {} linears: packed {:.2} MiB vs dense {:.2} MiB ({:.2}x smaller)",
+            slab_model.slab_layers.len(),
+            packed_bytes as f64 / (1 << 20) as f64,
+            dense_bytes as f64 / (1 << 20) as f64,
+            dense_bytes as f64 / packed_bytes as f64
+        );
+        let mut rng = slab::util::rng::Pcg64::seed_from_u64(31);
+        let prompts: Vec<Vec<i32>> = (0..n_req)
+            .map(|_| lab.grammar.sample_sentence(&mut rng))
+            .collect();
+        (dense, slab_model.params, prompts)
+    }; // ← lab (and its PJRT client) dropped here
+
+    run_server(&artifacts, dense, &prompts, "dense")?;
+    run_server(&artifacts, compressed, &prompts, "slab-compressed")?;
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Rank sweeps — regenerates Fig. 1 and Fig. 3 in one run.
+//!
+//! Fig. 1: naive sparse + rank-r low-rank at a joint 50% CR — the
+//! strawman whose perplexity *worsens* with rank (the low-rank factors
+//! eat the sparse budget).
+//! Fig. 3: SLaB with rank-r `W_L` — the big Frobenius drop from rank 0
+//! (Wanda) to rank 1, then diminishing returns, motivating the
+//! paper's rank-1 choice.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example sweep_rank -- [--model small]
+//! ```
+
+use slab::experiments::{self, Lab};
+use slab::util::cli::Args;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(false).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let model = args.get_str("model", "small");
+    let artifacts = PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let runs = PathBuf::from(args.get_str("runs", "runs"));
+    let mut lab = Lab::new(&artifacts, &runs)?;
+    lab.task_items = args.get_usize("items", 30).unwrap_or(30);
+
+    let ranks: Vec<usize> = args
+        .get_list("ranks", &["0", "1", "4", "8", "16"])
+        .iter()
+        .filter_map(|s| s.parse().ok())
+        .collect();
+
+    let fig1 = experiments::fig1(&lab, &model, &ranks)?;
+    fig1.print();
+    fig1.append_to(&runs.join("results.md"))?;
+
+    let max_rank = args.get_usize("max-rank", 4).unwrap_or(4);
+    let fig3 = experiments::fig3(&lab, &model, max_rank)?;
+    fig3.print();
+    fig3.append_to(&runs.join("results.md"))?;
+    Ok(())
+}

@@ -1,0 +1,408 @@
+"""AOT exporter: lower every Layer-1/Layer-2 computation to HLO text.
+
+Run once by ``make artifacts``; the rust binary is self-contained
+afterwards. Python never runs on the request path.
+
+Interchange is HLO **text** (not serialized HloModuleProto): jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md
+and aot_recipe.md).
+
+Outputs in ``--outdir``:
+
+* ``train_step_{cfg}.hlo.txt``   (loss, params', m', v') ← (params, m, v, step, tokens[B,T+1])
+* ``eval_nll_{cfg}.hlo.txt``     (nll_sum[B], count[B]) ← (params, tokens[B,T+1])
+* ``prefill_{cfg}.hlo.txt``      (logits[B,V], kc, vc) ← (params, tokens[B,T])
+* ``decode_step_{cfg}.hlo.txt``  (logits[B,V], kc', vc') ← (params, kc, vc, token[B], pos)
+* ``slab_fwd_{cfg}.hlo.txt``     logits[B,T,V] ← (slab_params, tokens[B,T])   [Pallas L1]
+* ``decompose_{dout}x{din}.hlo.txt``  (w_s, u, v, w_b) ← (w, sx, keep_frac, iters)  [Pallas L1]
+* ``slab_linear_{dout}x{din}.hlo.txt`` y ← (x, ws, u, v, b)                  [Pallas L1]
+* ``manifest.json``              the ABI contract consumed by rust runtime/
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import decompose as D
+from . import model as M
+from .kernels import slab_kernels as K
+
+# Export-time constants (recorded in the manifest; rust must use the
+# same values when building literals).
+TRAIN_BATCH = 8
+EVAL_BATCH = 8
+SERVE_BATCH = 4
+KERNEL_BENCH_BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(shape=()):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+class Exporter:
+    def __init__(self, outdir):
+        self.outdir = outdir
+        self.artifacts = {}
+        os.makedirs(outdir, exist_ok=True)
+
+    def export(self, name, fn, example_args, inputs, outputs):
+        """Lower ``fn`` at ``example_args`` and write ``{name}.hlo.txt``."""
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        self.artifacts[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        print(f"  wrote {name}.hlo.txt ({len(text) / 1024:.0f} KiB)")
+
+
+def export_config(ex: Exporter, cfg: M.ModelConfig, hp: M.TrainHyper):
+    names = cfg.param_names()
+    shapes = cfg.param_shapes()
+    P = len(names)
+    t_train = cfg.max_seq
+
+    # ---- train_step -----------------------------------------------------
+    def train_flat(*args):
+        params = list(args[:P])
+        m = list(args[P : 2 * P])
+        v = list(args[2 * P : 3 * P])
+        step, tokens = args[3 * P], args[3 * P + 1]
+        loss, np_, nm, nv = M.train_step(cfg, hp, params, m, v, step, tokens)
+        return (loss, *np_, *nm, *nv)
+
+    par = [f32(s) for s in shapes]
+    ex.export(
+        f"train_step_{cfg.name}",
+        train_flat,
+        par + par + par + [i32(), i32((TRAIN_BATCH, t_train + 1))],
+        inputs=[{"name": n, **spec(s)} for n, s in zip(names, shapes)]
+        + [{"name": f"m.{n}", **spec(s)} for n, s in zip(names, shapes)]
+        + [{"name": f"v.{n}", **spec(s)} for n, s in zip(names, shapes)]
+        + [
+            {"name": "step", **spec((), "i32")},
+            {"name": "tokens", **spec((TRAIN_BATCH, t_train + 1), "i32")},
+        ],
+        outputs=[{"name": "loss", **spec(())}]
+        + [{"name": n, **spec(s)} for n, s in zip(names, shapes)]
+        + [{"name": f"m.{n}", **spec(s)} for n, s in zip(names, shapes)]
+        + [{"name": f"v.{n}", **spec(s)} for n, s in zip(names, shapes)],
+    )
+
+    # ---- eval_nll ---------------------------------------------------------
+    def eval_flat(*args):
+        params = list(args[:P])
+        tokens = args[P]
+        return M.eval_nll(cfg, params, tokens)
+
+    ex.export(
+        f"eval_nll_{cfg.name}",
+        eval_flat,
+        par + [i32((EVAL_BATCH, t_train + 1))],
+        inputs=[{"name": n, **spec(s)} for n, s in zip(names, shapes)]
+        + [{"name": "tokens", **spec((EVAL_BATCH, t_train + 1), "i32")}],
+        outputs=[
+            {"name": "nll_sum", **spec((EVAL_BATCH,))},
+            {"name": "count", **spec((EVAL_BATCH,))},
+        ],
+    )
+
+    # ---- prefill / decode --------------------------------------------------
+    cache_shape = (cfg.n_layers, SERVE_BATCH, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+    prompt_len = cfg.max_seq // 2
+
+    def prefill_flat(*args):
+        params = list(args[:P])
+        tokens = args[P]
+        return M.prefill(cfg, params, tokens)
+
+    ex.export(
+        f"prefill_{cfg.name}",
+        prefill_flat,
+        par + [i32((SERVE_BATCH, prompt_len))],
+        inputs=[{"name": n, **spec(s)} for n, s in zip(names, shapes)]
+        + [{"name": "tokens", **spec((SERVE_BATCH, prompt_len), "i32")}],
+        outputs=[
+            {"name": "logits", **spec((SERVE_BATCH, cfg.vocab))},
+            {"name": "k_cache", **spec(cache_shape)},
+            {"name": "v_cache", **spec(cache_shape)},
+        ],
+    )
+
+    def decode_flat(*args):
+        params = list(args[:P])
+        kc, vc, token, pos = args[P], args[P + 1], args[P + 2], args[P + 3]
+        return M.decode_step(cfg, params, kc, vc, token, pos)
+
+    ex.export(
+        f"decode_step_{cfg.name}",
+        decode_flat,
+        par + [f32(cache_shape), f32(cache_shape), i32((SERVE_BATCH,)), i32()],
+        inputs=[{"name": n, **spec(s)} for n, s in zip(names, shapes)]
+        + [
+            {"name": "k_cache", **spec(cache_shape)},
+            {"name": "v_cache", **spec(cache_shape)},
+            {"name": "token", **spec((SERVE_BATCH,), "i32")},
+            {"name": "pos", **spec((), "i32")},
+        ],
+        outputs=[
+            {"name": "logits", **spec((SERVE_BATCH, cfg.vocab))},
+            {"name": "k_cache", **spec(cache_shape)},
+            {"name": "v_cache", **spec(cache_shape)},
+        ],
+    )
+
+    # ---- layer-wise pipeline: embed + block-capture + gram ------------------
+    # The coordinator's one-shot pruning loop (paper §II-A.1) forwards
+    # calibration batches block by block, capturing the inputs of every
+    # pruned linear. Within a block, the four distinct activation
+    # sources are: x_attn (feeds wq/wk/wv), att_out (feeds wo),
+    # x_mlp (feeds w_gate/w_up), mlp_inner (feeds w_down).
+    bsz_cal = EVAL_BATCH
+    t_cal = cfg.max_seq
+
+    def embed_flat(tok_emb, tokens):
+        return (jnp.take(tok_emb, tokens, axis=0),)
+
+    ex.export(
+        f"embed_{cfg.name}",
+        embed_flat,
+        [f32((cfg.vocab, cfg.dim)), i32((bsz_cal, t_cal))],
+        inputs=[
+            {"name": "tok_emb", **spec((cfg.vocab, cfg.dim))},
+            {"name": "tokens", **spec((bsz_cal, t_cal), "i32")},
+        ],
+        outputs=[{"name": "h", **spec((bsz_cal, t_cal, cfg.dim))}],
+    )
+
+    def block_capture_flat(*args):
+        layer_params = list(args[:9])
+        h = args[9]
+        import math as _math
+
+        (attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down) = layer_params
+        bsz, t, _ = h.shape
+        angles = M._rope_angles(cfg, jnp.arange(t))
+        mask = jnp.where(jnp.arange(t)[None, :] <= jnp.arange(t)[:, None], 0.0, -1e30)
+        x_attn = M._rmsnorm(h, attn_norm, cfg.norm_eps)
+        q = M._apply_rope(
+            (x_attn @ wq.T).reshape(bsz, t, cfg.n_heads, cfg.head_dim), angles
+        )
+        k = M._apply_rope(
+            (x_attn @ wk.T).reshape(bsz, t, cfg.n_heads, cfg.head_dim), angles
+        )
+        v = (x_attn @ wv.T).reshape(bsz, t, cfg.n_heads, cfg.head_dim)
+        att_out = M._attention(cfg, q, k, v, mask)
+        h = h + att_out @ wo.T
+        x_mlp = M._rmsnorm(h, mlp_norm, cfg.norm_eps)
+        mlp_inner = jax.nn.silu(x_mlp @ w_gate.T) * (x_mlp @ w_up.T)
+        h = h + mlp_inner @ w_down.T
+        return h, x_attn, att_out, x_mlp, mlp_inner
+
+    layer_shapes = [
+        (cfg.dim,),
+        (cfg.dim, cfg.dim),
+        (cfg.dim, cfg.dim),
+        (cfg.dim, cfg.dim),
+        (cfg.dim, cfg.dim),
+        (cfg.dim,),
+        (cfg.ffn, cfg.dim),
+        (cfg.ffn, cfg.dim),
+        (cfg.dim, cfg.ffn),
+    ]
+    layer_names = [
+        "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down",
+    ]
+    ex.export(
+        f"block_capture_{cfg.name}",
+        block_capture_flat,
+        [f32(s) for s in layer_shapes] + [f32((bsz_cal, t_cal, cfg.dim))],
+        inputs=[{"name": n, **spec(s)} for n, s in zip(layer_names, layer_shapes)]
+        + [{"name": "h", **spec((bsz_cal, t_cal, cfg.dim))}],
+        outputs=[
+            {"name": "h_out", **spec((bsz_cal, t_cal, cfg.dim))},
+            {"name": "x_attn", **spec((bsz_cal, t_cal, cfg.dim))},
+            {"name": "att_out", **spec((bsz_cal, t_cal, cfg.dim))},
+            {"name": "x_mlp", **spec((bsz_cal, t_cal, cfg.dim))},
+            {"name": "mlp_inner", **spec((bsz_cal, t_cal, cfg.ffn))},
+        ],
+    )
+
+    # ---- slab_fwd (compressed forward through the Pallas kernel) -----------
+    slab_names = M.slab_param_names(cfg)
+    slab_shapes = []
+    for name, shape in zip(names, shapes):
+        base = name.split(".")[-1]
+        if base in ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"):
+            dout, din = shape
+            slab_shapes += [(dout, din), (dout,), (din,), (dout, din)]
+        else:
+            slab_shapes.append(shape)
+
+    def slab_flat(*args):
+        sp = list(args[:-1])
+        tokens = args[-1]
+        return M.slab_forward(cfg, sp, tokens)
+
+    ex.export(
+        f"slab_fwd_{cfg.name}",
+        slab_flat,
+        [f32(s) for s in slab_shapes] + [i32((SERVE_BATCH, prompt_len))],
+        inputs=[{"name": n, **spec(s)} for n, s in zip(slab_names, slab_shapes)]
+        + [{"name": "tokens", **spec((SERVE_BATCH, prompt_len), "i32")}],
+        outputs=[{"name": "logits", **spec((SERVE_BATCH, prompt_len, cfg.vocab))}],
+    )
+
+
+def export_gram_kernels(ex: Exporter, din_rows):
+    """Per distinct (din, rows): streaming XᵀX accumulation for the
+    SparseGPT Hessian (native rust gram is too slow at Din³ scale)."""
+    for din, rows in sorted(din_rows):
+        ex.export(
+            f"gram_{rows}x{din}",
+            lambda x: (x.T @ x,),
+            [f32((rows, din))],
+            inputs=[{"name": "x", **spec((rows, din))}],
+            outputs=[{"name": "gram", **spec((din, din))}],
+        )
+
+
+def export_shape_kernels(ex: Exporter, shapes):
+    """Per distinct pruned-linear shape: decompose + standalone kernel."""
+    for dout, din in sorted(shapes):
+        ex.export(
+            f"decompose_{dout}x{din}",
+            D.decompose_fn,
+            [f32((dout, din)), f32((din,)), f32(()), i32(())],
+            inputs=[
+                {"name": "w", **spec((dout, din))},
+                {"name": "sx", **spec((din,))},
+                {"name": "keep_frac", **spec(())},
+                {"name": "iters", **spec((), "i32")},
+            ],
+            outputs=[
+                {"name": "w_s", **spec((dout, din))},
+                {"name": "u", **spec((dout,))},
+                {"name": "v", **spec((din,))},
+                {"name": "w_b", **spec((dout, din))},
+            ],
+        )
+        b = KERNEL_BENCH_BATCH
+        ex.export(
+            f"slab_linear_{dout}x{din}",
+            lambda x, ws, u, v, bm: (K.slab_linear(x, ws, u, v, bm),),
+            [f32((b, din)), f32((dout, din)), f32((dout,)), f32((din,)), f32((dout, din))],
+            inputs=[
+                {"name": "x", **spec((b, din))},
+                {"name": "ws", **spec((dout, din))},
+                {"name": "u", **spec((dout,))},
+                {"name": "v", **spec((din,))},
+                {"name": "b", **spec((dout, din))},
+            ],
+            outputs=[{"name": "y", **spec((b, dout))}],
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default="small,base,large",
+        help="comma-separated model configs to export",
+    )
+    args = ap.parse_args()
+
+    ex = Exporter(args.outdir)
+    hp = M.TrainHyper()
+    cfg_names = [c for c in args.configs.split(",") if c]
+    shapes = set()
+    grams = set()
+    for cname in cfg_names:
+        cfg = M.CONFIGS[cname]
+        print(f"[aot] exporting config '{cname}' "
+              f"({cfg.n_layers}L d={cfg.dim} ffn={cfg.ffn} vocab={cfg.vocab})")
+        export_config(ex, cfg, hp)
+        for _, shape in cfg.pruned_linears():
+            shapes.add(shape)
+        rows = EVAL_BATCH * cfg.max_seq
+        grams.add((cfg.dim, rows))
+        grams.add((cfg.ffn, rows))
+    print(f"[aot] exporting {len(shapes)} shape kernels + {len(grams)} gram kernels")
+    export_shape_kernels(ex, shapes)
+    export_gram_kernels(ex, grams)
+
+    manifest = {
+        "format": "slab-aot-v1",
+        "constants": {
+            "train_batch": TRAIN_BATCH,
+            "eval_batch": EVAL_BATCH,
+            "serve_batch": SERVE_BATCH,
+            "kernel_bench_batch": KERNEL_BENCH_BATCH,
+            "pad_id": M.PAD_ID,
+        },
+        "train_hyper": {
+            "peak_lr": hp.peak_lr,
+            "warmup": hp.warmup,
+            "total_steps": hp.total_steps,
+            "min_lr_frac": hp.min_lr_frac,
+            "beta1": hp.beta1,
+            "beta2": hp.beta2,
+            "eps": hp.eps,
+            "weight_decay": hp.weight_decay,
+            "clip": hp.clip,
+        },
+        "configs": {
+            cname: {
+                "vocab": M.CONFIGS[cname].vocab,
+                "dim": M.CONFIGS[cname].dim,
+                "n_layers": M.CONFIGS[cname].n_layers,
+                "n_heads": M.CONFIGS[cname].n_heads,
+                "ffn": M.CONFIGS[cname].ffn,
+                "max_seq": M.CONFIGS[cname].max_seq,
+                "prompt_len": M.CONFIGS[cname].max_seq // 2,
+                "param_names": M.CONFIGS[cname].param_names(),
+                "param_shapes": [list(s) for s in M.CONFIGS[cname].param_shapes()],
+                "pruned": [
+                    {"name": n, "shape": list(s)}
+                    for n, s in M.CONFIGS[cname].pruned_linears()
+                ],
+                "slab_param_names": M.slab_param_names(M.CONFIGS[cname]),
+            }
+            for cname in cfg_names
+        },
+        "artifacts": ex.artifacts,
+    }
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] manifest.json with {len(ex.artifacts)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

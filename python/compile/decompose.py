@@ -1,0 +1,94 @@
+"""Layer-2: Algorithm 1 as a jitted JAX computation.
+
+One AOT artifact per distinct pruned-linear shape serves *all*
+compression ratios and iteration counts: ``keep_frac`` and ``iters``
+are runtime scalars (the thresholding is rank-based so a traced `k`
+works; the outer loop is a ``lax.while_loop`` on a traced bound).
+
+The fused elementwise pass (sign / low-rank-binary residual / Wanda
+score) is the L1 Pallas kernel
+:func:`compile.kernels.slab_kernels.slab_residual_score`; the rank-1
+power iteration and the per-row rank-based threshold are XLA ops
+(sorts and reductions are VPU work, not MXU work — DESIGN.md §3).
+
+Group geometry is traced at the paper default ``(1, Din)``. The
+Table II group-shape sweep uses the bit-compatible rust-native path.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import slab_kernels as K
+
+SVD_ITERS = 30  # static power-iteration count (matches ref.py default)
+
+
+def _rank1_abs_power(y):
+    """√σ-split rank-1 tSVD of |y| — ones-init power iteration,
+    identical to ref.rank1_abs_svd_ref but with a static fori_loop."""
+    a = jnp.abs(y)
+    dout, din = a.shape
+
+    def body(_, uv):
+        u, v = uv
+        u = a @ v
+        u = u / jnp.maximum(jnp.linalg.norm(u), 1e-20)
+        v = a.T @ u
+        v = v / jnp.maximum(jnp.linalg.norm(v), 1e-20)
+        return (u, v)
+
+    u0 = jnp.ones((dout,), a.dtype)
+    v0 = jnp.ones((din,), a.dtype) / jnp.sqrt(din)
+    u, v = lax.fori_loop(0, SVD_ITERS, body, (u0, v0))
+    sigma = u @ (a @ v)
+    root = jnp.sqrt(jnp.maximum(sigma, 0.0))
+    return u * root, v * root
+
+
+def _row_topk_mask(scores, keep_frac):
+    """Per-row keep mask with traced keep fraction.
+
+    Rank-based: stable argsort-of-argsort gives each element its rank
+    by (score desc, index asc); keep rank < ⌊keep_frac · Din⌋. Matches
+    rust ``group_topk_mask`` tie-breaking.
+    """
+    din = scores.shape[1]
+    k = jnp.floor(keep_frac * din).astype(jnp.int32)
+    order = jnp.argsort(-scores, axis=1, stable=True)
+    ranks = jnp.argsort(order, axis=1, stable=True)
+    return (ranks < k).astype(scores.dtype)
+
+
+def decompose_fn(w, sx, keep_frac, iters):
+    """Algorithm 1. Returns (w_s, u, v, w_b).
+
+    Args:
+      w: (Dout, Din) f32 — the layer weight.
+      sx: (Din,) f32 — calibration column norms ``||X_j||₂``.
+      keep_frac: f32 scalar — Eq. 10 keep fraction (runtime input).
+      iters: i32 scalar — alternating iterations `s` (runtime input).
+    """
+    dout, din = w.shape
+
+    def body(state):
+        t, w_s, _, _, _ = state
+        y_bl = w - w_s
+        u, v = _rank1_abs_power(y_bl)
+        # Fused Pallas pass: sign, residual, score.
+        w_b, y_s, scores = K.slab_residual_score(w, w_s, u, v, sx)
+        mask = _row_topk_mask(scores, keep_frac)
+        return (t + 1, y_s * mask, u, v, w_b)
+
+    def cond(state):
+        return state[0] < jnp.maximum(iters, 1)
+
+    init = (
+        jnp.int32(0),
+        jnp.zeros_like(w),
+        jnp.zeros((dout,), w.dtype),
+        jnp.zeros((din,), w.dtype),
+        jnp.ones_like(w),
+    )
+    _, w_s, u, v, w_b = lax.while_loop(cond, body, init)
+    return w_s, u, v, w_b

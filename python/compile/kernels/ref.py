@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for every Pallas kernel (the CORE correctness signal).
+
+Each function here is the mathematically transparent reference; the
+Pallas kernels in ``slab_kernels.py`` must match these to float32
+tolerance under the pytest/hypothesis sweeps in ``python/tests/``.
+"""
+
+import jax.nn
+import jax.numpy as jnp
+
+
+def slab_linear_ref(x, ws, u, v, b):
+    """Compressed SLaB forward: ``y = x·W_Sᵀ + u ⊙ ((x ⊙ v)·Bᵀ)``.
+
+    Args:
+      x:  (B, Din) activations.
+      ws: (Dout, Din) sparse component (dense storage, zeros at pruned).
+      u:  (Dout,) left rank-1 factor (√σ-split).
+      v:  (Din,) right rank-1 factor.
+      b:  (Dout, Din) ±1 sign matrix (float).
+
+    Returns:
+      (B, Dout)
+    """
+    sparse_term = x @ ws.T
+    binary_term = (x * v[None, :]) @ b.T  # (B, Dout)
+    return sparse_term + binary_term * u[None, :]
+
+
+def slab_linear_dense_equiv(x, ws, u, v, b):
+    """Same value via the dense reconstruction ``Ŵ = W_S + (u vᵀ) ⊙ B``.
+
+    Identity check: ``slab_linear_ref == x @ Ŵᵀ``.
+    """
+    w_hat = ws + jnp.outer(u, v) * b
+    return x @ w_hat.T
+
+
+def wanda_scores_ref(y, sx):
+    """``S_ij = |Y_ij| · ||X_j||₂`` with sx = per-column activation norms."""
+    return jnp.abs(y) * sx[None, :]
+
+
+def group_threshold_ref(scores, keep_frac):
+    """Per-row top-⌊keep_frac·Din⌋ keep mask (comparison group (1, Din)).
+
+    Ties broken toward lower column index, matching the rust
+    ``group_topk_mask`` (stable ordering on (score desc, index asc)).
+    """
+    dout, din = scores.shape
+    keep = int(keep_frac * din)
+    if keep <= 0:
+        return jnp.zeros_like(scores)
+    if keep >= din:
+        return jnp.ones_like(scores)
+    # Rank with index tiebreak: sort by (-score, +index).
+    order = jnp.argsort(-scores, axis=1, stable=True)
+    ranks = jnp.argsort(order, axis=1, stable=True)
+    return (ranks < keep).astype(scores.dtype)
+
+
+def rank1_abs_svd_ref(y, n_iter=30):
+    """√σ-split rank-1 truncated SVD of |y| via power iteration.
+
+    Deterministic: starts from the all-ones vector (|y| is entrywise
+    non-negative, so the Perron vector has non-negative overlap with
+    ones and power iteration converges to it).
+
+    Returns (u, v) with |y| ≈ outer(u, v).
+    """
+    a = jnp.abs(y)
+    dout, din = a.shape
+    v = jnp.ones((din,), a.dtype) / jnp.sqrt(din)
+    u = jnp.ones((dout,), a.dtype)
+    for _ in range(n_iter):
+        u = a @ v
+        un = jnp.linalg.norm(u)
+        u = u / jnp.maximum(un, 1e-20)
+        v = a.T @ u
+        sigma = jnp.linalg.norm(v)
+        v = v / jnp.maximum(sigma, 1e-20)
+    sigma = u @ (a @ v)
+    root = jnp.sqrt(jnp.maximum(sigma, 0.0))
+    return u * root, v * root
+
+
+def slab_decompose_step_ref(w, w_s, sx, keep_frac, svd_iters=30):
+    """One iteration of Algorithm 1 (lines 5–8), the pure-jnp oracle.
+
+    Returns (w_s', u, v, w_b).
+    """
+    y_bl = w - w_s
+    w_b = jnp.where(y_bl >= 0, 1.0, -1.0).astype(w.dtype)
+    u, v = rank1_abs_svd_ref(y_bl, svd_iters)
+    lb = jnp.outer(u, v) * w_b
+    y_s = w - lb
+    scores = wanda_scores_ref(y_s, sx)
+    mask = group_threshold_ref(scores, keep_frac)
+    return y_s * mask, u, v, w_b
+
+
+def slab_decompose_ref(w, sx, keep_frac, iters=20, svd_iters=30):
+    """Full Algorithm 1 oracle."""
+    w_s = jnp.zeros_like(w)
+    u = v = w_b = None
+    for _ in range(max(int(iters), 1)):
+        w_s, u, v, w_b = slab_decompose_step_ref(w, w_s, sx, keep_frac, svd_iters)
+    return w_s, u, v, w_b
+
+
+def rmsnorm_ref(x, gamma, eps=1e-5):
+    """RMSNorm over the last axis."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * gamma / jnp.sqrt(ms + eps)
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: ``down( silu(x·gateᵀ) ⊙ (x·upᵀ) )``."""
+    g = x @ w_gate.T
+    return (jax.nn.silu(g) * (x @ w_up.T)) @ w_down.T

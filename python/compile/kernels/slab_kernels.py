@@ -1,0 +1,196 @@
+"""Layer-1 Pallas kernels — the SLaB compute hot-spots.
+
+Two kernels:
+
+* :func:`slab_linear` — the deployment forward
+  ``y = x·W_Sᵀ + u ⊙ ((x ⊙ v)·Bᵀ)``. Tiled for the TPU memory
+  hierarchy: the grid walks (batch-tile, dout-tile) MXU output tiles
+  and streams Din in VMEM-sized chunks. The ±1 matrix `B` enters the
+  MXU as a regular (bf16/f32) operand — the TPU win is *bandwidth*
+  (1 bit/elem from HBM), which the BlockSpec schedule expresses by
+  tiling 16× more `B` columns per step than fp16 weights would allow
+  (see DESIGN.md §Hardware-Adaptation).
+
+* :func:`slab_residual_score` — the fused elementwise pass of
+  Algorithm 1 (lines 5 + 7): ``W_B = sign(W − W_S)``,
+  ``Y_S = W − (u vᵀ) ⊙ W_B``, ``S = |Y_S| ⊙ S_X`` in one VMEM
+  round-trip. The top-k thresholding (line 8) is XLA `sort` territory
+  (VPU, not MXU) and stays in the L2 jax graph.
+
+Both kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode *is* the
+correctness path; TPU performance is estimated analytically
+(EXPERIMENTS.md §Perf). Correctness is pinned against ``ref.py`` by
+``python/tests/test_kernels.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tiles. Every model dim in configs.py is a
+# multiple of these (or of the fallbacks chosen in _tile()).
+BLOCK_B = 8
+BLOCK_OUT = 128
+BLOCK_IN = 128
+
+
+def _tile(dim, pref):
+    """Largest divisor of ``dim`` that is ≤ ``pref`` (tiles must divide)."""
+    t = min(pref, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+# ---------------------------------------------------------------------------
+# slab_linear
+# ---------------------------------------------------------------------------
+
+
+def _slab_linear_kernel(x_ref, ws_ref, u_ref, v_ref, b_ref, o_ref, *, n_in_tiles):
+    """One (block_b, block_out) output tile.
+
+    Refs (VMEM views picked by the BlockSpecs):
+      x_ref:  (block_b, Din)       — full contraction stripe of x
+      ws_ref: (block_out, Din)     — sparse-component stripe
+      u_ref:  (block_out,)         — rank-1 left factor slice
+      v_ref:  (Din,)               — rank-1 right factor
+      b_ref:  (block_out, Din)     — ±1 stripe
+      o_ref:  (block_b, block_out)
+    """
+    x = x_ref[...]
+    v = v_ref[...]
+    # Sparse term: x · W_Sᵀ  (MXU matmul; W_S is dense-stored here —
+    # the CSR gather path is the rust-native variant).
+    acc = jnp.dot(x, ws_ref[...].T, preferred_element_type=jnp.float32)
+    # Rank-1-binary term: (x ⊙ v) · Bᵀ, then row-scale by u.
+    xv = x * v[None, :]
+    binary = jnp.dot(xv, b_ref[...].T, preferred_element_type=jnp.float32)
+    acc = acc + binary * u_ref[...][None, :]
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def slab_linear(x, ws, u, v, b, *, block_b=BLOCK_B, block_out=BLOCK_OUT, interpret=True):
+    """Compressed SLaB linear layer: ``(B, Din) → (B, Dout)``.
+
+    Matches :func:`compile.kernels.ref.slab_linear_ref`.
+    """
+    bsz, din = x.shape
+    dout, din2 = ws.shape
+    assert din == din2, (din, din2)
+    assert u.shape == (dout,) and v.shape == (din,)
+    assert b.shape == (dout, din)
+
+    bb = _tile(bsz, block_b)
+    bo = _tile(dout, block_out)
+    grid = (bsz // bb, dout // bo)
+
+    return pl.pallas_call(
+        functools.partial(_slab_linear_kernel, n_in_tiles=1),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, din), lambda i, j: (i, 0)),
+            pl.BlockSpec((bo, din), lambda i, j: (j, 0)),
+            pl.BlockSpec((bo,), lambda i, j: (j,)),
+            pl.BlockSpec((din,), lambda i, j: (0,)),
+            pl.BlockSpec((bo, din), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bo), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, dout), x.dtype),
+        interpret=interpret,
+    )(x, ws, u, v, b)
+
+
+# ---------------------------------------------------------------------------
+# slab_residual_score (fused Algorithm-1 elementwise pass)
+# ---------------------------------------------------------------------------
+
+
+def _residual_score_kernel(w_ref, ws_ref, u_ref, v_ref, sx_ref, wb_ref, ys_ref, s_ref):
+    """Fused: sign, low-rank-binary residual, Wanda score — one pass.
+
+    Refs: (block_out, Din) stripes of w / w_s plus broadcast factors.
+    """
+    w = w_ref[...]
+    y_bl = w - ws_ref[...]
+    wb = jnp.where(y_bl >= 0, 1.0, -1.0).astype(w.dtype)
+    lb = (u_ref[...][:, None] * v_ref[...][None, :]) * wb
+    ys = w - lb
+    wb_ref[...] = wb
+    ys_ref[...] = ys
+    s_ref[...] = jnp.abs(ys) * sx_ref[...][None, :]
+
+
+def slab_residual_score(w, w_s, u, v, sx, *, block_out=BLOCK_OUT, interpret=True):
+    """Fused lines 5+7 of Algorithm 1.
+
+    Returns ``(w_b, y_s, scores)``; matches the composition of the
+    ``ref.py`` oracles (sign / residual / wanda_scores).
+    """
+    dout, din = w.shape
+    assert w_s.shape == (dout, din)
+    assert u.shape == (dout,) and v.shape == (din,) and sx.shape == (din,)
+
+    bo = _tile(dout, block_out)
+    grid = (dout // bo,)
+
+    return pl.pallas_call(
+        _residual_score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bo, din), lambda i: (i, 0)),
+            pl.BlockSpec((bo, din), lambda i: (i, 0)),
+            pl.BlockSpec((bo,), lambda i: (i,)),
+            pl.BlockSpec((din,), lambda i: (0,)),
+            pl.BlockSpec((din,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bo, din), lambda i: (i, 0)),
+            pl.BlockSpec((bo, din), lambda i: (i, 0)),
+            pl.BlockSpec((bo, din), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((dout, din), w.dtype),
+            jax.ShapeDtypeStruct((dout, din), w.dtype),
+            jax.ShapeDtypeStruct((dout, din), w.dtype),
+        ],
+        interpret=interpret,
+    )(w, w_s, u, v, sx)
+
+
+# ---------------------------------------------------------------------------
+# VMEM / roofline estimator (used by DESIGN.md §9 and bench reporting)
+# ---------------------------------------------------------------------------
+
+
+def slab_linear_vmem_bytes(block_b, block_out, din, dtype_bytes=2, b_bits=1):
+    """VMEM working-set estimate for one slab_linear grid step.
+
+    x tile + ws stripe + b stripe (at its *deployed* width) + factors
+    + output tile. Used to verify the schedule fits the ~16 MiB TPU
+    VMEM budget and to compute the HBM-bytes ratio vs a dense layer.
+    """
+    x_tile = block_b * din * dtype_bytes
+    ws_stripe = block_out * din * dtype_bytes  # dense-stored here
+    b_stripe = block_out * din * b_bits // 8
+    factors = (block_out + din) * dtype_bytes
+    out_tile = block_b * block_out * 4  # f32 accumulator
+    return x_tile + ws_stripe + b_stripe + factors + out_tile
+
+
+def dense_linear_hbm_bytes(dout, din, dtype_bytes=2):
+    """Per-forward HBM weight traffic of the dense layer."""
+    return dout * din * dtype_bytes
+
+
+def slab_linear_hbm_bytes(dout, din, keep_frac, rank=1, dtype_bytes=2, idx_bytes=2):
+    """Per-forward HBM weight traffic of the SLaB layer (CSR + bits +
+    factors)."""
+    k = int(keep_frac * dout * din)
+    csr = k * (dtype_bytes + idx_bytes)
+    bits = dout * din // 8
+    factors = rank * (dout + din) * dtype_bytes
+    return csr + bits + factors

@@ -1,0 +1,438 @@
+"""Layer-2: the JAX model — a Llama-family transformer.
+
+Everything a downstream artifact needs is defined here as pure
+functions over *flat tuples of arrays* (no pytrees at the export
+boundary, so the PJRT call ABI is a plain positional argument list the
+rust runtime can drive; ``aot.py`` records the exact order in
+``manifest.json``).
+
+Architecture (matches the models the paper prunes, scaled to this
+testbed — see DESIGN.md §2):
+
+* RMSNorm (pre-norm), rotary position embeddings, causal MHA,
+  SwiGLU MLP, untied embedding / LM head.
+* Pruned-linear inventory per block: ``wq wk wv wo w_gate w_up w_down``
+  — exactly the seven Llama linears SLaB and the baselines compress.
+  ``tok_emb``, ``lm_head`` and norms are never pruned (paper §III-A4).
+
+Param flat order (load-bearing — mirrored by rust ``model::params``):
+
+    tok_emb,
+    [per layer: attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down],
+    final_norm, lm_head
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import slab_kernels as K
+
+PAD_ID = 0  # token id 0 is reserved for padding everywhere
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    dim: int
+    n_layers: int
+    n_heads: int
+    ffn: int
+    max_seq: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self):
+        return self.dim // self.n_heads
+
+    def param_names(self):
+        names = ["tok_emb"]
+        for i in range(self.n_layers):
+            names += [
+                f"l{i}.attn_norm",
+                f"l{i}.wq",
+                f"l{i}.wk",
+                f"l{i}.wv",
+                f"l{i}.wo",
+                f"l{i}.mlp_norm",
+                f"l{i}.w_gate",
+                f"l{i}.w_up",
+                f"l{i}.w_down",
+            ]
+        names += ["final_norm", "lm_head"]
+        return names
+
+    def param_shapes(self):
+        d, f, v = self.dim, self.ffn, self.vocab
+        shapes = [(v, d)]
+        for _ in range(self.n_layers):
+            shapes += [
+                (d,),
+                (d, d),
+                (d, d),
+                (d, d),
+                (d, d),
+                (d,),
+                (f, d),
+                (f, d),
+                (d, f),
+            ]
+        shapes += [(d,), (v, d)]
+        return shapes
+
+    def pruned_linears(self):
+        """(name, (dout, din)) for every linear the pipeline compresses,
+        in param order."""
+        out = []
+        for name, shape in zip(self.param_names(), self.param_shapes()):
+            base = name.split(".")[-1]
+            if base in ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"):
+                out.append((name, shape))
+        return out
+
+    def n_params(self):
+        return sum(int(np.prod(s)) for s in self.param_shapes())
+
+
+import numpy as np  # noqa: E402  (np only used for static shape math)
+
+
+# The three evaluation models (stand-ins for Llama-3.2 1B / Llama-2 7B /
+# Llama-3 8B — same architecture family, testbed scale; DESIGN.md §2).
+CONFIGS = {
+    "small": ModelConfig("small", vocab=512, dim=64, n_layers=2, n_heads=4, ffn=176, max_seq=64),
+    "base": ModelConfig("base", vocab=512, dim=128, n_layers=4, n_heads=4, ffn=344, max_seq=96),
+    "large": ModelConfig("large", vocab=1024, dim=256, n_layers=6, n_heads=8, ffn=688, max_seq=96),
+}
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key):
+    """Scaled-normal init (GPT-2 style: residual projections down-scaled)."""
+    params = []
+    for name, shape in zip(cfg.param_names(), cfg.param_shapes()):
+        key, sub = jax.random.split(key)
+        base = name.split(".")[-1]
+        if len(shape) == 1:
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            std = 0.02
+            if base in ("wo", "w_down"):
+                std = 0.02 / math.sqrt(2 * cfg.n_layers)
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _rmsnorm(x, gamma, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * gamma / jnp.sqrt(ms + eps)
+
+
+def _rope_angles(cfg: ModelConfig, positions):
+    """(T, head_dim/2) angles for the given integer positions."""
+    half = cfg.head_dim // 2
+    inv_freq = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[:, None] * inv_freq[None, :]
+
+
+def _apply_rope(x, angles):
+    """x: (B, T, H, Hd); angles: (T, Hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _split_layer(cfg, params, i):
+    base = 1 + i * 9
+    return params[base : base + 9]
+
+
+def _attention(cfg, q, k, v, mask):
+    """q,k,v: (B, T, H, Hd) / (B, S, H, Hd); mask: (T, S) additive."""
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) * scale
+    scores = scores + mask[None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v)
+    return out.reshape(out.shape[0], out.shape[1], cfg.dim)
+
+
+def _block(cfg, layer_params, h, angles, mask):
+    (attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down) = layer_params
+    bsz, t, _ = h.shape
+    x = _rmsnorm(h, attn_norm, cfg.norm_eps)
+    q = (x @ wq.T).reshape(bsz, t, cfg.n_heads, cfg.head_dim)
+    k = (x @ wk.T).reshape(bsz, t, cfg.n_heads, cfg.head_dim)
+    v = (x @ wv.T).reshape(bsz, t, cfg.n_heads, cfg.head_dim)
+    q = _apply_rope(q, angles)
+    k = _apply_rope(k, angles)
+    h = h + _attention(cfg, q, k, v, mask) @ wo.T
+    x = _rmsnorm(h, mlp_norm, cfg.norm_eps)
+    h = h + (jax.nn.silu(x @ w_gate.T) * (x @ w_up.T)) @ w_down.T
+    return h
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """tokens (B, T) int32 → logits (B, T, vocab)."""
+    bsz, t = tokens.shape
+    tok_emb, final_norm, lm_head = params[0], params[-2], params[-1]
+    h = jnp.take(tok_emb, tokens, axis=0)
+    positions = jnp.arange(t)
+    angles = _rope_angles(cfg, positions)
+    mask = jnp.where(
+        jnp.arange(t)[None, :] <= jnp.arange(t)[:, None], 0.0, -1e30
+    ).astype(jnp.float32)
+    for i in range(cfg.n_layers):
+        h = _block(cfg, _split_layer(cfg, params, i), h, angles, mask)
+    h = _rmsnorm(h, final_norm, cfg.norm_eps)
+    return h @ lm_head.T
+
+
+# ---------------------------------------------------------------------------
+# Loss / eval
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg: ModelConfig, params, tokens):
+    """tokens (B, T+1): causal LM loss, PAD targets masked. Scalar mean."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != PAD_ID).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def eval_nll(cfg: ModelConfig, params, tokens):
+    """tokens (B, T+1) → (nll_sum (B,), token_count (B,)).
+
+    Rust accumulates these across batches for corpus perplexity
+    ``exp(Σ nll / Σ count)``.
+    """
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != PAD_ID).astype(jnp.float32)
+    return jnp.sum(nll * mask, axis=1), jnp.sum(mask, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# AdamW train step
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyper:
+    peak_lr: float = 3e-3
+    warmup: int = 30
+    total_steps: int = 600
+    min_lr_frac: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip: float = 1.0
+
+
+def _lr_schedule(hp: TrainHyper, step):
+    warm = hp.peak_lr * (step + 1.0) / hp.warmup
+    progress = jnp.clip((step - hp.warmup) / max(hp.total_steps - hp.warmup, 1), 0.0, 1.0)
+    cos = hp.peak_lr * (hp.min_lr_frac + (1 - hp.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+    return jnp.where(step < hp.warmup, warm, cos)
+
+
+def train_step(cfg: ModelConfig, hp: TrainHyper, params, m, v, step, tokens):
+    """One AdamW step. All state positional; returns
+    ``(loss, new_params..., new_m..., new_v...)`` flattened by aot.py."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens))(list(params))
+    # Global-norm clip.
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+    scale = jnp.minimum(1.0, hp.clip / jnp.maximum(gnorm, 1e-9))
+    grads = [g * scale for g in grads]
+    lr = _lr_schedule(hp, step.astype(jnp.float32))
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - hp.beta1**t
+    bc2 = 1.0 - hp.beta2**t
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = hp.beta1 * mi + (1 - hp.beta1) * g
+        vi = hp.beta2 * vi + (1 - hp.beta2) * g * g
+        update = (mi / bc1) / (jnp.sqrt(vi / bc2) + hp.eps)
+        # Decoupled weight decay on matrices only (norms exempt).
+        wd = hp.weight_decay if p.ndim > 1 else 0.0
+        new_params.append(p - lr * (update + wd * p))
+        new_m.append(mi)
+        new_v.append(vi)
+    return loss, new_params, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# KV-cache serving path (prefill + decode)
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params, tokens):
+    """tokens (B, T) → (last_logits (B, vocab), k_cache, v_cache).
+
+    Caches are (L, B, max_seq, H, Hd), zero-padded beyond T. PAD
+    positions are masked out of attention by key masking (PAD_ID keys
+    still enter the cache but their scores are −inf for queries at
+    other positions only via the causal mask — prompts are
+    left-aligned so this matches standard serving).
+    """
+    bsz, t = tokens.shape
+    tok_emb, final_norm, lm_head = params[0], params[-2], params[-1]
+    h = jnp.take(tok_emb, tokens, axis=0)
+    angles = _rope_angles(cfg, jnp.arange(t))
+    causal = jnp.where(jnp.arange(t)[None, :] <= jnp.arange(t)[:, None], 0.0, -1e30)
+    # PAD keys masked for all queries (prompt padding on the right).
+    key_ok = (tokens != PAD_ID)[:, None, None, :]  # (B,1,1,T)
+    k_cache = jnp.zeros((cfg.n_layers, bsz, cfg.max_seq, cfg.n_heads, cfg.head_dim), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    for i in range(cfg.n_layers):
+        (attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down) = _split_layer(cfg, params, i)
+        x = _rmsnorm(h, attn_norm, cfg.norm_eps)
+        q = _apply_rope((x @ wq.T).reshape(bsz, t, cfg.n_heads, cfg.head_dim), angles)
+        k = _apply_rope((x @ wk.T).reshape(bsz, t, cfg.n_heads, cfg.head_dim), angles)
+        v = (x @ wv.T).reshape(bsz, t, cfg.n_heads, cfg.head_dim)
+        k_cache = k_cache.at[i, :, :t].set(k)
+        v_cache = v_cache.at[i, :, :t].set(v)
+        scores = jnp.einsum("bthd,bshd->bhts", q, k) * scale
+        scores = scores + causal[None, None, :, :]
+        scores = jnp.where(key_ok, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("bhts,bshd->bthd", probs, v).reshape(bsz, t, cfg.dim)
+        h = h + att @ wo.T
+        x = _rmsnorm(h, mlp_norm, cfg.norm_eps)
+        h = h + (jax.nn.silu(x @ w_gate.T) * (x @ w_up.T)) @ w_down.T
+    h = _rmsnorm(h, final_norm, cfg.norm_eps)
+    return h[:, -1] @ lm_head.T, k_cache, v_cache
+
+
+def decode_step(cfg: ModelConfig, params, k_cache, v_cache, token, pos):
+    """One token for every sequence in the batch.
+
+    token (B,) int32, pos scalar int32 (same position for the whole
+    batch — the dynamic batcher aligns sequences; see rust
+    ``coordinator::serve``). Returns (logits (B, vocab), k_cache,
+    v_cache) with position ``pos`` written.
+    """
+    bsz = token.shape[0]
+    tok_emb, final_norm, lm_head = params[0], params[-2], params[-1]
+    h = jnp.take(tok_emb, token, axis=0)[:, None, :]  # (B, 1, D)
+    angles = _rope_angles(cfg, pos[None])  # (1, Hd/2)
+    valid = (jnp.arange(cfg.max_seq)[None, :] <= pos)[:, None, :]  # (1,1,S)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    for i in range(cfg.n_layers):
+        (attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down) = _split_layer(cfg, params, i)
+        x = _rmsnorm(h, attn_norm, cfg.norm_eps)
+        q = _apply_rope((x @ wq.T).reshape(bsz, 1, cfg.n_heads, cfg.head_dim), angles)
+        k = _apply_rope((x @ wk.T).reshape(bsz, 1, cfg.n_heads, cfg.head_dim), angles)
+        v = (x @ wv.T).reshape(bsz, 1, cfg.n_heads, cfg.head_dim)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k[None, :, :], (i, 0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v[None, :, :], (i, 0, pos, 0, 0))
+        ks, vs = k_cache[i], v_cache[i]  # (B, S, H, Hd)
+        scores = jnp.einsum("bthd,bshd->bhts", q, ks) * scale  # (B,H,1,S)
+        scores = jnp.where(valid[:, :, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("bhts,bshd->bthd", probs, vs).reshape(bsz, 1, cfg.dim)
+        h = h + att @ wo.T
+        x = _rmsnorm(h, mlp_norm, cfg.norm_eps)
+        h = h + (jax.nn.silu(x @ w_gate.T) * (x @ w_up.T)) @ w_down.T
+    h = _rmsnorm(h, final_norm, cfg.norm_eps)
+    return h[:, 0] @ lm_head.T, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# SLaB-compressed forward (calls the L1 Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def slab_param_names(cfg: ModelConfig):
+    """Flat arg order of the compressed forward: for every param, the
+    dense array if unpruned, else the (ws, u, v, b) quadruple."""
+    names = []
+    for name, shape in zip(cfg.param_names(), cfg.param_shapes()):
+        base = name.split(".")[-1]
+        if base in ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"):
+            names += [f"{name}.ws", f"{name}.u", f"{name}.v", f"{name}.b"]
+        else:
+            names.append(name)
+    return names
+
+
+def slab_forward(cfg: ModelConfig, slab_params, tokens):
+    """Compressed-model forward: every pruned linear runs through the
+    Pallas :func:`compile.kernels.slab_kernels.slab_linear` kernel —
+    this is the L1→L2 composition the AOT bundle proves end-to-end.
+
+    ``slab_params`` follows :func:`slab_param_names` order.
+    tokens (B, T) → logits (B, T, vocab).
+    """
+    it = iter(slab_params)
+
+    def take_dense():
+        return next(it)
+
+    def take_linear():
+        ws, u, v, b = next(it), next(it), next(it), next(it)
+
+        def apply(x):
+            flat = x.reshape(-1, x.shape[-1])
+            y = K.slab_linear(flat, ws, u, v, b)
+            return y.reshape(*x.shape[:-1], ws.shape[0])
+
+        return apply
+
+    tok_emb = take_dense()
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(
+            dict(
+                attn_norm=take_dense(),
+                wq=take_linear(),
+                wk=take_linear(),
+                wv=take_linear(),
+                wo=take_linear(),
+                mlp_norm=take_dense(),
+                w_gate=take_linear(),
+                w_up=take_linear(),
+                w_down=take_linear(),
+            )
+        )
+    final_norm = take_dense()
+    lm_head = take_dense()
+
+    bsz, t = tokens.shape
+    h = jnp.take(tok_emb, tokens, axis=0)
+    angles = _rope_angles(cfg, jnp.arange(t))
+    mask = jnp.where(jnp.arange(t)[None, :] <= jnp.arange(t)[:, None], 0.0, -1e30)
+    for lp in layers:
+        x = _rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        q = lp["wq"](x).reshape(bsz, t, cfg.n_heads, cfg.head_dim)
+        k = lp["wk"](x).reshape(bsz, t, cfg.n_heads, cfg.head_dim)
+        v = lp["wv"](x).reshape(bsz, t, cfg.n_heads, cfg.head_dim)
+        q = _apply_rope(q, angles)
+        k = _apply_rope(k, angles)
+        h = h + lp["wo"](_attention(cfg, q, k, v, mask))
+        x = _rmsnorm(h, lp["mlp_norm"], cfg.norm_eps)
+        h = h + lp["w_down"](jax.nn.silu(lp["w_gate"](x)) * lp["w_up"](x))
+    h = _rmsnorm(h, final_norm, cfg.norm_eps)
+    return h @ lm_head.T

@@ -1,0 +1,123 @@
+"""Algorithm-1 correctness: the jitted decompose graph vs the oracle,
+plus the invariants the paper's analysis promises (Prop. 1/2, Fig. 3
+premise, Eq. 10 sparsity accounting)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import decompose as D
+from compile.kernels import ref
+
+
+def setup(seed, dout=48, din=96):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(0.05 * rng.normal(size=(dout, din)), jnp.float32)
+    sx = jnp.asarray(rng.random(din) + 0.5, jnp.float32)
+    return w, sx
+
+
+class TestDecomposeGraph:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_matches_oracle(self, seed):
+        w, sx = setup(seed)
+        keep = 0.4355
+        ws, u, v, wb = D.decompose_fn(w, sx, jnp.float32(keep), jnp.int32(4))
+        ws_r, u_r, v_r, wb_r = ref.slab_decompose_ref(w, sx, keep, iters=4, svd_iters=D.SVD_ITERS)
+        assert_allclose(np.asarray(ws), np.asarray(ws_r), rtol=1e-4, atol=1e-5)
+        assert_allclose(np.asarray(u), np.asarray(u_r), rtol=1e-3, atol=1e-4)
+        assert_allclose(np.asarray(v), np.asarray(v_r), rtol=1e-3, atol=1e-4)
+        assert_allclose(np.asarray(wb), np.asarray(wb_r), rtol=0, atol=0)
+
+    def test_wb_is_pm1(self):
+        w, sx = setup(1)
+        _, _, _, wb = D.decompose_fn(w, sx, jnp.float32(0.4), jnp.int32(3))
+        vals = np.unique(np.asarray(wb))
+        assert set(vals.tolist()) <= {-1.0, 1.0}
+
+    def test_wl_nonnegative_prop2(self):
+        w, sx = setup(2)
+        _, u, v, _ = D.decompose_fn(w, sx, jnp.float32(0.4), jnp.int32(5))
+        wl = np.outer(np.asarray(u), np.asarray(v))
+        assert wl.min() >= -1e-5
+
+    def test_sparsity_exact_eq10(self):
+        w, sx = setup(3)
+        keep = 0.4355
+        ws, _, _, _ = D.decompose_fn(w, sx, jnp.float32(keep), jnp.int32(3))
+        per_row = int(keep * w.shape[1])
+        nnz = np.count_nonzero(np.asarray(ws), axis=1)
+        assert np.all(nnz == per_row)
+
+    def test_error_decreases_with_iters(self):
+        w, sx = setup(4)
+
+        def err(iters):
+            ws, u, v, wb = D.decompose_fn(w, sx, jnp.float32(0.4355), jnp.int32(iters))
+            w_hat = np.asarray(ws) + np.outer(np.asarray(u), np.asarray(v)) * np.asarray(wb)
+            return np.linalg.norm(np.asarray(w) - w_hat)
+
+        e1, e10 = err(1), err(10)
+        assert e10 <= e1 + 1e-6, (e1, e10)
+
+    def test_beats_wanda_fig3_premise(self):
+        # rank-1 SLaB error < rank-0 (Wanda) error at the same keep.
+        w, sx = setup(5)
+        keep = 0.4355
+        ws, u, v, wb = D.decompose_fn(w, sx, jnp.float32(keep), jnp.int32(5))
+        w_hat = np.asarray(ws) + np.outer(np.asarray(u), np.asarray(v)) * np.asarray(wb)
+        e_slab = np.linalg.norm(np.asarray(w) - w_hat)
+        scores = ref.wanda_scores_ref(w, sx)
+        mask = ref.group_threshold_ref(scores, keep)
+        e_wanda = np.linalg.norm(np.asarray(w) - np.asarray(w * mask))
+        assert e_slab < e_wanda
+
+    def test_dynamic_keep_frac(self):
+        # One artifact serves all CRs: different traced keep fractions
+        # through the same jitted function give correct sparsity.
+        w, sx = setup(6)
+        import jax
+
+        f = jax.jit(D.decompose_fn)
+        for keep in [0.2, 0.3355, 0.4355]:
+            ws, _, _, _ = f(w, sx, jnp.float32(keep), jnp.int32(2))
+            per_row = int(np.floor(keep * w.shape[1]))
+            assert np.all(np.count_nonzero(np.asarray(ws), axis=1) == per_row), keep
+
+
+class TestRefOracles:
+    def test_rank1_svd_matches_numpy(self):
+        rng = np.random.default_rng(11)
+        a = np.abs(rng.normal(size=(32, 48))).astype(np.float32)
+        u, v = ref.rank1_abs_svd_ref(jnp.asarray(a), n_iter=60)
+        rec = np.outer(np.asarray(u), np.asarray(v))
+        un, s, vt = np.linalg.svd(a)
+        rec_np = s[0] * np.outer(un[:, 0], vt[0])
+        # Same rank-1 approximation (sign-canonical: both non-negative).
+        assert_allclose(rec, np.abs(rec_np), rtol=5e-3, atol=5e-3)
+
+    def test_group_threshold_keeps_exact(self):
+        rng = np.random.default_rng(12)
+        s = jnp.asarray(rng.random((5, 40)), jnp.float32)
+        mask = ref.group_threshold_ref(s, 0.25)
+        assert np.all(np.asarray(mask).sum(axis=1) == 10)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        keep=st.floats(0.05, 0.95),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_group_threshold_property(self, keep, seed):
+        rng = np.random.default_rng(seed)
+        s = jnp.asarray(rng.random((7, 33)), jnp.float32)
+        mask = np.asarray(ref.group_threshold_ref(s, keep))
+        k = int(keep * 33)
+        assert np.all(mask.sum(axis=1) == k)
+        # Kept entries all score ≥ dropped entries per row.
+        for i in range(7):
+            row = np.asarray(s)[i]
+            if 0 < k < 33:
+                assert row[mask[i] == 1].min() >= row[mask[i] == 0].max() - 1e-6

@@ -1,0 +1,115 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/seeds; assert_allclose at float32 tolerance.
+This is the core correctness signal for everything the AOT bundle
+ships (DESIGN.md §7).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels import slab_kernels as K
+
+DIMS = st.sampled_from([8, 16, 24, 64, 96, 128, 176])
+BATCH = st.sampled_from([1, 2, 8, 17, 32])
+
+
+def make_inputs(rng, bsz, dout, din, sparse_frac=0.5):
+    x = rng.normal(size=(bsz, din)).astype(np.float32)
+    ws = (rng.normal(size=(dout, din)) * (rng.random((dout, din)) > sparse_frac)).astype(
+        np.float32
+    )
+    u = rng.random(dout).astype(np.float32)
+    v = rng.random(din).astype(np.float32)
+    b = np.where(rng.normal(size=(dout, din)) >= 0, 1.0, -1.0).astype(np.float32)
+    return map(jnp.asarray, (x, ws, u, v, b))
+
+
+class TestSlabLinear:
+    @settings(max_examples=20, deadline=None)
+    @given(bsz=BATCH, dout=DIMS, din=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, bsz, dout, din, seed):
+        rng = np.random.default_rng(seed)
+        x, ws, u, v, b = make_inputs(rng, bsz, dout, din)
+        got = K.slab_linear(x, ws, u, v, b)
+        want = ref.slab_linear_ref(x, ws, u, v, b)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_matches_dense_reconstruction(self):
+        rng = np.random.default_rng(7)
+        x, ws, u, v, b = make_inputs(rng, 4, 64, 96)
+        got = K.slab_linear(x, ws, u, v, b)
+        want = ref.slab_linear_dense_equiv(x, ws, u, v, b)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_zero_u_collapses_to_sparse(self):
+        rng = np.random.default_rng(8)
+        x, ws, _, v, b = make_inputs(rng, 4, 32, 48)
+        u0 = jnp.zeros((32,), jnp.float32)
+        got = K.slab_linear(x, ws, u0, v, b)
+        assert_allclose(np.asarray(got), np.asarray(x @ ws.T), rtol=1e-5, atol=1e-5)
+
+    def test_block_size_invariance(self):
+        rng = np.random.default_rng(9)
+        x, ws, u, v, b = make_inputs(rng, 16, 128, 128)
+        y1 = K.slab_linear(x, ws, u, v, b, block_b=8, block_out=128)
+        y2 = K.slab_linear(x, ws, u, v, b, block_b=16, block_out=32)
+        # Different tilings reassociate the f32 accumulation; allow ulp-
+        # level drift scaled by the accumulator magnitude.
+        assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4)
+
+    def test_odd_shapes_fall_back_to_divisor_tiles(self):
+        rng = np.random.default_rng(10)
+        x, ws, u, v, b = make_inputs(rng, 3, 33, 7)
+        got = K.slab_linear(x, ws, u, v, b)
+        want = ref.slab_linear_ref(x, ws, u, v, b)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+class TestResidualScore:
+    @settings(max_examples=20, deadline=None)
+    @given(dout=DIMS, din=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_composition(self, dout, din, seed):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(dout, din)), jnp.float32)
+        ws = jnp.asarray(
+            rng.normal(size=(dout, din)) * (rng.random((dout, din)) > 0.5), jnp.float32
+        )
+        u = jnp.asarray(rng.random(dout), jnp.float32)
+        v = jnp.asarray(rng.random(din), jnp.float32)
+        sx = jnp.asarray(rng.random(din) + 0.1, jnp.float32)
+
+        wb, ys, s = K.slab_residual_score(w, ws, u, v, sx)
+
+        y_bl = w - ws
+        wb_ref = jnp.where(y_bl >= 0, 1.0, -1.0)
+        ys_ref = w - jnp.outer(u, v) * wb_ref
+        s_ref = ref.wanda_scores_ref(ys_ref, sx)
+        assert_allclose(np.asarray(wb), np.asarray(wb_ref), rtol=0, atol=0)
+        assert_allclose(np.asarray(ys), np.asarray(ys_ref), rtol=1e-5, atol=1e-5)
+        assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-5, atol=1e-5)
+
+    def test_sign_of_zero_is_positive(self):
+        w = jnp.zeros((8, 8), jnp.float32)
+        ws = jnp.zeros_like(w)
+        z = jnp.zeros((8,), jnp.float32)
+        wb, _, _ = K.slab_residual_score(w, ws, z, z, z)
+        assert np.all(np.asarray(wb) == 1.0)
+
+
+class TestVmemEstimator:
+    def test_slab_traffic_below_dense(self):
+        dense = K.dense_linear_hbm_bytes(4096, 4096)
+        slab = K.slab_linear_hbm_bytes(4096, 4096, keep_frac=0.4355)
+        assert slab < dense
+        # At 70% CR the ratio should exceed 2x (DESIGN.md §9).
+        slab70 = K.slab_linear_hbm_bytes(4096, 4096, keep_frac=0.2355)
+        assert dense / slab70 > 1.8
+
+    def test_vmem_fits_tpu_budget(self):
+        # One grid step of the default schedule must fit 16 MiB VMEM.
+        assert K.slab_linear_vmem_bytes(8, 128, 4096) < 16 * 1024 * 1024

@@ -1,0 +1,84 @@
+//! Compression-time benches: Algorithm 1 (native + AOT Pallas
+//! artifact) against the baselines, across layer shapes and iteration
+//! counts. This is the pipeline's dominant cost at `slab compress`
+//! time.
+
+use slab::baselines::{magnitude_prune, sparsegpt_prune, wanda_prune, SparseGptConfig};
+use slab::slab::{decompose, ActStats, SlabConfig};
+use slab::tensor::Mat;
+use slab::util::bench::Bench;
+use slab::util::rng::Pcg64;
+use std::path::Path;
+
+fn main() {
+    let mut rng = Pcg64::seed_from_u64(88);
+
+    for (dout, din) in [(256usize, 256usize), (688, 256)] {
+        let mut b = Bench::new(&format!("decompose {dout}x{din}"));
+        let w = Mat::randn(dout, din, 0.02, &mut rng);
+        let x = Mat::randn(512, din, 1.0, &mut rng);
+        let stats = ActStats::from_activations(&x);
+        let stats_gram = ActStats::from_activations_with_gram(&x);
+        let numel = (dout * din) as f64;
+
+        for iters in [1usize, 5, 20] {
+            let cfg = SlabConfig {
+                iters,
+                ..Default::default()
+            };
+            b.run_throughput(&format!("slab native s={iters}"), numel, "elem", || {
+                decompose(&w, &stats, &cfg).expect("decompose")
+            });
+        }
+        b.run_throughput("wanda", numel, "elem", || {
+            wanda_prune(&w, &stats, 0.5, None)
+        });
+        b.run_throughput("magnitude", numel, "elem", || {
+            magnitude_prune(&w, 0.5, None)
+        });
+        b.run_throughput("sparsegpt (OBS)", numel, "elem", || {
+            sparsegpt_prune(&w, &stats_gram, 0.5, None, &SparseGptConfig::default())
+                .expect("sparsegpt")
+        });
+
+        // Design-choice ablation (DESIGN.md §8 / EXPERIMENTS.md §Perf):
+        // O(n) partition vs O(n log n) full sort inside the threshold —
+        // the hottest native loop of the 20-iteration Alg-1 sweep.
+        let scores = w.abs();
+        b.run_throughput("threshold select_nth (ours)", numel, "elem", || {
+            slab::slab::threshold::group_topk_mask(&scores, 0.4355, 1, din)
+        });
+        b.run_throughput("threshold full-sort (ablation)", numel, "elem", || {
+            slab::slab::threshold::group_topk_mask_sort(&scores, 0.4355)
+        });
+        b.finish();
+    }
+
+    // AOT decompose artifact (Pallas inner kernel, XLA sort threshold).
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        if let Ok(rt) = slab::runtime::Runtime::new(dir) {
+            let mut b = Bench::new("AOT decompose artifact (PJRT CPU)");
+            for (dout, din) in [(128usize, 128usize), (344, 128), (128, 344)] {
+                let name = format!("decompose_{dout}x{din}");
+                if rt.manifest.artifact(&name).is_none() {
+                    continue;
+                }
+                let w = Mat::randn(dout, din, 0.02, &mut rng);
+                let sx = vec![1.0f32; din];
+                let inputs = vec![
+                    slab::runtime::lit_mat(&w),
+                    slab::runtime::lit_f32(&sx, &[din]),
+                    slab::runtime::literal::lit_scalar_f32(0.4355),
+                    slab::runtime::lit_scalar_i32(20),
+                ];
+                b.run_throughput(&format!("{name} s=20"), (dout * din) as f64, "elem", || {
+                    rt.execute(&name, &inputs).expect("exec")
+                });
+            }
+            b.finish();
+        }
+    } else {
+        eprintln!("(artifacts/ missing — skipping AOT decompose benches)");
+    }
+}

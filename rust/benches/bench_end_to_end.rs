@@ -1,0 +1,95 @@
+//! End-to-end benches over the AOT artifacts: train-step latency,
+//! eval throughput, and serving (prefill + decode) tokens/sec.
+//! Skips gracefully when `artifacts/` is missing.
+
+use slab::data::{build_corpus, Grammar};
+use slab::model::Params;
+use slab::runtime::{lit_i32, lit_scalar_i32, Runtime};
+use slab::util::bench::Bench;
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first; skipping");
+        return;
+    }
+    let rt = Runtime::new(dir).expect("runtime");
+    let cfg = rt.manifest.config("small").expect("small config").clone();
+    let g = Grammar::standard();
+    let corpus = build_corpus(&g, 42, 64, 32, 32, cfg.max_seq);
+    let params = Params::init(&cfg, 7);
+
+    let mut b = Bench::new(&format!("end-to-end ({}, {} params)", cfg.name, cfg.n_params()));
+
+    // --- train step ------------------------------------------------------
+    {
+        let name = format!("train_step_{}", cfg.name);
+        let bsz = rt.manifest.train_batch;
+        let width = cfg.max_seq + 1;
+        let tokens_per_step = (bsz * cfg.max_seq) as f64;
+        let zero = Params::zeros_like(&cfg);
+        b.run_throughput("train_step", tokens_per_step, "tok", || {
+            let mut inputs = params.to_literals();
+            inputs.extend(zero.to_literals());
+            inputs.extend(zero.to_literals());
+            inputs.push(lit_scalar_i32(0));
+            inputs.push(lit_i32(&corpus.train.batch(0, bsz), &[bsz, width]));
+            rt.execute(&name, &inputs).expect("train_step")
+        });
+    }
+
+    // --- eval_nll ----------------------------------------------------------
+    {
+        let name = format!("eval_nll_{}", cfg.name);
+        let bsz = rt.manifest.eval_batch;
+        let width = cfg.max_seq + 1;
+        b.run_throughput("eval_nll batch", (bsz * cfg.max_seq) as f64, "tok", || {
+            let mut inputs = params.to_literals();
+            inputs.push(lit_i32(&corpus.valid.batch(0, bsz), &[bsz, width]));
+            rt.execute(&name, &inputs).expect("eval_nll")
+        });
+    }
+
+    // --- prefill + decode ---------------------------------------------------
+    {
+        let prefill = format!("prefill_{}", cfg.name);
+        let decode = format!("decode_step_{}", cfg.name);
+        let sb = rt.manifest.serve_batch;
+        let pl = cfg.prompt_len;
+        let prompt: Vec<i32> = corpus.valid.row(0)[..pl]
+            .iter()
+            .cycle()
+            .take(sb * pl)
+            .copied()
+            .collect();
+        b.run_throughput("prefill", (sb * pl) as f64, "tok", || {
+            let mut inputs = params.to_literals();
+            inputs.push(lit_i32(&prompt, &[sb, pl]));
+            rt.execute(&prefill, &inputs).expect("prefill")
+        });
+        // One decode step, caches from a single prefill.
+        let mut inputs = params.to_literals();
+        inputs.push(lit_i32(&prompt, &[sb, pl]));
+        let outs = rt.execute(&prefill, &inputs).expect("prefill once");
+        let kc = &outs[1];
+        let vc = &outs[2];
+        let tok = vec![5i32; sb];
+        b.run_throughput("decode_step", sb as f64, "tok", || {
+            let mut inputs = params.to_literals();
+            inputs.push(clone(kc));
+            inputs.push(clone(vc));
+            inputs.push(lit_i32(&tok, &[sb]));
+            inputs.push(lit_scalar_i32(pl as i32));
+            rt.execute(&decode, &inputs).expect("decode")
+        });
+    }
+
+    b.finish();
+}
+
+fn clone(l: &xla::Literal) -> xla::Literal {
+    let v = l.to_vec::<f32>().unwrap();
+    let dims: Vec<i64> = l.array_shape().unwrap().dims().to_vec();
+    xla::Literal::vec1(&v).reshape(&dims).unwrap()
+}

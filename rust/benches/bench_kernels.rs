@@ -1,0 +1,88 @@
+//! Kernel-level benches: the deployment hot path.
+//!
+//! Compares, at paper-relevant shapes, the per-forward cost of
+//! dense GEMM vs CSR sparse vs bitpacked-binary vs the full packed
+//! SLaB layer (CSR + rank-1 + bitplane) — the CPU analogue of the
+//! HBM-bytes argument in DESIGN.md §9 — plus the AOT Pallas
+//! `slab_linear` artifact when `artifacts/` is present.
+
+use slab::binary::BitMat;
+use slab::slab::{decompose, ActStats, SlabConfig, SlabLayer};
+use slab::sparse::Csr;
+use slab::tensor::{matmul_bt, Mat};
+use slab::util::bench::Bench;
+use slab::util::rng::Pcg64;
+use std::path::Path;
+
+fn main() {
+    let mut rng = Pcg64::seed_from_u64(77);
+    let shapes = [(256usize, 256usize), (688, 256), (256, 688)];
+    let batch = 32usize;
+
+    for (dout, din) in shapes {
+        let mut b = Bench::new(&format!("linear {dout}x{din} (batch {batch})"));
+        let w = Mat::randn(dout, din, 0.02, &mut rng);
+        let x = Mat::randn(batch, din, 1.0, &mut rng);
+        let stats = ActStats::from_activations(&Mat::randn(256, din, 1.0, &mut rng));
+        let cfg = SlabConfig {
+            iters: 5,
+            ..Default::default()
+        };
+        let d = decompose(&w, &stats, &cfg).expect("decompose");
+        let layer = SlabLayer::from_decomposition(&d);
+        let csr = Csr::from_dense(&d.w_s);
+        let bits = BitMat::from_sign_of(&d.w_b);
+        let flops = 2.0 * batch as f64 * dout as f64 * din as f64;
+
+        b.run_throughput("dense matmul_bt", flops, "flop", || matmul_bt(&x, &w));
+        b.run_throughput(
+            &format!("csr spmm ({} nnz, {:.0}%)", csr.nnz(), 100.0 * csr.density()),
+            flops,
+            "flop",
+            || csr.spmm_bt(&x),
+        );
+        b.run_throughput("bitpacked ±1 matmul", flops, "flop", || bits.matmul_bt(&x));
+        b.run_throughput("slab packed forward", flops, "flop", || layer.forward(&x));
+        println!(
+            "  [bytes] dense f32 {} | slab packed {} ({:.2}x smaller)",
+            dout * din * 4,
+            layer.nbytes_deploy(),
+            (dout * din * 4) as f64 / layer.nbytes_deploy() as f64
+        );
+        b.finish();
+    }
+
+    // AOT Pallas slab_linear artifact (needs `make artifacts`).
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        if let Ok(rt) = slab::runtime::Runtime::new(dir) {
+            let mut b = Bench::new("AOT slab_linear artifact (PJRT CPU)");
+            let kb = rt.manifest.kernel_bench_batch;
+            for (dout, din) in [(128usize, 128usize), (344, 128)] {
+                let name = format!("slab_linear_{dout}x{din}");
+                if rt.manifest.artifact(&name).is_none() {
+                    continue;
+                }
+                let w = Mat::randn(dout, din, 0.02, &mut rng);
+                let x = Mat::randn(kb, din, 1.0, &mut rng);
+                let u = vec![0.1f32; dout];
+                let v = vec![0.1f32; din];
+                let bm = Mat::randn(dout, din, 1.0, &mut rng).sign_pm1();
+                let inputs = vec![
+                    slab::runtime::lit_mat(&x),
+                    slab::runtime::lit_mat(&w),
+                    slab::runtime::lit_f32(&u, &[dout]),
+                    slab::runtime::lit_f32(&v, &[din]),
+                    slab::runtime::lit_mat(&bm),
+                ];
+                let flops = 2.0 * kb as f64 * dout as f64 * din as f64;
+                b.run_throughput(&name, flops, "flop", || {
+                    rt.execute(&name, &inputs).expect("exec")
+                });
+            }
+            b.finish();
+        }
+    } else {
+        eprintln!("(artifacts/ missing — skipping AOT kernel benches; run `make artifacts`)");
+    }
+}

@@ -1,0 +1,54 @@
+//! Table regeneration harness: re-derives the paper's Table I rows
+//! (and Fig. 3 series) on the `small` model and reports wall-clock per
+//! pipeline stage. Requires `make artifacts` and a trained checkpoint
+//! (`runs/small.slabckpt`, produced by the e2e example or
+//! `slab train --model small`); skips gracefully otherwise so
+//! `cargo bench` never hard-fails on a fresh clone.
+
+use slab::experiments::{self, Lab};
+use std::path::Path;
+
+fn main() {
+    let artifacts = Path::new("artifacts");
+    let runs = Path::new("runs");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts`; skipping table benches");
+        return;
+    }
+    let mut lab = match Lab::new(artifacts, runs) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("lab init failed: {e}; skipping");
+            return;
+        }
+    };
+    lab.task_items = 20; // bench mode: smaller suites, same shape
+    if !runs.join("small.slabckpt").exists() {
+        eprintln!(
+            "runs/small.slabckpt missing — run `make e2e` or `slab train --model small`; skipping"
+        );
+        return;
+    }
+
+    let t0 = std::time::Instant::now();
+    match experiments::table1(
+        &lab,
+        &["small".to_string()],
+        &["Dense".to_string(), "US (50%)".to_string(), "2:4".to_string()],
+    ) {
+        Ok(t) => {
+            t.print();
+            eprintln!("[bench_tables] table1 subset in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("table1 failed: {e}"),
+    }
+
+    let t0 = std::time::Instant::now();
+    match experiments::fig3(&lab, "small", 3) {
+        Ok(t) => {
+            t.print();
+            eprintln!("[bench_tables] fig3 in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("fig3 failed: {e}"),
+    }
+}

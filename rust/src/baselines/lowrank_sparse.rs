@@ -1,0 +1,131 @@
+//! Naive sparse + plain low-rank combination — the strawman of the
+//! paper's Fig. 1: `W ≈ W_S + U_r·V_rᵀ` with **no binary matrix**, at
+//! a joint compression ratio.
+//!
+//! Storage at b bits: `b·k + b·r·(Dout+Din)`, so
+//!
+//! ```text
+//! keep_frac = 1 − CR − r·(Dout+Din)/(Dout·Din)
+//! ```
+//!
+//! — every extra unit of rank eats directly into the sparse budget,
+//! which is why perplexity *worsens* with rank in Fig. 1 while SLaB's
+//! 1-bit `W_B` + rank-1 `W_L` gets the compensation almost for free.
+
+use super::CompressedLayer;
+use crate::slab::config::ConfigError;
+use crate::slab::scores::{wanda_scores, ActStats};
+use crate::slab::threshold::group_topk_mask;
+use crate::tensor::{svd_truncated, Mat};
+
+/// Keep fraction for the sparse part at joint `cr` with rank `r`
+/// (both components stored at the same bit width, so `b` cancels).
+pub fn lowrank_sparse_keep_fraction(
+    cr: f64,
+    rank: usize,
+    dout: usize,
+    din: usize,
+) -> Result<f64, ConfigError> {
+    let overhead = rank as f64 * (dout + din) as f64 / (dout * din) as f64;
+    let f = 1.0 - cr - overhead;
+    if f <= 0.0 || f >= 1.0 {
+        return Err(ConfigError::Infeasible(f, cr, dout, din, 16));
+    }
+    Ok(f)
+}
+
+/// Alternating sparse + rank-r decomposition (Wanda-style scores for
+/// the sparse part, plain truncated SVD of the residual for the
+/// low-rank part). `rank = 0` degenerates to Wanda at sparsity `cr`.
+pub fn lowrank_sparse_compress(
+    w: &Mat,
+    stats: &ActStats,
+    cr: f64,
+    rank: usize,
+    iters: usize,
+) -> Result<CompressedLayer, ConfigError> {
+    let (dout, din) = w.shape();
+    let keep = lowrank_sparse_keep_fraction(cr, rank, dout, din)?;
+
+    let mut w_s = Mat::zeros(dout, din);
+    let mut lr = Mat::zeros(dout, din);
+    let mut kept = 0usize;
+    for t in 0..iters.max(1) {
+        if rank > 0 {
+            let y = w.sub(&w_s);
+            let svd = svd_truncated(&y, rank, 8, 0x516 ^ t as u64);
+            lr = svd.reconstruct();
+        }
+        let y_s = w.sub(&lr);
+        let s = wanda_scores(&y_s, stats);
+        let mask = group_topk_mask(&s, keep, 1, din);
+        w_s = y_s.hadamard(&mask);
+        kept = mask.count_nonzero();
+        if rank == 0 {
+            break;
+        }
+    }
+    let w_hat = w_s.add(&lr);
+    Ok(CompressedLayer {
+        kept,
+        frob_err: w.frob_dist(&w_hat),
+        w_hat,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn budget_shrinks_with_rank() {
+        let f0 = lowrank_sparse_keep_fraction(0.5, 0, 256, 512).unwrap();
+        let f8 = lowrank_sparse_keep_fraction(0.5, 8, 256, 512).unwrap();
+        let f64v = lowrank_sparse_keep_fraction(0.5, 64, 256, 512).unwrap();
+        assert!(f0 > f8 && f8 > f64v);
+        assert!((f0 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn infeasible_rank_rejected() {
+        // rank so large the low-rank factors alone exceed the budget.
+        assert!(lowrank_sparse_keep_fraction(0.5, 100, 64, 64).is_err());
+    }
+
+    #[test]
+    fn rank0_equals_wanda() {
+        let mut rng = Pcg64::seed_from_u64(160);
+        let w = Mat::randn(16, 64, 0.05, &mut rng);
+        let x = Mat::randn(32, 64, 1.0, &mut rng);
+        let stats = ActStats::from_activations(&x);
+        let ls = lowrank_sparse_compress(&w, &stats, 0.5, 0, 3).unwrap();
+        let wa = super::super::wanda::wanda_prune(&w, &stats, 0.5, None);
+        assert!(ls.w_hat.allclose(&wa.w_hat, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn exact_sparse_count() {
+        let mut rng = Pcg64::seed_from_u64(161);
+        let w = Mat::randn(32, 128, 0.05, &mut rng);
+        let stats = ActStats::from_activations(&Mat::randn(64, 128, 1.0, &mut rng));
+        let out = lowrank_sparse_compress(&w, &stats, 0.5, 4, 3).unwrap();
+        let keep = lowrank_sparse_keep_fraction(0.5, 4, 32, 128).unwrap();
+        assert_eq!(out.kept, ((keep * 128.0).floor() as usize) * 32);
+    }
+
+    #[test]
+    fn fig1_shape_error_grows_with_rank_on_gaussian() {
+        // Fig 1's driver at the weight level: on weights without strong
+        // low-rank structure, burning budget on rank hurts.
+        let mut rng = Pcg64::seed_from_u64(162);
+        let w = Mat::randn(128, 512, 0.05, &mut rng);
+        let stats = ActStats::from_activations(&Mat::randn(128, 512, 1.0, &mut rng));
+        let e = |r| lowrank_sparse_compress(&w, &stats, 0.5, r, 3).unwrap().frob_err;
+        let e0 = e(0);
+        let e8 = e(8);
+        let e24 = e(24);
+        assert!(e24 > e0, "rank24 {e24} should exceed rank0 {e0}");
+        assert!(e24 > e8 * 0.99, "monotone-ish tail");
+    }
+}

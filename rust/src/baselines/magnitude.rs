@@ -1,0 +1,69 @@
+//! Magnitude pruning — the classic no-calibration baseline
+//! (Han et al. 2015). Scores are `|W|`; selection uses the same
+//! per-row comparison groups as Wanda so the only difference is the
+//! activation weighting.
+
+use super::CompressedLayer;
+use crate::slab::threshold::{group_topk_mask, semi_structured_mask};
+use crate::sparse::NmPattern;
+use crate::tensor::Mat;
+
+/// Prune to `sparsity` (fraction zeroed), optional N:M pattern.
+pub fn magnitude_prune(w: &Mat, sparsity: f64, pattern: Option<NmPattern>) -> CompressedLayer {
+    let keep = 1.0 - sparsity;
+    let scores = w.abs();
+    let mask = match pattern {
+        None => group_topk_mask(&scores, keep, 1, w.cols),
+        Some(p) => semi_structured_mask(&scores, keep, p, 1, w.cols),
+    };
+    let w_hat = w.hadamard(&mask);
+    CompressedLayer {
+        kept: mask.count_nonzero(),
+        frob_err: w.frob_dist(&w_hat),
+        w_hat,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::PATTERN_2_4;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let w = Mat::from_vec(1, 4, vec![0.1, -0.9, 0.5, -0.2]);
+        let out = magnitude_prune(&w, 0.5, None);
+        assert_eq!(out.w_hat.data, vec![0.0, -0.9, 0.5, 0.0]);
+        assert_eq!(out.kept, 2);
+    }
+
+    #[test]
+    fn sparsity_exact_per_row() {
+        let mut rng = Pcg64::seed_from_u64(130);
+        let w = Mat::randn(16, 64, 1.0, &mut rng);
+        let out = magnitude_prune(&w, 0.75, None);
+        assert_eq!(out.kept, 16 * 16);
+        for i in 0..16 {
+            assert_eq!(out.w_hat.row(i).iter().filter(|&&v| v != 0.0).count(), 16);
+        }
+    }
+
+    #[test]
+    fn nm_pattern_respected() {
+        let mut rng = Pcg64::seed_from_u64(131);
+        let w = Mat::randn(8, 32, 1.0, &mut rng);
+        let out = magnitude_prune(&w, 0.5, Some(PATTERN_2_4));
+        PATTERN_2_4.validate(&out.w_hat).unwrap();
+        assert_eq!(out.kept, 8 * 16);
+    }
+
+    #[test]
+    fn error_grows_with_sparsity() {
+        let mut rng = Pcg64::seed_from_u64(132);
+        let w = Mat::randn(32, 64, 1.0, &mut rng);
+        let e50 = magnitude_prune(&w, 0.5, None).frob_err;
+        let e80 = magnitude_prune(&w, 0.8, None).frob_err;
+        assert!(e80 > e50);
+    }
+}

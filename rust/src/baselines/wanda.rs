@@ -1,0 +1,86 @@
+//! Wanda (Sun et al. 2023) — pruning with weights × activation norms.
+//!
+//! Score `S_ij = |W_ij| · ||X_j||₂`, comparison group `(1, Din)`,
+//! prune to target sparsity, no weight update. This is both a Table-I
+//! baseline and the `rank = 0` degenerate case of SLaB (the identity
+//! is pinned by a test in `slab::decompose`).
+
+use super::CompressedLayer;
+use crate::slab::scores::{wanda_scores, ActStats};
+use crate::slab::threshold::{group_topk_mask, semi_structured_mask};
+use crate::sparse::NmPattern;
+use crate::tensor::Mat;
+
+/// Prune to `sparsity` (fraction zeroed), optional N:M pattern.
+pub fn wanda_prune(
+    w: &Mat,
+    stats: &ActStats,
+    sparsity: f64,
+    pattern: Option<NmPattern>,
+) -> CompressedLayer {
+    let keep = 1.0 - sparsity;
+    let scores = wanda_scores(w, stats);
+    let mask = match pattern {
+        None => group_topk_mask(&scores, keep, 1, w.cols),
+        Some(p) => semi_structured_mask(&scores, keep, p, 1, w.cols),
+    };
+    let w_hat = w.hadamard(&mask);
+    CompressedLayer {
+        kept: mask.count_nonzero(),
+        frob_err: w.frob_dist(&w_hat),
+        w_hat,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::PATTERN_4_8;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn activation_weighting_changes_selection() {
+        // Two equal-magnitude weights; the one feeding the high-norm
+        // input column must survive.
+        let w = Mat::from_vec(1, 2, vec![0.5, 0.5]);
+        let stats = ActStats {
+            col_norms: vec![10.0, 0.1],
+            gram: None,
+            samples: 1,
+        };
+        let out = wanda_prune(&w, &stats, 0.5, None);
+        assert_eq!(out.w_hat.data, vec![0.5, 0.0]);
+    }
+
+    #[test]
+    fn uniform_stats_reduce_to_magnitude() {
+        let mut rng = Pcg64::seed_from_u64(140);
+        let w = Mat::randn(12, 48, 1.0, &mut rng);
+        let wa = wanda_prune(&w, &ActStats::uniform(48), 0.5, None);
+        let ma = super::super::magnitude::magnitude_prune(&w, 0.5, None);
+        assert_eq!(wa.w_hat, ma.w_hat);
+    }
+
+    #[test]
+    fn kept_values_are_original() {
+        let mut rng = Pcg64::seed_from_u64(141);
+        let w = Mat::randn(8, 32, 1.0, &mut rng);
+        let x = Mat::randn(64, 32, 1.0, &mut rng);
+        let out = wanda_prune(&w, &ActStats::from_activations(&x), 0.5, None);
+        for i in 0..8 {
+            for j in 0..32 {
+                let v = out.w_hat.at(i, j);
+                assert!(v == 0.0 || v == w.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn nm_pattern_respected() {
+        let mut rng = Pcg64::seed_from_u64(142);
+        let w = Mat::randn(8, 64, 1.0, &mut rng);
+        let x = Mat::randn(32, 64, 1.0, &mut rng);
+        let out = wanda_prune(&w, &ActStats::from_activations(&x), 0.5, Some(PATTERN_4_8));
+        PATTERN_4_8.validate(&out.w_hat).unwrap();
+    }
+}

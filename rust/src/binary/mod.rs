@@ -1,0 +1,231 @@
+//! Binary ±1 matrix substrate — the `W_B` component.
+//!
+//! `W_B ∈ {+1,−1}^(Dout×Din)` stores one bit per element (bit set ⇔ +1),
+//! packed 64 signs per `u64` word along the row (Din) axis. The paper's
+//! hardware claim is exactly this 16×-vs-fp16 (32×-vs-fp32) storage
+//! saving; on CPU we additionally exploit it with a sign-select matmul
+//! that processes signs word-at-a-time.
+
+use crate::tensor::Mat;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitMat {
+    pub rows: usize,
+    pub cols: usize,
+    /// ceil(cols/64) words per row, row-major.
+    words_per_row: usize,
+    bits: Vec<u64>,
+}
+
+impl BitMat {
+    /// Pack from a dense ±1 (or arbitrary-sign) matrix: bit = (v >= 0).
+    /// Matches `Mat::sign_pm1` (sign(0) = +1).
+    pub fn from_sign_of(m: &Mat) -> BitMat {
+        let words_per_row = m.cols.div_ceil(64);
+        let mut bits = vec![0u64; m.rows * words_per_row];
+        for i in 0..m.rows {
+            let row = m.row(i);
+            for (j, &v) in row.iter().enumerate() {
+                if v >= 0.0 {
+                    bits[i * words_per_row + j / 64] |= 1u64 << (j % 64);
+                }
+            }
+        }
+        BitMat {
+            rows: m.rows,
+            cols: m.cols,
+            words_per_row,
+            bits,
+        }
+    }
+
+    /// All +1.
+    pub fn ones(rows: usize, cols: usize) -> BitMat {
+        BitMat::from_sign_of(&Mat::filled(rows, cols, 1.0))
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        if self.bits[i * self.words_per_row + j / 64] >> (j % 64) & 1 == 1 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        Mat::from_fn(self.rows, self.cols, |i, j| self.get(i, j))
+    }
+
+    /// Storage bytes (the 1-bit/elem claim; row padding included).
+    pub fn nbytes(&self) -> usize {
+        self.bits.len() * 8
+    }
+
+    /// Fraction of +1 entries.
+    pub fn positive_fraction(&self) -> f64 {
+        let mut count = 0u64;
+        for i in 0..self.rows {
+            for w in 0..self.words_per_row {
+                let mut word = self.bits[i * self.words_per_row + w];
+                // Mask padding bits in the last word.
+                if w == self.words_per_row - 1 && self.cols % 64 != 0 {
+                    word &= (1u64 << (self.cols % 64)) - 1;
+                }
+                count += word.count_ones() as u64;
+            }
+        }
+        count as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// y[i] = Σ_j x[j] · B[i,j]  (B ∈ ±1).
+    ///
+    /// Sign-select kernel: acc = total − 2·Σ_{bit=0} x[j], computed
+    /// per 64-bit word. When a word is all-ones or all-zeros the inner
+    /// loop collapses to a precomputed prefix sum — on real ±1-times-
+    /// activation workloads most of the win comes from the packed
+    /// memory traffic, mirroring the TPU HBM argument in DESIGN.md §3.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let total: f32 = x.iter().sum();
+        let mut y = vec![0.0f32; self.rows];
+        for i in 0..self.rows {
+            let base = i * self.words_per_row;
+            let mut neg_sum = 0.0f32; // Σ x[j] where bit=0 (sign −1)
+            for w in 0..self.words_per_row {
+                let mut word = !self.bits[base + w]; // set bits = −1 lanes
+                let jbase = w * 64;
+                let lanes = (self.cols - jbase).min(64);
+                if lanes < 64 {
+                    word &= (1u64 << lanes) - 1;
+                }
+                while word != 0 {
+                    let t = word.trailing_zeros() as usize;
+                    neg_sum += x[jbase + t];
+                    word &= word - 1;
+                }
+            }
+            y[i] = total - 2.0 * neg_sum;
+        }
+        y
+    }
+
+    /// Y = X·Bᵀ for a batch X (B, Din): the `(x ⊙ v)·Bᵀ` step of the
+    /// SLaB forward.
+    pub fn matmul_bt(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.cols);
+        let mut y = Mat::zeros(x.rows, self.rows);
+        for b in 0..x.rows {
+            let yb = self.matvec(x.row(b));
+            y.row_mut(b).copy_from_slice(&yb);
+        }
+        y
+    }
+
+    /// XNOR-popcount path for *binary* activations (x ∈ ±1 packed):
+    /// dot(a,b) = 64·matches − lanes. Included as the classic binary-
+    /// network kernel the paper's `W_B` enables when activations are
+    /// also binarized (not used on the main SLaB path, exercised by
+    /// benches as the roofline reference).
+    pub fn xnor_dot(&self, row: usize, other: &BitMat, other_row: usize) -> i64 {
+        assert_eq!(self.cols, other.cols);
+        let a = &self.bits[row * self.words_per_row..(row + 1) * self.words_per_row];
+        let b = &other.bits[other_row * other.words_per_row..(other_row + 1) * other.words_per_row];
+        let mut matches = 0i64;
+        for w in 0..self.words_per_row {
+            let mut eq = !(a[w] ^ b[w]);
+            let jbase = w * 64;
+            let lanes = (self.cols - jbase).min(64);
+            if lanes < 64 {
+                eq &= (1u64 << lanes) - 1;
+            }
+            matches += eq.count_ones() as i64;
+        }
+        2 * matches - self.cols as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{matmul_bt, matvec};
+    use crate::util::rng::Pcg64;
+
+    fn random_sign(rows: usize, cols: usize, rng: &mut Pcg64) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+    }
+
+    #[test]
+    fn pack_roundtrip() {
+        let mut rng = Pcg64::seed_from_u64(60);
+        for cols in [1, 63, 64, 65, 130] {
+            let m = random_sign(5, cols, &mut rng);
+            let b = BitMat::from_sign_of(&m);
+            assert_eq!(b.to_dense(), m, "cols={cols}");
+        }
+    }
+
+    #[test]
+    fn sign_of_zero_is_positive() {
+        let m = Mat::from_vec(1, 3, vec![0.0, -0.5, 2.0]);
+        let b = BitMat::from_sign_of(&m);
+        assert_eq!(b.get(0, 0), 1.0);
+        assert_eq!(b.get(0, 1), -1.0);
+        assert_eq!(b.get(0, 2), 1.0);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Pcg64::seed_from_u64(61);
+        for cols in [7, 64, 100] {
+            let m = random_sign(9, cols, &mut rng);
+            let b = BitMat::from_sign_of(&m);
+            let x: Vec<f32> = (0..cols).map(|i| (i as f32 * 0.3).sin()).collect();
+            let y1 = b.matvec(&x);
+            let y2 = matvec(&m, &x);
+            for i in 0..9 {
+                assert!((y1[i] - y2[i]).abs() < 1e-3, "cols={cols} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_dense() {
+        let mut rng = Pcg64::seed_from_u64(62);
+        let w = random_sign(11, 70, &mut rng);
+        let x = Mat::randn(4, 70, 1.0, &mut rng);
+        let b = BitMat::from_sign_of(&w);
+        let y1 = b.matmul_bt(&x);
+        let y2 = matmul_bt(&x, &w);
+        assert!(y1.allclose(&y2, 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn storage_is_one_bit_per_element() {
+        let b = BitMat::ones(128, 512);
+        assert_eq!(b.nbytes(), 128 * 512 / 8);
+        // vs f32 dense: 32× smaller; vs f16: 16×.
+        assert_eq!(128 * 512 * 4 / b.nbytes(), 32);
+    }
+
+    #[test]
+    fn positive_fraction_counts() {
+        let m = Mat::from_vec(2, 3, vec![1.0, -1.0, 1.0, -1.0, -1.0, -1.0]);
+        let b = BitMat::from_sign_of(&m);
+        assert!((b.positive_fraction() - 2.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn xnor_dot_matches_float() {
+        let mut rng = Pcg64::seed_from_u64(63);
+        let a = random_sign(3, 77, &mut rng);
+        let c = random_sign(3, 77, &mut rng);
+        let ba = BitMat::from_sign_of(&a);
+        let bc = BitMat::from_sign_of(&c);
+        for i in 0..3 {
+            let expect: f32 = a.row(i).iter().zip(c.row(i).iter()).map(|(&x, &y)| x * y).sum();
+            assert_eq!(ba.xnor_dot(i, &bc, i), expect as i64);
+        }
+    }
+}

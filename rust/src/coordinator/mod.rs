@@ -1,0 +1,8 @@
+//! Layer-3 coordination: the one-shot compression pipeline
+//! ([`pipeline`]) and the serving router/dynamic batcher ([`serve`]).
+
+pub mod pipeline;
+pub mod serve;
+
+pub use pipeline::{compress_model, CompressReport, CompressedModel, Engine, PipelineError};
+pub use serve::{Request, Response, ServeStats, Server, ServerConfig};

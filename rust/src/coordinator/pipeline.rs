@@ -1,0 +1,290 @@
+//! The layer-wise one-shot pruning pipeline (paper §II-A.1).
+//!
+//! For every transformer block, in order:
+//!
+//! 1. **forward** the calibration batches through the block with the
+//!    *current* (already partially pruned) weights, capturing the four
+//!    activation sources — `x_attn` (feeds wq/wk/wv), `att_out` (wo),
+//!    `x_mlp` (w_gate/w_up), `mlp_inner` (w_down);
+//! 2. **prune** the seven linears with the configured method;
+//! 3. **update** the block outputs with the pruned weights and hand
+//!    them to the next block.
+//!
+//! All forward compute runs in the `embed_{cfg}` / `block_capture_{cfg}`
+//! artifacts; SLaB decomposition can run either natively
+//! ([`Engine::Native`]) or through the AOT `decompose_{shape}` Pallas
+//! artifact ([`Engine::Artifact`]) — integration tests pin the two
+//! paths against each other.
+
+use crate::baselines::{Method, MethodError};
+use crate::data::TokenSet;
+use crate::model::Params;
+use crate::runtime::client::RuntimeError;
+use crate::runtime::{lit_i32, lit_scalar_i32, to_vec_f32, Runtime};
+use crate::slab::{ActStats, SlabConfig, SlabLayer};
+use crate::tensor::Mat;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Pure-rust decomposition (used by all baselines; SLaB optional).
+    Native,
+    /// SLaB through the AOT Pallas `decompose_{shape}` artifact.
+    Artifact,
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub name: String,
+    pub kept: usize,
+    pub numel: usize,
+    pub frob_err: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct CompressReport {
+    pub method: String,
+    pub layers: Vec<LayerReport>,
+    pub wall_secs: f64,
+    /// Mean ‖W − Ŵ‖_F across layers (the Fig. 3 metric).
+    pub mean_frob: f64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum PipelineError {
+    #[error("runtime: {0}")]
+    Runtime(#[from] RuntimeError),
+    #[error("method: {0}")]
+    Method(#[from] MethodError),
+    #[error("pipeline: {0}")]
+    Other(String),
+}
+
+/// Result of compressing a model: swapped-in dense reconstructions
+/// plus (for SLaB) the packed deployable layers.
+pub struct CompressedModel {
+    pub params: Params,
+    pub slab_layers: Vec<(String, SlabLayer)>,
+    pub report: CompressReport,
+}
+
+/// Compress every pruned linear of `params` with `method`.
+pub fn compress_model(
+    rt: &Runtime,
+    params: &Params,
+    calib: &TokenSet,
+    method: &Method,
+    engine: Engine,
+) -> Result<CompressedModel, PipelineError> {
+    let t0 = std::time::Instant::now();
+    let cfg = params.cfg.clone();
+    let mut out = params.clone();
+    let bsz = rt.manifest.eval_batch;
+    let t = cfg.max_seq;
+    let n_batches = (calib.rows / bsz).max(1);
+
+    // --- embed all calibration batches ---------------------------------
+    let emb_name = format!("embed_{}", cfg.name);
+    let tok_emb_lit = &params.to_literals()[0];
+    let mut h_batches: Vec<xla::Literal> = Vec::with_capacity(n_batches);
+    for b in 0..n_batches {
+        let mut flat = Vec::with_capacity(bsz * t);
+        for k in 0..bsz {
+            flat.extend_from_slice(&calib.row(b * bsz + k)[..t]);
+        }
+        let outs = rt.execute(
+            &emb_name,
+            &[clone_lit(tok_emb_lit), lit_i32(&flat, &[bsz, t])],
+        )?;
+        h_batches.push(into_single(outs));
+    }
+
+    let cap_name = format!("block_capture_{}", cfg.name);
+    let mut layers = Vec::new();
+    let mut slab_layers: Vec<(String, SlabLayer)> = Vec::new();
+
+    for layer in 0..cfg.n_layers {
+        // --- pass 1: capture activations with current weights ----------
+        let layer_lits = layer_literals(&out, layer);
+        let mut stats: [Option<ActStats>; 4] = [None, None, None, None];
+        let needs_gram = method.needs_gram();
+        for h in &h_batches {
+            let mut inputs: Vec<xla::Literal> =
+                layer_lits.iter().map(clone_lit).collect();
+            inputs.push(clone_lit(h));
+            let outs = rt.execute(&cap_name, &inputs)?;
+            // outs: h_out, x_attn, att_out, x_mlp, mlp_inner
+            for (slot, idx) in [(0usize, 1usize), (1, 2), (2, 3), (3, 4)] {
+                let din = if slot == 3 { cfg.ffn } else { cfg.dim };
+                let rows = bsz * t;
+                let x = Mat::from_vec(rows, din, to_vec_f32(&outs[idx]));
+                let st = if needs_gram {
+                    // Gram via the XLA kernel (Din³-scale work).
+                    let gname = format!("gram_{rows}x{din}");
+                    let gouts = rt.execute(&gname, &[crate::runtime::lit_mat(&x)])?;
+                    let gram = Mat::from_vec(din, din, to_vec_f32(&gouts[0]));
+                    ActStats {
+                        col_norms: x.col_norms(),
+                        gram: Some(gram),
+                        samples: rows,
+                    }
+                } else {
+                    ActStats::from_activations(&x)
+                };
+                match &mut stats[slot] {
+                    Some(acc) => acc.merge(&st),
+                    None => stats[slot] = Some(st),
+                }
+            }
+        }
+        let stats: Vec<ActStats> = stats.into_iter().map(|s| s.unwrap()).collect();
+
+        // --- pass 2: prune the seven linears ----------------------------
+        let linears = [
+            (format!("l{layer}.wq"), 0usize),
+            (format!("l{layer}.wk"), 0),
+            (format!("l{layer}.wv"), 0),
+            (format!("l{layer}.wo"), 1),
+            (format!("l{layer}.w_gate"), 2),
+            (format!("l{layer}.w_up"), 2),
+            (format!("l{layer}.w_down"), 3),
+        ];
+        for (name, src) in &linears {
+            let w = out.mat(name);
+            let st = &stats[*src];
+            let (w_hat, kept, frob, packed) = match (method, engine) {
+                (Method::Slab(scfg), Engine::Artifact) => {
+                    let (d, layer_packed) = decompose_via_artifact(rt, &w, st, scfg)?;
+                    let err = w.frob_dist(&d);
+                    (d, layer_packed.w_s.nnz(), err, Some(layer_packed))
+                }
+                _ => {
+                    let c = method.compress_layer(&w, st)?;
+                    let packed = if let Method::Slab(scfg) = method {
+                        let dec = crate::slab::decompose(&w, st, scfg)
+                            .map_err(MethodError::Config)?;
+                        Some(SlabLayer::from_decomposition(&dec))
+                    } else {
+                        None
+                    };
+                    (c.w_hat, c.kept, c.frob_err, packed)
+                }
+            };
+            layers.push(LayerReport {
+                name: name.clone(),
+                kept,
+                numel: w.numel(),
+                frob_err: frob,
+            });
+            out.set_mat(name, &w_hat);
+            if let Some(p) = packed {
+                slab_layers.push((name.clone(), p));
+            }
+        }
+
+        // --- pass 3: propagate pruned outputs --------------------------
+        let layer_lits = layer_literals(&out, layer);
+        for h in h_batches.iter_mut() {
+            let mut inputs: Vec<xla::Literal> =
+                layer_lits.iter().map(clone_lit).collect();
+            inputs.push(clone_lit(h));
+            let outs = rt.execute(&cap_name, &inputs)?;
+            *h = outs.into_iter().next().unwrap();
+        }
+        eprintln!(
+            "[pipeline] {} block {layer}/{} done",
+            method.name(),
+            cfg.n_layers
+        );
+    }
+
+    let mean_frob =
+        layers.iter().map(|l| l.frob_err as f64).sum::<f64>() / layers.len().max(1) as f64;
+    Ok(CompressedModel {
+        params: out,
+        slab_layers,
+        report: CompressReport {
+            method: method.name(),
+            layers,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            mean_frob,
+        },
+    })
+}
+
+/// Execute `decompose_{dout}x{din}` and rebuild both the dense Ŵ and
+/// the packed layer from its outputs.
+fn decompose_via_artifact(
+    rt: &Runtime,
+    w: &Mat,
+    stats: &ActStats,
+    scfg: &SlabConfig,
+) -> Result<(Mat, SlabLayer), PipelineError> {
+    let (dout, din) = w.shape();
+    let keep = scfg
+        .keep_fraction(dout, din)
+        .map_err(|e| PipelineError::Other(e.to_string()))?;
+    let name = format!("decompose_{dout}x{din}");
+    let outs = rt.execute(
+        &name,
+        &[
+            crate::runtime::lit_mat(w),
+            crate::runtime::lit_f32(&stats.col_norms, &[din]),
+            crate::runtime::literal::lit_scalar_f32(keep as f32),
+            lit_scalar_i32(scfg.iters as i32),
+        ],
+    )?;
+    let w_s = Mat::from_vec(dout, din, to_vec_f32(&outs[0]));
+    let u = to_vec_f32(&outs[1]);
+    let v = to_vec_f32(&outs[2]);
+    let w_b = Mat::from_vec(dout, din, to_vec_f32(&outs[3]));
+    let w_hat = w_s.add(&Mat::outer(&u, &v).hadamard(&w_b));
+    let packed = SlabLayer {
+        w_s: crate::sparse::Csr::from_dense(&w_s),
+        u: vec![u],
+        v: vec![v],
+        w_b: crate::binary::BitMat::from_sign_of(&w_b),
+    };
+    Ok((w_hat, packed))
+}
+
+/// The nine per-layer parameter literals in block_capture order.
+fn layer_literals(params: &Params, layer: usize) -> Vec<xla::Literal> {
+    let names = [
+        format!("l{layer}.attn_norm"),
+        format!("l{layer}.wq"),
+        format!("l{layer}.wk"),
+        format!("l{layer}.wv"),
+        format!("l{layer}.wo"),
+        format!("l{layer}.mlp_norm"),
+        format!("l{layer}.w_gate"),
+        format!("l{layer}.w_up"),
+        format!("l{layer}.w_down"),
+    ];
+    names
+        .iter()
+        .map(|n| {
+            let i = params.index(n).unwrap();
+            crate::runtime::lit_f32(&params.tensors[i], &params.cfg.param_shapes[i])
+        })
+        .collect()
+}
+
+fn clone_lit(l: &xla::Literal) -> xla::Literal {
+    let shape = l.array_shape().expect("clone shape");
+    let dims: Vec<i64> = shape.dims().to_vec();
+    match l.ty().expect("clone ty") {
+        xla::ElementType::S32 => {
+            let v = l.to_vec::<i32>().expect("clone i32");
+            xla::Literal::vec1(&v).reshape(&dims).unwrap()
+        }
+        _ => {
+            let v = l.to_vec::<f32>().expect("clone f32");
+            xla::Literal::vec1(&v).reshape(&dims).unwrap()
+        }
+    }
+}
+
+fn into_single(mut outs: Vec<xla::Literal>) -> xla::Literal {
+    assert_eq!(outs.len(), 1);
+    outs.pop().unwrap()
+}

@@ -1,0 +1,265 @@
+//! Serving coordinator: request router + dynamic batcher over the
+//! AOT prefill/decode artifacts.
+//!
+//! vLLM-router-shaped, scaled to this testbed: client threads submit
+//! [`Request`]s into an mpsc queue; the router thread drains up to
+//! `serve_batch` requests (waiting at most `batch_window` for
+//! stragglers — classic dynamic batching), runs one `prefill_{cfg}`
+//! and then `decode_step_{cfg}` until every sequence in the batch hit
+//! its token budget or EOS, and completes the callers' response
+//! channels. Greedy decoding; deterministic.
+//!
+//! The compressed model serves through the same artifacts with the
+//! reconstructed `Ŵ` swapped in — identical code path, smaller
+//! deployed weights (the packed-format byte savings are measured in
+//! `bench_kernels`; end-to-end latency/throughput in
+//! `examples/serve_compressed.rs`).
+
+use crate::data::EOS;
+use crate::model::Params;
+use crate::runtime::client::RuntimeError;
+use crate::runtime::{lit_i32, lit_scalar_i32, to_vec_f32, Runtime};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub tokens: Vec<i32>,
+    /// Queue + batch wait before prefill started.
+    pub queue_ms: f64,
+    /// Total request latency.
+    pub latency_ms: f64,
+}
+
+struct Job {
+    req: Request,
+    submitted: Instant,
+    reply: Sender<Response>,
+}
+
+/// Server handle: submit requests, then `shutdown()`.
+pub struct Server {
+    tx: Sender<Job>,
+    handle: Option<std::thread::JoinHandle<Result<ServeStats, RuntimeError>>>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub generated_tokens: usize,
+    pub wall_secs: f64,
+}
+
+impl ServeStats {
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.generated_tokens as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// Mean batch occupancy (1.0 = always full batches).
+    pub fn occupancy(&self, batch_cap: usize) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / (self.batches * batch_cap) as f64
+    }
+}
+
+pub struct ServerConfig {
+    /// Max time the router waits to fill a batch.
+    pub batch_window: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batch_window: Duration::from_millis(5),
+        }
+    }
+}
+
+impl Server {
+    /// Start the router thread. The PJRT client is *not* `Send`
+    /// (Rc-based FFI handles), so the router thread owns its own
+    /// [`Runtime`] over `artifacts_dir` — the natural shape anyway:
+    /// the engine owns the device, clients own channels. `params` is
+    /// the model to serve (dense or compressed — same ABI).
+    pub fn start(artifacts_dir: PathBuf, params: Params, scfg: ServerConfig) -> Server {
+        let (tx, rx) = channel::<Job>();
+        let handle = std::thread::Builder::new()
+            .name("slab-router".into())
+            .spawn(move || {
+                let rt = Runtime::new(&artifacts_dir)?;
+                router_loop(&rt, params, scfg, rx)
+            })
+            .expect("spawn router");
+        Server {
+            tx,
+            handle: Some(handle),
+        }
+    }
+
+    /// Submit a request; returns the response receiver immediately.
+    pub fn submit(&self, req: Request) -> Receiver<Response> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job {
+                req,
+                submitted: Instant::now(),
+                reply,
+            })
+            .expect("router alive");
+        rx
+    }
+
+    /// Blocking convenience call.
+    pub fn generate(&self, req: Request) -> Response {
+        self.submit(req).recv().expect("router response")
+    }
+
+    /// Stop accepting requests, drain, and return aggregate stats.
+    pub fn shutdown(mut self) -> Result<ServeStats, RuntimeError> {
+        drop(self.tx);
+        self.handle
+            .take()
+            .unwrap()
+            .join()
+            .expect("router join")
+    }
+}
+
+fn router_loop(
+    rt: &Runtime,
+    params: Params,
+    scfg: ServerConfig,
+    rx: Receiver<Job>,
+) -> Result<ServeStats, RuntimeError> {
+    let cfg = params.cfg.clone();
+    let cap = rt.manifest.serve_batch;
+    let prompt_len = cfg.prompt_len;
+    let prefill_name = format!("prefill_{}", cfg.name);
+    let decode_name = format!("decode_step_{}", cfg.name);
+    // Build param literals once; borrowed by every call.
+    let dev = params.to_literals();
+    let mut stats = ServeStats::default();
+    let t_start = Instant::now();
+
+    'outer: loop {
+        // --- gather a batch (dynamic batching) -------------------------
+        let mut jobs: Vec<Job> = Vec::with_capacity(cap);
+        match rx.recv() {
+            Ok(j) => jobs.push(j),
+            Err(_) => break 'outer, // all senders dropped
+        }
+        let window_end = Instant::now() + scfg.batch_window;
+        while jobs.len() < cap {
+            match rx.try_recv() {
+                Ok(j) => jobs.push(j),
+                Err(TryRecvError::Empty) => {
+                    if Instant::now() >= window_end {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+                Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        let t_batch = Instant::now();
+        stats.batches += 1;
+        stats.requests += jobs.len();
+
+        // --- prefill -----------------------------------------------------
+        // Left-aligned prompts, right-padded to prompt_len, PAD keys are
+        // attention-masked inside the artifact.
+        let mut flat = vec![0i32; cap * prompt_len];
+        for (s, job) in jobs.iter().enumerate() {
+            let p = &job.req.prompt;
+            let n = p.len().min(prompt_len);
+            flat[s * prompt_len..s * prompt_len + n].copy_from_slice(&p[..n]);
+        }
+        let tok_lit = lit_i32(&flat, &[cap, prompt_len]);
+        let mut inputs: Vec<&xla::Literal> = dev.iter().collect();
+        inputs.push(&tok_lit);
+        let outs = rt.execute_refs(&prefill_name, &inputs)?;
+        let (mut logits, mut kc, mut vc) = take3(outs);
+
+        // --- decode loop ---------------------------------------------------
+        let max_new: usize = jobs
+            .iter()
+            .map(|j| j.req.max_new)
+            .max()
+            .unwrap_or(0)
+            .min(cfg.max_seq - prompt_len);
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); jobs.len()];
+        let mut done = vec![false; jobs.len()];
+        for step in 0..max_new {
+            // Greedy sample from the last logits.
+            let l = to_vec_f32(&logits);
+            let mut next = vec![EOS; cap];
+            for (s, job) in jobs.iter().enumerate() {
+                if done[s] || step >= job.req.max_new {
+                    done[s] = true;
+                    continue;
+                }
+                let row = &l[s * cfg.vocab..(s + 1) * cfg.vocab];
+                let mut best = 4usize; // never emit specials by argmax ties
+                let mut best_v = f32::NEG_INFINITY;
+                for (tid, &v) in row.iter().enumerate() {
+                    if v > best_v {
+                        best_v = v;
+                        best = tid;
+                    }
+                }
+                next[s] = best as i32;
+                if best as i32 == EOS {
+                    done[s] = true;
+                } else {
+                    generated[s].push(best as i32);
+                    stats.generated_tokens += 1;
+                }
+            }
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let pos = (prompt_len + step) as i32;
+            let tok = lit_i32(&next, &[cap]);
+            let pb = lit_scalar_i32(pos);
+            let mut inputs: Vec<&xla::Literal> = dev.iter().collect();
+            inputs.push(&kc);
+            inputs.push(&vc);
+            inputs.push(&tok);
+            inputs.push(&pb);
+            let outs = rt.execute_refs(&decode_name, &inputs)?;
+            let (l2, k2, v2) = take3(outs);
+            logits = l2;
+            kc = k2;
+            vc = v2;
+        }
+
+        // --- respond -------------------------------------------------------
+        for (s, job) in jobs.into_iter().enumerate() {
+            let _ = job.reply.send(Response {
+                tokens: std::mem::take(&mut generated[s]),
+                queue_ms: (t_batch - job.submitted).as_secs_f64() * 1e3,
+                latency_ms: job.submitted.elapsed().as_secs_f64() * 1e3,
+            });
+        }
+    }
+    stats.wall_secs = t_start.elapsed().as_secs_f64();
+    Ok(stats)
+}
+
+fn take3(mut outs: Vec<xla::Literal>) -> (xla::Literal, xla::Literal, xla::Literal) {
+    assert!(outs.len() >= 3);
+    let c = outs.pop().unwrap();
+    let b = outs.pop().unwrap();
+    let a = outs.pop().unwrap();
+    (a, b, c)
+}

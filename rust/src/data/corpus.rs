@@ -1,0 +1,137 @@
+//! Corpus construction: train / validation / calibration token
+//! streams built from the grammar.
+//!
+//! * **Train stream** — sentences packed back-to-back (EOS-separated)
+//!   into fixed-length rows of `seq_len + 1` tokens (input+target
+//!   overlap), the standard LM packing. Deterministic from a seed.
+//! * **Validation shard** — a held-out stream (different seed space)
+//!   used for the WikiText-2-style perplexity number.
+//! * **Calibration set** — `n_calib` rows sampled like SparseGPT's
+//!   128 × 2048 C4 sample (paper §III-A2), seed-disjoint from both.
+
+use super::grammar::Grammar;
+use crate::util::rng::Pcg64;
+
+/// A packed token dataset: `rows × (seq_len + 1)` i32 matrix.
+#[derive(Debug, Clone)]
+pub struct TokenSet {
+    pub seq_len: usize,
+    /// rows × (seq_len+1), row-major.
+    pub data: Vec<i32>,
+    pub rows: usize,
+}
+
+impl TokenSet {
+    pub fn row(&self, i: usize) -> &[i32] {
+        let w = self.seq_len + 1;
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Gather a batch of rows (wrapping) into a contiguous buffer.
+    pub fn batch(&self, start: usize, bsz: usize) -> Vec<i32> {
+        let w = self.seq_len + 1;
+        let mut out = Vec::with_capacity(bsz * w);
+        for k in 0..bsz {
+            out.extend_from_slice(self.row((start + k) % self.rows));
+        }
+        out
+    }
+
+    pub fn token_count(&self) -> usize {
+        self.rows * self.seq_len
+    }
+}
+
+/// Pack grammar sentences into fixed rows.
+pub fn pack_stream(g: &Grammar, rng: &mut Pcg64, rows: usize, seq_len: usize) -> TokenSet {
+    let w = seq_len + 1;
+    let mut data = Vec::with_capacity(rows * w);
+    let mut buf: Vec<i32> = Vec::with_capacity(w * 2);
+    while data.len() < rows * w {
+        while buf.len() < w {
+            buf.extend(g.sample_sentence(rng));
+        }
+        data.extend_from_slice(&buf[..w]);
+        // Overlap-free packing: drop what we consumed, keep remainder.
+        buf.drain(..w);
+    }
+    TokenSet {
+        seq_len,
+        data,
+        rows,
+    }
+}
+
+/// The three standard splits with disjoint seed streams.
+pub struct CorpusBundle {
+    pub train: TokenSet,
+    pub valid: TokenSet,
+    pub calib: TokenSet,
+}
+
+/// Seeds are derived from `seed` with fixed tags so splits never
+/// overlap even if the grammar evolves.
+pub fn build_corpus(
+    g: &Grammar,
+    seed: u64,
+    train_rows: usize,
+    valid_rows: usize,
+    calib_rows: usize,
+    seq_len: usize,
+) -> CorpusBundle {
+    let mut root = Pcg64::seed_from_u64(seed);
+    let mut r_train = root.fork(1);
+    let mut r_valid = root.fork(2);
+    let mut r_calib = root.fork(3);
+    CorpusBundle {
+        train: pack_stream(g, &mut r_train, train_rows, seq_len),
+        valid: pack_stream(g, &mut r_valid, valid_rows, seq_len),
+        calib: pack_stream(g, &mut r_calib, calib_rows, seq_len),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::grammar::{EOS, PAD};
+
+    #[test]
+    fn rows_have_exact_width_and_no_pad() {
+        let g = Grammar::standard();
+        let mut rng = Pcg64::seed_from_u64(300);
+        let ts = pack_stream(&g, &mut rng, 10, 32);
+        assert_eq!(ts.rows, 10);
+        assert_eq!(ts.data.len(), 10 * 33);
+        assert!(ts.data.iter().all(|&t| t != PAD));
+        assert!(ts.data.contains(&EOS));
+    }
+
+    #[test]
+    fn batch_wraps_around() {
+        let g = Grammar::standard();
+        let mut rng = Pcg64::seed_from_u64(301);
+        let ts = pack_stream(&g, &mut rng, 3, 8);
+        let b = ts.batch(2, 2);
+        assert_eq!(&b[..9], ts.row(2));
+        assert_eq!(&b[9..], ts.row(0));
+    }
+
+    #[test]
+    fn splits_are_disjoint_streams() {
+        let g = Grammar::standard();
+        let c = build_corpus(&g, 42, 5, 5, 5, 24);
+        assert_ne!(c.train.data, c.valid.data);
+        assert_ne!(c.valid.data, c.calib.data);
+        // Determinism.
+        let c2 = build_corpus(&g, 42, 5, 5, 5, 24);
+        assert_eq!(c.train.data, c2.train.data);
+    }
+
+    #[test]
+    fn token_count() {
+        let g = Grammar::standard();
+        let mut rng = Pcg64::seed_from_u64(302);
+        let ts = pack_stream(&g, &mut rng, 7, 16);
+        assert_eq!(ts.token_count(), 7 * 16);
+    }
+}

@@ -1,0 +1,428 @@
+//! The synthetic language ("Synthia") — the C4/WikiText-2 substitute.
+//!
+//! A probabilistic grammar with *learnable*, *probeable* regularities:
+//!
+//! * **Selectional classes**: animate nouns take animate verbs
+//!   (`sleeps`, `runs`, …); inanimate nouns take object verbs
+//!   (`falls`, `shines`, …). A small transformer learns this quickly;
+//!   pruning damage shows up as class confusions — exactly what the
+//!   zero-shot suites probe.
+//! * **Size hierarchy**: size adjectives are totally ordered
+//!   (`tiny < small < big < huge`); generated comparatives are always
+//!   consistent with the order (`the huge cat is larger than the tiny
+//!   ball`), giving BoolQ/RTE-style truth labels for free.
+//! * **Zipf lexicon**: content words are drawn Zipf(1.1) like natural
+//!   text, so calibration activations have realistic skew.
+//!
+//! Sentences (token-id sequences) are emitted directly — the
+//! word-level tokenizer is the grammar's own lexicon
+//! ([`crate::data::tokenizer`]).
+
+use crate::util::rng::{Pcg64, Zipf};
+
+/// Special token ids (match `python/compile/model.py::PAD_ID`).
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const QSEP: i32 = 3; // the "?" separator used by yes/no tasks
+
+/// Word classes of the lexicon (ids are assigned contiguously).
+#[derive(Debug, Clone)]
+pub struct Lexicon {
+    pub determiners: Vec<String>,
+    /// Size adjectives in *ascending* size order.
+    pub sizes: Vec<String>,
+    pub colors: Vec<String>,
+    pub animals: Vec<String>,
+    pub objects: Vec<String>,
+    pub animate_verbs: Vec<String>,
+    pub object_verbs: Vec<String>,
+    pub preps: Vec<String>,
+    pub comp_larger: String,
+    pub comp_smaller: String,
+    pub than: String,
+    pub is: String,
+    pub yes: String,
+    pub no: String,
+}
+
+impl Lexicon {
+    pub fn standard() -> Lexicon {
+        let w = |s: &[&str]| s.iter().map(|x| x.to_string()).collect::<Vec<_>>();
+        Lexicon {
+            determiners: w(&["the", "a"]),
+            sizes: w(&["tiny", "small", "big", "huge"]),
+            colors: w(&[
+                "red", "blue", "green", "gray", "black", "white", "amber", "violet",
+            ]),
+            animals: w(&[
+                "cat", "dog", "fox", "owl", "hen", "bat", "ant", "bee", "elk", "eel",
+                "ram", "sow", "colt", "crow", "dove", "frog", "goat", "hare", "lark",
+                "lynx", "mole", "moth", "mule", "newt", "pike", "pony", "seal", "swan",
+                "toad", "wolf", "wren", "yak",
+            ]),
+            objects: w(&[
+                "cube", "ball", "lamp", "door", "gear", "coin", "ring", "vase", "bell",
+                "drum", "flag", "fork", "harp", "hook", "kite", "knob", "lens", "mast",
+                "nail", "oar", "pipe", "plow", "pump", "rail", "rope", "sail", "shed",
+                "sled", "tile", "vane", "wick", "zinc",
+            ]),
+            animate_verbs: w(&[
+                "sleeps", "runs", "jumps", "hides", "waits", "barks", "hunts", "rests",
+            ]),
+            object_verbs: w(&[
+                "falls", "shines", "rolls", "cracks", "rattles", "spins", "rusts",
+                "gleams",
+            ]),
+            preps: w(&["near", "under", "beside"]),
+            comp_larger: "larger".into(),
+            comp_smaller: "smaller".into(),
+            than: "than".into(),
+            is: "is".into(),
+            yes: "yes".into(),
+            no: "no".into(),
+        }
+    }
+
+    /// All words in id order (first id = 4, after the specials).
+    pub fn words(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        out.extend(self.determiners.clone());
+        out.extend(self.sizes.clone());
+        out.extend(self.colors.clone());
+        out.extend(self.animals.clone());
+        out.extend(self.objects.clone());
+        out.extend(self.animate_verbs.clone());
+        out.extend(self.object_verbs.clone());
+        out.extend(self.preps.clone());
+        out.push(self.comp_larger.clone());
+        out.push(self.comp_smaller.clone());
+        out.push(self.than.clone());
+        out.push(self.is.clone());
+        out.push(self.yes.clone());
+        out.push(self.no.clone());
+        out
+    }
+}
+
+/// A noun phrase with its semantic attributes (used by task labels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NounPhrase {
+    pub det: usize,
+    pub size: Option<usize>,
+    pub color: Option<usize>,
+    pub noun: usize,
+    pub animate: bool,
+}
+
+/// The grammar: holds the lexicon, token-id mapping, and samplers.
+#[derive(Debug, Clone)]
+pub struct Grammar {
+    pub lex: Lexicon,
+    zipf_animal: Zipf,
+    zipf_object: Zipf,
+    zipf_color: Zipf,
+}
+
+impl Grammar {
+    pub fn standard() -> Grammar {
+        let lex = Lexicon::standard();
+        Grammar {
+            zipf_animal: Zipf::new(lex.animals.len(), 1.1),
+            zipf_object: Zipf::new(lex.objects.len(), 1.1),
+            zipf_color: Zipf::new(lex.colors.len(), 1.1),
+            lex,
+        }
+    }
+
+    // --- token-id helpers (ids are positions in Lexicon::words + 4) ----
+
+    fn base(&self) -> [usize; 9] {
+        // offsets of each class within words()
+        let l = &self.lex;
+        let det = 0;
+        let size = det + l.determiners.len();
+        let color = size + l.sizes.len();
+        let animal = color + l.colors.len();
+        let object = animal + l.animals.len();
+        let averb = object + l.objects.len();
+        let overb = averb + l.animate_verbs.len();
+        let prep = overb + l.object_verbs.len();
+        let misc = prep + l.preps.len();
+        [det, size, color, animal, object, averb, overb, prep, misc]
+    }
+
+    pub fn id_det(&self, i: usize) -> i32 {
+        (4 + self.base()[0] + i) as i32
+    }
+    pub fn id_size(&self, i: usize) -> i32 {
+        (4 + self.base()[1] + i) as i32
+    }
+    pub fn id_color(&self, i: usize) -> i32 {
+        (4 + self.base()[2] + i) as i32
+    }
+    pub fn id_animal(&self, i: usize) -> i32 {
+        (4 + self.base()[3] + i) as i32
+    }
+    pub fn id_object(&self, i: usize) -> i32 {
+        (4 + self.base()[4] + i) as i32
+    }
+    pub fn id_averb(&self, i: usize) -> i32 {
+        (4 + self.base()[5] + i) as i32
+    }
+    pub fn id_overb(&self, i: usize) -> i32 {
+        (4 + self.base()[6] + i) as i32
+    }
+    pub fn id_prep(&self, i: usize) -> i32 {
+        (4 + self.base()[7] + i) as i32
+    }
+    pub fn id_larger(&self) -> i32 {
+        (4 + self.base()[8]) as i32
+    }
+    pub fn id_smaller(&self) -> i32 {
+        (4 + self.base()[8] + 1) as i32
+    }
+    pub fn id_than(&self) -> i32 {
+        (4 + self.base()[8] + 2) as i32
+    }
+    pub fn id_is(&self) -> i32 {
+        (4 + self.base()[8] + 3) as i32
+    }
+    pub fn id_yes(&self) -> i32 {
+        (4 + self.base()[8] + 4) as i32
+    }
+    pub fn id_no(&self) -> i32 {
+        (4 + self.base()[8] + 5) as i32
+    }
+
+    /// Total vocabulary size including specials.
+    pub fn vocab(&self) -> usize {
+        4 + self.lex.words().len()
+    }
+
+    // --- sampling -------------------------------------------------------
+
+    pub fn sample_np(&self, rng: &mut Pcg64) -> NounPhrase {
+        let animate = rng.bernoulli(0.5);
+        let noun = if animate {
+            self.zipf_animal.sample(rng)
+        } else {
+            self.zipf_object.sample(rng)
+        };
+        NounPhrase {
+            det: rng.below_usize(self.lex.determiners.len()),
+            size: if rng.bernoulli(0.55) {
+                Some(rng.below_usize(self.lex.sizes.len()))
+            } else {
+                None
+            },
+            color: if rng.bernoulli(0.45) {
+                Some(self.zipf_color.sample(rng))
+            } else {
+                None
+            },
+            noun,
+            animate,
+        }
+    }
+
+    pub fn np_tokens(&self, np: &NounPhrase) -> Vec<i32> {
+        let mut t = vec![self.id_det(np.det)];
+        if let Some(s) = np.size {
+            t.push(self.id_size(s));
+        }
+        if let Some(c) = np.color {
+            t.push(self.id_color(c));
+        }
+        t.push(if np.animate {
+            self.id_animal(np.noun)
+        } else {
+            self.id_object(np.noun)
+        });
+        t
+    }
+
+    /// The class-correct verb for a noun phrase.
+    pub fn sample_verb(&self, np: &NounPhrase, rng: &mut Pcg64) -> i32 {
+        if np.animate {
+            self.id_averb(rng.below_usize(self.lex.animate_verbs.len()))
+        } else {
+            self.id_overb(rng.below_usize(self.lex.object_verbs.len()))
+        }
+    }
+
+    /// A *wrong-class* verb (task distractors).
+    pub fn sample_wrong_verb(&self, np: &NounPhrase, rng: &mut Pcg64) -> i32 {
+        if np.animate {
+            self.id_overb(rng.below_usize(self.lex.object_verbs.len()))
+        } else {
+            self.id_averb(rng.below_usize(self.lex.animate_verbs.len()))
+        }
+    }
+
+    /// One declarative sentence; comparatives are always truth-
+    /// consistent with the size hierarchy.
+    pub fn sample_sentence(&self, rng: &mut Pcg64) -> Vec<i32> {
+        let mut toks = Vec::with_capacity(12);
+        let np = self.sample_np(rng);
+        toks.extend(self.np_tokens(&np));
+        match rng.below(10) {
+            // 40%: simple intransitive with class agreement.
+            0..=3 => toks.push(self.sample_verb(&np, rng)),
+            // 20%: PP attachment then *head-noun* agreement (the
+            // Winogrande-style long-range dependency).
+            4..=5 => {
+                toks.push(self.id_prep(rng.below_usize(self.lex.preps.len())));
+                let np2 = self.sample_np(rng);
+                toks.extend(self.np_tokens(&np2));
+                toks.push(self.sample_verb(&np, rng));
+            }
+            // 40%: size comparative, always truthful.
+            _ => {
+                // Force both sides to carry explicit sizes.
+                let mut a = np;
+                if a.size.is_none() {
+                    a.size = Some(rng.below_usize(self.lex.sizes.len()));
+                    toks.clear();
+                    toks.extend(self.np_tokens(&a));
+                }
+                let mut b = self.sample_np(rng);
+                loop {
+                    b.size = Some(rng.below_usize(self.lex.sizes.len()));
+                    if b.size != a.size {
+                        break;
+                    }
+                }
+                toks.push(self.id_is());
+                let (sa, sb) = (a.size.unwrap(), b.size.unwrap());
+                toks.push(if sa > sb {
+                    self.id_larger()
+                } else {
+                    self.id_smaller()
+                });
+                toks.push(self.id_than());
+                toks.extend(self.np_tokens(&b));
+            }
+        }
+        toks.push(EOS);
+        toks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_fits_model_configs() {
+        let g = Grammar::standard();
+        assert!(g.vocab() <= 512, "vocab {} must fit the smallest model", g.vocab());
+        assert!(g.vocab() > 100);
+    }
+
+    #[test]
+    fn token_ids_are_disjoint_and_in_range() {
+        let g = Grammar::standard();
+        let words = g.lex.words();
+        let mut ids = vec![
+            g.id_det(0),
+            g.id_size(0),
+            g.id_color(0),
+            g.id_animal(0),
+            g.id_object(0),
+            g.id_averb(0),
+            g.id_overb(0),
+            g.id_prep(0),
+            g.id_larger(),
+            g.id_smaller(),
+            g.id_than(),
+            g.id_is(),
+            g.id_yes(),
+            g.id_no(),
+        ];
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 14);
+        assert!(ids.iter().all(|&i| i >= 4 && (i as usize) < 4 + words.len()));
+        // id→word mapping round-trips via position.
+        assert_eq!(words[(g.id_yes() - 4) as usize], "yes");
+        assert_eq!(words[(g.id_larger() - 4) as usize], "larger");
+    }
+
+    #[test]
+    fn sentences_never_contain_pad_and_end_with_eos() {
+        let g = Grammar::standard();
+        let mut rng = Pcg64::seed_from_u64(200);
+        for _ in 0..500 {
+            let s = g.sample_sentence(&mut rng);
+            assert!(!s.is_empty());
+            assert_eq!(*s.last().unwrap(), EOS);
+            assert!(s.iter().all(|&t| t != PAD && t != BOS));
+            assert!(s.iter().all(|&t| (t as usize) < g.vocab()));
+        }
+    }
+
+    #[test]
+    fn comparatives_are_truthful() {
+        let g = Grammar::standard();
+        let mut rng = Pcg64::seed_from_u64(201);
+        let mut seen = 0;
+        for _ in 0..2000 {
+            let s = g.sample_sentence(&mut rng);
+            if let Some(pos) = s.iter().position(|&t| t == g.id_larger() || t == g.id_smaller()) {
+                seen += 1;
+                // Extract the size adjectives on both sides.
+                let size_ids: Vec<(usize, usize)> = s
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, &t)| {
+                        let lo = g.id_size(0);
+                        let hi = g.id_size(g.lex.sizes.len() - 1);
+                        if t >= lo && t <= hi {
+                            Some((i, (t - lo) as usize))
+                        } else {
+                            None
+                        }
+                    })
+                    .collect();
+                assert!(size_ids.len() >= 2, "comparative without two sizes: {s:?}");
+                let left = size_ids.iter().filter(|(i, _)| *i < pos).last().unwrap().1;
+                let right = size_ids.iter().find(|(i, _)| *i > pos).unwrap().1;
+                if s[pos] == g.id_larger() {
+                    assert!(left > right, "untruthful larger: {s:?}");
+                } else {
+                    assert!(left < right, "untruthful smaller: {s:?}");
+                }
+            }
+        }
+        assert!(seen > 300, "comparatives should be common, saw {seen}");
+    }
+
+    #[test]
+    fn verb_agreement_holds() {
+        let g = Grammar::standard();
+        let mut rng = Pcg64::seed_from_u64(202);
+        for _ in 0..200 {
+            let np = g.sample_np(&mut rng);
+            let v = g.sample_verb(&np, &mut rng);
+            let averb_range = g.id_averb(0)..=g.id_averb(g.lex.animate_verbs.len() - 1);
+            if np.animate {
+                assert!(averb_range.contains(&v));
+            } else {
+                assert!(!averb_range.contains(&v));
+            }
+            let wrong = g.sample_wrong_verb(&np, &mut rng);
+            assert_ne!(averb_range.contains(&v), averb_range.contains(&wrong));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = Grammar::standard();
+        let mut a = Pcg64::seed_from_u64(7);
+        let mut b = Pcg64::seed_from_u64(7);
+        for _ in 0..50 {
+            assert_eq!(g.sample_sentence(&mut a), g.sample_sentence(&mut b));
+        }
+    }
+}

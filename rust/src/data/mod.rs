@@ -1,0 +1,14 @@
+//! Data substrate: the synthetic grammar language, word tokenizer,
+//! corpus packing (train/valid/calibration splits), and the seven
+//! zero-shot task suites. Substitutes for C4 / WikiText-2 /
+//! LM-Eval-Harness in this offline reproduction (DESIGN.md §2).
+
+pub mod corpus;
+pub mod grammar;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use corpus::{build_corpus, pack_stream, CorpusBundle, TokenSet};
+pub use grammar::{Grammar, Lexicon, NounPhrase, BOS, EOS, PAD, QSEP};
+pub use tasks::{Task, TaskItem, ALL_TASKS};
+pub use tokenizer::Tokenizer;

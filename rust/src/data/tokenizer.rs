@@ -1,0 +1,106 @@
+//! Word-level tokenizer over the grammar lexicon.
+//!
+//! The synthetic language is closed-vocabulary, so the tokenizer is a
+//! deterministic bijection word ↔ id (specials at 0..4). Used by the
+//! serving example to decode generations and by debug logging; the
+//! data pipeline works in ids end-to-end.
+
+use super::grammar::Grammar;
+#[cfg(test)]
+use super::grammar::{BOS, EOS, PAD, QSEP};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    id_to_word: Vec<String>,
+    word_to_id: HashMap<String, i32>,
+}
+
+impl Tokenizer {
+    pub fn from_grammar(g: &Grammar) -> Tokenizer {
+        let mut id_to_word = vec![
+            "<pad>".to_string(),
+            "<bos>".to_string(),
+            "<eos>".to_string(),
+            "?".to_string(),
+        ];
+        id_to_word.extend(g.lex.words());
+        let word_to_id = id_to_word
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        Tokenizer {
+            id_to_word,
+            word_to_id,
+        }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    pub fn decode_one(&self, id: i32) -> &str {
+        self.id_to_word
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<unk>")
+    }
+
+    /// Space-joined decode, specials rendered symbolically.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&i| self.decode_one(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Encode a space-separated string; unknown words error.
+    pub fn encode(&self, text: &str) -> Result<Vec<i32>, String> {
+        text.split_whitespace()
+            .map(|w| {
+                self.word_to_id
+                    .get(w)
+                    .copied()
+                    .ok_or_else(|| format!("unknown word '{w}'"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_sentences() {
+        let g = Grammar::standard();
+        let tok = Tokenizer::from_grammar(&g);
+        let mut rng = Pcg64::seed_from_u64(400);
+        for _ in 0..100 {
+            let s = g.sample_sentence(&mut rng);
+            let text = tok.decode(&s);
+            let back = tok.encode(&text).unwrap();
+            assert_eq!(back, s, "{text}");
+        }
+    }
+
+    #[test]
+    fn specials_have_fixed_ids() {
+        let g = Grammar::standard();
+        let tok = Tokenizer::from_grammar(&g);
+        assert_eq!(tok.decode_one(PAD), "<pad>");
+        assert_eq!(tok.decode_one(BOS), "<bos>");
+        assert_eq!(tok.decode_one(EOS), "<eos>");
+        assert_eq!(tok.decode_one(QSEP), "?");
+        assert_eq!(tok.vocab_size(), g.vocab());
+    }
+
+    #[test]
+    fn unknown_word_errors() {
+        let g = Grammar::standard();
+        let tok = Tokenizer::from_grammar(&g);
+        assert!(tok.encode("the frobnicator").is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Evaluation harness: perplexity (WikiText-2 substitute) and the
+//! seven zero-shot suites (LM-Eval substitute).
+//!
+//! Both run exclusively through the `eval_nll_{cfg}` artifact, with
+//! model parameters uploaded to the device once per evaluation
+//! (`ParamsOnDevice`) — the paper's Table I sweeps evaluate dozens of
+//! compressed variants, so parameter re-upload is the hot cost.
+
+use crate::data::tasks::{Task, TaskItem};
+use crate::data::TokenSet;
+use crate::model::Params;
+use crate::runtime::{lit_i32, to_vec_f32, Runtime};
+use crate::runtime::client::RuntimeError;
+
+/// Host-pinned model parameter literals, built once per evaluation
+/// and borrowed by every artifact call (the device-buffer path is
+/// unreliable in xla_extension 0.5.1 — see `Runtime::execute_refs`).
+pub struct ParamsOnDevice {
+    pub lits: Vec<xla::Literal>,
+}
+
+impl ParamsOnDevice {
+    pub fn upload(rt: &Runtime, params: &Params) -> Result<ParamsOnDevice, RuntimeError> {
+        let _ = rt;
+        Ok(ParamsOnDevice {
+            lits: params.to_literals(),
+        })
+    }
+}
+
+/// Run `eval_nll_{cfg}` over row-batches of a token set; returns
+/// (Σ nll, Σ tokens).
+fn nll_over_rows(
+    rt: &Runtime,
+    cfg_name: &str,
+    dev: &ParamsOnDevice,
+    rows: &[Vec<i32>],
+    width: usize,
+    batch: usize,
+) -> Result<(f64, f64), RuntimeError> {
+    let name = format!("eval_nll_{cfg_name}");
+    let mut total_nll = 0.0f64;
+    let mut total_cnt = 0.0f64;
+    let mut i = 0;
+    while i < rows.len() {
+        let take = (rows.len() - i).min(batch);
+        let mut flat = Vec::with_capacity(batch * width);
+        for k in 0..batch {
+            if k < take {
+                flat.extend_from_slice(&rows[i + k]);
+            } else {
+                flat.extend(std::iter::repeat(0).take(width)); // PAD rows
+            }
+        }
+        let tok = lit_i32(&flat, &[batch, width]);
+        let mut inputs: Vec<&xla::Literal> = dev.lits.iter().collect();
+        inputs.push(&tok);
+        let out = rt.execute_refs(&name, &inputs)?;
+        let nll = to_vec_f32(&out[0]);
+        let cnt = to_vec_f32(&out[1]);
+        for k in 0..take {
+            total_nll += nll[k] as f64;
+            total_cnt += cnt[k] as f64;
+        }
+        i += take;
+    }
+    Ok((total_nll, total_cnt))
+}
+
+/// Corpus perplexity: `exp(Σ nll / Σ tokens)` over a held-out shard.
+pub fn perplexity(
+    rt: &Runtime,
+    params: &Params,
+    shard: &TokenSet,
+) -> Result<f64, RuntimeError> {
+    let cfg = &params.cfg;
+    let width = cfg.max_seq + 1;
+    assert_eq!(shard.seq_len + 1, width, "shard width vs model seq");
+    let dev = ParamsOnDevice::upload(rt, params)?;
+    let rows: Vec<Vec<i32>> = (0..shard.rows).map(|i| shard.row(i).to_vec()).collect();
+    let (nll, cnt) = nll_over_rows(rt, &cfg.name, &dev, &rows, width, rt.manifest.eval_batch)?;
+    Ok((nll / cnt.max(1.0)).exp())
+}
+
+/// Score one task: length-normalized option likelihoods via
+/// `nll(prompt ⧺ option) − nll(prompt)`.
+pub fn task_accuracy(
+    rt: &Runtime,
+    params: &Params,
+    dev: &ParamsOnDevice,
+    items: &[TaskItem],
+) -> Result<f64, RuntimeError> {
+    let cfg = &params.cfg;
+    let width = cfg.max_seq + 1;
+    // Build all rows: per item, the prompt row then each option row.
+    let mut rows: Vec<Vec<i32>> = Vec::new();
+    let mut index: Vec<(usize, Vec<usize>)> = Vec::new(); // (prompt_row, option_rows)
+    for it in items {
+        let pad_to = |mut v: Vec<i32>| {
+            assert!(v.len() <= width, "task row too long: {}", v.len());
+            v.resize(width, 0);
+            v
+        };
+        let p_row = rows.len();
+        rows.push(pad_to(it.prompt.clone()));
+        let mut opt_rows = Vec::with_capacity(it.options.len());
+        for opt in &it.options {
+            let mut full = it.prompt.clone();
+            full.extend_from_slice(opt);
+            opt_rows.push(rows.len());
+            rows.push(pad_to(full));
+        }
+        index.push((p_row, opt_rows));
+    }
+    // Batch-evaluate all rows, keeping per-row sums.
+    let name = format!("eval_nll_{}", cfg.name);
+    let batch = rt.manifest.eval_batch;
+    let mut row_nll = vec![0.0f64; rows.len()];
+    let mut i = 0;
+    while i < rows.len() {
+        let take = (rows.len() - i).min(batch);
+        let mut flat = Vec::with_capacity(batch * width);
+        for k in 0..batch {
+            if k < take {
+                flat.extend_from_slice(&rows[i + k]);
+            } else {
+                flat.extend(std::iter::repeat(0).take(width));
+            }
+        }
+        let tok = lit_i32(&flat, &[batch, width]);
+        let mut inputs: Vec<&xla::Literal> = dev.lits.iter().collect();
+        inputs.push(&tok);
+        let out = rt.execute_refs(&name, &inputs)?;
+        let nll = to_vec_f32(&out[0]);
+        for k in 0..take {
+            row_nll[i + k] = nll[k] as f64;
+        }
+        i += take;
+    }
+    // Pick argmin normalized option NLL.
+    let mut correct = 0usize;
+    for (it, (p_row, opt_rows)) in items.iter().zip(index.iter()) {
+        let base = row_nll[*p_row];
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        for (o, &r) in opt_rows.iter().enumerate() {
+            let len = it.options[o].len().max(1) as f64;
+            let score = (row_nll[r] - base) / len;
+            if score < best_score {
+                best_score = score;
+                best = o;
+            }
+        }
+        if best == it.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / items.len().max(1) as f64)
+}
+
+/// Full zero-shot sweep: (task, accuracy) plus the macro average.
+pub fn zero_shot(
+    rt: &Runtime,
+    params: &Params,
+    suites: &[(Task, Vec<TaskItem>)],
+) -> Result<(Vec<(Task, f64)>, f64), RuntimeError> {
+    let dev = ParamsOnDevice::upload(rt, params)?;
+    let mut per_task = Vec::with_capacity(suites.len());
+    for (task, items) in suites {
+        let acc = task_accuracy(rt, params, &dev, items)?;
+        per_task.push((*task, acc));
+    }
+    let avg = per_task.iter().map(|(_, a)| a).sum::<f64>() / per_task.len().max(1) as f64;
+    Ok((per_task, avg))
+}

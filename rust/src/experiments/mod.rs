@@ -1,0 +1,363 @@
+//! Experiment drivers — one function per paper table/figure.
+//!
+//! Shared by the `slab` CLI subcommands, the examples, and
+//! `rust/benches/bench_tables.rs` so every surface regenerates
+//! identical rows. See DESIGN.md §5 for the experiment index.
+
+use crate::baselines::{Method, SparseGptConfig};
+use crate::coordinator::{compress_model, Engine};
+use crate::data::{build_corpus, CorpusBundle, Grammar, Task, TaskItem, ALL_TASKS};
+use crate::eval::{perplexity, zero_shot};
+use crate::model::Params;
+use crate::report::Table;
+use crate::runtime::Runtime;
+use crate::slab::{GroupShape, SlabConfig, Structure, Variant};
+use crate::sparse::{PATTERN_2_4, PATTERN_4_8};
+use crate::train::train;
+use std::path::{Path, PathBuf};
+
+/// Everything an experiment needs: runtime, corpora, task suites.
+pub struct Lab {
+    pub rt: Runtime,
+    pub runs_dir: PathBuf,
+    pub grammar: Grammar,
+    pub seed: u64,
+    pub task_items: usize,
+}
+
+pub const CORPUS_SEED: u64 = 42;
+pub const TRAIN_ROWS: usize = 4096;
+pub const VALID_ROWS: usize = 128;
+pub const CALIB_ROWS: usize = 128;
+
+impl Lab {
+    pub fn new(artifacts: &Path, runs: &Path) -> anyhow::Result<Lab> {
+        Ok(Lab {
+            rt: Runtime::new(artifacts)?,
+            runs_dir: runs.to_path_buf(),
+            grammar: Grammar::standard(),
+            seed: CORPUS_SEED,
+            task_items: 40,
+        })
+    }
+
+    pub fn corpus(&self, cfg_name: &str) -> CorpusBundle {
+        let cfg = self.rt.manifest.config(cfg_name).expect("config");
+        build_corpus(
+            &self.grammar,
+            self.seed,
+            TRAIN_ROWS,
+            VALID_ROWS,
+            CALIB_ROWS,
+            cfg.max_seq,
+        )
+    }
+
+    pub fn suites(&self) -> Vec<(Task, Vec<TaskItem>)> {
+        ALL_TASKS
+            .iter()
+            .map(|t| (*t, t.generate(&self.grammar, self.task_items, self.seed ^ 0x7a5c)))
+            .collect()
+    }
+
+    fn ckpt_path(&self, cfg_name: &str) -> PathBuf {
+        self.runs_dir.join(format!("{cfg_name}.slabckpt"))
+    }
+
+    /// Trained dense params for `cfg_name`: load the checkpoint if it
+    /// exists, otherwise train now (the e2e driver path) and save.
+    pub fn dense_params(&self, cfg_name: &str, steps: usize) -> anyhow::Result<Params> {
+        let cfg = self
+            .rt
+            .manifest
+            .config(cfg_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown config {cfg_name}"))?
+            .clone();
+        let path = self.ckpt_path(cfg_name);
+        if path.exists() {
+            return Ok(Params::load(&cfg, &path)?);
+        }
+        eprintln!("[lab] no checkpoint for '{cfg_name}' — training {steps} steps");
+        let corpus = self.corpus(cfg_name);
+        let init = Params::init(&cfg, self.seed ^ 0x1417);
+        let (trained, report) = train(&self.rt, &init, &corpus.train, steps, self.seed, 20)?;
+        std::fs::create_dir_all(&self.runs_dir)?;
+        trained.save(&path)?;
+        // Record the loss curve (EXPERIMENTS.md §e2e evidence).
+        let mut t = Table::new(
+            &format!(
+                "Training loss — {cfg_name} ({} params, {:.0} tok/s)",
+                cfg.n_params(),
+                report.tokens_per_sec
+            ),
+            &["step", "loss"],
+        );
+        for (s, l) in &report.loss_curve {
+            t.push_row(vec![s.to_string(), format!("{l:.4}")]);
+        }
+        t.append_to(&self.runs_dir.join(format!("train_{cfg_name}.md")))?;
+        Ok(trained)
+    }
+
+    /// Default training budget per config (1-core CPU testbed).
+    pub fn default_steps(&self, cfg_name: &str) -> usize {
+        match cfg_name {
+            "small" => 500,
+            "base" => 350,
+            _ => 250,
+        }
+    }
+}
+
+/// Compress with a method and evaluate ppl + zero-shot average.
+pub fn compress_and_eval(
+    lab: &Lab,
+    dense: &Params,
+    corpus: &CorpusBundle,
+    suites: &[(Task, Vec<TaskItem>)],
+    method: &Method,
+    engine: Engine,
+) -> anyhow::Result<(f64, f64, f64)> {
+    let compressed = if matches!(method, Method::Dense) {
+        dense.clone()
+    } else {
+        compress_model(&lab.rt, dense, &corpus.calib, method, engine)?.params
+    };
+    let ppl = perplexity(&lab.rt, &compressed, &corpus.valid)?;
+    let (_, acc) = zero_shot(&lab.rt, &compressed, suites)?;
+    Ok((ppl, acc, 0.0))
+}
+
+/// The Table-I method grid (paper §III-A4).
+pub fn table1_settings() -> Vec<(String, Vec<Method>)> {
+    let slab = |cr: f64, st: Structure| {
+        Method::Slab(SlabConfig {
+            cr,
+            structure: st,
+            ..Default::default()
+        })
+    };
+    let sg = |s: f64, p| Method::SparseGpt {
+        sparsity: s,
+        pattern: p,
+        cfg: SparseGptConfig::default(),
+    };
+    let wa = |s: f64, p| Method::Wanda {
+        sparsity: s,
+        pattern: p,
+    };
+    vec![
+        ("Dense 0%".into(), vec![Method::Dense]),
+        (
+            "US (50%)".into(),
+            vec![sg(0.5, None), wa(0.5, None), slab(0.5, Structure::Unstructured)],
+        ),
+        (
+            "4:8 (50%)".into(),
+            vec![
+                sg(0.5, Some(PATTERN_4_8)),
+                wa(0.5, Some(PATTERN_4_8)),
+                slab(0.5, Structure::SemiStructured(PATTERN_4_8)),
+            ],
+        ),
+        (
+            "2:4 (50%)".into(),
+            vec![
+                sg(0.5, Some(PATTERN_2_4)),
+                wa(0.5, Some(PATTERN_2_4)),
+                slab(0.5, Structure::SemiStructured(PATTERN_2_4)),
+            ],
+        ),
+        (
+            "US (60%)".into(),
+            vec![sg(0.6, None), wa(0.6, None), slab(0.6, Structure::Unstructured)],
+        ),
+        (
+            "US (70%)".into(),
+            vec![sg(0.7, None), wa(0.7, None), slab(0.7, Structure::Unstructured)],
+        ),
+        (
+            "US (80%)".into(),
+            vec![sg(0.8, None), wa(0.8, None), slab(0.8, Structure::Unstructured)],
+        ),
+    ]
+}
+
+/// Table I: perplexity + mean zero-shot accuracy per (model, method,
+/// sparsity). `models`/`groups` subset for time-boxed runs.
+pub fn table1(lab: &Lab, models: &[String], groups: &[String]) -> anyhow::Result<Table> {
+    let mut table = Table::new(
+        "Table I — perplexity (valid shard) and mean zero-shot accuracy (%)",
+        &["Model", "Method", "Sparsity(CR)", "ppl↓", "acc↑"],
+    );
+    let suites = lab.suites();
+    for model in models {
+        let dense = lab.dense_params(model, lab.default_steps(model))?;
+        let corpus = lab.corpus(model);
+        for (label, methods) in table1_settings() {
+            if !groups.is_empty() && !groups.iter().any(|g| label.contains(g.as_str())) {
+                continue;
+            }
+            for m in methods {
+                let engine = if matches!(m, Method::Slab(_)) {
+                    Engine::Artifact
+                } else {
+                    Engine::Native
+                };
+                let t0 = std::time::Instant::now();
+                let (ppl, acc, _) =
+                    compress_and_eval(lab, &dense, &corpus, &suites, &m, engine)?;
+                eprintln!(
+                    "[table1] {model} {} {label}: ppl {:.3} acc {:.3} ({:.1}s)",
+                    m.name(),
+                    ppl,
+                    acc,
+                    t0.elapsed().as_secs_f64()
+                );
+                table.push_row(vec![
+                    model.clone(),
+                    m.name(),
+                    label.clone(),
+                    Table::metric(ppl),
+                    Table::pct(acc),
+                ]);
+            }
+        }
+    }
+    Ok(table)
+}
+
+/// Table II: comparison-group sweep + iteration sweep (base model,
+/// US 50%). Group geometry runs on the native engine (group shape is
+/// traced into the artifact at (1, Din)).
+pub fn table2(lab: &Lab, model: &str) -> anyhow::Result<(Table, Table)> {
+    let dense = lab.dense_params(model, lab.default_steps(model))?;
+    let corpus = lab.corpus(model);
+    let suites = lab.suites();
+    let dim = lab.rt.manifest.config(model).unwrap().dim;
+
+    let mut groups = Table::new(
+        "Table II(a) — comparison group sweep (US 50%)",
+        &["Group", "ppl↓", "acc↑"],
+    );
+    let shapes: Vec<(String, GroupShape)> = vec![
+        (format!("(1, Din/32)"), GroupShape { rows: 1, cols: (dim / 32).max(1) }),
+        (format!("(1, Din/16)"), GroupShape { rows: 1, cols: (dim / 16).max(1) }),
+        ("(1, Din)".into(), GroupShape::PER_ROW),
+        ("(16, Din)".into(), GroupShape { rows: 16, cols: 0 }),
+        ("(32, Din)".into(), GroupShape { rows: 32, cols: 0 }),
+    ];
+    for (label, g) in shapes {
+        let m = Method::Slab(SlabConfig {
+            group: g,
+            ..Default::default()
+        });
+        let (ppl, acc, _) = compress_and_eval(lab, &dense, &corpus, &suites, &m, Engine::Native)?;
+        eprintln!("[table2a] {label}: ppl {ppl:.3} acc {acc:.3}");
+        groups.push_row(vec![label, Table::metric(ppl), Table::pct(acc)]);
+    }
+
+    let mut iters = Table::new(
+        "Table II(b) — iteration sweep (US 50%)",
+        &["Iterations", "ppl↓"],
+    );
+    for s in [1usize, 10, 20, 30, 40] {
+        let m = Method::Slab(SlabConfig {
+            iters: s,
+            ..Default::default()
+        });
+        let (ppl, _, _) = compress_and_eval(lab, &dense, &corpus, &suites, &m, Engine::Artifact)?;
+        eprintln!("[table2b] iters {s}: ppl {ppl:.3}");
+        iters.push_row(vec![s.to_string(), Table::metric(ppl)]);
+    }
+    Ok((groups, iters))
+}
+
+/// Table III: component ablation (2:4, CR 50%) on four tasks.
+pub fn table3(lab: &Lab, model: &str) -> anyhow::Result<Table> {
+    let dense = lab.dense_params(model, lab.default_steps(model))?;
+    let corpus = lab.corpus(model);
+    let tasks = [Task::ArcC, Task::ArcE, Task::Rte, Task::WinoGrande];
+    let suites: Vec<(Task, Vec<TaskItem>)> = tasks
+        .iter()
+        .map(|t| (*t, t.generate(&lab.grammar, lab.task_items, lab.seed ^ 0x7a5c)))
+        .collect();
+    let mut table = Table::new(
+        "Table III — ablation (2:4, CR 50%), accuracy (%)",
+        &["Variant", "ARC-C", "ARC-E", "RTE", "WinoGrande", "Avg"],
+    );
+    let cfg24 = SlabConfig {
+        structure: Structure::SemiStructured(PATTERN_2_4),
+        ..Default::default()
+    };
+    for variant in [
+        Variant::SparseOnly,
+        Variant::SparseLowRank { rank: 16 },
+        Variant::SparseFactorBinary,
+        Variant::Full,
+    ] {
+        let m = Method::Ablation(cfg24, variant);
+        let compressed = compress_model(&lab.rt, &dense, &corpus.calib, &m, Engine::Native)?;
+        let (per_task, avg) = zero_shot(&lab.rt, &compressed.params, &suites)?;
+        eprintln!("[table3] {}: avg {avg:.3}", variant.label());
+        let mut row = vec![variant.label()];
+        row.extend(per_task.iter().map(|(_, a)| Table::pct(*a)));
+        row.push(Table::pct(avg));
+        table.push_row(row);
+    }
+    Ok(table)
+}
+
+/// Fig. 1: naive sparse+low-rank at CR 50% — ppl vs rank.
+pub fn fig1(lab: &Lab, model: &str, ranks: &[usize]) -> anyhow::Result<Table> {
+    let dense = lab.dense_params(model, lab.default_steps(model))?;
+    let corpus = lab.corpus(model);
+    let suites = lab.suites();
+    let mut table = Table::new(
+        "Fig. 1 — naive sparse + rank-r low-rank at CR 50% (no binary)",
+        &["rank", "ppl↓", "acc↑"],
+    );
+    for &r in ranks {
+        let m = Method::LowrankSparse {
+            cr: 0.5,
+            rank: r,
+            iters: 5,
+        };
+        match compress_and_eval(lab, &dense, &corpus, &suites, &m, Engine::Native) {
+            Ok((ppl, acc, _)) => {
+                eprintln!("[fig1] rank {r}: ppl {ppl:.3}");
+                table.push_row(vec![r.to_string(), Table::metric(ppl), Table::pct(acc)]);
+            }
+            Err(e) => {
+                eprintln!("[fig1] rank {r}: infeasible ({e})");
+                table.push_row(vec![r.to_string(), "infeasible".into(), "-".into()]);
+            }
+        }
+    }
+    Ok(table)
+}
+
+/// Fig. 3: mean ‖W − Ŵ‖_F vs rank of W_L at CR 50% (weight-level,
+/// no model eval — matches the paper's metric).
+pub fn fig3(lab: &Lab, model: &str, max_rank: usize) -> anyhow::Result<Table> {
+    let dense = lab.dense_params(model, lab.default_steps(model))?;
+    let corpus = lab.corpus(model);
+    let mut table = Table::new(
+        "Fig. 3 — mean Frobenius error vs rank of W_L (CR 50%)",
+        &["rank", "mean ‖W−Ŵ‖_F"],
+    );
+    for r in 0..=max_rank {
+        let m = Method::Slab(SlabConfig {
+            rank: r,
+            iters: 8,
+            ..Default::default()
+        });
+        let compressed = compress_model(&lab.rt, &dense, &corpus.calib, &m, Engine::Native)?;
+        eprintln!("[fig3] rank {r}: frob {:.4}", compressed.report.mean_frob);
+        table.push_row(vec![
+            r.to_string(),
+            format!("{:.4}", compressed.report.mean_frob),
+        ]);
+    }
+    Ok(table)
+}

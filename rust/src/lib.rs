@@ -1,0 +1,47 @@
+//! # SLaB — Sparse-Lowrank-Binary decomposition for efficient LLMs
+//!
+//! Rust implementation of *SLaB: Sparse-Lowrank-Binary Decomposition
+//! for Efficient Large Language Models* (Li, Ma & Kang, 2026): every
+//! linear-layer weight is replaced, one-shot and training-free, by
+//! `W ≈ W_S + W_L ⊙ W_B` — a sparse matrix, a rank-1 low-rank matrix,
+//! and a 1-bit sign matrix.
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//! Pallas kernels (L1) and the JAX model (L2) are AOT-compiled to HLO
+//! text by `python/compile/` and executed from Rust via the PJRT C API
+//! (`runtime`). Python never runs at request time.
+//!
+//! Module map (see `DESIGN.md` for the full inventory):
+//!
+//! * [`util`] — RNG / JSON / CLI / bench / property-test / thread-pool
+//!   substrates (the offline crate set has none of these).
+//! * [`tensor`] — dense f32 matrices, matmul, Cholesky, truncated SVD,
+//!   checkpoint I/O.
+//! * [`sparse`] — CSR and 2:4 / 4:8 semi-structured formats for `W_S`.
+//! * [`binary`] — bitpacked ±1 matrices for `W_B`.
+//! * [`slab`] — the decomposition itself: scores, group thresholding,
+//!   Algorithm 1, compression-ratio accounting, packed layers.
+//! * [`baselines`] — magnitude, Wanda, SparseGPT (OBS), naive
+//!   sparse+low-rank.
+//! * [`model`] — Llama-architecture configs, parameters, native fwd.
+//! * [`runtime`] — PJRT client / artifact registry / typed execution.
+//! * [`data`] — synthetic grammar corpus, tokenizer, calibration sets.
+//! * [`train`] — drives the AOT train-step artifact.
+//! * [`eval`] — perplexity + zero-shot suites.
+//! * [`coordinator`] — layer-wise pruning pipeline + serving router.
+//! * [`report`] — paper-style table rendering.
+
+pub mod baselines;
+pub mod binary;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod train;
+pub mod slab;
+pub mod sparse;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,259 @@
+//! `slab` — the leader binary: train, compress, evaluate, serve, and
+//! regenerate every table/figure of the paper.
+//!
+//! ```text
+//! slab train   --model base --steps 350
+//! slab compress --model base --method slab --cr 0.5 [--pattern 2:4] [--engine artifact]
+//! slab eval    --model base [--ckpt runs/base_slab.slabckpt]
+//! slab table1  --models small,base,large [--groups "US (50%)"]
+//! slab table2 | table3 | fig1 | fig3
+//! slab serve   --model base --requests 64
+//! ```
+
+use slab::baselines::{Method, SparseGptConfig};
+use slab::coordinator::{compress_model, Engine, Request, Server, ServerConfig};
+use slab::eval::{perplexity, zero_shot};
+use slab::experiments::{self, Lab};
+use slab::model::Params;
+use slab::report::Table;
+use slab::slab::{SlabConfig, Structure};
+use slab::sparse::{PATTERN_2_4, PATTERN_4_8};
+use slab::util::cli::Args;
+use std::path::PathBuf;
+
+fn main() {
+    let args = match Args::from_env(true) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn lab(args: &Args) -> anyhow::Result<Lab> {
+    let artifacts = PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let runs = PathBuf::from(args.get_str("runs", "runs"));
+    let mut lab = Lab::new(&artifacts, &runs)?;
+    lab.task_items = args.get_usize("items", 40)?;
+    Ok(lab)
+}
+
+fn parse_method(args: &Args) -> anyhow::Result<Method> {
+    let cr = args.get_f64("cr", 0.5)?;
+    let pattern = match args.get("pattern") {
+        Some("2:4") => Some(PATTERN_2_4),
+        Some("4:8") => Some(PATTERN_4_8),
+        None => None,
+        Some(p) => anyhow::bail!("unknown pattern {p} (2:4 | 4:8)"),
+    };
+    let structure = match pattern {
+        Some(p) => Structure::SemiStructured(p),
+        None => Structure::Unstructured,
+    };
+    Ok(match args.get_str("method", "slab").as_str() {
+        "slab" => Method::Slab(SlabConfig {
+            cr,
+            structure,
+            iters: args.get_usize("iters", 20)?,
+            ..Default::default()
+        }),
+        "wanda" => Method::Wanda {
+            sparsity: cr,
+            pattern,
+        },
+        "sparsegpt" => Method::SparseGpt {
+            sparsity: cr,
+            pattern,
+            cfg: SparseGptConfig::default(),
+        },
+        "magnitude" => Method::Magnitude {
+            sparsity: cr,
+            pattern,
+        },
+        "dense" => Method::Dense,
+        m => anyhow::bail!("unknown method {m}"),
+    })
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    let out_md = PathBuf::from(args.get_str("out", "runs/results.md"));
+    match args.command.as_deref() {
+        Some("train") => {
+            let lab = lab(args)?;
+            let model = args.get_str("model", "base");
+            let steps = args.get_usize("steps", lab.default_steps(&model))?;
+            // Force retrain if requested.
+            if args.has_flag("force") {
+                let _ = std::fs::remove_file(lab.runs_dir.join(format!("{model}.slabckpt")));
+            }
+            let p = lab.dense_params(&model, steps)?;
+            println!(
+                "trained '{model}' ({} params) → {}",
+                p.cfg.n_params(),
+                lab.runs_dir.join(format!("{model}.slabckpt")).display()
+            );
+        }
+        Some("compress") => {
+            let lab = lab(args)?;
+            let model = args.get_str("model", "base");
+            let method = parse_method(args)?;
+            let engine = match args.get_str("engine", "native").as_str() {
+                "artifact" => Engine::Artifact,
+                _ => Engine::Native,
+            };
+            let dense = lab.dense_params(&model, lab.default_steps(&model))?;
+            let corpus = lab.corpus(&model);
+            let c = compress_model(&lab.rt, &dense, &corpus.calib, &method, engine)?;
+            let out = lab
+                .runs_dir
+                .join(format!("{model}_{}.slabckpt", method.name().to_lowercase()));
+            c.params.save(&out)?;
+            println!(
+                "{} compressed '{model}' in {:.1}s — mean ‖W−Ŵ‖_F {:.4} → {}",
+                method.name(),
+                c.report.wall_secs,
+                c.report.mean_frob,
+                out.display()
+            );
+        }
+        Some("eval") => {
+            let lab = lab(args)?;
+            let model = args.get_str("model", "base");
+            let cfg = lab
+                .rt
+                .manifest
+                .config(&model)
+                .ok_or_else(|| anyhow::anyhow!("unknown config"))?
+                .clone();
+            let params = match args.get("ckpt") {
+                Some(p) => Params::load(&cfg, &PathBuf::from(p))?,
+                None => lab.dense_params(&model, lab.default_steps(&model))?,
+            };
+            let corpus = lab.corpus(&model);
+            let ppl = perplexity(&lab.rt, &params, &corpus.valid)?;
+            let suites = lab.suites();
+            let (per_task, avg) = zero_shot(&lab.rt, &params, &suites)?;
+            let mut t = Table::new(
+                &format!("Evaluation — {model}"),
+                &["metric", "value"],
+            );
+            t.push_row(vec!["perplexity".into(), Table::metric(ppl)]);
+            for (task, acc) in per_task {
+                t.push_row(vec![task.name().into(), Table::pct(acc)]);
+            }
+            t.push_row(vec!["avg acc".into(), Table::pct(avg)]);
+            t.print();
+        }
+        Some("table1") => {
+            let lab = lab(args)?;
+            let models = args.get_list("models", &["small", "base", "large"]);
+            let groups = args.get_list("groups", &[]);
+            let t = experiments::table1(&lab, &models, &groups)?;
+            t.print();
+            t.append_to(&out_md)?;
+        }
+        Some("table2") => {
+            let lab = lab(args)?;
+            let model = args.get_str("model", "base");
+            let (a, b) = experiments::table2(&lab, &model)?;
+            a.print();
+            b.print();
+            a.append_to(&out_md)?;
+            b.append_to(&out_md)?;
+        }
+        Some("table3") => {
+            let lab = lab(args)?;
+            let model = args.get_str("model", "base");
+            let t = experiments::table3(&lab, &model)?;
+            t.print();
+            t.append_to(&out_md)?;
+        }
+        Some("fig1") => {
+            let lab = lab(args)?;
+            let model = args.get_str("model", "base");
+            let ranks: Vec<usize> = args
+                .get_list("ranks", &["0", "1", "4", "16", "32"])
+                .iter()
+                .map(|s| s.parse().unwrap_or(0))
+                .collect();
+            let t = experiments::fig1(&lab, &model, &ranks)?;
+            t.print();
+            t.append_to(&out_md)?;
+        }
+        Some("fig3") => {
+            let lab = lab(args)?;
+            let model = args.get_str("model", "base");
+            let max_rank = args.get_usize("max-rank", 6)?;
+            let t = experiments::fig3(&lab, &model, max_rank)?;
+            t.print();
+            t.append_to(&out_md)?;
+        }
+        Some("serve") => {
+            // No Lab here: xla_extension 0.5.1 cannot host two PJRT
+            // clients in one process, and the Server's router thread
+            // owns the only one. The checkpoint must already exist.
+            let model = args.get_str("model", "base");
+            let n_req = args.get_usize("requests", 32)?;
+            let artifacts = PathBuf::from(args.get_str("artifacts", "artifacts"));
+            let runs = PathBuf::from(args.get_str("runs", "runs"));
+            let manifest = slab::runtime::Manifest::load(&artifacts)?;
+            let cfg = manifest
+                .config(&model)
+                .ok_or_else(|| anyhow::anyhow!("unknown config {model}"))?
+                .clone();
+            let ckpt = match args.get("ckpt") {
+                Some(p) => PathBuf::from(p),
+                None => runs.join(format!("{model}.slabckpt")),
+            };
+            anyhow::ensure!(
+                ckpt.exists(),
+                "checkpoint {} missing — run `slab train --model {model}` first",
+                ckpt.display()
+            );
+            let dense = Params::load(&cfg, &ckpt)?;
+            let serve_batch = manifest.serve_batch;
+            let server = Server::start(artifacts, dense, ServerConfig::default());
+            let g = slab::data::Grammar::standard();
+            let g = &g;
+            let mut rng = slab::util::rng::Pcg64::seed_from_u64(9);
+            let mut latencies = Vec::new();
+            let rxs: Vec<_> = (0..n_req)
+                .map(|_| {
+                    server.submit(Request {
+                        prompt: g.sample_sentence(&mut rng),
+                        max_new: 16,
+                    })
+                })
+                .collect();
+            for rx in rxs {
+                let resp = rx.recv()?;
+                latencies.push(resp.latency_ms);
+            }
+            let stats = server.shutdown().map_err(|e| anyhow::anyhow!("{e}"))?;
+            latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            println!(
+                "served {} requests in {} batches: {:.1} tok/s, p50 {:.0} ms, p95 {:.0} ms, occupancy {:.2}",
+                stats.requests,
+                stats.batches,
+                stats.tokens_per_sec(),
+                latencies[latencies.len() / 2],
+                latencies[latencies.len() * 95 / 100],
+                stats.occupancy(serve_batch),
+            );
+        }
+        _ => {
+            println!(
+                "slab — Sparse-Lowrank-Binary decomposition for efficient LLMs\n\n\
+                 commands: train | compress | eval | table1 | table2 | table3 | fig1 | fig3 | serve\n\
+                 common options: --artifacts <dir> --runs <dir> --model <small|base|large> --items <n>\n\
+                 run `make artifacts` first; see README.md"
+            );
+        }
+    }
+    Ok(())
+}

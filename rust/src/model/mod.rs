@@ -1,0 +1,10 @@
+//! Model-side state: the canonical parameter store (matching the
+//! manifest's flat order), initialization, and checkpoint I/O.
+//!
+//! The transformer *computation* lives in the AOT artifacts (L2); this
+//! module owns the host-side representation the coordinator mutates
+//! when it swaps compressed weights in.
+
+pub mod params;
+
+pub use params::Params;

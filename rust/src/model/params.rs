@@ -1,0 +1,280 @@
+//! The canonical parameter store.
+//!
+//! Tensors are kept in the manifest's flat order — the exact
+//! positional ABI of every model artifact. Initialization mirrors
+//! `python/compile/model.py::init_params` (scaled-normal, residual
+//! projections down-weighted, norms at one) so rust-initialized
+//! models match what the JAX side would produce distributionally.
+
+use crate::runtime::manifest::ModelCfg;
+use crate::runtime::{lit_f32, to_vec_f32};
+use crate::tensor::{Checkpoint, Entry, Mat, TensorData};
+use crate::util::rng::Pcg64;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct Params {
+    pub cfg: ModelCfg,
+    /// One tensor per manifest entry, row-major.
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl Params {
+    /// Scaled-normal init (std 0.02; `wo`/`w_down` scaled by
+    /// 1/√(2·n_layers); norms = 1).
+    pub fn init(cfg: &ModelCfg, seed: u64) -> Params {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let scale_resid = 1.0 / ((2 * cfg.n_layers) as f32).sqrt();
+        let mut tensors = Vec::with_capacity(cfg.param_names.len());
+        for (name, shape) in cfg.param_names.iter().zip(cfg.param_shapes.iter()) {
+            let numel: usize = shape.iter().product();
+            let base = name.rsplit('.').next().unwrap();
+            let mut data = vec![0.0f32; numel];
+            if shape.len() == 1 {
+                data.fill(1.0);
+            } else {
+                let std = if base == "wo" || base == "w_down" {
+                    0.02 * scale_resid
+                } else {
+                    0.02
+                };
+                rng.fill_normal(&mut data, std);
+            }
+            tensors.push(data);
+        }
+        Params {
+            cfg: cfg.clone(),
+            tensors,
+        }
+    }
+
+    /// Zero-filled (optimizer moment init).
+    pub fn zeros_like(cfg: &ModelCfg) -> Params {
+        Params {
+            cfg: cfg.clone(),
+            tensors: cfg
+                .param_shapes
+                .iter()
+                .map(|s| vec![0.0f32; s.iter().product()])
+                .collect(),
+        }
+    }
+
+    pub fn index(&self, name: &str) -> Option<usize> {
+        self.cfg.param_index(name)
+    }
+
+    /// 2-D parameter as a Mat (panics on 1-D entries).
+    pub fn mat(&self, name: &str) -> Mat {
+        let i = self.index(name).unwrap_or_else(|| panic!("no param {name}"));
+        let shape = &self.cfg.param_shapes[i];
+        assert_eq!(shape.len(), 2, "param {name} is not 2-D");
+        Mat::from_vec(shape[0], shape[1], self.tensors[i].clone())
+    }
+
+    /// Replace a 2-D parameter (the compression swap).
+    pub fn set_mat(&mut self, name: &str, m: &Mat) {
+        let i = self.index(name).unwrap_or_else(|| panic!("no param {name}"));
+        let shape = &self.cfg.param_shapes[i];
+        assert_eq!(&[m.rows, m.cols][..], shape.as_slice(), "shape mismatch for {name}");
+        self.tensors[i] = m.data.clone();
+    }
+
+    /// All tensors as literals in canonical order (artifact inputs).
+    pub fn to_literals(&self) -> Vec<xla::Literal> {
+        self.tensors
+            .iter()
+            .zip(self.cfg.param_shapes.iter())
+            .map(|(t, s)| lit_f32(t, s))
+            .collect()
+    }
+
+    /// Rebuild from artifact outputs (e.g. the updated params slice of
+    /// a train_step result).
+    pub fn from_literals(cfg: &ModelCfg, lits: &[xla::Literal]) -> Params {
+        assert_eq!(lits.len(), cfg.param_names.len());
+        Params {
+            cfg: cfg.clone(),
+            tensors: lits.iter().map(to_vec_f32).collect(),
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut ck = Checkpoint::new();
+        let tag = self.cfg.name.as_bytes().to_vec();
+        ck.push(Entry {
+            name: "__config".into(),
+            dims: vec![tag.len()],
+            data: TensorData::U8(tag),
+        });
+        for ((name, shape), data) in self
+            .cfg
+            .param_names
+            .iter()
+            .zip(self.cfg.param_shapes.iter())
+            .zip(self.tensors.iter())
+        {
+            ck.push(Entry::f32(name, shape.clone(), data.clone()));
+        }
+        ck.save(path)
+    }
+
+    /// Load; the checkpoint's `__config` tag must match `cfg.name`.
+    pub fn load(cfg: &ModelCfg, path: &Path) -> std::io::Result<Params> {
+        let ck = Checkpoint::load(path)?;
+        if let Some(tag) = ck.get("__config") {
+            let name = String::from_utf8_lossy(tag.data.as_u8().unwrap_or(&[]));
+            if name != cfg.name {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("checkpoint is for config '{name}', expected '{}'", cfg.name),
+                ));
+            }
+        }
+        let mut tensors = Vec::with_capacity(cfg.param_names.len());
+        for (name, shape) in cfg.param_names.iter().zip(cfg.param_shapes.iter()) {
+            let e = ck.get(name).ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("missing param {name}"),
+                )
+            })?;
+            if &e.dims != shape {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("param {name}: shape {:?} vs {:?}", e.dims, shape),
+                ));
+            }
+            tensors.push(e.data.as_f32().unwrap().to_vec());
+        }
+        Ok(Params {
+            cfg: cfg.clone(),
+            tensors,
+        })
+    }
+
+    /// Dense bits of all *pruned* linears at width b (the Table-I CR
+    /// denominator; embeddings/norms/head excluded, paper §III-A4).
+    pub fn pruned_weight_bits(&self, b: u32) -> usize {
+        self.cfg
+            .pruned
+            .iter()
+            .map(|(_, (dout, din))| b as usize * dout * din)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            name: "tiny".into(),
+            vocab: 32,
+            dim: 8,
+            n_layers: 1,
+            n_heads: 2,
+            ffn: 16,
+            max_seq: 8,
+            prompt_len: 4,
+            param_names: vec![
+                "tok_emb".into(),
+                "l0.attn_norm".into(),
+                "l0.wq".into(),
+                "l0.wk".into(),
+                "l0.wv".into(),
+                "l0.wo".into(),
+                "l0.mlp_norm".into(),
+                "l0.w_gate".into(),
+                "l0.w_up".into(),
+                "l0.w_down".into(),
+                "final_norm".into(),
+                "lm_head".into(),
+            ],
+            param_shapes: vec![
+                vec![32, 8],
+                vec![8],
+                vec![8, 8],
+                vec![8, 8],
+                vec![8, 8],
+                vec![8, 8],
+                vec![8],
+                vec![16, 8],
+                vec![16, 8],
+                vec![8, 16],
+                vec![8],
+                vec![32, 8],
+            ],
+            pruned: vec![
+                ("l0.wq".into(), (8, 8)),
+                ("l0.wk".into(), (8, 8)),
+                ("l0.wv".into(), (8, 8)),
+                ("l0.wo".into(), (8, 8)),
+                ("l0.w_gate".into(), (16, 8)),
+                ("l0.w_up".into(), (16, 8)),
+                ("l0.w_down".into(), (8, 16)),
+            ],
+            slab_param_names: vec![],
+        }
+    }
+
+    #[test]
+    fn init_statistics() {
+        let cfg = tiny_cfg();
+        let p = Params::init(&cfg, 1);
+        // Norms at 1.
+        let norm_idx = p.index("l0.attn_norm").unwrap();
+        assert!(p.tensors[norm_idx].iter().all(|&x| x == 1.0));
+        // Matrices near std 0.02.
+        let wq = p.mat("l0.wq");
+        assert!(wq.max_abs() < 0.2);
+        assert!(wq.data.iter().any(|&x| x != 0.0));
+        // Residual projections down-scaled.
+        let wo = p.mat("l0.wo");
+        let var = |m: &Mat| m.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / m.numel() as f64;
+        // With 64 samples each this is noisy; just check ordering holds
+        // for the deterministic seed.
+        assert!(var(&wo) < var(&wq) * 1.5);
+    }
+
+    #[test]
+    fn mat_set_roundtrip() {
+        let cfg = tiny_cfg();
+        let mut p = Params::init(&cfg, 2);
+        let mut m = p.mat("l0.w_gate");
+        m.map_inplace(|x| x * 2.0);
+        p.set_mat("l0.w_gate", &m);
+        assert_eq!(p.mat("l0.w_gate"), m);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = tiny_cfg();
+        let p = Params::init(&cfg, 3);
+        let path = std::env::temp_dir().join("slab-tests/params.slabckpt");
+        p.save(&path).unwrap();
+        let q = Params::load(&cfg, &path).unwrap();
+        assert_eq!(p.tensors, q.tensors);
+    }
+
+    #[test]
+    fn load_rejects_wrong_config() {
+        let cfg = tiny_cfg();
+        let p = Params::init(&cfg, 4);
+        let path = std::env::temp_dir().join("slab-tests/params2.slabckpt");
+        p.save(&path).unwrap();
+        let mut other = tiny_cfg();
+        other.name = "other".into();
+        assert!(Params::load(&other, &path).is_err());
+    }
+
+    #[test]
+    fn pruned_bits_counts_only_linears() {
+        let cfg = tiny_cfg();
+        let p = Params::init(&cfg, 5);
+        let bits = p.pruned_weight_bits(16);
+        let expect = 16 * (4 * 64 + 2 * 128 + 128);
+        assert_eq!(bits, expect);
+    }
+}

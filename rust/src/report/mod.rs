@@ -1,0 +1,111 @@
+//! Paper-style table rendering (markdown-ish monospace) used by the
+//! `slab table*` / `slab fig*` commands and EXPERIMENTS.md.
+
+use crate::util::fmt_metric;
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn metric(v: f64) -> String {
+        fmt_metric(v)
+    }
+
+    pub fn pct(v: f64) -> String {
+        format!("{:.1}", v * 100.0)
+    }
+
+    /// Render with column alignment; also valid markdown.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("\n### {}\n\n", self.title));
+        }
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// Append to a results file (EXPERIMENTS.md workflow).
+    pub fn append_to(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        f.write_all(self.render().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new("Demo", &["Method", "ppl", "acc"]);
+        t.push_row(vec!["SLaB".into(), Table::metric(5.493), Table::pct(0.662)]);
+        t.push_row(vec!["Wanda".into(), Table::metric(6.45), Table::pct(0.64)]);
+        let r = t.render();
+        assert!(r.contains("### Demo"));
+        assert!(r.contains("| SLaB"));
+        assert!(r.contains("5.49"));
+        assert!(r.contains("66.2"));
+        // Markdown separator present.
+        assert!(r.lines().any(|l| l.starts_with("|--") || l.starts_with("|-")));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push_row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,141 @@
+//! PJRT client wrapper: compile cache + typed execution over the
+//! artifact registry.
+//!
+//! Follows the `/opt/xla-example/load_hlo` pattern: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Artifacts are compiled lazily and
+//! cached for the process lifetime (compilation of the larger train
+//! graphs takes seconds; the request path must never pay it twice).
+
+use super::manifest::Manifest;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("unknown artifact '{0}' (not in manifest)")]
+    UnknownArtifact(String),
+    #[error("artifact '{0}': expected {1} inputs, got {2}")]
+    Arity(String, usize, usize),
+    #[error("manifest: {0}")]
+    Manifest(#[from] super::manifest::ManifestError),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// The L3↔artifact bridge. One per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<Runtime, RuntimeError> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>, RuntimeError> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?;
+        let path = self.dir.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        eprintln!(
+            "[runtime] compiled {name} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with literal inputs; returns the flattened
+    /// output tuple (aot.py lowers with `return_tuple=True`).
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>, RuntimeError> {
+        let spec_len = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?
+            .inputs
+            .len();
+        if inputs.len() != spec_len {
+            return Err(RuntimeError::Arity(name.to_string(), spec_len, inputs.len()));
+        }
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with borrowed literals — callers keep long-lived inputs
+    /// (model parameters) host-side and splice per-call inputs in
+    /// without cloning. NOTE: `buffer_from_host_literal`/`execute_b`
+    /// device-resident buffers intermittently abort inside
+    /// xla_extension 0.5.1's ShapeUtil on this CPU plugin
+    /// (`pointer_size > 0` check), so the literal path is the
+    /// supported one; see DESIGN.md §Perf for the measured cost.
+    pub fn execute_refs(
+        &self,
+        name: &str,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>, RuntimeError> {
+        let exe = self.executable(name)?;
+        let result = exe.execute::<&xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Compile every artifact whose name starts with `prefix`
+    /// (warm-up for benches / serving start-up).
+    pub fn precompile(&self, prefix: &str) -> Result<usize, RuntimeError> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.name.starts_with(prefix))
+            .map(|a| a.name.clone())
+            .collect();
+        for n in &names {
+            self.executable(n)?;
+        }
+        Ok(names.len())
+    }
+}

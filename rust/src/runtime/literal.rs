@@ -1,0 +1,57 @@
+//! Typed bridges between the crate's tensors and XLA literals.
+
+use crate::tensor::Mat;
+
+/// f32 tensor literal of arbitrary shape.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> xla::Literal {
+    assert_eq!(
+        data.len(),
+        dims.iter().product::<usize>(),
+        "lit_f32 shape {:?} vs len {}",
+        dims,
+        data.len()
+    );
+    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&d)
+        .expect("lit_f32 reshape")
+}
+
+/// i32 tensor literal of arbitrary shape.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> xla::Literal {
+    assert_eq!(data.len(), dims.iter().product::<usize>());
+    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&d)
+        .expect("lit_i32 reshape")
+}
+
+/// Scalar i32 literal (e.g. the `step` / `pos` inputs).
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Scalar f32 literal (e.g. `keep_frac`).
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// 2-D matrix literal.
+pub fn lit_mat(m: &Mat) -> xla::Literal {
+    lit_f32(&m.data, &[m.rows, m.cols])
+}
+
+/// Literal → Vec<f32> (any shape, row-major).
+pub fn to_vec_f32(lit: &xla::Literal) -> Vec<f32> {
+    lit.to_vec::<f32>().expect("literal to f32 vec")
+}
+
+/// Literal → Mat with the given shape.
+pub fn to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> Mat {
+    Mat::from_vec(rows, cols, to_vec_f32(lit))
+}
+
+/// Literal → scalar f32.
+pub fn to_scalar_f32(lit: &xla::Literal) -> f32 {
+    lit.get_first_element::<f32>().expect("scalar literal")
+}

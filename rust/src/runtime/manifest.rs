@@ -1,0 +1,287 @@
+//! `artifacts/manifest.json` — the ABI contract between `aot.py` and
+//! this runtime: model configs, canonical parameter order, and the
+//! input/output signature of every artifact.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One model configuration exported by aot.py (mirrors
+/// `python/compile/model.py::ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+    pub prompt_len: usize,
+    /// Canonical parameter order (load-bearing for the call ABI).
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    /// The seven-per-layer pruned linears: (name, (dout, din)).
+    pub pruned: Vec<(String, (usize, usize))>,
+    /// Flat arg order of the compressed (slab_fwd) artifact.
+    pub slab_param_names: Vec<String>,
+}
+
+impl ModelCfg {
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_shapes
+            .iter()
+            .map(|s| s.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Index of a parameter in the canonical order.
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.param_names.iter().position(|n| n == name)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TrainHyper {
+    pub peak_lr: f64,
+    pub warmup: usize,
+    pub total_steps: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub serve_batch: usize,
+    pub kernel_bench_batch: usize,
+    pub pad_id: i32,
+    pub train_hyper: TrainHyper,
+    pub configs: Vec<ModelCfg>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("manifest: {0}")]
+    Schema(String),
+}
+
+fn specs(v: &Json) -> Result<Vec<TensorSpec>, ManifestError> {
+    v.as_arr()
+        .ok_or_else(|| ManifestError::Schema("specs not array".into()))?
+        .iter()
+        .map(|s| {
+            Ok(TensorSpec {
+                name: s
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| ManifestError::Schema("spec.name".into()))?
+                    .to_string(),
+                shape: s
+                    .get("shape")
+                    .as_arr()
+                    .ok_or_else(|| ManifestError::Schema("spec.shape".into()))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: s.get("dtype").as_str().unwrap_or("f32").to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let j = Json::parse(&text)?;
+        if j.get("format").as_str() != Some("slab-aot-v1") {
+            return Err(ManifestError::Schema("unknown manifest format".into()));
+        }
+        let consts = j.get("constants");
+        let hp = j.get("train_hyper");
+        let mut configs = Vec::new();
+        for (name, c) in j
+            .get("configs")
+            .as_obj()
+            .ok_or_else(|| ManifestError::Schema("configs".into()))?
+        {
+            let get = |k: &str| {
+                c.get(k)
+                    .as_usize()
+                    .ok_or_else(|| ManifestError::Schema(format!("configs.{name}.{k}")))
+            };
+            configs.push(ModelCfg {
+                name: name.clone(),
+                vocab: get("vocab")?,
+                dim: get("dim")?,
+                n_layers: get("n_layers")?,
+                n_heads: get("n_heads")?,
+                ffn: get("ffn")?,
+                max_seq: get("max_seq")?,
+                prompt_len: get("prompt_len")?,
+                param_names: c
+                    .get("param_names")
+                    .as_arr()
+                    .ok_or_else(|| ManifestError::Schema("param_names".into()))?
+                    .iter()
+                    .map(|s| s.as_str().unwrap_or("").to_string())
+                    .collect(),
+                param_shapes: c
+                    .get("param_shapes")
+                    .as_arr()
+                    .ok_or_else(|| ManifestError::Schema("param_shapes".into()))?
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .map(|a| a.iter().map(|d| d.as_usize().unwrap_or(0)).collect())
+                            .unwrap_or_default()
+                    })
+                    .collect(),
+                pruned: c
+                    .get("pruned")
+                    .as_arr()
+                    .ok_or_else(|| ManifestError::Schema("pruned".into()))?
+                    .iter()
+                    .map(|p| {
+                        let shape = p.get("shape");
+                        (
+                            p.get("name").as_str().unwrap_or("").to_string(),
+                            (
+                                shape.at(0).as_usize().unwrap_or(0),
+                                shape.at(1).as_usize().unwrap_or(0),
+                            ),
+                        )
+                    })
+                    .collect(),
+                slab_param_names: c
+                    .get("slab_param_names")
+                    .as_arr()
+                    .ok_or_else(|| ManifestError::Schema("slab_param_names".into()))?
+                    .iter()
+                    .map(|s| s.as_str().unwrap_or("").to_string())
+                    .collect(),
+            });
+        }
+        let mut artifacts = Vec::new();
+        for (name, a) in j
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| ManifestError::Schema("artifacts".into()))?
+        {
+            artifacts.push(ArtifactSpec {
+                name: name.clone(),
+                file: a
+                    .get("file")
+                    .as_str()
+                    .ok_or_else(|| ManifestError::Schema("artifact.file".into()))?
+                    .to_string(),
+                inputs: specs(a.get("inputs"))?,
+                outputs: specs(a.get("outputs"))?,
+            });
+        }
+        Ok(Manifest {
+            train_batch: consts.get("train_batch").as_usize().unwrap_or(8),
+            eval_batch: consts.get("eval_batch").as_usize().unwrap_or(8),
+            serve_batch: consts.get("serve_batch").as_usize().unwrap_or(4),
+            kernel_bench_batch: consts.get("kernel_bench_batch").as_usize().unwrap_or(32),
+            pad_id: consts.get("pad_id").as_i64().unwrap_or(0) as i32,
+            train_hyper: TrainHyper {
+                peak_lr: hp.get("peak_lr").as_f64().unwrap_or(3e-3),
+                warmup: hp.get("warmup").as_usize().unwrap_or(30),
+                total_steps: hp.get("total_steps").as_usize().unwrap_or(600),
+            },
+            configs,
+            artifacts,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Option<&ModelCfg> {
+        self.configs.iter().find(|c| c.name == name)
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "slab-aot-v1",
+      "constants": {"train_batch": 8, "eval_batch": 8, "serve_batch": 4,
+                    "kernel_bench_batch": 32, "pad_id": 0},
+      "train_hyper": {"peak_lr": 0.003, "warmup": 30, "total_steps": 600},
+      "configs": {
+        "tiny": {
+          "vocab": 64, "dim": 16, "n_layers": 1, "n_heads": 2, "ffn": 32,
+          "max_seq": 8, "prompt_len": 4,
+          "param_names": ["tok_emb", "l0.wq", "final_norm", "lm_head"],
+          "param_shapes": [[64, 16], [16, 16], [16], [64, 16]],
+          "pruned": [{"name": "l0.wq", "shape": [16, 16]}],
+          "slab_param_names": ["tok_emb", "l0.wq.ws", "l0.wq.u", "l0.wq.v", "l0.wq.b", "final_norm", "lm_head"]
+        }
+      },
+      "artifacts": {
+        "eval_nll_tiny": {
+          "file": "eval_nll_tiny.hlo.txt",
+          "inputs": [{"name": "tok_emb", "shape": [64, 16], "dtype": "f32"}],
+          "outputs": [{"name": "nll_sum", "shape": [8], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    fn write_sample() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("slab-tests/manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::load(&write_sample()).unwrap();
+        assert_eq!(m.train_batch, 8);
+        assert_eq!(m.pad_id, 0);
+        let cfg = m.config("tiny").unwrap();
+        assert_eq!(cfg.dim, 16);
+        assert_eq!(cfg.param_names.len(), 4);
+        assert_eq!(cfg.pruned, vec![("l0.wq".to_string(), (16, 16))]);
+        assert_eq!(cfg.param_index("final_norm"), Some(2));
+        assert_eq!(cfg.n_params(), 64 * 16 + 256 + 16 + 64 * 16);
+        let a = m.artifact("eval_nll_tiny").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![64, 16]);
+        assert_eq!(a.outputs[0].name, "nll_sum");
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let dir = std::env::temp_dir().join("slab-tests/manifest-bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"format": "nope"}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime — load AOT HLO-text artifacts and execute them from
+//! the rust hot path.
+//!
+//! * [`manifest`] — the `artifacts/manifest.json` ABI contract
+//!   (configs, parameter order, artifact I/O specs).
+//! * [`client`] — `PjRtClient` wrapper with a compile cache.
+//! * [`literal`] — typed bridges between our tensors and XLA literals.
+//!
+//! Python runs only at `make artifacts` time; everything here is
+//! self-contained given the artifact directory.
+
+pub mod client;
+pub mod literal;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use literal::{lit_f32, lit_i32, lit_mat, lit_scalar_i32, to_mat, to_vec_f32};
+pub use manifest::{Manifest, ModelCfg};

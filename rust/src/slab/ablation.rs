@@ -1,0 +1,191 @@
+//! Ablation variants (paper Table III): what does each component of
+//! `W_S + W_L ⊙ W_B` buy?
+//!
+//! | variant | compensation term |
+//! |---|---|
+//! | `SparseOnly` | none (pure activation-aware sparse) |
+//! | `SparseLowRank { rank }` | plain `W_L` (rank-r tSVD of residual, no binary) |
+//! | `SparseFactorBinary` | `f ⊙ W_B` — per-row quantization factor × sign |
+//! | `Full` | `W_L ⊙ W_B` — the SLaB term |
+//!
+//! All variants share the same alternating skeleton and the same
+//! comparison-group thresholding so the Table III comparison isolates
+//! the compensation term, exactly as in the paper.
+
+use super::config::{ConfigError, SlabConfig, Structure};
+use super::scores::{wanda_scores, ActStats};
+use super::threshold::{group_topk_mask, semi_structured_mask};
+use crate::tensor::{svd_truncated, Mat};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// `W_S` only.
+    SparseOnly,
+    /// `W_S + W_L` with `W_L` a plain rank-r truncated SVD (no sign
+    /// matrix). Table III uses r = 16.
+    SparseLowRank { rank: usize },
+    /// `W_S + f ⊙ W_B`: `f` is the per-output-row mean |residual| —
+    /// the "quantization factor vector" of 1-bit weight quantization.
+    SparseFactorBinary,
+    /// Full SLaB: `W_S + W_L ⊙ W_B`.
+    Full,
+}
+
+impl Variant {
+    pub fn label(&self) -> String {
+        match self {
+            Variant::SparseOnly => "W_S".into(),
+            Variant::SparseLowRank { rank } => format!("W_S + W_L(r={rank})"),
+            Variant::SparseFactorBinary => "W_S + factor ⊙ W_B".into(),
+            Variant::Full => "W_S + W_L ⊙ W_B".into(),
+        }
+    }
+}
+
+/// Result of an ablation decomposition: the reconstructed dense weight
+/// plus the Frobenius error (the model swap uses the dense form).
+#[derive(Debug, Clone)]
+pub struct AblationOut {
+    pub w_hat: Mat,
+    pub frob_err: f32,
+    pub kept: usize,
+}
+
+/// Run the shared alternating skeleton with the chosen compensation
+/// term. `cfg.iters`, `cfg.group`, `cfg.structure` apply to all
+/// variants; `cfg.rank` only to `Full`.
+pub fn ablate(
+    w: &Mat,
+    stats: &ActStats,
+    cfg: &SlabConfig,
+    variant: Variant,
+) -> Result<AblationOut, ConfigError> {
+    let (dout, din) = w.shape();
+    let keep = cfg.keep_fraction(dout, din)?;
+    let (gr, gc) = cfg.group.resolve(dout, din);
+
+    let mut w_s = Mat::zeros(dout, din);
+    let mut comp = Mat::zeros(dout, din); // the compensation term
+    let mut kept = 0usize;
+
+    for t in 0..cfg.iters.max(1) {
+        let y = w.sub(&w_s);
+        comp = match variant {
+            Variant::SparseOnly => Mat::zeros(dout, din),
+            Variant::SparseLowRank { rank } => {
+                let svd = svd_truncated(&y, rank, cfg.svd_iters, cfg.seed ^ t as u64);
+                svd.reconstruct()
+            }
+            Variant::SparseFactorBinary => {
+                let b = y.sign_pm1();
+                let mut out = Mat::zeros(dout, din);
+                for i in 0..dout {
+                    let yrow = y.row(i);
+                    let f: f32 =
+                        yrow.iter().map(|&x| x.abs()).sum::<f32>() / din as f32;
+                    let brow = b.row(i);
+                    let orow = out.row_mut(i);
+                    for j in 0..din {
+                        orow[j] = f * brow[j];
+                    }
+                }
+                out
+            }
+            Variant::Full => {
+                let b = y.sign_pm1();
+                let svd = svd_truncated(&y.abs(), cfg.rank.max(1), cfg.svd_iters, cfg.seed ^ t as u64);
+                let mut out = Mat::zeros(dout, din);
+                for k in 0..cfg.rank.max(1).min(svd.s.len()) {
+                    let (u, v) = svd.sqrt_split(k);
+                    out.add_assign(&Mat::outer(&u, &v));
+                }
+                out.hadamard(&b)
+            }
+        };
+
+        let y_s = w.sub(&comp);
+        let s = wanda_scores(&y_s, stats);
+        let mask = match cfg.structure {
+            Structure::Unstructured => group_topk_mask(&s, keep, gr, gc),
+            Structure::SemiStructured(p) => semi_structured_mask(&s, keep, p, gr, gc),
+        };
+        w_s = y_s.hadamard(&mask);
+        kept = mask.count_nonzero();
+
+        if matches!(variant, Variant::SparseOnly) {
+            break; // no alternation possible
+        }
+    }
+
+    let w_hat = w_s.add(&comp);
+    Ok(AblationOut {
+        frob_err: w.frob_dist(&w_hat),
+        w_hat,
+        kept,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::PATTERN_2_4;
+    use crate::util::rng::Pcg64;
+
+    fn setup() -> (Mat, ActStats, SlabConfig) {
+        // NOTE: shape matters for the Table III ordering — rank-16 is a
+        // large spectrum fraction for tiny matrices (at 48x96 plain
+        // rank-16 beats factor⊙binary on Gaussian weights); at the
+        // paper-relevant regime (rank ≪ min dim) the binary variants
+        // win, which 128x256 already exhibits.
+        let mut rng = Pcg64::seed_from_u64(110);
+        let w = Mat::randn(128, 256, 0.05, &mut rng);
+        let x = Mat::randn(64, 256, 1.0, &mut rng);
+        let cfg = SlabConfig {
+            iters: 5,
+            svd_iters: 10,
+            structure: Structure::SemiStructured(PATTERN_2_4),
+            ..Default::default()
+        };
+        (w, ActStats::from_activations(&x), cfg)
+    }
+
+    #[test]
+    fn table3_error_ordering() {
+        // The paper's Table III ordering (by accuracy) maps to the
+        // reconstruction-error ordering:
+        //   SparseOnly > SparseLowRank(16) > SparseFactorBinary ≥ Full.
+        let (w, stats, cfg) = setup();
+        let e = |v| ablate(&w, &stats, &cfg, v).unwrap().frob_err;
+        let sparse = e(Variant::SparseOnly);
+        let lowrank = e(Variant::SparseLowRank { rank: 16 });
+        let factor = e(Variant::SparseFactorBinary);
+        let full = e(Variant::Full);
+        assert!(lowrank < sparse, "lowrank {lowrank} < sparse {sparse}");
+        assert!(factor < lowrank, "factor {factor} < lowrank {lowrank}");
+        assert!(full <= factor * 1.02, "full {full} ≲ factor {factor}");
+    }
+
+    #[test]
+    fn all_variants_respect_pattern() {
+        let (w, stats, cfg) = setup();
+        for v in [
+            Variant::SparseOnly,
+            Variant::SparseLowRank { rank: 4 },
+            Variant::SparseFactorBinary,
+            Variant::Full,
+        ] {
+            let out = ablate(&w, &stats, &cfg, v).unwrap();
+            // The sparse part must obey 2:4; recover it as Ŵ − comp is
+            // not directly available, so check kept count instead.
+            let keep = cfg.keep_fraction(128, 256).unwrap();
+            assert_eq!(out.kept, ((keep * 256.0).floor() as usize) * 128, "{:?}", v);
+        }
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(Variant::SparseOnly.label(), "W_S");
+        assert_eq!(Variant::SparseLowRank { rank: 16 }.label(), "W_S + W_L(r=16)");
+        assert!(Variant::Full.label().contains("W_L ⊙ W_B"));
+    }
+}

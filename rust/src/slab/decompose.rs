@@ -1,0 +1,308 @@
+//! Algorithm 1 — the SLaB alternating decomposition.
+//!
+//! Given weight `W (Dout, Din)` and calibration statistics `S_X`,
+//! produce `W_S` (sparse), `u, v` (rank-1 √σ-split factors of `W_L`)
+//! and `W_B = sign(W − W_S)` such that `W ≈ W_S + W_L ⊙ W_B`:
+//!
+//! ```text
+//! 1: W_S ← 0
+//! 2: keep ← 1 − CR − 1/b − 1/Dout − 1/Din            (Eq. 10)
+//! 3: S_X ← ||X_j||₂
+//! 4: for t = 1..s:
+//! 5:   W_B ← sign(W − W_S)
+//! 6:   (u, v) ← √σ₀·(u₀, v₀) of |W − W_S|            (rank-1 tSVD)
+//! 7:   S ← |W − u vᵀ ⊙ W_B| ⊙ S_X
+//! 8:   W_S ← (W − u vᵀ ⊙ W_B) masked by HardThreshold(S, keep)
+//! 9: return W_S, u, v, W_B
+//! ```
+//!
+//! Line 8 note: the paper writes `HardThreshold(S, sparsity) ⊘ S_X`,
+//! i.e. divide the *score* back by the activation norms — that
+//! recovers `|residual|` at the kept positions and loses the sign.
+//! The intended semantics (matching Wanda, and what makes ‖·‖_F
+//! decrease) is to keep the *signed residual* at the top-scoring
+//! positions; that is what we implement, and what
+//! `python/compile/decompose.py` implements, so the two paths agree.
+//!
+//! The rank-1 SVD of `|W − W_S|` is non-negative (Perron–Frobenius /
+//! paper Prop. 2), so with `W_B` carrying the sign, `u vᵀ ⊙ W_B`
+//! approximates `W − W_S` itself — the insight that lets rank-1 do
+//! the work of a much higher plain rank (paper Fig. 3).
+
+use super::config::{ConfigError, SlabConfig, Structure};
+use super::scores::{wanda_scores, ActStats};
+use super::threshold::{group_topk_mask, semi_structured_mask};
+use crate::tensor::{svd_truncated, Mat};
+
+/// Decomposition output (dense form; see [`crate::slab::layer`] for
+/// the packed deployment format).
+#[derive(Debug, Clone)]
+pub struct Decomposition {
+    pub w_s: Mat,
+    /// Rank-r factors, √σ-split: w_l = Σ_k u[k]·v[k]ᵀ. Paper default r=1.
+    pub u: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    /// Dense ±1 sign matrix.
+    pub w_b: Mat,
+    /// Elements kept in `w_s`.
+    pub kept: usize,
+    /// ‖W − Ŵ‖_F after each iteration (length = iters), for the
+    /// convergence diagnostics and Table II(b).
+    pub frob_trace: Vec<f32>,
+}
+
+impl Decomposition {
+    /// `W_L` as a dense matrix.
+    pub fn w_l(&self) -> Mat {
+        let (dout, din) = (self.w_s.rows, self.w_s.cols);
+        let mut m = Mat::zeros(dout, din);
+        for k in 0..self.u.len() {
+            m.add_assign(&Mat::outer(&self.u[k], &self.v[k]));
+        }
+        m
+    }
+
+    /// Reconstruct `Ŵ = W_S + W_L ⊙ W_B`.
+    pub fn reconstruct(&self) -> Mat {
+        self.w_s.add(&self.w_l().hadamard(&self.w_b))
+    }
+}
+
+/// Run Algorithm 1. `stats` must cover the layer's Din.
+pub fn decompose(w: &Mat, stats: &ActStats, cfg: &SlabConfig) -> Result<Decomposition, ConfigError> {
+    let (dout, din) = w.shape();
+    assert_eq!(stats.din(), din, "stats Din mismatch");
+    let keep = cfg.keep_fraction(dout, din)?;
+    let (gr, gc) = cfg.group.resolve(dout, din);
+    let rank = cfg.rank.max(0);
+
+    let mut w_s = Mat::zeros(dout, din);
+    let mut u: Vec<Vec<f32>> = Vec::new();
+    let mut v: Vec<Vec<f32>> = Vec::new();
+    let mut w_b = Mat::filled(dout, din, 1.0);
+    let mut kept = 0usize;
+    let mut frob_trace = Vec::with_capacity(cfg.iters);
+
+    for t in 0..cfg.iters.max(1) {
+        // --- W_B and W_L from the current sparse residual ------------
+        let y_bl = w.sub(&w_s);
+        w_b = y_bl.sign_pm1();
+        if rank > 0 {
+            let svd = svd_truncated(&y_bl.abs(), rank, cfg.svd_iters, cfg.seed ^ t as u64);
+            u.clear();
+            v.clear();
+            for k in 0..rank.min(svd.s.len()) {
+                let (uk, vk) = svd.sqrt_split(k);
+                u.push(uk);
+                v.push(vk);
+            }
+        }
+
+        // --- W_S from the low-rank-binary residual --------------------
+        let lb = low_rank_binary(&u, &v, &w_b);
+        let y_s = w.sub(&lb);
+        let s = wanda_scores(&y_s, stats);
+        let mask = match cfg.structure {
+            Structure::Unstructured => group_topk_mask(&s, keep, gr, gc),
+            Structure::SemiStructured(p) => semi_structured_mask(&s, keep, p, gr, gc),
+        };
+        w_s = y_s.hadamard(&mask);
+        kept = mask.count_nonzero();
+
+        // --- diagnostics ----------------------------------------------
+        let approx = w_s.add(&lb);
+        frob_trace.push(w.frob_dist(&approx));
+    }
+
+    Ok(Decomposition {
+        w_s,
+        u,
+        v,
+        w_b,
+        kept,
+        frob_trace,
+    })
+}
+
+/// `Σ_k u_k v_kᵀ ⊙ B` without materializing `W_L` separately.
+fn low_rank_binary(u: &[Vec<f32>], v: &[Vec<f32>], b: &Mat) -> Mat {
+    let (dout, din) = b.shape();
+    let mut m = Mat::zeros(dout, din);
+    for k in 0..u.len() {
+        let (uk, vk) = (&u[k], &v[k]);
+        for i in 0..dout {
+            let ui = uk[i];
+            if ui == 0.0 {
+                continue;
+            }
+            let brow = b.row(i);
+            let mrow = m.row_mut(i);
+            for j in 0..din {
+                mrow[j] += ui * vk[j] * brow[j];
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slab::config::GroupShape;
+    use crate::sparse::PATTERN_2_4;
+    use crate::util::rng::Pcg64;
+
+    fn setup(dout: usize, din: usize, seed: u64) -> (Mat, ActStats) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let w = Mat::randn(dout, din, 0.05, &mut rng);
+        let x = Mat::randn(64, din, 1.0, &mut rng);
+        (w, ActStats::from_activations(&x))
+    }
+
+    fn cfg50() -> SlabConfig {
+        SlabConfig {
+            cr: 0.5,
+            iters: 6,
+            svd_iters: 10,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn output_structure_invariants() {
+        let (w, stats) = setup(48, 96, 90);
+        let cfg = cfg50();
+        let d = decompose(&w, &stats, &cfg).unwrap();
+        // W_B strictly ±1.
+        assert!(d.w_b.data.iter().all(|&x| x == 1.0 || x == -1.0));
+        // Sparsity matches Eq. 10 exactly (per-row groups, floor).
+        let keep = cfg.keep_fraction(48, 96).unwrap();
+        let per_row = (keep * 96.0).floor() as usize;
+        assert_eq!(d.kept, per_row * 48);
+        assert_eq!(d.w_s.count_nonzero(), d.kept);
+        // Rank-1 factors present.
+        assert_eq!(d.u.len(), 1);
+        assert_eq!(d.u[0].len(), 48);
+        assert_eq!(d.v[0].len(), 96);
+    }
+
+    #[test]
+    fn rank1_of_abs_is_nonnegative() {
+        // Prop. 2: rank-1 tSVD of an elementwise non-negative matrix has
+        // a non-negative outer product (Perron–Frobenius).
+        let (w, stats) = setup(32, 64, 91);
+        let d = decompose(&w, &stats, &cfg50()).unwrap();
+        let wl = d.w_l();
+        let min = wl.data.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(min >= -1e-4, "W_L should be elementwise ≥ 0, min={min}");
+    }
+
+    #[test]
+    fn error_not_increasing_over_iterations() {
+        let (w, stats) = setup(40, 80, 92);
+        let cfg = SlabConfig { iters: 10, ..cfg50() };
+        let d = decompose(&w, &stats, &cfg).unwrap();
+        // Alternating optimization: allow tiny numerical wobble, but the
+        // trace must be essentially monotone non-increasing.
+        for t in 1..d.frob_trace.len() {
+            assert!(
+                d.frob_trace[t] <= d.frob_trace[t - 1] * 1.01 + 1e-6,
+                "iter {t}: {} > {}",
+                d.frob_trace[t],
+                d.frob_trace[t - 1]
+            );
+        }
+        assert!(d.frob_trace.last().unwrap() < &d.frob_trace[0]);
+    }
+
+    #[test]
+    fn beats_wanda_at_same_cr() {
+        // SLaB's reconstruction error must undercut plain Wanda pruning
+        // at the same CR (the whole point of the paper).
+        let (w, stats) = setup(48, 96, 93);
+        let cfg = cfg50();
+        let d = decompose(&w, &stats, &cfg).unwrap();
+        let slab_err = w.frob_dist(&d.reconstruct());
+        // Wanda at 50% sparsity = CR 50% for a pure sparse method.
+        let scores = wanda_scores(&w, &stats);
+        let mask = group_topk_mask(&scores, 0.5, 1, 96);
+        let wanda_err = w.frob_dist(&w.hadamard(&mask));
+        assert!(
+            slab_err < wanda_err,
+            "slab {slab_err} should beat wanda {wanda_err}"
+        );
+    }
+
+    #[test]
+    fn reconstruct_matches_components() {
+        let (w, stats) = setup(16, 32, 94);
+        let d = decompose(&w, &stats, &cfg50()).unwrap();
+        let manual = d.w_s.add(&d.w_l().hadamard(&d.w_b));
+        assert!(d.reconstruct().allclose(&manual, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn semi_structured_pattern_respected() {
+        let (w, stats) = setup(16, 64, 95);
+        let cfg = SlabConfig {
+            structure: Structure::SemiStructured(PATTERN_2_4),
+            ..cfg50()
+        };
+        let d = decompose(&w, &stats, &cfg).unwrap();
+        PATTERN_2_4.validate(&d.w_s).unwrap();
+    }
+
+    #[test]
+    fn rank0_reduces_to_wanda() {
+        // rank = 0 disables W_L; with sign⊙0 the reconstruction is just
+        // W_S, which should equal Wanda pruning of W at the SLaB keep
+        // fraction.
+        let (w, stats) = setup(24, 48, 96);
+        let cfg = SlabConfig { rank: 0, iters: 1, ..cfg50() };
+        let d = decompose(&w, &stats, &cfg).unwrap();
+        let keep = cfg.keep_fraction(24, 48).unwrap();
+        let mask = group_topk_mask(&wanda_scores(&w, &stats), keep, 1, 48);
+        assert!(d.reconstruct().allclose(&w.hadamard(&mask), 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn more_iterations_help() {
+        let (w, stats) = setup(32, 64, 97);
+        let err = |iters| {
+            let cfg = SlabConfig { iters, ..cfg50() };
+            let d = decompose(&w, &stats, &cfg).unwrap();
+            w.frob_dist(&d.reconstruct())
+        };
+        let e1 = err(1);
+        let e10 = err(10);
+        assert!(e10 <= e1 + 1e-5, "iters=10 ({e10}) vs iters=1 ({e1})");
+    }
+
+    #[test]
+    fn group_geometry_changes_selection() {
+        let (w, stats) = setup(32, 64, 98);
+        let d_row = decompose(&w, &stats, &cfg50()).unwrap();
+        let cfg_g = SlabConfig {
+            group: GroupShape { rows: 16, cols: 0 },
+            ..cfg50()
+        };
+        let d_big = decompose(&w, &stats, &cfg_g).unwrap();
+        assert_ne!(d_row.w_s, d_big.w_s);
+    }
+
+    #[test]
+    fn higher_rank_lowers_error() {
+        // Fig 3's premise: rank 1 ≫ rank 0, rank 4 ≥ rank 1 (diminishing).
+        let (w, stats) = setup(32, 64, 99);
+        let err = |rank| {
+            let cfg = SlabConfig { rank, iters: 4, ..cfg50() };
+            let d = decompose(&w, &stats, &cfg).unwrap();
+            w.frob_dist(&d.reconstruct())
+        };
+        let e0 = err(0);
+        let e1 = err(1);
+        let e4 = err(4);
+        assert!(e1 < e0, "rank1 {e1} < rank0 {e0}");
+        assert!(e4 <= e1 * 1.02, "rank4 {e4} ≤ rank1 {e1}");
+    }
+}

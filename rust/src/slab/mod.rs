@@ -1,0 +1,22 @@
+//! The SLaB decomposition — the paper's core contribution.
+//!
+//! * [`config`] — CR accounting (Eq. 9/10), hyperparameters.
+//! * [`scores`] — activation-aware (Wanda) scoring.
+//! * [`threshold`] — group-wise hard thresholding + N:M composition.
+//! * [`decompose`] — Algorithm 1 (alternating optimization).
+//! * [`layer`] — packed CSR + rank-1 + bitplane deployment format.
+//! * [`ablation`] — Table III component ablations.
+
+pub mod ablation;
+pub mod config;
+pub mod decompose;
+pub mod layer;
+pub mod scores;
+pub mod threshold;
+
+pub use ablation::{ablate, AblationOut, Variant};
+pub use config::{GroupShape, SlabConfig, Structure};
+pub use decompose::{decompose, Decomposition};
+pub use layer::SlabLayer;
+pub use scores::{wanda_scores, ActStats};
+pub use threshold::{group_topk_mask, semi_structured_mask};

@@ -1,0 +1,160 @@
+//! Activation-aware pruning scores (Wanda, Sun et al. 2023).
+//!
+//! The score of weight `Y_ij` is `S_ij = |Y_ij| · ||X_j||₂` where
+//! `||X_j||₂` is the L2 norm of input feature `j` over the calibration
+//! batch (paper Algorithm 1 line 3: `S_X = diag(√(XᵀX))`). The SLaB
+//! loop reuses the same statistic every iteration, so we compute
+//! `S_X` once per layer and keep it in [`ActStats`].
+
+use crate::tensor::Mat;
+
+/// Per-input-feature activation statistics for one linear layer.
+///
+/// `col_norms` feeds the Wanda/SLaB score; `gram` (optional, `XᵀX`)
+/// feeds SparseGPT's OBS Hessian. The Gram diagonal equals the squared
+/// column norms, so when `gram` is present the two views are
+/// consistent by construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActStats {
+    /// `||X_j||₂` for each input feature j (length Din).
+    pub col_norms: Vec<f32>,
+    /// Optional `XᵀX` (Din, Din) for Hessian-based methods.
+    pub gram: Option<Mat>,
+    /// Number of calibration rows folded in (N·L).
+    pub samples: usize,
+}
+
+impl ActStats {
+    /// From a single calibration activation matrix X (N·L, Din).
+    /// Norms only — cheap path for Wanda/SLaB.
+    pub fn from_activations(x: &Mat) -> ActStats {
+        ActStats {
+            col_norms: x.col_norms(),
+            gram: None,
+            samples: x.rows,
+        }
+    }
+
+    /// Norms + Gram matrix — needed by SparseGPT.
+    pub fn from_activations_with_gram(x: &Mat) -> ActStats {
+        ActStats {
+            col_norms: x.col_norms(),
+            gram: Some(crate::tensor::ops::gram(x)),
+            samples: x.rows,
+        }
+    }
+
+    /// Streaming accumulation: fold another batch in. Norms combine as
+    /// sqrt(a² + b²) elementwise, Grams add — exact, order-independent.
+    pub fn merge(&mut self, other: &ActStats) {
+        assert_eq!(self.col_norms.len(), other.col_norms.len());
+        for (a, b) in self.col_norms.iter_mut().zip(other.col_norms.iter()) {
+            *a = (*a * *a + *b * *b).sqrt();
+        }
+        match (&mut self.gram, &other.gram) {
+            (Some(g), Some(og)) => g.add_assign(og),
+            (None, None) => {}
+            _ => panic!("ActStats::merge: inconsistent gram presence"),
+        }
+        self.samples += other.samples;
+    }
+
+    /// Uniform statistics (all ones) — reduces Wanda scoring to plain
+    /// magnitude pruning; used by tests and the magnitude baseline.
+    pub fn uniform(din: usize) -> ActStats {
+        ActStats {
+            col_norms: vec![1.0; din],
+            gram: None,
+            samples: 0,
+        }
+    }
+
+    pub fn din(&self) -> usize {
+        self.col_norms.len()
+    }
+}
+
+/// `S = |Y| ⊙ S_X` (broadcast over rows): the Wanda score of every
+/// element of `y` (usually the residual `W − W_L ⊙ W_B`).
+pub fn wanda_scores(y: &Mat, stats: &ActStats) -> Mat {
+    assert_eq!(y.cols, stats.din(), "score dims: y cols {} vs stats {}", y.cols, stats.din());
+    let mut s = Mat::zeros(y.rows, y.cols);
+    for i in 0..y.rows {
+        let yrow = y.row(i);
+        let srow = s.row_mut(i);
+        for j in 0..y.cols {
+            srow[j] = yrow[j].abs() * stats.col_norms[j];
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn stats_match_manual_norms() {
+        let x = Mat::from_vec(2, 2, vec![3.0, 1.0, 4.0, 2.0]);
+        let st = ActStats::from_activations(&x);
+        assert!((st.col_norms[0] - 5.0).abs() < 1e-6);
+        assert!((st.col_norms[1] - 5.0f32.sqrt()).abs() < 1e-6);
+        assert_eq!(st.samples, 2);
+    }
+
+    #[test]
+    fn merge_equals_concat() {
+        let mut rng = Pcg64::seed_from_u64(70);
+        let a = Mat::randn(13, 6, 1.0, &mut rng);
+        let b = Mat::randn(9, 6, 1.0, &mut rng);
+        let whole = ActStats::from_activations(&Mat::vstack(&[&a, &b]));
+        let mut merged = ActStats::from_activations(&a);
+        merged.merge(&ActStats::from_activations(&b));
+        for j in 0..6 {
+            assert!((whole.col_norms[j] - merged.col_norms[j]).abs() < 1e-4);
+        }
+        assert_eq!(merged.samples, 22);
+    }
+
+    #[test]
+    fn gram_merge_equals_concat() {
+        let mut rng = Pcg64::seed_from_u64(72);
+        let a = Mat::randn(11, 5, 1.0, &mut rng);
+        let b = Mat::randn(7, 5, 1.0, &mut rng);
+        let whole = ActStats::from_activations_with_gram(&Mat::vstack(&[&a, &b]));
+        let mut merged = ActStats::from_activations_with_gram(&a);
+        merged.merge(&ActStats::from_activations_with_gram(&b));
+        assert!(merged
+            .gram
+            .as_ref()
+            .unwrap()
+            .allclose(whole.gram.as_ref().unwrap(), 1e-3, 1e-4));
+        // Gram diagonal == squared col norms.
+        let g = merged.gram.as_ref().unwrap();
+        for j in 0..5 {
+            assert!((g.at(j, j) - merged.col_norms[j].powi(2)).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn scores_scale_with_activation_norm() {
+        let y = Mat::filled(2, 2, 1.0);
+        let stats = ActStats {
+            col_norms: vec![2.0, 5.0],
+            gram: None,
+            samples: 1,
+        };
+        let s = wanda_scores(&y, &stats);
+        assert_eq!(s.at(0, 0), 2.0);
+        assert_eq!(s.at(1, 1), 5.0);
+    }
+
+    #[test]
+    fn scores_are_magnitude_when_uniform() {
+        let mut rng = Pcg64::seed_from_u64(71);
+        let y = Mat::randn(5, 7, 1.0, &mut rng);
+        let s = wanda_scores(&y, &ActStats::uniform(7));
+        assert_eq!(s, y.abs());
+    }
+}

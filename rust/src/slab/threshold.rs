@@ -1,0 +1,242 @@
+//! Group-wise hard thresholding (paper `HardThreshold` + §II-B2).
+//!
+//! Scores compete inside comparison groups of shape `(gr, gc)`; each
+//! group keeps its top `⌊keep_frac · |group|⌋` scorers. The default
+//! Wanda geometry `(1, Din)` keeps `⌊k/Dout⌋` per output row. Uses
+//! `select_nth_unstable` (O(n) per group) rather than a full sort —
+//! this is the pipeline's hottest native loop at decompose time.
+
+use crate::sparse::NmPattern;
+use crate::tensor::Mat;
+
+/// Keep-mask (1.0 = keep) with exactly `⌊keep_frac·group_size⌋` ones
+/// per full group. Ragged edge groups (when dims don't divide) keep
+/// the floor of the same fraction of their actual size.
+pub fn group_topk_mask(scores: &Mat, keep_frac: f64, gr: usize, gc: usize) -> Mat {
+    assert!((0.0..=1.0).contains(&keep_frac), "keep_frac {keep_frac}");
+    let (rows, cols) = scores.shape();
+    let gr = gr.clamp(1, rows);
+    let gc = gc.clamp(1, cols);
+    let mut mask = Mat::zeros(rows, cols);
+    // Scratch: (score, flat_offset_in_group) pairs.
+    let mut buf: Vec<(f32, u32)> = Vec::with_capacity(gr * gc);
+    let mut r0 = 0;
+    while r0 < rows {
+        let r1 = (r0 + gr).min(rows);
+        let mut c0 = 0;
+        while c0 < cols {
+            let c1 = (c0 + gc).min(cols);
+            let size = (r1 - r0) * (c1 - c0);
+            let keep = ((keep_frac * size as f64).floor() as usize).min(size);
+            if keep == size {
+                for i in r0..r1 {
+                    for j in c0..c1 {
+                        mask.set(i, j, 1.0);
+                    }
+                }
+            } else if keep > 0 {
+                buf.clear();
+                for i in r0..r1 {
+                    let row = scores.row(i);
+                    for j in c0..c1 {
+                        let off = ((i - r0) * (c1 - c0) + (j - c0)) as u32;
+                        buf.push((row[j], off));
+                    }
+                }
+                // Partition so the top-`keep` land in the head.
+                buf.select_nth_unstable_by(keep - 1, |a, b| {
+                    b.0.partial_cmp(&a.0)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.1.cmp(&b.1))
+                });
+                for &(_, off) in buf[..keep].iter() {
+                    let i = r0 + off as usize / (c1 - c0);
+                    let j = c0 + off as usize % (c1 - c0);
+                    mask.set(i, j, 1.0);
+                }
+            }
+            c0 = c1;
+        }
+        r0 = r1;
+    }
+    mask
+}
+
+/// The paper's semi-structured composition (§II-B2): apply the N:M
+/// pattern to the scores first, then group-wise top-k *within the
+/// N:M survivors* to reach the (lower) target keep fraction.
+pub fn semi_structured_mask(
+    scores: &Mat,
+    keep_frac: f64,
+    pattern: NmPattern,
+    gr: usize,
+    gc: usize,
+) -> Mat {
+    let nm = pattern.mask_from_scores(scores);
+    // Suppress scores outside the N:M mask so the group top-k can only
+    // pick N:M survivors; NEG_INFINITY guarantees exclusion even for
+    // all-negative score matrices (scores are ≥ 0 in practice).
+    let gated = scores.zip(&nm, |s, m| if m != 0.0 { s } else { f32::NEG_INFINITY });
+    let mask = group_topk_mask(&gated, keep_frac, gr, gc);
+    // Defensive intersection (keeps the invariant even when keep_frac
+    // exceeds the pattern density).
+    mask.hadamard(&nm)
+}
+
+/// Count of kept elements per full group that `group_topk_mask`
+/// guarantees — exposed for tests and CR verification.
+pub fn kept_per_group(keep_frac: f64, gr: usize, gc: usize) -> usize {
+    (keep_frac * (gr * gc) as f64).floor() as usize
+}
+
+/// Naive full-sort variant of [`group_topk_mask`] (per-row groups
+/// only). Kept as the ablation reference for the `select_nth_unstable`
+/// optimization — `bench_decompose` measures both; EXPERIMENTS.md §Perf
+/// records the delta. Results are identical (same tie-break order).
+pub fn group_topk_mask_sort(scores: &Mat, keep_frac: f64) -> Mat {
+    let (rows, cols) = scores.shape();
+    let keep = ((keep_frac * cols as f64).floor() as usize).min(cols);
+    let mut mask = Mat::zeros(rows, cols);
+    let mut idx: Vec<usize> = Vec::with_capacity(cols);
+    for i in 0..rows {
+        let row = scores.row(i);
+        idx.clear();
+        idx.extend(0..cols);
+        idx.sort_by(|&a, &b| {
+            row[b]
+                .partial_cmp(&row[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        for &j in idx.iter().take(keep) {
+            mask.set(i, j, 1.0);
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{PATTERN_2_4, PATTERN_4_8};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn keeps_exact_count_per_row_group() {
+        let mut rng = Pcg64::seed_from_u64(80);
+        let s = Mat::rand_uniform(8, 32, 0.0, 1.0, &mut rng);
+        let mask = group_topk_mask(&s, 0.25, 1, 32);
+        for i in 0..8 {
+            let kept = mask.row(i).iter().filter(|&&v| v != 0.0).count();
+            assert_eq!(kept, 8);
+        }
+    }
+
+    #[test]
+    fn keeps_highest_scorers() {
+        let s = Mat::from_vec(1, 6, vec![0.9, 0.1, 0.8, 0.2, 0.7, 0.3]);
+        let mask = group_topk_mask(&s, 0.5, 1, 6);
+        assert_eq!(mask.data, vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn column_groups() {
+        // Group (1, 4): two groups per row of 8 cols; keep 50% = 2 each.
+        let s = Mat::from_vec(1, 8, vec![9.0, 8.0, 1.0, 2.0, 1.0, 2.0, 9.0, 8.0]);
+        let mask = group_topk_mask(&s, 0.5, 1, 4);
+        assert_eq!(mask.data, vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn multirow_groups() {
+        // Group (2, 2) on a 2x2 matrix: one group, keep 25% = 1 element.
+        let s = Mat::from_vec(2, 2, vec![1.0, 5.0, 3.0, 2.0]);
+        let mask = group_topk_mask(&s, 0.25, 2, 2);
+        assert_eq!(mask.data, vec![0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn extremes() {
+        let s = Mat::filled(4, 4, 1.0);
+        assert_eq!(group_topk_mask(&s, 0.0, 1, 4).count_nonzero(), 0);
+        assert_eq!(group_topk_mask(&s, 1.0, 1, 4).count_nonzero(), 16);
+    }
+
+    #[test]
+    fn ties_are_broken_deterministically() {
+        let s = Mat::filled(1, 8, 0.5);
+        let m1 = group_topk_mask(&s, 0.5, 1, 8);
+        let m2 = group_topk_mask(&s, 0.5, 1, 8);
+        assert_eq!(m1, m2);
+        assert_eq!(m1.count_nonzero(), 4);
+    }
+
+    #[test]
+    fn semi_structured_respects_both_constraints() {
+        let mut rng = Pcg64::seed_from_u64(81);
+        let s = Mat::rand_uniform(16, 64, 0.0, 1.0, &mut rng);
+        for pat in [PATTERN_2_4, PATTERN_4_8] {
+            // keep 43.55% < pattern density 50%.
+            let keep = 0.4355;
+            let mask = semi_structured_mask(&s, keep, pat, 1, 64);
+            pat.validate(&mask).unwrap();
+            for i in 0..16 {
+                let kept = mask.row(i).iter().filter(|&&v| v != 0.0).count();
+                assert_eq!(kept, (keep * 64.0).floor() as usize, "{} row {i}", pat.name());
+            }
+        }
+    }
+
+    #[test]
+    fn prop_exact_keep_count_random() {
+        let mut rng = Pcg64::seed_from_u64(82);
+        for _ in 0..100 {
+            let rows = 1 + rng.below_usize(20);
+            let cols = 1 + rng.below_usize(60);
+            let gr = 1 + rng.below_usize(rows);
+            let gc = 1 + rng.below_usize(cols);
+            let frac = rng.next_f64();
+            let s = Mat::randn(rows, cols, 1.0, &mut rng);
+            let mask = group_topk_mask(&s, frac, gr, gc);
+            // Verify every full group keeps exactly floor(frac*size).
+            let mut r0 = 0;
+            while r0 < rows {
+                let r1 = (r0 + gr).min(rows);
+                let mut c0 = 0;
+                while c0 < cols {
+                    let c1 = (c0 + gc).min(cols);
+                    let size = (r1 - r0) * (c1 - c0);
+                    let expect = (frac * size as f64).floor() as usize;
+                    let got: usize = (r0..r1)
+                        .map(|i| (c0..c1).filter(|&j| mask.at(i, j) != 0.0).count())
+                        .sum();
+                    assert_eq!(got, expect, "group ({r0},{c0}) size {size} frac {frac}");
+                    c0 = c1;
+                }
+                r0 = r1;
+            }
+        }
+    }
+
+    #[test]
+    fn sort_variant_is_equivalent() {
+        let mut rng = Pcg64::seed_from_u64(84);
+        for _ in 0..20 {
+            let rows = 1 + rng.below_usize(12);
+            let cols = 1 + rng.below_usize(64);
+            let frac = rng.next_f64();
+            let s = Mat::randn(rows, cols, 1.0, &mut rng);
+            let fast = group_topk_mask(&s, frac, 1, cols);
+            let slow = group_topk_mask_sort(&s, frac);
+            assert_eq!(fast, slow, "rows={rows} cols={cols} frac={frac}");
+        }
+    }
+
+    #[test]
+    fn mask_values_are_binary() {
+        let mut rng = Pcg64::seed_from_u64(83);
+        let s = Mat::randn(10, 10, 1.0, &mut rng);
+        let mask = group_topk_mask(&s, 0.3, 2, 5);
+        assert!(mask.data.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+}

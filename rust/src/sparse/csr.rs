@@ -1,0 +1,232 @@
+//! Compressed Sparse Row storage for `W_S`.
+//!
+//! The sparse component of the SLaB decomposition is stored as CSR:
+//! `row_ptr` (rows+1), `col_idx` (nnz), `vals` (nnz). This is the
+//! deploy-time format — the compression pipeline emits dense masks,
+//! packs them here, and the serving path multiplies out of CSR
+//! directly (`spmv_t` / `spmm_bt`).
+
+use crate::tensor::Mat;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Pack a dense matrix: every non-zero entry is kept.
+    pub fn from_dense(m: &Mat) -> Csr {
+        let mut row_ptr = Vec::with_capacity(m.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0u32);
+        for i in 0..m.rows {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    col_idx.push(j as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Csr {
+            rows: m.rows,
+            cols: m.cols,
+            row_ptr,
+            col_idx,
+            vals,
+        }
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (s, e) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+            for k in s..e {
+                m.set(i, self.col_idx[k] as usize, self.vals[k]);
+            }
+        }
+        m
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Storage density: nnz / numel.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Bytes to store this matrix (vals f32 + idx u32 + row_ptr u32);
+    /// used by the compression-ratio accounting and benchmarks.
+    pub fn nbytes(&self) -> usize {
+        self.vals.len() * 4 + self.col_idx.len() * 4 + self.row_ptr.len() * 4
+    }
+
+    /// y = W·x where W is this CSR matrix, x dense: the decode-path
+    /// primitive (`W_S · activation`).
+    pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for i in 0..self.rows {
+            let (s, e) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+            let mut acc = 0.0f32;
+            for k in s..e {
+                acc += self.vals[k] * x[self.col_idx[k] as usize];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// Y = X·Wᵀ for activations X (B, Din) against this (Dout, Din)
+    /// matrix — the layout every linear layer uses. Row-parallel over
+    /// the batch; each output element is one sparse dot product.
+    pub fn spmm_bt(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.cols, "spmm_bt: x cols {} vs W cols {}", x.cols, self.cols);
+        let mut y = Mat::zeros(x.rows, self.rows);
+        for b in 0..x.rows {
+            let xrow = x.row(b);
+            let yrow = y.row_mut(b);
+            for i in 0..self.rows {
+                let (s, e) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+                let mut acc = 0.0f32;
+                for k in s..e {
+                    acc += self.vals[k] * xrow[self.col_idx[k] as usize];
+                }
+                yrow[i] = acc;
+            }
+        }
+        y
+    }
+
+    /// Structural validation (sorted unique col indices per row,
+    /// monotone row_ptr, bounds). Used by property tests and after
+    /// deserialization.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.rows + 1 {
+            return Err("row_ptr length".into());
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() as usize != self.vals.len() {
+            return Err("row_ptr endpoints".into());
+        }
+        if self.col_idx.len() != self.vals.len() {
+            return Err("idx/val length mismatch".into());
+        }
+        for i in 0..self.rows {
+            let (s, e) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+            if s > e {
+                return Err(format!("row_ptr not monotone at {i}"));
+            }
+            for k in s..e {
+                if self.col_idx[k] as usize >= self.cols {
+                    return Err(format!("col index OOB at row {i}"));
+                }
+                if k > s && self.col_idx[k] <= self.col_idx[k - 1] {
+                    return Err(format!("col indices not strictly sorted in row {i}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{matmul_bt, matvec};
+    use crate::util::prop;
+    use crate::util::rng::Pcg64;
+
+    fn sparse_random(rows: usize, cols: usize, density: f64, rng: &mut Pcg64) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| {
+            if rng.bernoulli(density) {
+                rng.normal_f32(0.0, 1.0)
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Pcg64::seed_from_u64(40);
+        let m = sparse_random(17, 23, 0.3, &mut rng);
+        let csr = Csr::from_dense(&m);
+        csr.validate().unwrap();
+        assert_eq!(csr.to_dense(), m);
+        assert_eq!(csr.nnz(), m.count_nonzero());
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let mut rng = Pcg64::seed_from_u64(41);
+        let m = sparse_random(12, 9, 0.4, &mut rng);
+        let csr = Csr::from_dense(&m);
+        let x: Vec<f32> = (0..9).map(|i| (i as f32).sin()).collect();
+        let y1 = csr.spmv(&x);
+        let y2 = matvec(&m, &x);
+        for i in 0..12 {
+            assert!((y1[i] - y2[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn spmm_bt_matches_dense() {
+        let mut rng = Pcg64::seed_from_u64(42);
+        let w = sparse_random(10, 16, 0.25, &mut rng);
+        let x = Mat::randn(5, 16, 1.0, &mut rng);
+        let yd = matmul_bt(&x, &w);
+        let ys = Csr::from_dense(&w).spmm_bt(&x);
+        assert!(ys.allclose(&yd, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn empty_and_full_extremes() {
+        let z = Mat::zeros(4, 4);
+        let csr = Csr::from_dense(&z);
+        assert_eq!(csr.nnz(), 0);
+        csr.validate().unwrap();
+        let f = Mat::filled(4, 4, 2.0);
+        let csr = Csr::from_dense(&f);
+        assert_eq!(csr.nnz(), 16);
+        assert_eq!(csr.to_dense(), f);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_matrices() {
+        prop::check(
+            "csr-roundtrip",
+            50,
+            |rng| {
+                let (r, c) = prop::gens::dims(rng, 1, 24);
+                let m = sparse_random(r, c, 0.3, rng);
+                m.data.clone().into_iter().collect::<Vec<f32>>()
+            },
+            |_| Ok(()),
+        );
+        // The real property: parametrized over shapes directly.
+        let mut rng = Pcg64::seed_from_u64(43);
+        for _ in 0..50 {
+            let r = 1 + rng.below_usize(24);
+            let c = 1 + rng.below_usize(24);
+            let m = sparse_random(r, c, 0.3, &mut rng);
+            let csr = Csr::from_dense(&m);
+            csr.validate().unwrap();
+            assert_eq!(csr.to_dense(), m);
+        }
+    }
+
+    #[test]
+    fn nbytes_accounting() {
+        let mut rng = Pcg64::seed_from_u64(44);
+        let m = sparse_random(8, 8, 0.5, &mut rng);
+        let csr = Csr::from_dense(&m);
+        assert_eq!(csr.nbytes(), csr.nnz() * 8 + (8 + 1) * 4);
+    }
+}

@@ -1,0 +1,8 @@
+//! Sparse-matrix substrate: CSR storage for `W_S` and semi-structured
+//! N:M (2:4, 4:8) patterns with packed hardware-style storage.
+
+pub mod csr;
+pub mod semi;
+
+pub use csr::Csr;
+pub use semi::{NmPacked, NmPattern, PATTERN_2_4, PATTERN_4_8};

@@ -1,0 +1,273 @@
+//! Semi-structured N:M sparsity (2:4, 4:8) — Mishra et al. 2021.
+//!
+//! An N:M pattern keeps at most N non-zeros in every aligned group of
+//! M consecutive elements along the input dimension. The paper's §II-B2
+//! applies N:M *first*, then group-wise pruning on top to reach the
+//! target sparsity. This module provides mask construction from a
+//! score matrix, validation, and the packed "every group carries
+//! exactly N slots" storage that real N:M hardware uses.
+
+use crate::tensor::Mat;
+
+/// An N:M sparsity pattern along rows (the Din axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NmPattern {
+    pub n: usize,
+    pub m: usize,
+}
+
+pub const PATTERN_2_4: NmPattern = NmPattern { n: 2, m: 4 };
+pub const PATTERN_4_8: NmPattern = NmPattern { n: 4, m: 8 };
+
+impl NmPattern {
+    pub fn name(&self) -> String {
+        format!("{}:{}", self.n, self.m)
+    }
+
+    /// Max fraction of non-zeros the pattern allows.
+    pub fn density(&self) -> f64 {
+        self.n as f64 / self.m as f64
+    }
+
+    /// Build the keep-mask that maximizes total score per group:
+    /// within every aligned window of `m` columns of each row, keep
+    /// the `n` highest-scoring elements. Trailing ragged groups (cols
+    /// not divisible by m) keep ⌈n·len/m⌉ elements.
+    pub fn mask_from_scores(&self, scores: &Mat) -> Mat {
+        let mut mask = Mat::zeros(scores.rows, scores.cols);
+        let mut idx: Vec<usize> = Vec::with_capacity(self.m);
+        for i in 0..scores.rows {
+            let row = scores.row(i);
+            let mut j = 0;
+            while j < scores.cols {
+                let end = (j + self.m).min(scores.cols);
+                let len = end - j;
+                let keep = if len == self.m {
+                    self.n
+                } else {
+                    (self.n * len).div_ceil(self.m)
+                };
+                idx.clear();
+                idx.extend(j..end);
+                idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+                for &k in idx.iter().take(keep) {
+                    mask.set(i, k, 1.0);
+                }
+                j = end;
+            }
+        }
+        mask
+    }
+
+    /// Check a dense matrix obeys the pattern (each aligned group of m
+    /// has ≤ n non-zeros).
+    pub fn validate(&self, m: &Mat) -> Result<(), String> {
+        for i in 0..m.rows {
+            let row = m.row(i);
+            let mut j = 0;
+            while j < m.cols {
+                let end = (j + self.m).min(m.cols);
+                let nnz = row[j..end].iter().filter(|&&v| v != 0.0).count();
+                let cap = if end - j == self.m {
+                    self.n
+                } else {
+                    (self.n * (end - j)).div_ceil(self.m)
+                };
+                if nnz > cap {
+                    return Err(format!(
+                        "row {i} group at col {j}: {nnz} nnz > {cap} allowed ({})",
+                        self.name()
+                    ));
+                }
+                j = end;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Packed N:M storage: for every aligned group, exactly `n` value
+/// slots + `n` intra-group indices (u8). Mirrors the metadata layout
+/// of sparse tensor cores; used for size accounting and the packed
+/// matmul in benches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NmPacked {
+    pub pattern: NmPattern,
+    pub rows: usize,
+    pub cols: usize,
+    /// (rows × groups_per_row × n) values; zero-padded when a group has
+    /// fewer than n non-zeros.
+    pub vals: Vec<f32>,
+    /// Matching intra-group column offsets (0..m).
+    pub offs: Vec<u8>,
+}
+
+impl NmPacked {
+    /// Pack a dense matrix that already satisfies the pattern.
+    pub fn pack(pattern: NmPattern, m: &Mat) -> Result<NmPacked, String> {
+        pattern.validate(m)?;
+        if m.cols % pattern.m != 0 {
+            return Err(format!(
+                "cols {} not divisible by m={} — pad before packing",
+                m.cols, pattern.m
+            ));
+        }
+        let groups = m.cols / pattern.m;
+        let mut vals = Vec::with_capacity(m.rows * groups * pattern.n);
+        let mut offs = Vec::with_capacity(vals.capacity());
+        for i in 0..m.rows {
+            let row = m.row(i);
+            for g in 0..groups {
+                let base = g * pattern.m;
+                let mut filled = 0;
+                for o in 0..pattern.m {
+                    let v = row[base + o];
+                    if v != 0.0 {
+                        vals.push(v);
+                        offs.push(o as u8);
+                        filled += 1;
+                    }
+                }
+                while filled < pattern.n {
+                    vals.push(0.0);
+                    offs.push(0);
+                    filled += 1;
+                }
+            }
+        }
+        Ok(NmPacked {
+            pattern,
+            rows: m.rows,
+            cols: m.cols,
+            vals,
+            offs,
+        })
+    }
+
+    pub fn unpack(&self) -> Mat {
+        let groups = self.cols / self.pattern.m;
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for g in 0..groups {
+                let slot = (i * groups + g) * self.pattern.n;
+                for k in 0..self.pattern.n {
+                    let v = self.vals[slot + k];
+                    if v != 0.0 {
+                        let col = g * self.pattern.m + self.offs[slot + k] as usize;
+                        m.set(i, col, v);
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Storage bytes: f32 vals + 2-bit (2:4) / 3-bit (4:8) metadata —
+    /// we charge ceil(log2 m) bits per kept element like the hardware
+    /// format, rounded up to whole bytes at the matrix level.
+    pub fn nbytes(&self) -> usize {
+        let meta_bits = (self.pattern.m as f64).log2().ceil() as usize;
+        self.vals.len() * 4 + (self.offs.len() * meta_bits).div_ceil(8)
+    }
+
+    /// Y = X·Wᵀ directly out of the packed representation.
+    pub fn spmm_bt(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.cols);
+        let groups = self.cols / self.pattern.m;
+        let mut y = Mat::zeros(x.rows, self.rows);
+        for b in 0..x.rows {
+            let xrow = x.row(b);
+            let yrow = y.row_mut(b);
+            for i in 0..self.rows {
+                let mut acc = 0.0f32;
+                for g in 0..groups {
+                    let slot = (i * groups + g) * self.pattern.n;
+                    let base = g * self.pattern.m;
+                    for k in 0..self.pattern.n {
+                        acc += self.vals[slot + k] * xrow[base + self.offs[slot + k] as usize];
+                    }
+                }
+                yrow[i] = acc;
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul_bt;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn mask_keeps_exactly_n_per_group() {
+        let mut rng = Pcg64::seed_from_u64(50);
+        let scores = Mat::rand_uniform(6, 16, 0.0, 1.0, &mut rng);
+        for pat in [PATTERN_2_4, PATTERN_4_8] {
+            let mask = pat.mask_from_scores(&scores);
+            pat.validate(&mask).unwrap();
+            // exactly n per full group since scores are all positive
+            for i in 0..6 {
+                for g in 0..(16 / pat.m) {
+                    let nnz = (0..pat.m)
+                        .filter(|&o| mask.at(i, g * pat.m + o) != 0.0)
+                        .count();
+                    assert_eq!(nnz, pat.n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mask_picks_top_scores() {
+        let scores = Mat::from_vec(1, 4, vec![0.1, 0.9, 0.5, 0.8]);
+        let mask = PATTERN_2_4.mask_from_scores(&scores);
+        assert_eq!(mask.data, vec![0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn validate_rejects_violations() {
+        let m = Mat::from_vec(1, 4, vec![1.0, 1.0, 1.0, 0.0]); // 3 nnz in group of 4
+        assert!(PATTERN_2_4.validate(&m).is_err());
+        let ok = Mat::from_vec(1, 4, vec![1.0, 0.0, 1.0, 0.0]);
+        assert!(PATTERN_2_4.validate(&ok).is_ok());
+    }
+
+    #[test]
+    fn ragged_tail_groups() {
+        let scores = Mat::filled(1, 6, 1.0); // one full group of 4 + tail of 2
+        let mask = PATTERN_2_4.mask_from_scores(&scores);
+        PATTERN_2_4.validate(&mask).unwrap();
+        let tail_nnz = (4..6).filter(|&j| mask.at(0, j) != 0.0).count();
+        assert_eq!(tail_nnz, 1); // ceil(2*2/4) = 1
+    }
+
+    #[test]
+    fn pack_roundtrip_and_matmul() {
+        let mut rng = Pcg64::seed_from_u64(51);
+        let scores = Mat::rand_uniform(8, 24, 0.0, 1.0, &mut rng);
+        let dense = Mat::randn(8, 24, 1.0, &mut rng);
+        let mask = PATTERN_2_4.mask_from_scores(&scores);
+        let w = dense.hadamard(&mask);
+        let packed = NmPacked::pack(PATTERN_2_4, &w).unwrap();
+        assert_eq!(packed.unpack(), w);
+        let x = Mat::randn(3, 24, 1.0, &mut rng);
+        let y1 = packed.spmm_bt(&x);
+        let y2 = matmul_bt(&x, &w);
+        assert!(y1.allclose(&y2, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn packed_size_is_half_plus_metadata() {
+        let mut rng = Pcg64::seed_from_u64(52);
+        let scores = Mat::rand_uniform(16, 64, 0.0, 1.0, &mut rng);
+        let dense = Mat::randn(16, 64, 1.0, &mut rng);
+        let w = dense.hadamard(&PATTERN_2_4.mask_from_scores(&scores));
+        let packed = NmPacked::pack(PATTERN_2_4, &w).unwrap();
+        let dense_bytes = 16 * 64 * 4;
+        // 2:4: half the values + 2 bits per kept value.
+        let expect = dense_bytes / 2 + (16 * 64 / 2 * 2) / 8;
+        assert_eq!(packed.nbytes(), expect);
+    }
+}

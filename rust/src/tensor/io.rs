@@ -1,0 +1,306 @@
+//! Binary tensor checkpoint format (`.slabckpt`).
+//!
+//! No serde offline, so checkpoints use a simple self-describing
+//! little-endian container:
+//!
+//! ```text
+//! magic   8  b"SLABCKP1"
+//! count   u32
+//! repeat count times:
+//!   name_len u32, name bytes (utf-8)
+//!   ndim u32, dims u64 × ndim
+//!   dtype u8 (0 = f32, 1 = i32, 2 = u8)
+//!   payload (numel × dtype size, little-endian)
+//! crc32? no — integrity via length checks + magic; checkpoints are
+//! produced and consumed by this binary only.
+//! ```
+//!
+//! Entries preserve insertion order (the artifact manifest's parameter
+//! order) — ordering is load-bearing for the PJRT call ABI.
+
+use super::mat::Mat;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SLABCKP1";
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+impl TensorData {
+    pub fn numel(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::U8(v) => v.len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            TensorData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            TensorData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(&self) -> Option<&[u8]> {
+        match self {
+            TensorData::U8(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A named tensor entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Entry {
+    pub fn from_mat(name: &str, m: &Mat) -> Entry {
+        Entry {
+            name: name.to_string(),
+            dims: vec![m.rows, m.cols],
+            data: TensorData::F32(m.data.clone()),
+        }
+    }
+
+    pub fn f32(name: &str, dims: Vec<usize>, data: Vec<f32>) -> Entry {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Entry {
+            name: name.to_string(),
+            dims,
+            data: TensorData::F32(data),
+        }
+    }
+
+    pub fn to_mat(&self) -> Option<Mat> {
+        if self.dims.len() != 2 {
+            return None;
+        }
+        self.data
+            .as_f32()
+            .map(|d| Mat::from_vec(self.dims[0], self.dims[1], d.to_vec()))
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// An ordered collection of named tensors.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Checkpoint {
+    pub entries: Vec<Entry>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Checkpoint {
+        Checkpoint::default()
+    }
+
+    pub fn push(&mut self, e: Entry) {
+        self.entries.push(e);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        for e in &self.entries {
+            let name = e.name.as_bytes();
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name)?;
+            w.write_all(&(e.dims.len() as u32).to_le_bytes())?;
+            for &d in &e.dims {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            match &e.data {
+                TensorData::F32(v) => {
+                    w.write_all(&[0u8])?;
+                    for &x in v {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                TensorData::I32(v) => {
+                    w.write_all(&[1u8])?;
+                    for &x in v {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                TensorData::U8(v) => {
+                    w.write_all(&[2u8])?;
+                    w.write_all(v)?;
+                }
+            }
+        }
+        w.flush()
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Checkpoint> {
+        let mut r = BufReader::new(File::open(path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bad checkpoint magic in {}", path.display()),
+            ));
+        }
+        let count = read_u32(&mut r)? as usize;
+        let mut entries = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = read_u32(&mut r)? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name)
+                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+            let ndim = read_u32(&mut r)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u64(&mut r)? as usize);
+            }
+            let numel: usize = dims.iter().product();
+            let mut dtype = [0u8; 1];
+            r.read_exact(&mut dtype)?;
+            let data = match dtype[0] {
+                0 => {
+                    let mut buf = vec![0u8; numel * 4];
+                    r.read_exact(&mut buf)?;
+                    TensorData::F32(
+                        buf.chunks_exact(4)
+                            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect(),
+                    )
+                }
+                1 => {
+                    let mut buf = vec![0u8; numel * 4];
+                    r.read_exact(&mut buf)?;
+                    TensorData::I32(
+                        buf.chunks_exact(4)
+                            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect(),
+                    )
+                }
+                2 => {
+                    let mut buf = vec![0u8; numel];
+                    r.read_exact(&mut buf)?;
+                    TensorData::U8(buf)
+                }
+                d => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!("unknown dtype tag {d}"),
+                    ))
+                }
+            };
+            entries.push(Entry { name, dims, data });
+        }
+        Ok(Checkpoint { entries })
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("slab-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_mixed_dtypes() {
+        let mut rng = Pcg64::seed_from_u64(30);
+        let m = Mat::randn(7, 5, 1.0, &mut rng);
+        let mut ck = Checkpoint::new();
+        ck.push(Entry::from_mat("w", &m));
+        ck.push(Entry {
+            name: "ids".into(),
+            dims: vec![3],
+            data: TensorData::I32(vec![-1, 0, 7]),
+        });
+        ck.push(Entry {
+            name: "bits".into(),
+            dims: vec![4],
+            data: TensorData::U8(vec![0xde, 0xad, 0xbe, 0xef]),
+        });
+        let path = tmpfile("roundtrip.slabckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.get("w").unwrap().to_mat().unwrap(), m);
+    }
+
+    #[test]
+    fn preserves_order() {
+        let mut ck = Checkpoint::new();
+        for name in ["z", "a", "m"] {
+            ck.push(Entry::f32(name, vec![1], vec![1.0]));
+        }
+        let path = tmpfile("order.slabckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        let names: Vec<&str> = back.entries.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["z", "a", "m"]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("bad.slabckpt");
+        std::fs::write(&path, b"NOTMAGIC____").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn empty_checkpoint_roundtrips() {
+        let ck = Checkpoint::new();
+        let path = tmpfile("empty.slabckpt");
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().len(), 0);
+    }
+}

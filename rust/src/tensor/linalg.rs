@@ -1,0 +1,362 @@
+//! Dense linear algebra: Cholesky factorization + triangular solves
+//! (SparseGPT's OBS updates need `H⁻¹` via Cholesky), and truncated
+//! SVD via block power iteration (SLaB's rank-1/rank-r low-rank term,
+//! Fig 1/Fig 3 sweeps).
+//!
+//! Everything accumulates in f64 internally; matrices stay f32 at the
+//! interface to match the rest of the stack.
+
+use super::mat::Mat;
+use super::ops::{matmul_bt, matvec, matvec_t, norm2};
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, thiserror::Error)]
+pub enum LinalgError {
+    #[error("matrix not positive definite at pivot {0} (value {1})")]
+    NotPositiveDefinite(usize, f64),
+    #[error("dimension mismatch: {0}")]
+    Dim(String),
+}
+
+/// Lower-triangular Cholesky factor L with A = L·Lᵀ.
+pub fn cholesky(a: &Mat) -> Result<Mat, LinalgError> {
+    if a.rows != a.cols {
+        return Err(LinalgError::Dim(format!("{}x{} not square", a.rows, a.cols)));
+    }
+    let n = a.rows;
+    // f64 working copy.
+    let mut l = vec![0.0f64; n * n];
+    for j in 0..n {
+        // Diagonal.
+        let mut d = a.at(j, j) as f64;
+        for k in 0..j {
+            d -= l[j * n + k] * l[j * n + k];
+        }
+        if d <= 0.0 {
+            return Err(LinalgError::NotPositiveDefinite(j, d));
+        }
+        let dj = d.sqrt();
+        l[j * n + j] = dj;
+        // Column below diagonal.
+        for i in (j + 1)..n {
+            let mut s = a.at(i, j) as f64;
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            l[i * n + j] = s / dj;
+        }
+    }
+    Ok(Mat::from_vec(n, n, l.into_iter().map(|v| v as f32).collect()))
+}
+
+/// Solve L·y = b for lower-triangular L.
+pub fn solve_lower(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        let row = l.row(i);
+        for k in 0..i {
+            s -= row[k] as f64 * y[k];
+        }
+        y[i] = s / row[i] as f64;
+    }
+    y.into_iter().map(|v| v as f32).collect()
+}
+
+/// Solve Lᵀ·x = y for lower-triangular L.
+pub fn solve_lower_t(l: &Mat, y: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = y[i] as f64;
+        for k in (i + 1)..n {
+            s -= l.at(k, i) as f64 * x[k];
+        }
+        x[i] = s / l.at(i, i) as f64;
+    }
+    x.into_iter().map(|v| v as f32).collect()
+}
+
+/// Full inverse via Cholesky: A⁻¹ for SPD A.
+pub fn spd_inverse(a: &Mat) -> Result<Mat, LinalgError> {
+    let n = a.rows;
+    let l = cholesky(a)?;
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0f32; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_t(&l, &y);
+        for i in 0..n {
+            inv.set(i, j, x[i]);
+        }
+        e[j] = 0.0;
+    }
+    Ok(inv)
+}
+
+/// Upper-triangular Cholesky of the *inverse*: SparseGPT works with
+/// `Hinv = (XᵀX + λI)⁻¹` and consumes `chol(Hinv)ᵀ` (upper). Returns U
+/// with Hinv = Uᵀ·U... we return `chol(Hinv)` transposed, i.e. the
+/// upper factor whose diagonal SparseGPT's pruning metric divides by.
+pub fn cholesky_inverse_upper(h: &Mat) -> Result<Mat, LinalgError> {
+    let hinv = spd_inverse(h)?;
+    let l = cholesky(&hinv)?;
+    Ok(l.transpose())
+}
+
+/// Result of a truncated SVD: `a ≈ U · diag(s) · Vᵀ`.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    /// (rows, r) left singular vectors (columns orthonormal).
+    pub u: Mat,
+    /// Singular values, descending.
+    pub s: Vec<f32>,
+    /// (cols, r) right singular vectors (columns orthonormal).
+    pub v: Mat,
+}
+
+impl Svd {
+    /// Reconstruct U·diag(s)·Vᵀ.
+    pub fn reconstruct(&self) -> Mat {
+        let r = self.s.len();
+        let mut us = Mat::zeros(self.u.rows, r);
+        for i in 0..self.u.rows {
+            for k in 0..r {
+                us.set(i, k, self.u.at(i, k) * self.s[k]);
+            }
+        }
+        matmul_bt(&us, &self.v)
+    }
+
+    /// The paper's √σ-split factors: `U' = u√σ`, `V' = v√σ` so that
+    /// W_L = U'·V'ᵀ (rank-1 case returns the two vectors).
+    pub fn sqrt_split(&self, k: usize) -> (Vec<f32>, Vec<f32>) {
+        assert!(k < self.s.len());
+        let sq = self.s[k].max(0.0).sqrt();
+        let u: Vec<f32> = (0..self.u.rows).map(|i| self.u.at(i, k) * sq).collect();
+        let v: Vec<f32> = (0..self.v.rows).map(|j| self.v.at(j, k) * sq).collect();
+        (u, v)
+    }
+}
+
+/// Rank-1 truncated SVD by power iteration on AᵀA implicit products.
+/// Deterministic given the seed. Converges fast for the |W − W_S|
+/// matrices SLaB feeds it (large spectral gap: they are near
+/// rank-1-positive by construction, cf. Prop. 2).
+pub fn svd_rank1(a: &Mat, iters: usize, seed: u64) -> Svd {
+    svd_truncated(a, 1, iters, seed)
+}
+
+/// Rank-r truncated SVD via block power iteration (subspace iteration
+/// with Gram–Schmidt re-orthonormalization each step).
+pub fn svd_truncated(a: &Mat, r: usize, iters: usize, seed: u64) -> Svd {
+    let (m, n) = a.shape();
+    let r = r.min(m.min(n));
+    let mut rng = Pcg64::seed_from_u64(seed ^ SVD_SEED_SALT);
+    // V block: (n, r) random init, orthonormalized.
+    let mut v: Vec<Vec<f32>> = (0..r)
+        .map(|_| {
+            let mut col = vec![0.0f32; n];
+            rng.fill_normal(&mut col, 1.0);
+            col
+        })
+        .collect();
+    gram_schmidt(&mut v);
+    let mut u: Vec<Vec<f32>> = vec![vec![0.0f32; m]; r];
+    let mut sigma = vec![0.0f32; r];
+    for _ in 0..iters.max(1) {
+        // U = A·V, orthonormalize.
+        for k in 0..r {
+            u[k] = matvec(a, &v[k]);
+        }
+        gram_schmidt(&mut u);
+        // V = Aᵀ·U; sigma from the norms before normalization.
+        for k in 0..r {
+            v[k] = matvec_t(a, &u[k]);
+        }
+        for (k, col) in v.iter().enumerate() {
+            sigma[k] = norm2(col) as f32;
+        }
+        gram_schmidt(&mut v);
+    }
+    // Order by sigma descending (block iteration usually yields this
+    // already; enforce it).
+    let mut order: Vec<usize> = (0..r).collect();
+    order.sort_by(|&i, &j| sigma[j].partial_cmp(&sigma[i]).unwrap());
+    let mut um = Mat::zeros(m, r);
+    let mut vm = Mat::zeros(n, r);
+    let mut s = vec![0.0f32; r];
+    for (slot, &k) in order.iter().enumerate() {
+        s[slot] = sigma[k];
+        for i in 0..m {
+            um.set(i, slot, u[k][i]);
+        }
+        for j in 0..n {
+            vm.set(j, slot, v[k][j]);
+        }
+    }
+    // Fix signs so u·A·v ≥ 0 per component (canonical form).
+    for k in 0..r {
+        let av = matvec(a, &vm.col(k));
+        let d: f64 = av
+            .iter()
+            .zip((0..m).map(|i| um.at(i, k)))
+            .map(|(&x, y)| x as f64 * y as f64)
+            .sum();
+        if d < 0.0 {
+            for i in 0..m {
+                *um.at_mut(i, k) *= -1.0;
+            }
+            s[k] = -s[k];
+        }
+        s[k] = s[k].abs();
+    }
+    Svd { u: um, s, v: vm }
+}
+
+fn gram_schmidt(cols: &mut [Vec<f32>]) {
+    for k in 0..cols.len() {
+        for prev in 0..k {
+            let d: f64 = cols[k]
+                .iter()
+                .zip(cols[prev].iter())
+                .map(|(&a, &b)| a as f64 * b as f64)
+                .sum();
+            let (head, tail) = cols.split_at_mut(k);
+            for (x, &p) in tail[0].iter_mut().zip(head[prev].iter()) {
+                *x -= (d as f32) * p;
+            }
+        }
+        let nrm = norm2(&cols[k]) as f32;
+        if nrm > 1e-20 {
+            for x in cols[k].iter_mut() {
+                *x /= nrm;
+            }
+        }
+    }
+}
+
+/// Seed salt so SVD streams never collide with other consumers of a seed.
+const SVD_SEED_SALT: u64 = 0x51ab_5fd0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul;
+
+    fn random_spd(n: usize, rng: &mut Pcg64) -> Mat {
+        let x = Mat::randn(n * 2, n, 1.0, rng);
+        let mut h = crate::tensor::ops::gram(&x);
+        for i in 0..n {
+            *h.at_mut(i, i) += 0.5;
+        }
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg64::seed_from_u64(20);
+        let a = random_spd(12, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let rec = matmul(&l, &l.transpose());
+        assert!(rec.allclose(&a, 1e-2, 1e-3));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        let a = random_spd(10, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f32> = (0..10).map(|i| (i as f32).cos()).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_t(&l, &y);
+        // L·Lᵀ·x should equal b.
+        let ax = matvec(&a, &x);
+        for i in 0..10 {
+            assert!((ax[i] - b[i]).abs() < 1e-3, "i={i}: {} vs {}", ax[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let mut rng = Pcg64::seed_from_u64(22);
+        let a = random_spd(8, &mut rng);
+        let inv = spd_inverse(&a).unwrap();
+        let prod = matmul(&a, &inv);
+        assert!(prod.allclose(&Mat::eye(8), 5e-2, 1e-3));
+    }
+
+    #[test]
+    fn rank1_svd_exact_on_rank1_matrix() {
+        let u = vec![1.0, -2.0, 3.0];
+        let v = vec![0.5, 1.5, -1.0, 2.0];
+        let a = Mat::outer(&u, &v);
+        let svd = svd_rank1(&a, 30, 1);
+        let rec = svd.reconstruct();
+        assert!(rec.allclose(&a, 1e-4, 1e-4));
+        // sigma = |u|·|v|
+        let expect = (norm2(&u) * norm2(&v)) as f32;
+        assert!((svd.s[0] - expect).abs() < 1e-3);
+    }
+
+    #[test]
+    fn truncated_svd_captures_dominant_subspace() {
+        let mut rng = Pcg64::seed_from_u64(23);
+        // Construct a matrix with known decaying spectrum.
+        let m = 20;
+        let n = 16;
+        let mut a = Mat::zeros(m, n);
+        for k in 0..4 {
+            let mut u = vec![0.0f32; m];
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal(&mut u, 1.0);
+            rng.fill_normal(&mut v, 1.0);
+            let sigma = 10.0 / (k as f32 + 1.0).powi(2);
+            let uo = Mat::outer(&u, &v).scale(sigma / (norm2(&u) * norm2(&v)) as f32);
+            a.add_assign(&uo);
+        }
+        let svd = svd_truncated(&a, 4, 60, 7);
+        let rec = svd.reconstruct();
+        // Rank-4 reconstruction should capture essentially everything.
+        assert!(rec.frob_dist(&a) / a.frob_norm() < 0.05);
+        // Singular values descending.
+        for k in 1..svd.s.len() {
+            assert!(svd.s[k - 1] >= svd.s[k] - 1e-4);
+        }
+    }
+
+    #[test]
+    fn svd_orthonormal_columns() {
+        let mut rng = Pcg64::seed_from_u64(24);
+        let a = Mat::randn(15, 11, 1.0, &mut rng);
+        let svd = svd_truncated(&a, 3, 50, 9);
+        for i in 0..3 {
+            for j in 0..3 {
+                let d: f32 = (0..15).map(|r| svd.u.at(r, i) * svd.u.at(r, j)).sum();
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((d - expect).abs() < 1e-3, "u col {i}·{j} = {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn sqrt_split_reconstructs_rank1() {
+        let u = vec![2.0, 1.0];
+        let v = vec![1.0, 3.0];
+        let a = Mat::outer(&u, &v);
+        let svd = svd_rank1(&a, 30, 3);
+        let (su, sv) = svd.sqrt_split(0);
+        let rec = Mat::outer(&su, &sv);
+        assert!(rec.allclose(&a, 1e-3, 1e-3));
+    }
+}

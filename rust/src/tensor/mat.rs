@@ -1,0 +1,386 @@
+//! Dense row-major f32 matrix — the core numeric container.
+//!
+//! No ndarray/BLAS in the offline crate set, so this module carries the
+//! dense representation used everywhere: weights, activations,
+//! calibration batches. The layout is always row-major `(rows, cols)`;
+//! `Mat` is cheap to clone only when you mean it (no implicit views —
+//! explicitness beats accidental aliasing in a compression pipeline
+//! that mutates weights in place).
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    // ------------------------------------------------------------------
+    // Construction
+    // ------------------------------------------------------------------
+
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![v; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(
+            data.len(),
+            rows * cols,
+            "from_vec: {}x{} != data len {}",
+            rows,
+            cols,
+            data.len()
+        );
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn<F: FnMut(usize, usize) -> f32>(rows: usize, cols: usize, mut f: F) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// I.i.d. N(0, std).
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Pcg64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Pcg64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_uniform(&mut m.data, lo, hi);
+        m
+    }
+
+    // ------------------------------------------------------------------
+    // Access
+    // ------------------------------------------------------------------
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    // ------------------------------------------------------------------
+    // Elementwise / reductions
+    // ------------------------------------------------------------------
+
+    pub fn map<F: Fn(f32) -> f32>(&self, f: F) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn map_inplace<F: Fn(f32) -> f32>(&mut self, f: F) {
+        for v in self.data.iter_mut() {
+            *v = f(*v);
+        }
+    }
+
+    pub fn abs(&self) -> Mat {
+        self.map(f32::abs)
+    }
+
+    /// sign with sign(0) = +1, matching the paper's `sign` ("non-negative
+    /// numbers are denoted as 1 while negative numbers are denoted as 0",
+    /// i.e. ±1 after the {0,1}→{−1,+1} mapping).
+    pub fn sign_pm1(&self) -> Mat {
+        self.map(|x| if x >= 0.0 { 1.0 } else { -1.0 })
+    }
+
+    pub fn zip<F: Fn(f32, f32) -> f32>(&self, other: &Mat, f: F) -> Mat {
+        assert_eq!(self.shape(), other.shape(), "zip shape mismatch");
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a - b)
+    }
+
+    /// Hadamard (elementwise) product — the paper's ⊙.
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a * b)
+    }
+
+    /// Elementwise division — the paper's ⊘. Caller guarantees no zeros.
+    pub fn eldiv(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a / b)
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        self.map(|x| x * s)
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn sub_assign(&mut self, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a -= b;
+        }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    pub fn frob_dist(&self, other: &Mat) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt() as f32
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Column L2 norms: `||X_j||₂` — the Wanda activation statistic.
+    pub fn col_norms(&self) -> Vec<f32> {
+        let mut acc = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (j, &v) in row.iter().enumerate() {
+                acc[j] += (v as f64) * (v as f64);
+            }
+        }
+        acc.into_iter().map(|v| v.sqrt() as f32).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Structure ops
+    // ------------------------------------------------------------------
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large weights.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Select a row range [r0, r1) as a new matrix.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Mat {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    /// Stack matrices with identical `cols` vertically.
+    pub fn vstack(mats: &[&Mat]) -> Mat {
+        assert!(!mats.is_empty());
+        let cols = mats[0].cols;
+        let rows: usize = mats.iter().map(|m| m.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for m in mats {
+            assert_eq!(m.cols, cols, "vstack col mismatch");
+            data.extend_from_slice(&m.data);
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Outer product u vᵀ (u: len rows, v: len cols).
+    pub fn outer(u: &[f32], v: &[f32]) -> Mat {
+        let mut m = Mat::zeros(u.len(), v.len());
+        for (i, &ui) in u.iter().enumerate() {
+            let row = m.row_mut(i);
+            for (j, &vj) in v.iter().enumerate() {
+                row[j] = ui * vj;
+            }
+        }
+        m
+    }
+
+    /// Approximate equality for tests.
+    pub fn allclose(&self, other: &Mat, atol: f32, rtol: f32) -> bool {
+        if self.shape() != other.shape() {
+            return false;
+        }
+        self.data.iter().zip(other.data.iter()).all(|(&a, &b)| {
+            let tol = atol + rtol * b.abs();
+            (a - b).abs() <= tol
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.at(1, 2), 12.0);
+        assert_eq!(m.row(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(m.col(1), vec![1.0, 11.0]);
+        assert_eq!(m.shape(), (2, 3));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let m = Mat::randn(37, 53, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().at(5, 7), m.at(7, 5));
+    }
+
+    #[test]
+    fn hadamard_and_eldiv_inverse() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let a = Mat::randn(8, 8, 1.0, &mut rng);
+        let b = Mat::rand_uniform(8, 8, 0.5, 2.0, &mut rng);
+        let back = a.hadamard(&b).eldiv(&b);
+        assert!(back.allclose(&a, 1e-6, 1e-5));
+    }
+
+    #[test]
+    fn sign_pm1_values() {
+        let m = Mat::from_vec(1, 4, vec![-2.0, 0.0, 3.0, -0.0]);
+        let s = m.sign_pm1();
+        // sign(0) = +1 per the paper ("non-negative → 1"); note -0.0 >= 0.0.
+        assert_eq!(s.data, vec![-1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn col_norms_match_manual() {
+        let m = Mat::from_vec(2, 2, vec![3.0, 1.0, 4.0, 2.0]);
+        let n = m.col_norms();
+        assert!((n[0] - 5.0).abs() < 1e-6);
+        assert!((n[1] - (5.0f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn outer_product() {
+        let m = Mat::outer(&[1.0, 2.0], &[3.0, 4.0, 5.0]);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.at(1, 2), 10.0);
+    }
+
+    #[test]
+    fn frob_norm_and_dist() {
+        let a = Mat::from_vec(1, 3, vec![1.0, 2.0, 2.0]);
+        assert!((a.frob_norm() - 3.0).abs() < 1e-6);
+        let b = Mat::zeros(1, 3);
+        assert!((a.frob_dist(&b) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn vstack_and_slice_roundtrip() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let m = Mat::randn(10, 4, 1.0, &mut rng);
+        let a = m.slice_rows(0, 4);
+        let b = m.slice_rows(4, 10);
+        assert_eq!(Mat::vstack(&[&a, &b]), m);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_len_mismatch_panics() {
+        let _ = Mat::from_vec(2, 2, vec![1.0]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Dense tensor substrate: row-major f32 matrices, matmul kernels,
+//! Cholesky / triangular solves / truncated SVD, and checkpoint I/O.
+//!
+//! Built from scratch because the offline crate set has no
+//! ndarray/nalgebra/BLAS. See `DESIGN.md` §4 (system inventory).
+
+pub mod io;
+pub mod linalg;
+pub mod mat;
+pub mod ops;
+
+pub use io::{Checkpoint, Entry, TensorData};
+pub use linalg::{cholesky, spd_inverse, svd_rank1, svd_truncated, Svd};
+pub use mat::Mat;
+pub use ops::{gram, matmul, matmul_bt, matvec, matvec_t};

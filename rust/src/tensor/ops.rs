@@ -1,0 +1,252 @@
+//! Dense matrix multiply and friends, tuned for the single-core CPU
+//! testbed: blocked ikj loops with an explicitly transposed-B variant
+//! (`matmul_bt`) because the compression pipeline almost always holds
+//! weights as `(Dout, Din)` and computes `X·Wᵀ`.
+
+use super::mat::Mat;
+
+/// C = A·B. Blocked ikj with row-major accumulation (auto-vectorizes).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    const KB: usize = 64;
+    for kb in (0..k).step_by(KB) {
+        let kend = (kb + KB).min(k);
+        for i in 0..m {
+            let arow = a.row(i);
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for kk in kb..kend {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = A·Bᵀ with B given as `(n, k)` — dot-product kernel over rows,
+/// the layout both activations and weights already use.
+pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_bt inner dim {} vs {}", a.cols, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = b.row(j);
+            let mut acc0 = 0.0f32;
+            let mut acc1 = 0.0f32;
+            let mut acc2 = 0.0f32;
+            let mut acc3 = 0.0f32;
+            let chunks = k / 4;
+            for t in 0..chunks {
+                let idx = 4 * t;
+                acc0 += arow[idx] * brow[idx];
+                acc1 += arow[idx + 1] * brow[idx + 1];
+                acc2 += arow[idx + 2] * brow[idx + 2];
+                acc3 += arow[idx + 3] * brow[idx + 3];
+            }
+            let mut acc = acc0 + acc1 + acc2 + acc3;
+            for idx in 4 * chunks..k {
+                acc += arow[idx] * brow[idx];
+            }
+            crow[j] = acc;
+        }
+    }
+    c
+}
+
+/// y = A·x (matrix-vector).
+pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    (0..a.rows)
+        .map(|i| {
+            a.row(i)
+                .iter()
+                .zip(x.iter())
+                .map(|(&w, &v)| w * v)
+                .sum::<f32>()
+        })
+        .collect()
+}
+
+/// y = Aᵀ·x without materializing the transpose.
+pub fn matvec_t(a: &Mat, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.rows, x.len());
+    let mut y = vec![0.0f32; a.cols];
+    for i in 0..a.rows {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let row = a.row(i);
+        for (j, &v) in row.iter().enumerate() {
+            y[j] += xi * v;
+        }
+    }
+    y
+}
+
+/// Gram matrix H = XᵀX for X of shape (N, D) — SparseGPT's Hessian
+/// (up to the damping term). Accumulates in f64 for stability, exploits
+/// symmetry.
+pub fn gram(x: &Mat) -> Mat {
+    let d = x.cols;
+    let mut acc = vec![0.0f64; d * d];
+    for i in 0..x.rows {
+        let row = x.row(i);
+        for a in 0..d {
+            let ra = row[a] as f64;
+            if ra == 0.0 {
+                continue;
+            }
+            let base = a * d;
+            for b in a..d {
+                acc[base + b] += ra * row[b] as f64;
+            }
+        }
+    }
+    let mut h = Mat::zeros(d, d);
+    for a in 0..d {
+        for b in a..d {
+            let v = acc[a * d + b] as f32;
+            h.set(a, b, v);
+            h.set(b, a, v);
+        }
+    }
+    h
+}
+
+/// Dot product in f64.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// L2 norm of a vector (f64 accumulate).
+pub fn norm2(v: &[f32]) -> f64 {
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Softmax over a slice, in place, numerically stable.
+pub fn softmax_inplace(v: &mut [f32]) {
+    let max = v.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    let mut sum = 0.0f32;
+    for x in v.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    for x in v.iter_mut() {
+        *x /= sum;
+    }
+}
+
+/// log-sum-exp of a slice.
+pub fn logsumexp(v: &[f32]) -> f32 {
+    let max = v.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    if !max.is_finite() {
+        return max;
+    }
+    let s: f32 = v.iter().map(|&x| (x - max).exp()).sum();
+    max + s.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg64::seed_from_u64(10);
+        for (m, k, n) in [(3, 4, 5), (17, 33, 9), (1, 7, 1), (32, 64, 16)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            assert!(c.allclose(&naive_matmul(&a, &b), 1e-4, 1e-4), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        let a = Mat::randn(13, 29, 1.0, &mut rng);
+        let b = Mat::randn(7, 29, 1.0, &mut rng); // (n, k)
+        let c1 = matmul_bt(&a, &b);
+        let c2 = matmul(&a, &b.transpose());
+        assert!(c1.allclose(&c2, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn matvec_consistency() {
+        let mut rng = Pcg64::seed_from_u64(12);
+        let a = Mat::randn(9, 14, 1.0, &mut rng);
+        let x: Vec<f32> = (0..14).map(|i| i as f32 * 0.1).collect();
+        let y = matvec(&a, &x);
+        let xm = Mat::from_vec(14, 1, x.clone());
+        let ym = matmul(&a, &xm);
+        for i in 0..9 {
+            assert!((y[i] - ym.at(i, 0)).abs() < 1e-4);
+        }
+        // matvec_t vs explicit transpose
+        let z: Vec<f32> = (0..9).map(|i| (i as f32).sin()).collect();
+        let t1 = matvec_t(&a, &z);
+        let t2 = matvec(&a.transpose(), &z);
+        for j in 0..14 {
+            assert!((t1[j] - t2[j]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gram_is_xtx() {
+        let mut rng = Pcg64::seed_from_u64(13);
+        let x = Mat::randn(25, 8, 1.0, &mut rng);
+        let h = gram(&x);
+        let href = matmul(&x.transpose(), &x);
+        assert!(h.allclose(&href, 1e-3, 1e-4));
+        // Symmetry exact by construction.
+        for a in 0..8 {
+            for b in 0..8 {
+                assert_eq!(h.at(a, b), h.at(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut v = vec![1.0, 2.0, 3.0, 1000.0];
+        softmax_inplace(&mut v);
+        let s: f32 = v.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(v[3] > 0.99);
+    }
+
+    #[test]
+    fn logsumexp_stable() {
+        let v = vec![1000.0f32, 1000.0];
+        let l = logsumexp(&v);
+        assert!((l - (1000.0 + (2.0f32).ln())).abs() < 1e-3);
+    }
+}

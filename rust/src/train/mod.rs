@@ -1,0 +1,111 @@
+//! Training driver — the rust loop around the AOT `train_step_{cfg}`
+//! artifact (fwd + bwd + AdamW fused in one XLA computation).
+//!
+//! No pretrained checkpoints exist offline, so the dense models the
+//! paper prunes are produced here: rust owns the data order, step
+//! loop, logging, and checkpointing; all math is inside the artifact.
+//! State (params, m, v) round-trips as literals — outputs of step t
+//! feed step t+1 without host-side decoding.
+
+use crate::data::TokenSet;
+use crate::model::Params;
+use crate::runtime::client::RuntimeError;
+use crate::runtime::{lit_i32, lit_scalar_i32, Runtime};
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// (step, loss) at every logging point.
+    pub loss_curve: Vec<(usize, f32)>,
+    pub final_loss: f32,
+    pub steps: usize,
+    pub wall_secs: f64,
+    pub tokens_per_sec: f64,
+}
+
+/// Train from `init` for `steps` steps over `corpus`; returns trained
+/// params + the loss curve (recorded in EXPERIMENTS.md by the caller).
+pub fn train(
+    rt: &Runtime,
+    init: &Params,
+    corpus: &TokenSet,
+    steps: usize,
+    seed: u64,
+    log_every: usize,
+) -> Result<(Params, TrainReport), RuntimeError> {
+    let cfg = init.cfg.clone();
+    let name = format!("train_step_{}", cfg.name);
+    let bsz = rt.manifest.train_batch;
+    let width = cfg.max_seq + 1;
+    assert_eq!(corpus.seq_len + 1, width, "corpus width vs model seq");
+
+    let n = cfg.param_names.len();
+    // State as literals: params ++ m ++ v.
+    let mut state: Vec<xla::Literal> = init.to_literals();
+    let zeros = Params::zeros_like(&cfg).to_literals();
+    state.extend(zeros.iter().map(clone_lit));
+    state.extend(zeros.iter().map(clone_lit));
+
+    let mut rng = Pcg64::seed_from_u64(seed ^ 0x7ea1);
+    let mut order: Vec<usize> = (0..corpus.rows).collect();
+    rng.shuffle(&mut order);
+    let mut cursor = 0usize;
+
+    let mut loss_curve = Vec::new();
+    let t0 = std::time::Instant::now();
+    let mut last_loss = f32::NAN;
+    for step in 0..steps {
+        // Assemble the batch (reshuffle on wrap).
+        let mut flat = Vec::with_capacity(bsz * width);
+        for _ in 0..bsz {
+            if cursor >= order.len() {
+                rng.shuffle(&mut order);
+                cursor = 0;
+            }
+            flat.extend_from_slice(corpus.row(order[cursor]));
+            cursor += 1;
+        }
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(3 * n + 2);
+        inputs.append(&mut state);
+        inputs.push(lit_scalar_i32(step as i32));
+        inputs.push(lit_i32(&flat, &[bsz, width]));
+
+        let mut out = rt.execute(&name, &inputs)?;
+        // out = [loss, params.., m.., v..]
+        let loss = out[0].get_first_element::<f32>().map_err(|e| {
+            RuntimeError::Xla(format!("loss readback: {e}"))
+        })?;
+        last_loss = loss;
+        state = out.split_off(1);
+        debug_assert_eq!(state.len(), 3 * n);
+
+        if step % log_every == 0 || step + 1 == steps {
+            loss_curve.push((step, loss));
+            eprintln!("[train {}] step {step:>5} loss {loss:.4}", cfg.name);
+        }
+        if !loss.is_finite() {
+            return Err(RuntimeError::Xla(format!(
+                "training diverged at step {step} (loss {loss})"
+            )));
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let params_lits: Vec<xla::Literal> = state.drain(..n).collect();
+    let trained = Params::from_literals(&cfg, &params_lits);
+    let report = TrainReport {
+        loss_curve,
+        final_loss: last_loss,
+        steps,
+        wall_secs: wall,
+        tokens_per_sec: (steps * bsz * cfg.max_seq) as f64 / wall.max(1e-9),
+    };
+    Ok((trained, report))
+}
+
+/// The xla crate's Literal is not Clone; round-trip through raw bytes.
+fn clone_lit(l: &xla::Literal) -> xla::Literal {
+    let v = l.to_vec::<f32>().expect("clone_lit f32");
+    let shape = l.array_shape().expect("clone_lit shape");
+    let dims: Vec<i64> = shape.dims().to_vec();
+    xla::Literal::vec1(&v).reshape(&dims).expect("clone_lit reshape")
+}

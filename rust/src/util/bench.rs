@@ -1,0 +1,244 @@
+//! Benchmark harness substrate (no `criterion` offline).
+//!
+//! Provides warmup + timed iterations, robust summary statistics
+//! (mean, std, median, p95, min/max), throughput reporting, and a
+//! simple text table so `cargo bench` output mirrors what the paper's
+//! tables/figures need. All benches under `rust/benches/` use this.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over per-iteration wall-clock samples.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |q: f64| -> f64 {
+            let idx = ((n as f64 - 1.0) * q).round() as usize;
+            ns[idx.min(n - 1)]
+        };
+        Stats {
+            iters: n,
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            min_ns: ns[0],
+            p50_ns: pct(0.50),
+            p95_ns: pct(0.95),
+            max_ns: ns[n - 1],
+        }
+    }
+
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    /// items/sec given `items` units of work per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.mean_ns * 1e-9)
+    }
+}
+
+/// Human-friendly duration formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop adding iterations once this much time has been spent.
+    pub time_budget: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // This testbed has a single CPU core; keep budgets modest so a
+        // full `cargo bench` sweep completes in minutes.
+        BenchConfig {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            time_budget: Duration::from_secs(3),
+        }
+    }
+}
+
+/// A named group of benchmark results printed as a table at the end.
+pub struct Bench {
+    group: String,
+    cfg: BenchConfig,
+    rows: Vec<(String, Stats, Option<(f64, &'static str)>)>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        let mut cfg = BenchConfig::default();
+        // Honor SLAB_BENCH_FAST=1 for smoke runs in CI/tests.
+        if std::env::var("SLAB_BENCH_FAST").as_deref() == Ok("1") {
+            cfg = BenchConfig {
+                warmup_iters: 1,
+                min_iters: 2,
+                max_iters: 5,
+                time_budget: Duration::from_millis(300),
+            };
+        }
+        Bench {
+            group: group.to_string(),
+            cfg,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn with_config(mut self, cfg: BenchConfig) -> Bench {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Run a closure repeatedly and record stats. The closure should
+    /// return something observable to keep the optimizer honest; the
+    /// value is black-boxed here.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> Stats {
+        for _ in 0..self.cfg.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.cfg.min_iters
+            || (samples.len() < self.cfg.max_iters && start.elapsed() < self.cfg.time_budget)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let stats = Stats::from_samples(samples);
+        eprintln!(
+            "  {:<44} {:>12}/iter  (p50 {:>10}, p95 {:>10}, n={})",
+            name,
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p50_ns),
+            fmt_ns(stats.p95_ns),
+            stats.iters
+        );
+        self.rows.push((name.to_string(), stats.clone(), None));
+        stats
+    }
+
+    /// Like [`run`], additionally reporting throughput in `unit`/s for
+    /// `items` units of work per iteration.
+    pub fn run_throughput<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        items: f64,
+        unit: &'static str,
+        f: F,
+    ) -> Stats {
+        let stats = self.run(name, f);
+        let row = self.rows.last_mut().unwrap();
+        row.2 = Some((items, unit));
+        stats
+    }
+
+    /// Print the final table for the group.
+    pub fn finish(self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>16}",
+            "benchmark", "mean", "p50", "p95", "throughput"
+        );
+        for (name, s, tp) in &self.rows {
+            let tps = match tp {
+                Some((items, unit)) => {
+                    let v = s.throughput(*items);
+                    if v >= 1e9 {
+                        format!("{:.2} G{unit}/s", v / 1e9)
+                    } else if v >= 1e6 {
+                        format!("{:.2} M{unit}/s", v / 1e6)
+                    } else if v >= 1e3 {
+                        format!("{:.2} k{unit}/s", v / 1e3)
+                    } else {
+                        format!("{v:.2} {unit}/s")
+                    }
+                }
+                None => "-".to_string(),
+            };
+            println!(
+                "{:<44} {:>12} {:>12} {:>12} {:>16}",
+                name,
+                fmt_ns(s.mean_ns),
+                fmt_ns(s.p50_ns),
+                fmt_ns(s.p95_ns),
+                tps
+            );
+        }
+        println!();
+    }
+}
+
+/// Optimizer barrier — a stable `std::hint::black_box` stand-in that
+/// works on the MSRV of this repo.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let s = Stats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 100.0);
+        assert!((s.mean_ns - 50.5).abs() < 1e-9);
+        assert!((s.p50_ns - 50.0).abs() <= 1.0);
+        assert!((s.p95_ns - 95.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Stats::from_samples(vec![1e9]); // 1 second/iter
+        assert!((s.throughput(1000.0) - 1000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn runner_collects_min_iters() {
+        std::env::set_var("SLAB_BENCH_FAST", "1");
+        let mut b = Bench::new("test");
+        let s = b.run("noop", || 1 + 1);
+        assert!(s.iters >= 2);
+        b.finish();
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(2_500.0).contains("µs"));
+        assert!(fmt_ns(2_500_000.0).contains("ms"));
+        assert!(fmt_ns(2_500_000_000.0).ends_with("s"));
+    }
+}

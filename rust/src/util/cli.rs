@@ -1,0 +1,296 @@
+//! Command-line argument parsing substrate (no `clap` offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`,
+//! typed accessors with defaults, required options, and an
+//! auto-generated `--help`. Kept deliberately small but featureful
+//! enough for the `slab` binary and every example.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Declarative option spec for help generation + validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub required: bool,
+    pub is_flag: bool,
+}
+
+/// A parsed command line: subcommand + options + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub program: String,
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding program name is OK;
+    /// pass `std::env::args()` and the first element is taken as program).
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        raw: I,
+        has_subcommand: bool,
+    ) -> Result<Args, CliError> {
+        let mut it = raw.into_iter();
+        let program = it.next().unwrap_or_else(|| "slab".into());
+        let mut args = Args {
+            program,
+            ..Default::default()
+        };
+        let mut rest: Vec<String> = it.collect();
+        if has_subcommand && !rest.is_empty() && !rest[0].starts_with('-') {
+            args.command = Some(rest.remove(0));
+        }
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminates option parsing.
+                    args.positional.extend(rest[i + 1..].iter().cloned());
+                    break;
+                }
+                if let Some(eq) = body.find('=') {
+                    let (k, v) = body.split_at(eq);
+                    args.opts.insert(k.to_string(), v[1..].to_string());
+                } else if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    args.opts.insert(body.to_string(), rest[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Parse the real process args.
+    pub fn from_env(has_subcommand: bool) -> Result<Args, CliError> {
+        Self::parse_from(std::env::args(), has_subcommand)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self
+                .opts
+                .get(name)
+                .is_some_and(|v| v == "true" || v == "1")
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn require(&self, name: &str) -> Result<String, CliError> {
+        self.get(name)
+            .map(str::to_string)
+            .ok_or_else(|| CliError(format!("missing required option --{name}")))
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected float, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> Result<f32, CliError> {
+        Ok(self.get_f64(name, default as f64)? as f32)
+    }
+
+    /// Comma-separated list of values.
+    pub fn get_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+
+    /// Validate against specs: unknown options rejected, required
+    /// enforced. Returns formatted help on `--help`.
+    pub fn validate(&self, specs: &[OptSpec]) -> Result<(), CliError> {
+        for key in self.opts.keys().chain(self.flags.iter()) {
+            if key == "help" {
+                continue;
+            }
+            if !specs.iter().any(|s| s.name == key) {
+                return Err(CliError(format!("unknown option --{key}")));
+            }
+        }
+        for s in specs.iter().filter(|s| s.required) {
+            if self.get(s.name).is_none() {
+                return Err(CliError(format!("missing required option --{}", s.name)));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn wants_help(&self) -> bool {
+        self.has_flag("help")
+    }
+}
+
+/// Render a help string for a command.
+pub fn render_help(program: &str, command: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{program} {command} — {about}\n\nOptions:\n"));
+    for s in specs {
+        let mut line = format!("  --{}", s.name);
+        if !s.is_flag {
+            line.push_str(" <v>");
+        }
+        while line.len() < 28 {
+            line.push(' ');
+        }
+        line.push_str(s.help);
+        if let Some(d) = s.default {
+            line.push_str(&format!(" [default: {d}]"));
+        }
+        if s.required {
+            line.push_str(" (required)");
+        }
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(line: &str) -> Args {
+        let raw: Vec<String> = std::iter::once("slab".to_string())
+            .chain(line.split_whitespace().map(str::to_string))
+            .collect();
+        Args::parse_from(raw, true).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NOTE: a bare flag must not swallow a following positional, so
+        // flags go after positionals or use --flag=true; here the
+        // positional precedes the flag.
+        let a = parse("compress --model base --cr 0.5 file.bin --verbose");
+        assert_eq!(a.command.as_deref(), Some("compress"));
+        assert_eq!(a.get("model"), Some("base"));
+        assert_eq!(a.get_f64("cr", 0.0).unwrap(), 0.5);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["file.bin"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("train --steps=300 --lr=3e-4");
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 300);
+        assert!((a.get_f64("lr", 0.0).unwrap() - 3e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flags_at_end_and_defaults() {
+        let a = parse("eval --fast");
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.get_usize("batch", 8).unwrap(), 8);
+        assert_eq!(a.get_str("out", "runs"), "runs");
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse("run -- --not-an-option x");
+        assert_eq!(a.positional, vec!["--not-an-option", "x"]);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse("sweep --ranks 0,1,4,16");
+        assert_eq!(a.get_list("ranks", &[]), vec!["0", "1", "4", "16"]);
+    }
+
+    #[test]
+    fn validate_unknown_and_required() {
+        let specs = [
+            OptSpec {
+                name: "model",
+                help: "model preset",
+                default: None,
+                required: true,
+                is_flag: false,
+            },
+            OptSpec {
+                name: "fast",
+                help: "quick mode",
+                default: None,
+                required: false,
+                is_flag: true,
+            },
+        ];
+        let ok = parse("x --model base --fast");
+        assert!(ok.validate(&specs).is_ok());
+        let missing = parse("x --fast");
+        assert!(missing.validate(&specs).is_err());
+        let unknown = parse("x --model base --bogus 1");
+        assert!(unknown.validate(&specs).is_err());
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn help_rendering() {
+        let specs = [OptSpec {
+            name: "cr",
+            help: "compression ratio",
+            default: Some("0.5"),
+            required: false,
+            is_flag: false,
+        }];
+        let h = render_help("slab", "compress", "prune a model", &specs);
+        assert!(h.contains("--cr"));
+        assert!(h.contains("[default: 0.5]"));
+    }
+}

@@ -1,0 +1,87 @@
+//! Shared substrates: RNG, JSON, CLI parsing, bench harness,
+//! property-testing helpers, thread pool, and small misc utilities.
+//!
+//! These exist because the offline vendored crate set ships no `rand`,
+//! `serde_json`, `clap`, `criterion`, `proptest`, or `tokio`; each
+//! submodule documents which external crate it replaces.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Simple scoped wall-clock timer for coarse pipeline logging.
+pub struct ScopeTimer {
+    label: String,
+    start: Instant,
+    quiet: bool,
+}
+
+impl ScopeTimer {
+    pub fn new(label: &str) -> ScopeTimer {
+        ScopeTimer {
+            label: label.to_string(),
+            start: Instant::now(),
+            quiet: false,
+        }
+    }
+
+    pub fn quiet(label: &str) -> ScopeTimer {
+        ScopeTimer {
+            label: label.to_string(),
+            start: Instant::now(),
+            quiet: true,
+        }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Drop for ScopeTimer {
+    fn drop(&mut self) {
+        if !self.quiet {
+            eprintln!("[time] {}: {:.1} ms", self.label, self.elapsed_ms());
+        }
+    }
+}
+
+/// Format a float with engineering-style significant digits, used by
+/// report tables (`5.49`, `113.8`, `1.34e4` like the paper).
+pub fn fmt_metric(v: f64) -> String {
+    if !v.is_finite() {
+        return format!("{v}");
+    }
+    let a = v.abs();
+    if a >= 1e4 {
+        format!("{v:.2e}")
+    } else if a >= 100.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_metric_matches_paper_style() {
+        assert_eq!(fmt_metric(5.493), "5.49");
+        assert_eq!(fmt_metric(113.77), "113.8");
+        assert_eq!(fmt_metric(13400.0), "1.34e4");
+    }
+
+    #[test]
+    fn scope_timer_measures() {
+        let t = ScopeTimer::quiet("x");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_ms() >= 4.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Thread-pool + job-queue substrate (no `tokio` offline).
+//!
+//! The coordinator uses this for (a) the layer-wise pruning pipeline's
+//! worker jobs and (b) the serving router's request handling. It is a
+//! classic fixed-size pool over `std::sync::mpsc` with:
+//!
+//! * `execute(job)` — fire-and-forget,
+//! * `scope`-style `map` — run a batch of jobs and collect results in
+//!   input order,
+//! * graceful shutdown on drop (workers drain the queue first).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// `size = 0` picks the available parallelism (min 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = if size == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            size
+        };
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("slab-worker-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx, workers, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .send(Msg::Run(Box::new(f)))
+            .expect("pool receiver alive");
+    }
+
+    /// Run `f` over `inputs` on the pool; results return in input order.
+    /// Panics in jobs are converted into an `Err` for that slot.
+    pub fn map<T, R, F>(&self, inputs: Vec<T>, f: F) -> Vec<Result<R, String>>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = inputs.len();
+        let f = Arc::new(f);
+        let (rtx, rrx) = channel::<(usize, Result<R, String>)>();
+        for (i, input) in inputs.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(input)))
+                    .map_err(|e| panic_msg(e.as_ref()));
+                let _ = rtx.send((i, out));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<Result<R, String>>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rrx.recv().expect("worker result");
+            slots[i] = Some(r);
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "job panicked".to_string()
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>) {
+    loop {
+        let msg = {
+            let guard = rx.lock().expect("pool lock");
+            guard.recv()
+        };
+        match msg {
+            Ok(Msg::Run(job)) => {
+                // Panics are caught by `map`'s wrapper when used there;
+                // for raw `execute` jobs we swallow the panic so one bad
+                // job does not take the worker down.
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+            }
+            Ok(Msg::Shutdown) | Err(_) => break,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map((0..100).collect(), |i: usize| i * i);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(*r.as_ref().unwrap(), i * i);
+        }
+    }
+
+    #[test]
+    fn execute_runs_all_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..50 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn panic_in_map_is_isolated() {
+        let pool = ThreadPool::new(2);
+        let out = pool.map(vec![1usize, 2, 3], |i| {
+            if i == 2 {
+                panic!("boom {i}");
+            }
+            i
+        });
+        assert_eq!(*out[0].as_ref().unwrap(), 1);
+        assert!(out[1].as_ref().unwrap_err().contains("boom"));
+        assert_eq!(*out[2].as_ref().unwrap(), 3);
+    }
+
+    #[test]
+    fn zero_size_uses_available_parallelism() {
+        let pool = ThreadPool::new(0);
+        assert!(pool.size() >= 1);
+    }
+}

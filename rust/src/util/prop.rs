@@ -1,0 +1,229 @@
+//! Mini property-testing substrate (no `proptest` offline).
+//!
+//! `check(name, cases, gen, prop)` draws `cases` random inputs from a
+//! seeded generator and asserts the property on each. On failure it
+//! attempts greedy shrinking via the input's [`Shrink`] impl and
+//! reports the smallest failing case together with the seed so the
+//! exact run is reproducible (`SLAB_PROP_SEED` overrides).
+//!
+//! This mirrors how proptest is used by the test-suite mandate:
+//! randomized coverage of invariants with actionable minimal
+//! counterexamples.
+
+use crate::util::rng::Pcg64;
+
+/// Types that can propose structurally smaller variants of themselves.
+pub trait Shrink: Sized {
+    /// Candidate shrinks, largest-step first. Default: none.
+    fn shrinks(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for f32 {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl Shrink for Vec<f32> {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.len() > 1 {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[self.len() / 2..].to_vec());
+        }
+        if !self.is_empty() {
+            let mut zeroed = self.clone();
+            for v in zeroed.iter_mut() {
+                *v = 0.0;
+            }
+            if &zeroed != self {
+                out.push(zeroed);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrinks()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrinks().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run a property over `cases` random inputs. Panics with the minimal
+/// failing input (after greedy shrinking) and the seed.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Shrink + Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let seed = std::env::var("SLAB_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eedu64 ^ 0x51ab_0000_0000_0000u64 ^ name.len() as u64);
+    let mut rng = Pcg64::seed_from_u64(seed ^ hash_name(name));
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(input, msg, &mut prop);
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}):\n  {min_msg}\n  minimal input: {min_input:?}"
+            );
+        }
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn shrink_loop<T, P>(mut cur: T, mut msg: String, prop: &mut P) -> (T, String)
+where
+    T: Shrink + Clone,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    // Greedy: repeatedly take the first shrink that still fails.
+    // Bounded to avoid pathological loops.
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in cur.shrinks() {
+            if let Err(m) = prop(&cand) {
+                cur = cand;
+                msg = m;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (cur, msg)
+}
+
+/// Convenience generators used across the test suite.
+pub mod gens {
+    use crate::util::rng::Pcg64;
+
+    /// Vec of standard-normal f32s with length in [lo, hi].
+    pub fn normal_vec(rng: &mut Pcg64, lo: usize, hi: usize) -> Vec<f32> {
+        let n = lo + rng.below_usize(hi - lo + 1);
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    /// Matrix dims in [lo, hi] each.
+    pub fn dims(rng: &mut Pcg64, lo: usize, hi: usize) -> (usize, usize) {
+        (
+            lo + rng.below_usize(hi - lo + 1),
+            lo + rng.below_usize(hi - lo + 1),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "sum-commutes",
+            100,
+            |rng| gens::normal_vec(rng, 1, 32),
+            |v| {
+                let fwd: f32 = v.iter().sum();
+                let rev: f32 = v.iter().rev().sum();
+                if (fwd - rev).abs() <= 1e-3 * (1.0 + fwd.abs()) {
+                    Ok(())
+                } else {
+                    Err(format!("fwd={fwd} rev={rev}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        check(
+            "always-fails",
+            10,
+            |rng| gens::normal_vec(rng, 4, 32),
+            |v| {
+                if v.len() < 2 {
+                    Ok(())
+                } else {
+                    Err("too long".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_reduces_usize() {
+        let mut prop = |x: &usize| if *x < 3 { Ok(()) } else { Err("≥3".into()) };
+        let (min, _) = shrink_loop(100usize, "≥3".into(), &mut prop);
+        assert_eq!(min, 3);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        std::env::set_var("SLAB_PROP_SEED", "99");
+        let mut first: Vec<Vec<f32>> = Vec::new();
+        check(
+            "capture",
+            5,
+            |rng| gens::normal_vec(rng, 1, 8),
+            |v| {
+                first.push(v.clone());
+                Ok(())
+            },
+        );
+        let mut second: Vec<Vec<f32>> = Vec::new();
+        check(
+            "capture",
+            5,
+            |rng| gens::normal_vec(rng, 1, 8),
+            |v| {
+                second.push(v.clone());
+                Ok(())
+            },
+        );
+        std::env::remove_var("SLAB_PROP_SEED");
+        assert_eq!(first, second);
+    }
+}
