@@ -1,8 +1,10 @@
-//! Serving demo: dynamic-batched generation over the AOT
-//! prefill/decode artifacts, dense vs SLaB-compressed weights.
+//! Serving demo: dynamic-batched generation over the two serving
+//! engines — AOT artifacts (dense and SLaB-reconstructed weights) and
+//! the native packed backend that consumes the compressed format
+//! directly.
 //!
 //! Spawns client threads that submit generation requests; the router
-//! batches them up to `serve_batch`, reports throughput, latency
+//! batches them up to the batch cap, reports throughput, latency
 //! percentiles, batch occupancy, and the deployed-weight byte ratio.
 //!
 //! ```bash
@@ -10,8 +12,9 @@
 //! ```
 
 use slab::baselines::Method;
-use slab::coordinator::{compress_model, Engine, Request, Server, ServerConfig};
+use slab::coordinator::{compress_model, Backend, Engine, Request, Server, ServerConfig};
 use slab::experiments::Lab;
+use slab::model::SlabModel;
 use slab::slab::SlabConfig;
 use slab::util::cli::Args;
 use std::path::PathBuf;
@@ -23,13 +26,7 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[((sorted.len() as f64 - 1.0) * q) as usize]
 }
 
-fn run_server(
-    artifacts: &PathBuf,
-    params: slab::model::Params,
-    prompts: &[Vec<i32>],
-    label: &str,
-) -> anyhow::Result<()> {
-    let server = Server::start(artifacts.clone(), params, ServerConfig::default());
+fn run_server(server: Server, prompts: &[Vec<i32>], label: &str) -> anyhow::Result<()> {
     // Client threads hammer the queue concurrently.
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = prompts
@@ -79,7 +76,7 @@ fn main() -> anyhow::Result<()> {
     // owns a client via Lab) is scoped to finish — and its client to
     // drop — before each Server spins up its own client in the router
     // thread.
-    let (dense, compressed, prompts) = {
+    let (dense, compressed, slab_layers, prompts) = {
         let lab = Lab::new(&artifacts, &runs)?;
         let dense = lab.dense_params(&model, lab.default_steps(&model))?;
         let corpus = lab.corpus(&model);
@@ -112,10 +109,34 @@ fn main() -> anyhow::Result<()> {
         let prompts: Vec<Vec<i32>> = (0..n_req)
             .map(|_| lab.grammar.sample_sentence(&mut rng))
             .collect();
-        (dense, slab_model.params, prompts)
+        (dense, slab_model.params, slab_model.slab_layers, prompts)
     }; // ← lab (and its PJRT client) dropped here
 
-    run_server(&artifacts, dense, &prompts, "dense")?;
-    run_server(&artifacts, compressed, &prompts, "slab-compressed")?;
+    // 1) AOT artifacts over the dense model.
+    run_server(
+        Server::start(artifacts.clone(), dense.clone(), ServerConfig::default()),
+        &prompts,
+        "dense-artifact",
+    )?;
+    // 2) AOT artifacts over the reconstructed Ŵ (smaller checkpoint,
+    //    dense request-time compute).
+    run_server(
+        Server::start(artifacts.clone(), compressed, ServerConfig::default()),
+        &prompts,
+        "slab-artifact",
+    )?;
+    // 3) Native packed engine: serves straight from W_S + u vᵀ ⊙ W_B,
+    //    no PJRT client, parallel blocked kernels.
+    let native = SlabModel::from_packed(&dense, &slab_layers, 0);
+    println!(
+        "native packed engine: {} packed linears, {:.2} MiB resident weights",
+        native.packed_linear_count(),
+        native.weights_nbytes() as f64 / (1 << 20) as f64
+    );
+    run_server(
+        Server::start_with(Backend::NativePacked(Box::new(native)), ServerConfig::default()),
+        &prompts,
+        "slab-native-packed",
+    )?;
     Ok(())
 }

@@ -3,20 +3,33 @@
 //! Compares, at paper-relevant shapes, the per-forward cost of
 //! dense GEMM vs CSR sparse vs bitpacked-binary vs the full packed
 //! SLaB layer (CSR + rank-1 + bitplane) — the CPU analogue of the
-//! HBM-bytes argument in DESIGN.md §9 — plus the AOT Pallas
+//! HBM-bytes argument in DESIGN.md §9 — each in its scalar-reference,
+//! cache-blocked, and ThreadPool-parallel forms, plus the fused
+//! packed forward the serving engine runs and the AOT Pallas
 //! `slab_linear` artifact when `artifacts/` is present.
+//!
+//! The ≥512-dim rows are the acceptance gate for the parallel
+//! kernels: row-chunking must beat the scalar loops once the weight
+//! working set leaves L2.
 
 use slab::binary::BitMat;
 use slab::slab::{decompose, ActStats, SlabConfig, SlabLayer};
 use slab::sparse::Csr;
 use slab::tensor::{matmul_bt, Mat};
 use slab::util::bench::Bench;
+use slab::util::pool::ThreadPool;
 use slab::util::rng::Pcg64;
 use std::path::Path;
 
 fn main() {
     let mut rng = Pcg64::seed_from_u64(77);
-    let shapes = [(256usize, 256usize), (688, 256), (256, 688)];
+    let pool = ThreadPool::new(0);
+    let shapes = [
+        (256usize, 256usize),
+        (688, 256),
+        (512, 512),
+        (1024, 512),
+    ];
     let batch = 32usize;
 
     for (dout, din) in shapes {
@@ -36,18 +49,70 @@ fn main() {
 
         b.run_throughput("dense matmul_bt", flops, "flop", || matmul_bt(&x, &w));
         b.run_throughput(
-            &format!("csr spmm ({} nnz, {:.0}%)", csr.nnz(), 100.0 * csr.density()),
+            &format!("csr spmm scalar ({} nnz, {:.0}%)", csr.nnz(), 100.0 * csr.density()),
             flops,
             "flop",
             || csr.spmm_bt(&x),
         );
-        b.run_throughput("bitpacked ±1 matmul", flops, "flop", || bits.matmul_bt(&x));
-        b.run_throughput("slab packed forward", flops, "flop", || layer.forward(&x));
+        b.run_throughput("csr spmm blocked", flops, "flop", || csr.spmm_bt_blocked(&x));
+        b.run_throughput(
+            &format!("csr spmm parallel x{}", pool.size()),
+            flops,
+            "flop",
+            || csr.spmm_bt_par(&x, &pool),
+        );
+        b.run_throughput("bitpacked ±1 scalar", flops, "flop", || bits.matmul_bt(&x));
+        b.run_throughput("bitpacked ±1 blocked", flops, "flop", || {
+            bits.matmul_bt_blocked(&x)
+        });
+        b.run_throughput(
+            &format!("bitpacked ±1 parallel x{}", pool.size()),
+            flops,
+            "flop",
+            || bits.matmul_bt_par(&x, &pool),
+        );
+        b.run_throughput("slab packed forward (scalar)", flops, "flop", || {
+            layer.forward(&x)
+        });
+        b.run_throughput("slab fused forward", flops, "flop", || {
+            layer.forward_fused(&x, None)
+        });
+        b.run_throughput(
+            &format!("slab fused parallel x{}", pool.size()),
+            flops,
+            "flop",
+            || layer.forward_fused(&x, Some(&pool)),
+        );
         println!(
             "  [bytes] dense f32 {} | slab packed {} ({:.2}x smaller)",
             dout * din * 4,
             layer.nbytes_deploy(),
             (dout * din * 4) as f64 / layer.nbytes_deploy() as f64
+        );
+        b.finish();
+    }
+
+    // Decode-shaped batch: batch 1 is where row-chunking (not batch
+    // parallelism) has to carry the speedup.
+    {
+        let (dout, din) = (1024usize, 512usize);
+        let mut b = Bench::new(&format!("decode linear {dout}x{din} (batch 1)"));
+        let w = Mat::randn(dout, din, 0.02, &mut rng);
+        let x = Mat::randn(1, din, 1.0, &mut rng);
+        let stats = ActStats::from_activations(&Mat::randn(256, din, 1.0, &mut rng));
+        let d = decompose(&w, &stats, &SlabConfig { iters: 5, ..Default::default() })
+            .expect("decompose");
+        let layer = SlabLayer::from_decomposition(&d);
+        let flops = 2.0 * dout as f64 * din as f64;
+        b.run_throughput("dense matmul_bt", flops, "flop", || matmul_bt(&x, &w));
+        b.run_throughput("slab fused forward", flops, "flop", || {
+            layer.forward_fused(&x, None)
+        });
+        b.run_throughput(
+            &format!("slab fused parallel x{}", pool.size()),
+            flops,
+            "flop",
+            || layer.forward_fused(&x, Some(&pool)),
         );
         b.finish();
     }

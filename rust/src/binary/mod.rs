@@ -7,6 +7,14 @@
 //! that processes signs word-at-a-time.
 
 use crate::tensor::Mat;
+use crate::util::pool::{chunk_ranges, ThreadPool};
+
+/// Batch-block width for the cache-blocked kernels: the packed
+/// bitplane is streamed once per block of activation rows instead of
+/// once per row — on this matrix the bitplane IS the weight traffic,
+/// so the block factor divides the dominant byte stream directly
+/// (DESIGN.md §3).
+const BB: usize = 8;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct BitMat {
@@ -61,6 +69,46 @@ impl BitMat {
     /// Storage bytes (the 1-bit/elem claim; row padding included).
     pub fn nbytes(&self) -> usize {
         self.bits.len() * 8
+    }
+
+    /// The raw packed sign words, row-major: [`words_per_row`] words
+    /// per row, bit set ⇔ +1, padding bits beyond `cols` clear. This
+    /// is the on-disk checkpoint payload (`slab::layer::save_into`).
+    ///
+    /// [`words_per_row`]: BitMat::words_per_row
+    pub fn words(&self) -> &[u64] {
+        &self.bits
+    }
+
+    /// ceil(cols / 64) — the row stride of [`words`](BitMat::words).
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// Rebuild from packed words in the layout of
+    /// [`words`](BitMat::words). Padding bits in each row's last word
+    /// are cleared so equality stays canonical regardless of what the
+    /// serializer wrote there.
+    pub fn from_words(rows: usize, cols: usize, mut bits: Vec<u64>) -> BitMat {
+        let words_per_row = cols.div_ceil(64);
+        assert_eq!(
+            bits.len(),
+            rows * words_per_row,
+            "from_words: {} words for {rows}x{cols}",
+            bits.len()
+        );
+        if cols % 64 != 0 {
+            let mask = (1u64 << (cols % 64)) - 1;
+            for i in 0..rows {
+                bits[i * words_per_row + words_per_row - 1] &= mask;
+            }
+        }
+        BitMat {
+            rows,
+            cols,
+            words_per_row,
+            bits,
+        }
     }
 
     /// Fraction of +1 entries.
@@ -123,6 +171,103 @@ impl BitMat {
         y
     }
 
+    /// Cache-blocked `matmul_bt`: identical math to
+    /// [`matmul_bt`](BitMat::matmul_bt) (bit-identical output), but the
+    /// packed bitplane is streamed once per [`BB`]-row batch block.
+    pub fn matmul_bt_blocked(&self, x: &Mat) -> Mat {
+        let mut y = Mat::zeros(x.rows, self.rows);
+        self.matmul_bt_blocked_into(x, &mut y);
+        y
+    }
+
+    /// [`matmul_bt_blocked`](BitMat::matmul_bt_blocked) writing into a
+    /// caller-owned output — the allocation-free form the fused
+    /// [`SlabLayer::forward_fused`](crate::slab::SlabLayer::forward_fused)
+    /// scratch loop uses. `y` must be `(x.rows, self.rows)`; it is
+    /// overwritten entirely.
+    pub fn matmul_bt_blocked_into(&self, x: &Mat, y: &mut Mat) {
+        assert_eq!(x.cols, self.cols, "matmul_bt: x cols {} vs B cols {}", x.cols, self.cols);
+        assert_eq!((y.rows, y.cols), (x.rows, self.rows), "matmul_bt_into: bad output shape");
+        let totals = row_totals(x);
+        self.matmul_rows_blocked(x, &totals, 0, self.rows, &mut y.data);
+    }
+
+    /// [`ThreadPool`]-parallel `matmul_bt`: weight rows chunked across
+    /// the pool (parallel even at batch 1), each chunk cache-blocked.
+    /// Bit-identical to the scalar [`matmul_bt`](BitMat::matmul_bt).
+    pub fn matmul_bt_par(&self, x: &Mat, pool: &ThreadPool) -> Mat {
+        let mut y = Mat::zeros(x.rows, self.rows);
+        self.matmul_bt_par_into(x, pool, &mut y);
+        y
+    }
+
+    /// [`matmul_bt_par`](BitMat::matmul_bt_par) into a caller-owned
+    /// output (overwritten entirely).
+    pub fn matmul_bt_par_into(&self, x: &Mat, pool: &ThreadPool, y: &mut Mat) {
+        assert_eq!(x.cols, self.cols, "matmul_bt: x cols {} vs B cols {}", x.cols, self.cols);
+        assert_eq!((y.rows, y.cols), (x.rows, self.rows), "matmul_bt_into: bad output shape");
+        if pool.size() <= 1 || self.rows < 2 {
+            let totals = row_totals(x);
+            self.matmul_rows_blocked(x, &totals, 0, self.rows, &mut y.data);
+            return;
+        }
+        let totals = row_totals(x);
+        let ranges = chunk_ranges(self.rows, pool.size());
+        let mut strips: Vec<Vec<f32>> = ranges
+            .iter()
+            .map(|&(r0, r1)| vec![0.0f32; x.rows * (r1 - r0)])
+            .collect();
+        let totals_ref = &totals;
+        let jobs: Vec<_> = strips
+            .iter_mut()
+            .zip(ranges.iter().copied())
+            .map(|(strip, (r0, r1))| {
+                move || self.matmul_rows_blocked(x, totals_ref, r0, r1, strip)
+            })
+            .collect();
+        pool.scoped(jobs);
+        for (strip, &(r0, r1)) in strips.iter().zip(ranges.iter()) {
+            let w = r1 - r0;
+            for b in 0..x.rows {
+                y.row_mut(b)[r0..r1].copy_from_slice(&strip[b * w..(b + 1) * w]);
+            }
+        }
+    }
+
+    /// Blocked sign-select kernel over weight rows `[r0, r1)`; `out`
+    /// is a strip in `[b][i - r0]` layout. `totals[b]` is Σ_j x[b][j]
+    /// (hoisted so the parallel chunks don't recompute it).
+    fn matmul_rows_blocked(&self, x: &Mat, totals: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
+        let w = r1 - r0;
+        debug_assert_eq!(out.len(), x.rows * w);
+        for b0 in (0..x.rows).step_by(BB) {
+            let bw = (x.rows - b0).min(BB);
+            for i in r0..r1 {
+                let base = i * self.words_per_row;
+                let mut neg = [0.0f32; BB]; // Σ x[b][j] where bit=0 (sign −1)
+                for wd in 0..self.words_per_row {
+                    let mut word = !self.bits[base + wd]; // set bits = −1 lanes
+                    let jbase = wd * 64;
+                    let lanes = (self.cols - jbase).min(64);
+                    if lanes < 64 {
+                        word &= (1u64 << lanes) - 1;
+                    }
+                    while word != 0 {
+                        let t = word.trailing_zeros() as usize;
+                        let j = jbase + t;
+                        for bi in 0..bw {
+                            neg[bi] += x.data[(b0 + bi) * x.cols + j];
+                        }
+                        word &= word - 1;
+                    }
+                }
+                for bi in 0..bw {
+                    out[(b0 + bi) * w + (i - r0)] = totals[b0 + bi] - 2.0 * neg[bi];
+                }
+            }
+        }
+    }
+
     /// XNOR-popcount path for *binary* activations (x ∈ ±1 packed):
     /// dot(a,b) = 64·matches − lanes. Included as the classic binary-
     /// network kernel the paper's `W_B` enables when activations are
@@ -144,6 +289,13 @@ impl BitMat {
         }
         2 * matches - self.cols as i64
     }
+}
+
+/// Per-row activation sums, accumulated in the same order as
+/// [`BitMat::matvec`]'s `total`, so the blocked/parallel kernels stay
+/// bit-identical to the scalar reference.
+fn row_totals(x: &Mat) -> Vec<f32> {
+    (0..x.rows).map(|b| x.row(b).iter().sum()).collect()
 }
 
 #[cfg(test)]
@@ -214,6 +366,59 @@ mod tests {
         let m = Mat::from_vec(2, 3, vec![1.0, -1.0, 1.0, -1.0, -1.0, -1.0]);
         let b = BitMat::from_sign_of(&m);
         assert!((b.positive_fraction() - 2.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn words_roundtrip_and_padding_canonical() {
+        let mut rng = Pcg64::seed_from_u64(64);
+        for cols in [1usize, 63, 64, 65, 130] {
+            let m = random_sign(4, cols, &mut rng);
+            let b = BitMat::from_sign_of(&m);
+            let back = BitMat::from_words(4, cols, b.words().to_vec());
+            assert_eq!(back, b, "cols={cols}");
+            // Dirty padding bits must be scrubbed by from_words.
+            if cols % 64 != 0 {
+                let mut dirty = b.words().to_vec();
+                let wpr = b.words_per_row();
+                dirty[wpr - 1] |= !((1u64 << (cols % 64)) - 1);
+                assert_eq!(BitMat::from_words(4, cols, dirty), b, "cols={cols} dirty");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_blocked_and_parallel_match_scalar() {
+        // Adversarial shapes: cols off the 64-bit word boundary,
+        // batch of 1, pool of 1 vs N. The kernels accumulate in the
+        // scalar order, so equality is exact.
+        let pool1 = crate::util::pool::ThreadPool::new(1);
+        let pool4 = crate::util::pool::ThreadPool::new(4);
+        crate::util::prop::check(
+            "bitmat-par-vs-scalar",
+            25,
+            |rng| (1 + rng.below_usize(40), 1 + rng.below_usize(150)),
+            |&(rows, cols)| {
+                let mut rng = Pcg64::seed_from_u64((rows * 151 + cols) as u64);
+                let w = Mat::from_fn(rows, cols, |_, _| if rng.bernoulli(0.5) { 1.0 } else { -1.0 });
+                let b = BitMat::from_sign_of(&w);
+                for batch in [1usize, 2, 9] {
+                    let x = Mat::randn(batch, cols, 1.0, &mut rng);
+                    let y_ref = b.matmul_bt(&x);
+                    if b.matmul_bt_blocked(&x) != y_ref {
+                        return Err(format!("blocked {rows}x{cols} batch {batch}"));
+                    }
+                    for pool in [&pool1, &pool4] {
+                        if b.matmul_bt_par(&x, pool) != y_ref {
+                            return Err(format!(
+                                "par {rows}x{cols} batch {batch} pool {}",
+                                pool.size()
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

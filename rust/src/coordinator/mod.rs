@@ -1,8 +1,9 @@
 //! Layer-3 coordination: the one-shot compression pipeline
-//! ([`pipeline`]) and the serving router/dynamic batcher ([`serve`]).
+//! ([`pipeline`]) and the serving router/dynamic batcher ([`serve`])
+//! over its two engines ([`serve::Backend`]).
 
 pub mod pipeline;
 pub mod serve;
 
 pub use pipeline::{compress_model, CompressReport, CompressedModel, Engine, PipelineError};
-pub use serve::{Request, Response, ServeStats, Server, ServerConfig};
+pub use serve::{Backend, Request, Response, ServeStats, Server, ServerConfig};

@@ -1,22 +1,33 @@
-//! Serving coordinator: request router + dynamic batcher over the
-//! AOT prefill/decode artifacts.
+//! Serving coordinator: request router + dynamic batcher over two
+//! interchangeable engines.
 //!
 //! vLLM-router-shaped, scaled to this testbed: client threads submit
 //! [`Request`]s into an mpsc queue; the router thread drains up to
-//! `serve_batch` requests (waiting at most `batch_window` for
-//! stragglers — classic dynamic batching), runs one `prefill_{cfg}`
-//! and then `decode_step_{cfg}` until every sequence in the batch hit
-//! its token budget or EOS, and completes the callers' response
-//! channels. Greedy decoding; deterministic.
+//! the batch cap (waiting at most `batch_window` for stragglers —
+//! classic dynamic batching), runs one prefill and then decode steps
+//! until every sequence in the batch hit its token budget or EOS, and
+//! completes the callers' response channels. Greedy decoding;
+//! deterministic.
 //!
-//! The compressed model serves through the same artifacts with the
-//! reconstructed `Ŵ` swapped in — identical code path, smaller
-//! deployed weights (the packed-format byte savings are measured in
-//! `bench_kernels`; end-to-end latency/throughput in
-//! `examples/serve_compressed.rs`).
+//! The engine behind the queue is a [`Backend`]:
+//!
+//! * [`Backend::Artifact`] — the AOT `prefill_{cfg}` /
+//!   `decode_step_{cfg}` XLA executables over dense weights. A
+//!   compressed model serves here with the reconstructed `Ŵ` swapped
+//!   in — identical code path, smaller *checkpoint*, but dense
+//!   request-time compute.
+//! * [`Backend::NativePacked`] — the pure-Rust
+//!   [`SlabModel`](crate::model::SlabModel) forward that consumes the
+//!   packed `W_S + u vᵀ ⊙ W_B` format directly through the parallel
+//!   blocked kernels; the byte savings become request-time memory
+//!   traffic savings (DESIGN.md §3, §6).
+//!
+//! Both backends sit behind the same [`Request`]/[`Response`] API, so
+//! the batcher, clients, and stats are engine-agnostic
+//! (`examples/serve_compressed.rs` races all three configurations).
 
-use crate::data::EOS;
-use crate::model::Params;
+use crate::data::{EOS, PAD};
+use crate::model::{greedy_token, Params, SlabModel};
 use crate::runtime::client::RuntimeError;
 use crate::runtime::{lit_i32, lit_scalar_i32, to_vec_f32, Runtime};
 use std::path::PathBuf;
@@ -75,29 +86,75 @@ impl ServeStats {
 pub struct ServerConfig {
     /// Max time the router waits to fill a batch.
     pub batch_window: Duration,
+    /// Batch cap for [`Backend::NativePacked`] (the artifact backend's
+    /// cap is baked into its static-shaped executables, so it comes
+    /// from the manifest instead).
+    pub serve_batch: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             batch_window: Duration::from_millis(5),
+            serve_batch: 4,
         }
     }
 }
 
+/// The engine a [`Server`] routes batches to. Both variants serve the
+/// same [`Request`]/[`Response`] API with identical greedy-decoding
+/// semantics; they differ in *what executes a batch*:
+///
+/// * `Artifact` — XLA prefill/decode executables over an artifact
+///   directory, fed dense parameter literals (a compressed model
+///   serves its reconstructed `Ŵ`). The router thread owns the PJRT
+///   client (it is not `Send`).
+/// * `NativePacked` — a [`SlabModel`]: pure-Rust forward straight
+///   from the packed SLaB format, parallel blocked kernels, no
+///   artifacts or Python toolchain anywhere near the request path.
+pub enum Backend {
+    /// AOT artifact engine: `(artifacts_dir, params)`.
+    Artifact {
+        artifacts_dir: PathBuf,
+        params: Params,
+    },
+    /// Native packed engine (boxed: a whole model lives inside).
+    NativePacked(Box<SlabModel>),
+}
+
 impl Server {
-    /// Start the router thread. The PJRT client is *not* `Send`
-    /// (Rc-based FFI handles), so the router thread owns its own
-    /// [`Runtime`] over `artifacts_dir` — the natural shape anyway:
-    /// the engine owns the device, clients own channels. `params` is
-    /// the model to serve (dense or compressed — same ABI).
+    /// Start the router thread over the artifact backend — the
+    /// historical entry point, kept as a convenience wrapper around
+    /// [`Server::start_with`]. `params` is the model to serve (dense
+    /// or compressed — same ABI).
     pub fn start(artifacts_dir: PathBuf, params: Params, scfg: ServerConfig) -> Server {
+        Server::start_with(
+            Backend::Artifact {
+                artifacts_dir,
+                params,
+            },
+            scfg,
+        )
+    }
+
+    /// Start the router thread over an explicit [`Backend`]. The
+    /// engine is owned by the router thread (for `Artifact` that is
+    /// where the PJRT client must live; for `NativePacked` the model
+    /// and its thread pool move in) — the natural shape anyway: the
+    /// engine owns the device, clients own channels.
+    pub fn start_with(backend: Backend, scfg: ServerConfig) -> Server {
         let (tx, rx) = channel::<Job>();
         let handle = std::thread::Builder::new()
             .name("slab-router".into())
-            .spawn(move || {
-                let rt = Runtime::new(&artifacts_dir)?;
-                router_loop(&rt, params, scfg, rx)
+            .spawn(move || match backend {
+                Backend::Artifact {
+                    artifacts_dir,
+                    params,
+                } => {
+                    let rt = Runtime::new(&artifacts_dir)?;
+                    router_loop(&rt, params, scfg, rx)
+                }
+                Backend::NativePacked(model) => native_router_loop(&model, scfg, rx),
             })
             .expect("spawn router");
         Server {
@@ -153,24 +210,9 @@ fn router_loop(
 
     'outer: loop {
         // --- gather a batch (dynamic batching) -------------------------
-        let mut jobs: Vec<Job> = Vec::with_capacity(cap);
-        match rx.recv() {
-            Ok(j) => jobs.push(j),
-            Err(_) => break 'outer, // all senders dropped
-        }
-        let window_end = Instant::now() + scfg.batch_window;
-        while jobs.len() < cap {
-            match rx.try_recv() {
-                Ok(j) => jobs.push(j),
-                Err(TryRecvError::Empty) => {
-                    if Instant::now() >= window_end {
-                        break;
-                    }
-                    std::thread::yield_now();
-                }
-                Err(TryRecvError::Disconnected) => break,
-            }
-        }
+        let Some(jobs) = gather_batch(&rx, cap, scfg.batch_window) else {
+            break 'outer; // all senders dropped
+        };
         let t_batch = Instant::now();
         stats.batches += 1;
         stats.requests += jobs.len();
@@ -208,20 +250,12 @@ fn router_loop(
                     done[s] = true;
                     continue;
                 }
-                let row = &l[s * cfg.vocab..(s + 1) * cfg.vocab];
-                let mut best = 4usize; // never emit specials by argmax ties
-                let mut best_v = f32::NEG_INFINITY;
-                for (tid, &v) in row.iter().enumerate() {
-                    if v > best_v {
-                        best_v = v;
-                        best = tid;
-                    }
-                }
-                next[s] = best as i32;
-                if best as i32 == EOS {
+                let tok = greedy_token(&l[s * cfg.vocab..(s + 1) * cfg.vocab]);
+                next[s] = tok;
+                if tok == EOS {
                     done[s] = true;
                 } else {
-                    generated[s].push(best as i32);
+                    generated[s].push(tok);
                     stats.generated_tokens += 1;
                 }
             }
@@ -256,10 +290,209 @@ fn router_loop(
     Ok(stats)
 }
 
+/// Drain up to `cap` jobs: block for the first, then poll for
+/// stragglers until the batch window closes. `None` once all senders
+/// dropped and the queue is empty (shutdown).
+fn gather_batch(rx: &Receiver<Job>, cap: usize, window: Duration) -> Option<Vec<Job>> {
+    let mut jobs: Vec<Job> = Vec::with_capacity(cap);
+    match rx.recv() {
+        Ok(j) => jobs.push(j),
+        Err(_) => return None,
+    }
+    let window_end = Instant::now() + window;
+    while jobs.len() < cap {
+        match rx.try_recv() {
+            Ok(j) => jobs.push(j),
+            Err(TryRecvError::Empty) => {
+                if Instant::now() >= window_end {
+                    break;
+                }
+                std::thread::yield_now();
+            }
+            Err(TryRecvError::Disconnected) => break,
+        }
+    }
+    Some(jobs)
+}
+
+/// The [`Backend::NativePacked`] router: same dynamic batching,
+/// greedy policy, and accounting as [`router_loop`], but prefill and
+/// decode run through [`SlabModel`] — no PJRT, no padding the batch
+/// up to an artifact's static shape (the native engine takes the
+/// actual batch size).
+fn native_router_loop(
+    model: &SlabModel,
+    scfg: ServerConfig,
+    rx: Receiver<Job>,
+) -> Result<ServeStats, RuntimeError> {
+    let cap = scfg.serve_batch.max(1);
+    let prompt_len = model.cfg.prompt_len;
+    let mut stats = ServeStats::default();
+    let t_start = Instant::now();
+
+    loop {
+        let Some(jobs) = gather_batch(&rx, cap, scfg.batch_window) else {
+            break;
+        };
+        let t_batch = Instant::now();
+        stats.batches += 1;
+        stats.requests += jobs.len();
+        let bsz = jobs.len();
+
+        // --- prefill: left-aligned prompts, PAD-padded ------------------
+        let vmax = model.cfg.vocab.saturating_sub(1) as i32;
+        let mut flat = vec![PAD; bsz * prompt_len];
+        for (s, job) in jobs.iter().enumerate() {
+            let p = &job.req.prompt;
+            let n = p.len().min(prompt_len);
+            for (j, &tok) in p[..n].iter().enumerate() {
+                // Clamp malformed ids like the artifact backend does
+                // (XLA gather clamps OOB indices): one bad request
+                // must not panic the router thread for everyone.
+                flat[s * prompt_len + j] = tok.clamp(0, vmax);
+            }
+        }
+        let (mut logits, mut cache) = model.prefill(&flat, bsz);
+
+        // --- decode loop -------------------------------------------------
+        let max_new: usize = jobs
+            .iter()
+            .map(|j| j.req.max_new)
+            .max()
+            .unwrap_or(0)
+            .min(model.cfg.max_seq.saturating_sub(prompt_len));
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); bsz];
+        let mut done = vec![false; bsz];
+        for step in 0..max_new {
+            let mut next = vec![EOS; bsz];
+            for (s, job) in jobs.iter().enumerate() {
+                if done[s] || step >= job.req.max_new {
+                    done[s] = true;
+                    continue;
+                }
+                let tok = greedy_token(logits.row(s));
+                next[s] = tok;
+                if tok == EOS {
+                    done[s] = true;
+                } else {
+                    generated[s].push(tok);
+                    stats.generated_tokens += 1;
+                }
+            }
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            logits = model.decode_step(&mut cache, &next, prompt_len + step);
+        }
+
+        // --- respond -------------------------------------------------------
+        for (s, job) in jobs.into_iter().enumerate() {
+            let _ = job.reply.send(Response {
+                tokens: std::mem::take(&mut generated[s]),
+                queue_ms: (t_batch - job.submitted).as_secs_f64() * 1e3,
+                latency_ms: job.submitted.elapsed().as_secs_f64() * 1e3,
+            });
+        }
+    }
+    stats.wall_secs = t_start.elapsed().as_secs_f64();
+    Ok(stats)
+}
+
 fn take3(mut outs: Vec<xla::Literal>) -> (xla::Literal, xla::Literal, xla::Literal) {
     assert!(outs.len() >= 3);
     let c = outs.pop().unwrap();
     let b = outs.pop().unwrap();
     let a = outs.pop().unwrap();
     (a, b, c)
+}
+
+#[cfg(test)]
+mod tests {
+    //! The native backend needs no artifacts, so the router/batcher
+    //! invariants get exercised on every `cargo test`, not only when
+    //! `make artifacts` has run.
+
+    use super::*;
+    use crate::runtime::ModelCfg;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg::llama("tiny-serve", 32, 8, 1, 2, 16, 12, 4)
+    }
+
+    #[test]
+    fn native_backend_serves_every_request_exactly_once() {
+        let cfg = tiny_cfg();
+        let model = SlabModel::from_dense(&Params::init(&cfg, 51), 2);
+        let scfg = ServerConfig {
+            serve_batch: 3,
+            ..Default::default()
+        };
+        let server = Server::start_with(Backend::NativePacked(Box::new(model)), scfg);
+        let n = 10;
+        let rxs: Vec<_> = (0..n)
+            .map(|i| {
+                server.submit(Request {
+                    prompt: vec![5 + i as i32, 6, 7],
+                    max_new: 1 + (i % 4),
+                })
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().expect("response");
+            assert!(r.tokens.len() <= 1 + (i % 4), "token budget violated");
+            assert!(r.latency_ms >= r.queue_ms);
+            assert!(r.tokens.iter().all(|&t| t != EOS && t != PAD));
+        }
+        let stats = server.shutdown().expect("stats");
+        assert_eq!(stats.requests, n);
+        assert!(stats.batches >= n.div_ceil(3));
+        assert!(stats.requests <= stats.batches * 3);
+        assert!(stats.wall_secs > 0.0);
+    }
+
+    #[test]
+    fn native_backend_survives_out_of_vocab_prompts() {
+        // Malformed token ids are clamped (like XLA gather in the
+        // artifact backend), not allowed to panic the router thread.
+        let cfg = tiny_cfg();
+        let model = SlabModel::from_dense(&Params::init(&cfg, 53), 1);
+        let server = Server::start_with(
+            Backend::NativePacked(Box::new(model)),
+            ServerConfig::default(),
+        );
+        let bad = server.generate(Request {
+            prompt: vec![-7, i32::MAX, 9999, 5],
+            max_new: 3,
+        });
+        assert!(bad.tokens.len() <= 3);
+        // The server is still alive and serves well-formed requests.
+        let ok = server.generate(Request {
+            prompt: vec![5, 6],
+            max_new: 3,
+        });
+        assert!(ok.tokens.len() <= 3);
+        let stats = server.shutdown().expect("stats");
+        assert_eq!(stats.requests, 2);
+    }
+
+    #[test]
+    fn native_backend_is_deterministic_across_servers() {
+        let cfg = tiny_cfg();
+        let run = || {
+            let model = SlabModel::from_dense(&Params::init(&cfg, 52), 1);
+            let server = Server::start_with(
+                Backend::NativePacked(Box::new(model)),
+                ServerConfig::default(),
+            );
+            let out = server
+                .generate(Request {
+                    prompt: vec![9, 10, 11],
+                    max_new: 6,
+                })
+                .tokens;
+            server.shutdown().expect("stats");
+            out
+        };
+        assert_eq!(run(), run());
+    }
 }

@@ -23,12 +23,14 @@
 //!   Algorithm 1, compression-ratio accounting, packed layers.
 //! * [`baselines`] — magnitude, Wanda, SparseGPT (OBS), naive
 //!   sparse+low-rank.
-//! * [`model`] — Llama-architecture configs, parameters, native fwd.
+//! * [`model`] — Llama-architecture configs, parameters, and the
+//!   native packed-serving model (`SlabModel`).
 //! * [`runtime`] — PJRT client / artifact registry / typed execution.
 //! * [`data`] — synthetic grammar corpus, tokenizer, calibration sets.
 //! * [`train`] — drives the AOT train-step artifact.
 //! * [`eval`] — perplexity + zero-shot suites.
-//! * [`coordinator`] — layer-wise pruning pipeline + serving router.
+//! * [`coordinator`] — layer-wise pruning pipeline + serving router
+//!   with two engines (AOT artifacts / native packed).
 //! * [`report`] — paper-style table rendering.
 
 pub mod baselines;

@@ -1,10 +1,17 @@
 //! Model-side state: the canonical parameter store (matching the
-//! manifest's flat order), initialization, and checkpoint I/O.
+//! manifest's flat order), initialization, checkpoint I/O, and the
+//! native packed-serving model.
 //!
-//! The transformer *computation* lives in the AOT artifacts (L2); this
-//! module owns the host-side representation the coordinator mutates
-//! when it swaps compressed weights in.
+//! The transformer *computation* has two homes: the AOT artifacts
+//! (L2) consumed through [`crate::runtime`], and the pure-Rust
+//! [`native::SlabModel`] forward that serves straight from the packed
+//! SLaB format — the engine behind
+//! [`crate::coordinator::serve::Backend::NativePacked`]
+//! (DESIGN.md §6). This module owns the host-side representations the
+//! coordinator mutates when it swaps compressed weights in.
 
+pub mod native;
 pub mod params;
 
+pub use native::{greedy_token, KvCache, Linear, SlabModel};
 pub use params::Params;

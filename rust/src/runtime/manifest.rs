@@ -42,6 +42,73 @@ pub struct ModelCfg {
 }
 
 impl ModelCfg {
+    /// Build a Llama-family config programmatically, mirroring
+    /// `model.py::ModelConfig.{param_names,param_shapes,pruned_linears,
+    /// slab_param_names}` — the shape contract shared by the native
+    /// engine, the tests, and the manifest, usable without an
+    /// artifact directory.
+    #[allow(clippy::too_many_arguments)]
+    pub fn llama(
+        name: &str,
+        vocab: usize,
+        dim: usize,
+        n_layers: usize,
+        n_heads: usize,
+        ffn: usize,
+        max_seq: usize,
+        prompt_len: usize,
+    ) -> ModelCfg {
+        let mut param_names = vec!["tok_emb".to_string()];
+        let mut param_shapes = vec![vec![vocab, dim]];
+        let mut slab_param_names = vec!["tok_emb".to_string()];
+        let mut pruned = Vec::new();
+        for l in 0..n_layers {
+            let block: [(&str, Vec<usize>); 9] = [
+                ("attn_norm", vec![dim]),
+                ("wq", vec![dim, dim]),
+                ("wk", vec![dim, dim]),
+                ("wv", vec![dim, dim]),
+                ("wo", vec![dim, dim]),
+                ("mlp_norm", vec![dim]),
+                ("w_gate", vec![ffn, dim]),
+                ("w_up", vec![ffn, dim]),
+                ("w_down", vec![dim, ffn]),
+            ];
+            for (base, shape) in block {
+                let pname = format!("l{l}.{base}");
+                if shape.len() == 2 {
+                    pruned.push((pname.clone(), (shape[0], shape[1])));
+                    for suffix in ["ws", "u", "v", "b"] {
+                        slab_param_names.push(format!("{pname}.{suffix}"));
+                    }
+                } else {
+                    slab_param_names.push(pname.clone());
+                }
+                param_names.push(pname);
+                param_shapes.push(shape);
+            }
+        }
+        for (pname, shape) in [("final_norm", vec![dim]), ("lm_head", vec![vocab, dim])] {
+            param_names.push(pname.to_string());
+            slab_param_names.push(pname.to_string());
+            param_shapes.push(shape);
+        }
+        ModelCfg {
+            name: name.to_string(),
+            vocab,
+            dim,
+            n_layers,
+            n_heads,
+            ffn,
+            max_seq,
+            prompt_len,
+            param_names,
+            param_shapes,
+            pruned,
+            slab_param_names,
+        }
+    }
+
     pub fn head_dim(&self) -> usize {
         self.dim / self.n_heads
     }
@@ -275,6 +342,23 @@ mod tests {
         let a = m.artifact("eval_nll_tiny").unwrap();
         assert_eq!(a.inputs[0].shape, vec![64, 16]);
         assert_eq!(a.outputs[0].name, "nll_sum");
+    }
+
+    #[test]
+    fn llama_cfg_matches_model_py_contract() {
+        let cfg = ModelCfg::llama("t", 48, 16, 2, 4, 24, 20, 6);
+        assert_eq!(cfg.param_names.len(), 1 + 2 * 9 + 2);
+        assert_eq!(cfg.param_names.len(), cfg.param_shapes.len());
+        assert_eq!(cfg.pruned.len(), 7 * cfg.n_layers);
+        // slab order: dense entries stay, pruned expand to 4.
+        assert_eq!(cfg.slab_param_names.len(), 1 + 2 * (2 + 7 * 4) + 2);
+        assert_eq!(cfg.param_index("l1.w_down"), Some(1 + 9 + 8));
+        assert_eq!(cfg.head_dim(), 4);
+        assert_eq!(
+            cfg.pruned[0],
+            ("l0.wq".to_string(), (16, 16))
+        );
+        assert_eq!(&cfg.slab_param_names[1..5], &["l0.attn_norm", "l0.wq.ws", "l0.wq.u", "l0.wq.v"]);
     }
 
     #[test]

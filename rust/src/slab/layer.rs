@@ -11,6 +11,7 @@ use super::decompose::Decomposition;
 use crate::binary::BitMat;
 use crate::sparse::Csr;
 use crate::tensor::{Checkpoint, Entry, Mat, TensorData};
+use crate::util::pool::ThreadPool;
 
 /// A compressed linear layer ready to serve.
 #[derive(Debug, Clone, PartialEq)]
@@ -67,6 +68,51 @@ impl SlabLayer {
                 let yrow = y.row_mut(b);
                 for i in 0..self.dout() {
                     yrow[i] += self.u[k][i] * trow[i];
+                }
+            }
+        }
+        y
+    }
+
+    /// Fused compressed forward — the serving hot path.
+    ///
+    /// Same contraction as [`forward`](SlabLayer::forward) (and
+    /// bit-identical to it: the underlying blocked/parallel kernels
+    /// accumulate in the scalar order), but fused: the `x ⊙ v_k`
+    /// scale, the ±1 matmul, and the `u_k ⊙ ·` scale-accumulate reuse
+    /// two scratch matrices across every rank instead of allocating a
+    /// fresh `(B, Dout)` per rank, the sparse and binary matmuls run
+    /// cache-blocked, and with `pool = Some(_)` both are row-chunked
+    /// across the [`ThreadPool`]. `SlabModel` routes every packed
+    /// linear through here.
+    pub fn forward_fused(&self, x: &Mat, pool: Option<&ThreadPool>) -> Mat {
+        assert_eq!(x.cols, self.din());
+        let mut y = match pool {
+            Some(p) => self.w_s.spmm_bt_par(x, p),
+            None => self.w_s.spmm_bt_blocked(x),
+        };
+        // One scratch pair reused across all ranks.
+        let mut scaled = Mat::zeros(x.rows, x.cols);
+        let mut t = Mat::zeros(x.rows, self.dout());
+        for k in 0..self.rank() {
+            let vk = &self.v[k];
+            for b in 0..x.rows {
+                let xrow = x.row(b);
+                let srow = scaled.row_mut(b);
+                for j in 0..x.cols {
+                    srow[j] = xrow[j] * vk[j];
+                }
+            }
+            match pool {
+                Some(p) => self.w_b.matmul_bt_par_into(&scaled, p, &mut t),
+                None => self.w_b.matmul_bt_blocked_into(&scaled, &mut t),
+            }
+            let uk = &self.u[k];
+            for b in 0..x.rows {
+                let trow = t.row(b);
+                let yrow = y.row_mut(b);
+                for i in 0..self.dout() {
+                    yrow[i] += uk[i] * trow[i];
                 }
             }
         }
@@ -140,15 +186,19 @@ impl SlabLayer {
                 self.v[k].clone(),
             ));
         }
-        // Bit matrix as raw sign bytes of the dense form is wasteful;
-        // store the packed dense ±1 as u8 0/1 per element — still
-        // 8× the true bit size on disk, but simple; the in-memory and
-        // accounting sizes use the real bit packing.
-        let dense = self.w_b.to_dense();
+        // Bit matrix stored as its packed u64 bitplane words
+        // (little-endian bytes): the true 1-bit/element size on disk
+        // (modulo row padding), 8× smaller than the legacy
+        // u8-per-element form, which `load_from` still accepts.
+        let words = self.w_b.words();
+        let mut bytes = Vec::with_capacity(words.len() * 8);
+        for &w in words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
         ck.push(Entry {
-            name: format!("{prefix}.wb"),
-            dims: vec![self.dout(), self.din()],
-            data: TensorData::U8(dense.data.iter().map(|&x| (x >= 0.0) as u8).collect()),
+            name: format!("{prefix}.wb.bits"),
+            dims: vec![self.dout(), self.w_b.words_per_row() * 8],
+            data: TensorData::U8(bytes),
         });
     }
 
@@ -190,19 +240,35 @@ impl SlabLayer {
             v.push(ve.data.as_f32()?.to_vec());
             k += 1;
         }
-        let wb_entry = ck.get(&format!("{prefix}.wb"))?;
-        let bytes = wb_entry.data.as_u8()?;
-        let dense = Mat::from_vec(
-            dout,
-            din,
-            bytes.iter().map(|&b| if b != 0 { 1.0 } else { -1.0 }).collect(),
-        );
-        Some(SlabLayer {
-            w_s,
-            u,
-            v,
-            w_b: BitMat::from_sign_of(&dense),
-        })
+        let w_b = if let Some(e) = ck.get(&format!("{prefix}.wb.bits")) {
+            // Packed u64 bitplane words (current format).
+            let bytes = e.data.as_u8()?;
+            let wpr = din.div_ceil(64);
+            if bytes.len() != dout * wpr * 8 {
+                return None;
+            }
+            let words: Vec<u64> = bytes
+                .chunks_exact(8)
+                .map(|c| {
+                    u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+                })
+                .collect();
+            BitMat::from_words(dout, din, words)
+        } else {
+            // Legacy u8-per-element form (pre-packed checkpoints).
+            let e = ck.get(&format!("{prefix}.wb"))?;
+            let bytes = e.data.as_u8()?;
+            if bytes.len() != dout * din {
+                return None;
+            }
+            let dense = Mat::from_vec(
+                dout,
+                din,
+                bytes.iter().map(|&b| if b != 0 { 1.0 } else { -1.0 }).collect(),
+            );
+            BitMat::from_sign_of(&dense)
+        };
+        Some(SlabLayer { w_s, u, v, w_b })
     }
 }
 
@@ -286,5 +352,49 @@ mod tests {
         let back = Checkpoint::load(&path).unwrap();
         let l2 = SlabLayer::load_from(&back, "blk0.q").unwrap();
         assert_eq!(l2, l);
+    }
+
+    #[test]
+    fn checkpoint_wb_is_bitpacked_on_disk() {
+        let (_, l) = layer(106);
+        let mut ck = Checkpoint::new();
+        l.save_into(&mut ck, "p");
+        let e = ck.get("p.wb.bits").unwrap();
+        let bytes = e.data.as_u8().unwrap();
+        // 1 bit per element (+ row padding to the 64-bit word), not 1 byte.
+        assert_eq!(bytes.len(), l.dout() * l.din().div_ceil(64) * 8);
+        assert!(bytes.len() * 8 < l.dout() * l.din() * 8);
+        assert!(ck.get("p.wb").is_none(), "legacy entry must not be written");
+    }
+
+    #[test]
+    fn checkpoint_loads_legacy_u8_wb() {
+        // Simulate a checkpoint written before the packed format: same
+        // entries, but W_B as one u8 per element under `{prefix}.wb`.
+        let (_, l) = layer(107);
+        let mut ck = Checkpoint::new();
+        l.save_into(&mut ck, "q");
+        ck.entries.retain(|e| e.name != "q.wb.bits");
+        let dense = l.w_b.to_dense();
+        ck.push(Entry {
+            name: "q.wb".into(),
+            dims: vec![l.dout(), l.din()],
+            data: TensorData::U8(dense.data.iter().map(|&x| (x >= 0.0) as u8).collect()),
+        });
+        let back = SlabLayer::load_from(&ck, "q").unwrap();
+        assert_eq!(back, l);
+    }
+
+    #[test]
+    fn fused_forward_is_bit_identical_to_reference() {
+        let (_, l) = layer(108);
+        let mut rng = Pcg64::seed_from_u64(109);
+        let pool = ThreadPool::new(4);
+        for batch in [1usize, 2, 7] {
+            let x = Mat::randn(batch, 72, 1.0, &mut rng);
+            let y_ref = l.forward(&x);
+            assert_eq!(l.forward_fused(&x, None), y_ref, "fused batch {batch}");
+            assert_eq!(l.forward_fused(&x, Some(&pool)), y_ref, "fused+pool batch {batch}");
+        }
     }
 }

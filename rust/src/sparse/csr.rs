@@ -7,6 +7,13 @@
 //! directly (`spmv_t` / `spmm_bt`).
 
 use crate::tensor::Mat;
+use crate::util::pool::{chunk_ranges, ThreadPool};
+
+/// Batch-block width for the cache-blocked kernels: the CSR metadata
+/// (`col_idx` + `vals`) is streamed once per block of activation rows
+/// instead of once per row, and `BB` activation rows (≤ a few KiB each
+/// at testbed widths) stay L1-resident across the stream.
+const BB: usize = 8;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Csr {
@@ -103,6 +110,77 @@ impl Csr {
             }
         }
         y
+    }
+
+    /// Cache-blocked `spmm_bt`: identical math to [`spmm_bt`]
+    /// (bit-identical output — each `y[b][i]` accumulates the same
+    /// products in the same order), but the sparse row's metadata is
+    /// read once per [`BB`]-row batch block. Single-threaded; the
+    /// serving path composes it with [`spmm_bt_par`].
+    ///
+    /// [`spmm_bt`]: Csr::spmm_bt
+    /// [`spmm_bt_par`]: Csr::spmm_bt_par
+    pub fn spmm_bt_blocked(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.cols, "spmm_bt_blocked: x cols {} vs W cols {}", x.cols, self.cols);
+        let mut y = Mat::zeros(x.rows, self.rows);
+        // Full-range strip layout coincides with y's row-major layout.
+        self.spmm_rows_blocked(x, 0, self.rows, &mut y.data);
+        y
+    }
+
+    /// [`ThreadPool`]-parallel `spmm_bt`: weight rows are chunked
+    /// across the pool (so a batch of 1 still parallelizes over
+    /// `Dout`), each chunk runs the cache-blocked kernel into a
+    /// private strip, and strips are scattered into `y` afterwards.
+    /// Output is bit-identical to the scalar [`spmm_bt`](Csr::spmm_bt).
+    pub fn spmm_bt_par(&self, x: &Mat, pool: &ThreadPool) -> Mat {
+        assert_eq!(x.cols, self.cols, "spmm_bt_par: x cols {} vs W cols {}", x.cols, self.cols);
+        if pool.size() <= 1 || self.rows < 2 {
+            return self.spmm_bt_blocked(x);
+        }
+        let mut y = Mat::zeros(x.rows, self.rows);
+        let ranges = chunk_ranges(self.rows, pool.size());
+        let mut strips: Vec<Vec<f32>> = ranges
+            .iter()
+            .map(|&(r0, r1)| vec![0.0f32; x.rows * (r1 - r0)])
+            .collect();
+        let jobs: Vec<_> = strips
+            .iter_mut()
+            .zip(ranges.iter().copied())
+            .map(|(strip, (r0, r1))| move || self.spmm_rows_blocked(x, r0, r1, strip))
+            .collect();
+        pool.scoped(jobs);
+        for (strip, &(r0, r1)) in strips.iter().zip(ranges.iter()) {
+            let w = r1 - r0;
+            for b in 0..x.rows {
+                y.row_mut(b)[r0..r1].copy_from_slice(&strip[b * w..(b + 1) * w]);
+            }
+        }
+        y
+    }
+
+    /// Blocked kernel over weight rows `[r0, r1)`; `out` is a strip in
+    /// `[b][i - r0]` layout (length `x.rows * (r1 - r0)`).
+    fn spmm_rows_blocked(&self, x: &Mat, r0: usize, r1: usize, out: &mut [f32]) {
+        let w = r1 - r0;
+        debug_assert_eq!(out.len(), x.rows * w);
+        for b0 in (0..x.rows).step_by(BB) {
+            let bw = (x.rows - b0).min(BB);
+            for i in r0..r1 {
+                let (s, e) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+                let mut acc = [0.0f32; BB];
+                for k in s..e {
+                    let j = self.col_idx[k] as usize;
+                    let v = self.vals[k];
+                    for bi in 0..bw {
+                        acc[bi] += v * x.data[(b0 + bi) * x.cols + j];
+                    }
+                }
+                for bi in 0..bw {
+                    out[(b0 + bi) * w + (i - r0)] = acc[bi];
+                }
+            }
+        }
     }
 
     /// Structural validation (sorted unique col indices per row,
@@ -228,5 +306,55 @@ mod tests {
         let m = sparse_random(8, 8, 0.5, &mut rng);
         let csr = Csr::from_dense(&m);
         assert_eq!(csr.nbytes(), csr.nnz() * 8 + (8 + 1) * 4);
+    }
+
+    #[test]
+    fn blocked_is_bit_identical_to_scalar() {
+        // Same products in the same order — not merely allclose.
+        let mut rng = Pcg64::seed_from_u64(45);
+        for (rows, cols, batch) in [(33, 17, 1), (64, 64, 9), (7, 130, 4), (1, 5, 11)] {
+            let w = sparse_random(rows, cols, 0.3, &mut rng);
+            let x = Mat::randn(batch, cols, 1.0, &mut rng);
+            let csr = Csr::from_dense(&w);
+            assert_eq!(csr.spmm_bt_blocked(&x), csr.spmm_bt(&x), "{rows}x{cols} b{batch}");
+        }
+    }
+
+    #[test]
+    fn prop_parallel_matches_scalar_adversarial_shapes() {
+        // Pool of 1 vs N, batch of 1, rows with no nonzeros, shapes
+        // around the cache-block boundary.
+        let pool1 = crate::util::pool::ThreadPool::new(1);
+        let pool4 = crate::util::pool::ThreadPool::new(4);
+        crate::util::prop::check(
+            "csr-par-vs-scalar",
+            30,
+            |rng| {
+                (
+                    1 + rng.below_usize(70), // rows
+                    1 + rng.below_usize(70), // cols
+                )
+            },
+            |&(rows, cols)| {
+                let mut rng = Pcg64::seed_from_u64((rows * 131 + cols) as u64);
+                // Low density so some rows are entirely empty.
+                let w = sparse_random(rows, cols, 0.08, &mut rng);
+                let csr = Csr::from_dense(&w);
+                for batch in [1usize, 3, 8, 13] {
+                    let x = Mat::randn(batch, cols, 1.0, &mut rng);
+                    let y_ref = csr.spmm_bt(&x);
+                    for pool in [&pool1, &pool4] {
+                        let y = csr.spmm_bt_par(&x, pool);
+                        if y != y_ref {
+                            return Err(format!(
+                                "{rows}x{cols} batch {batch} pool {}",
+                                pool.size()
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -1,16 +1,21 @@
-//! Thread-pool + job-queue substrate (no `tokio` offline).
+//! Thread-pool + job-queue substrate (no `tokio`/`rayon` offline).
 //!
 //! The coordinator uses this for (a) the layer-wise pruning pipeline's
-//! worker jobs and (b) the serving router's request handling. It is a
+//! worker jobs, (b) the serving router's request handling, and (c) the
+//! parallel packed kernels (`Csr::spmm_bt_par`,
+//! `BitMat::matmul_bt_par`, `SlabLayer::forward_fused`). It is a
 //! classic fixed-size pool over `std::sync::mpsc` with:
 //!
 //! * `execute(job)` — fire-and-forget,
-//! * `scope`-style `map` — run a batch of jobs and collect results in
-//!   input order,
+//! * `map` — run a batch of owned jobs and collect results in input
+//!   order,
+//! * `scoped` — run a batch of *borrowing* jobs (rayon-scope-shaped;
+//!   the kernel fork-join primitive) and block until all complete,
 //! * graceful shutdown on drop (workers drain the queue first).
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -91,6 +96,87 @@ impl ThreadPool {
         }
         slots.into_iter().map(|s| s.unwrap()).collect()
     }
+
+    /// Run a batch of *borrowing* jobs on the pool and block until every
+    /// one has finished — the fork-join primitive behind the parallel
+    /// kernels. Unlike [`map`](ThreadPool::map), jobs may capture
+    /// references to the caller's stack (the weight matrix, the
+    /// activation batch, disjoint `&mut` output chunks), which is what
+    /// a row-chunked matmul needs.
+    ///
+    /// Panics (after all jobs settled) if any job panicked, so a kernel
+    /// bug cannot silently yield a half-written output.
+    ///
+    /// Must not be called from inside a pool worker (a pool of size 1
+    /// would deadlock on itself); the kernels only call it from
+    /// coordinator/serving threads.
+    pub fn scoped<'env, F>(&self, jobs: Vec<F>)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        let latch = Arc::new((Mutex::new(n), Condvar::new()));
+        let poisoned = Arc::new(AtomicBool::new(false));
+        for job in jobs {
+            let latch = Arc::clone(&latch);
+            let poisoned = Arc::clone(&poisoned);
+            // SAFETY: the transmute only erases the `'env` lifetime of
+            // the boxed job. We block on the latch below until every
+            // job has run (the decrement lives in a drop guard, so a
+            // panicking job still releases its slot), hence no borrow
+            // captured by `job` outlives this call.
+            let job: Box<dyn FnOnce() + Send + 'env> = Box::new(job);
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
+            self.execute(move || {
+                struct Guard(Arc<(Mutex<usize>, Condvar)>);
+                impl Drop for Guard {
+                    fn drop(&mut self) {
+                        let (left, cv) = &*self.0;
+                        let mut left = left.lock().unwrap_or_else(|p| p.into_inner());
+                        *left -= 1;
+                        if *left == 0 {
+                            cv.notify_all();
+                        }
+                    }
+                }
+                let _guard = Guard(latch);
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
+                    poisoned.store(true, Ordering::SeqCst);
+                }
+            });
+        }
+        let (left, cv) = &*latch;
+        let mut left = left.lock().unwrap_or_else(|p| p.into_inner());
+        while *left > 0 {
+            left = cv.wait(left).unwrap_or_else(|p| p.into_inner());
+        }
+        drop(left);
+        if poisoned.load(Ordering::SeqCst) {
+            panic!("scoped pool job panicked");
+        }
+    }
+}
+
+/// Split `0..n` into at most `parts` contiguous ranges of near-equal
+/// length — the chunking scheme every row-parallel kernel uses. Empty
+/// for `n == 0`; never yields an empty range.
+pub fn chunk_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let chunk = n.div_ceil(parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut r0 = 0;
+    while r0 < n {
+        let r1 = (r0 + chunk).min(n);
+        out.push((r0, r1));
+        r0 = r1;
+    }
+    out
 }
 
 fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
@@ -183,5 +269,73 @@ mod tests {
     fn zero_size_uses_available_parallelism() {
         let pool = ThreadPool::new(0);
         assert!(pool.size() >= 1);
+    }
+
+    #[test]
+    fn scoped_jobs_borrow_disjoint_chunks() {
+        // The exact shape the parallel kernels use: jobs write through
+        // disjoint &mut chunks of a caller-owned buffer.
+        for size in [1, 4] {
+            let pool = ThreadPool::new(size);
+            let mut out = vec![0usize; 64];
+            let jobs: Vec<_> = out
+                .chunks_mut(16)
+                .enumerate()
+                .map(|(c, chunk)| {
+                    move || {
+                        for (i, v) in chunk.iter_mut().enumerate() {
+                            *v = c * 16 + i;
+                        }
+                    }
+                })
+                .collect();
+            pool.scoped(jobs);
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, i, "pool size {size}");
+            }
+        }
+    }
+
+    #[test]
+    fn scoped_empty_batch_is_noop() {
+        let pool = ThreadPool::new(2);
+        let jobs: Vec<fn()> = Vec::new();
+        pool.scoped(jobs);
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped pool job panicked")]
+    fn scoped_propagates_job_panics() {
+        let pool = ThreadPool::new(2);
+        let jobs: Vec<_> = (0..3)
+            .map(|i| {
+                move || {
+                    if i == 1 {
+                        panic!("boom");
+                    }
+                }
+            })
+            .collect();
+        pool.scoped(jobs);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_without_overlap() {
+        for (n, parts) in [(0usize, 4usize), (1, 4), (7, 3), (64, 4), (5, 16), (100, 1)] {
+            let ranges = chunk_ranges(n, parts);
+            if n == 0 {
+                assert!(ranges.is_empty());
+                continue;
+            }
+            assert!(ranges.len() <= parts.max(1));
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges.last().unwrap().1, n);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous n={n} parts={parts}");
+            }
+            for &(r0, r1) in &ranges {
+                assert!(r0 < r1, "non-empty n={n} parts={parts}");
+            }
+        }
     }
 }
