@@ -1,18 +1,44 @@
-//! Serving demo: dynamic-batched generation over the two serving
-//! engines — AOT artifacts (dense and SLaB-reconstructed weights) and
-//! the native packed backend that consumes the compressed format
-//! directly.
+//! Serving demo: batched generation over the serving engines — AOT
+//! artifacts (dense and SLaB-reconstructed weights), the native packed
+//! backend that consumes the compressed format directly, and the same
+//! packed engine behind the continuous-batching scheduler.
 //!
 //! Spawns client threads that submit generation requests; the router
-//! batches them up to the batch cap, reports throughput, latency
-//! percentiles, batch occupancy, and the deployed-weight byte ratio.
+//! batches them (dynamic batching for the first three, continuous
+//! batching for the fourth), reports throughput, latency percentiles,
+//! batch occupancy, and the deployed-weight byte ratio.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_compressed -- [--model small] [--requests 24]
 //! ```
 
+// Clippy policy: the kernel/numeric code here deliberately uses
+// explicit index loops, operator-named helpers (`Mat::add`), and
+// `vec!` literals in tests; the style/complexity lints below fight
+// that idiom, so they are allowed target-wide while CI's
+// `clippy --all-targets -- -D warnings` enforces everything else.
+// (Centralize into a `[lints.clippy]` manifest table once a
+// Cargo.toml lands in-tree.)
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::should_implement_trait,
+    clippy::manual_range_contains,
+    clippy::comparison_chain,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if,
+    clippy::useless_vec,
+    clippy::manual_memcpy,
+    clippy::large_enum_variant,
+    clippy::module_inception,
+    clippy::new_without_default
+)]
+
 use slab::baselines::Method;
-use slab::coordinator::{compress_model, Backend, Engine, Request, Server, ServerConfig};
+use slab::coordinator::{
+    compress_model, Backend, Engine, Request, SchedulerConfig, Server, ServerConfig,
+};
 use slab::experiments::Lab;
 use slab::model::SlabModel;
 use slab::slab::SlabConfig;
@@ -137,6 +163,23 @@ fn main() -> anyhow::Result<()> {
         Server::start_with(Backend::NativePacked(Box::new(native)), ServerConfig::default()),
         &prompts,
         "slab-native-packed",
+    )?;
+    // 4) The same packed engine behind the continuous-batching
+    //    scheduler: prefill-then-join admission, shared decode passes,
+    //    bounded-queue backpressure — token-identical responses,
+    //    higher decode throughput under concurrent load.
+    let batched = SlabModel::from_packed(&dense, &slab_layers, 0);
+    let scfg = ServerConfig {
+        sched: SchedulerConfig {
+            max_batch: 8,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    run_server(
+        Server::start_with(Backend::NativeBatched(Box::new(batched)), scfg),
+        &prompts,
+        "slab-native-batched",
     )?;
     Ok(())
 }

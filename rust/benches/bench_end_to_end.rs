@@ -1,17 +1,122 @@
-//! End-to-end benches over the AOT artifacts: train-step latency,
-//! eval throughput, and serving (prefill + decode) tokens/sec.
-//! Skips gracefully when `artifacts/` is missing.
+//! End-to-end benches: native packed serving (serial vs
+//! continuous-batched decode — runs on every machine, no artifacts),
+//! then the AOT-artifact path (train-step latency, eval throughput,
+//! serving tokens/sec) when `artifacts/` is present.
+
+// Clippy policy: the kernel/numeric code here deliberately uses
+// explicit index loops, operator-named helpers (`Mat::add`), and
+// `vec!` literals in tests; the style/complexity lints below fight
+// that idiom, so they are allowed target-wide while CI's
+// `clippy --all-targets -- -D warnings` enforces everything else.
+// (Centralize into a `[lints.clippy]` manifest table once a
+// Cargo.toml lands in-tree.)
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::should_implement_trait,
+    clippy::manual_range_contains,
+    clippy::comparison_chain,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if,
+    clippy::useless_vec,
+    clippy::manual_memcpy,
+    clippy::large_enum_variant,
+    clippy::module_inception,
+    clippy::new_without_default
+)]
 
 use slab::data::{build_corpus, Grammar};
-use slab::model::Params;
-use slab::runtime::{lit_i32, lit_scalar_i32, Runtime};
+use slab::model::{DecodeSlot, KvCachePool, Params, SlabModel};
+use slab::runtime::{lit_i32, lit_scalar_i32, ModelCfg, Runtime};
+use slab::slab::{decompose, ActStats, SlabConfig, SlabLayer};
+use slab::tensor::Mat;
 use slab::util::bench::Bench;
+use slab::util::rng::Pcg64;
 use std::path::Path;
 
 fn main() {
+    native_serving_bench();
+    aot_bench();
+}
+
+/// Decompose every pruned linear of `params` natively (no artifacts).
+fn compress_native(params: &Params, seed: u64) -> Vec<(String, SlabLayer)> {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let scfg = SlabConfig {
+        iters: 3,
+        svd_iters: 6,
+        ..Default::default()
+    };
+    let mut packed = Vec::new();
+    for (name, (_, din)) in params.cfg.pruned.clone() {
+        let w = params.mat(&name);
+        let stats = ActStats::from_activations(&Mat::randn(64, din, 1.0, &mut rng));
+        let d = decompose(&w, &stats, &scfg).expect("decompose");
+        packed.push((name, SlabLayer::from_decomposition(&d)));
+    }
+    packed
+}
+
+/// The continuous-batching acceptance measurement: batched decode at
+/// batch 8 vs eight serial `NativePacked`-style sessions, on a packed
+/// engine heavy enough that the weight pass dominates. The batched
+/// path reads every weight once per tick; the serial path reads it
+/// eight times — the printed speedup is the amortization factor.
+fn native_serving_bench() {
+    let cfg = ModelCfg::llama("bench-e2e-native", 128, 256, 2, 4, 512, 96, 16);
+    let params = Params::init(&cfg, 17);
+    let packed = compress_native(&params, 18);
+    let model = SlabModel::from_packed(&params, &packed, 0);
+    let mut b = Bench::new(&format!(
+        "native packed serving (dim {}, {} layers, {:.2} MiB)",
+        cfg.dim,
+        cfg.n_layers,
+        model.weights_nbytes() as f64 / (1 << 20) as f64
+    ));
+    let pos = cfg.prompt_len;
+    let tok = 5i32;
+    let prompt = |i: usize| -> Vec<i32> {
+        (0..cfg.prompt_len).map(|j| 5 + ((i + j) % 40) as i32).collect()
+    };
+
+    // Serial baseline: eight independent sessions, one decode_step each.
+    let mut caches: Vec<_> = (0..8).map(|i| model.prefill_session(&prompt(i)).1).collect();
+    let serial = b.run_throughput("serial decode_step x8 sessions", 8.0, "tok", || {
+        for cache in caches.iter_mut() {
+            model.decode_step(cache, &[tok], pos);
+        }
+    });
+
+    // Continuous-batched: the same eight sessions through one shared
+    // decode_batch pass per tick.
+    let mut kv = KvCachePool::for_model(&model, 8);
+    let steps: Vec<DecodeSlot> = (0..8)
+        .map(|i| {
+            let (_, cache) = model.prefill_session(&prompt(i));
+            DecodeSlot {
+                session: kv.adopt(cache).expect("pool capacity"),
+                token: tok,
+                pos,
+            }
+        })
+        .collect();
+    let batched = b.run_throughput("decode_batch x8 (continuous batching)", 8.0, "tok", || {
+        model.decode_batch(&mut kv, &steps)
+    });
+    b.finish();
+    println!(
+        "[acceptance] batched x8 = {:.1} tok/s vs serial x8 = {:.1} tok/s → {:.2}x",
+        batched.throughput(8.0),
+        serial.throughput(8.0),
+        batched.throughput(8.0) / serial.throughput(8.0).max(1e-9)
+    );
+}
+
+fn aot_bench() {
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts/ missing — run `make artifacts` first; skipping");
+        eprintln!("artifacts/ missing — run `make artifacts` first; skipping AOT benches");
         return;
     }
     let rt = Runtime::new(dir).expect("runtime");

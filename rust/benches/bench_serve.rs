@@ -1,0 +1,158 @@
+//! Batched-decode serving bench — the continuous-batching scheduler's
+//! hot path over the *packed* engine.
+//!
+//! Measures decode tokens/s at batch 1 / 4 / 8 through
+//! `SlabModel::decode_batch` (one shared weight pass per tick) against
+//! the serial baseline of eight independent `decode_step` sessions
+//! (eight weight passes per tick) — the CPU analogue of the
+//! weight-streaming amortization argument in DESIGN.md §6a.
+//!
+//! Besides the human-readable table, writes a machine-readable summary
+//! to `BENCH_serve.json` (CI's bench-smoke job uploads it as a
+//! workflow artifact), so throughput regressions are diffable across
+//! runs. `SLAB_BENCH_FAST=1` shrinks everything to a smoke run.
+
+// Clippy policy: the kernel/numeric code here deliberately uses
+// explicit index loops, operator-named helpers (`Mat::add`), and
+// `vec!` literals in tests; the style/complexity lints below fight
+// that idiom, so they are allowed target-wide while CI's
+// `clippy --all-targets -- -D warnings` enforces everything else.
+// (Centralize into a `[lints.clippy]` manifest table once a
+// Cargo.toml lands in-tree.)
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::should_implement_trait,
+    clippy::manual_range_contains,
+    clippy::comparison_chain,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if,
+    clippy::useless_vec,
+    clippy::manual_memcpy,
+    clippy::large_enum_variant,
+    clippy::module_inception,
+    clippy::new_without_default
+)]
+
+use slab::model::{DecodeSlot, KvCachePool, Params, SlabModel};
+use slab::runtime::ModelCfg;
+use slab::slab::{decompose, ActStats, SlabConfig, SlabLayer};
+use slab::tensor::Mat;
+use slab::util::bench::Bench;
+use slab::util::json::Json;
+use slab::util::rng::Pcg64;
+
+/// Decompose every pruned linear of `params` natively — the packed
+/// engine input, without artifacts or a runtime.
+fn compress_native(params: &Params, seed: u64) -> Vec<(String, SlabLayer)> {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let scfg = SlabConfig {
+        iters: 3,
+        svd_iters: 6,
+        ..Default::default()
+    };
+    let mut packed = Vec::new();
+    for (name, (_, din)) in params.cfg.pruned.clone() {
+        let w = params.mat(&name);
+        let stats = ActStats::from_activations(&Mat::randn(64, din, 1.0, &mut rng));
+        let d = decompose(&w, &stats, &scfg).expect("decompose");
+        packed.push((name, SlabLayer::from_decomposition(&d)));
+    }
+    packed
+}
+
+/// A deterministic valid prompt for session `i`.
+fn bench_prompt(i: usize, len: usize) -> Vec<i32> {
+    (0..len).map(|j| 5 + ((i + j) % 40) as i32).collect()
+}
+
+fn main() {
+    // Big enough that the weight pass dominates per-call overhead,
+    // small enough that a SLAB_BENCH_FAST smoke run stays in seconds.
+    let cfg = ModelCfg::llama("bench-serve", 128, 128, 2, 4, 256, 96, 16);
+    let params = Params::init(&cfg, 7);
+    let packed = compress_native(&params, 8);
+    let model = SlabModel::from_packed(&params, &packed, 0);
+    println!(
+        "bench-serve model: dim {}, {} layers, {} packed linears, {:.2} MiB resident",
+        cfg.dim,
+        cfg.n_layers,
+        model.packed_linear_count(),
+        model.weights_nbytes() as f64 / (1 << 20) as f64
+    );
+
+    let pos = cfg.prompt_len; // first decode position; rewritten per iter
+    let tok = 5i32;
+    let mut b = Bench::new("batched decode (packed engine)");
+    let mut tps: Vec<(usize, f64)> = Vec::new();
+
+    for bsz in [1usize, 4, 8] {
+        let mut kv = KvCachePool::for_model(&model, bsz);
+        let steps: Vec<DecodeSlot> = (0..bsz)
+            .map(|i| {
+                let (_, cache) = model.prefill_session(&bench_prompt(i, cfg.prompt_len));
+                DecodeSlot {
+                    session: kv.adopt(cache).expect("pool capacity"),
+                    token: tok,
+                    pos,
+                }
+            })
+            .collect();
+        let stats = b.run_throughput(&format!("decode_batch x{bsz}"), bsz as f64, "tok", || {
+            model.decode_batch(&mut kv, &steps)
+        });
+        tps.push((bsz, stats.throughput(bsz as f64)));
+    }
+
+    // Serial baseline: eight independent single-session decode_step
+    // calls per tick — what eight NativePacked servers would do.
+    let serial_n = 8usize;
+    let mut caches: Vec<_> = (0..serial_n)
+        .map(|i| model.prefill_session(&bench_prompt(i, cfg.prompt_len)).1)
+        .collect();
+    let serial_stats = b.run_throughput(
+        &format!("serial decode_step x{serial_n} sessions"),
+        serial_n as f64,
+        "tok",
+        || {
+            for cache in caches.iter_mut() {
+                model.decode_step(cache, &[tok], pos);
+            }
+        },
+    );
+    let serial_tps = serial_stats.throughput(serial_n as f64);
+    b.finish();
+
+    let tps_for = |n: usize| {
+        tps.iter().find(|(m, _)| *m == n).map(|(_, v)| *v).unwrap_or(0.0)
+    };
+    let speedup = tps_for(8) / serial_tps.max(1e-9);
+    println!("batched x8 vs serial x8: {speedup:.2}x tokens/s");
+
+    let summary = Json::obj(vec![
+        ("bench", Json::str("serve_batched_decode")),
+        (
+            "model",
+            Json::obj(vec![
+                ("dim", Json::from_usize(cfg.dim)),
+                ("n_layers", Json::from_usize(cfg.n_layers)),
+                ("ffn", Json::from_usize(cfg.ffn)),
+                ("vocab", Json::from_usize(cfg.vocab)),
+                ("prompt_len", Json::from_usize(cfg.prompt_len)),
+            ]),
+        ),
+        (
+            "tokens_per_sec",
+            Json::obj(vec![
+                ("batch_1", Json::num(tps_for(1))),
+                ("batch_4", Json::num(tps_for(4))),
+                ("batch_8", Json::num(tps_for(8))),
+            ]),
+        ),
+        ("serial_8_sessions_tokens_per_sec", Json::num(serial_tps)),
+        ("speedup_batch8_vs_serial8", Json::num(speedup)),
+    ]);
+    std::fs::write("BENCH_serve.json", summary.to_pretty()).expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+}

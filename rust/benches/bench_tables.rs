@@ -5,6 +5,29 @@
 //! `slab train --model small`); skips gracefully otherwise so
 //! `cargo bench` never hard-fails on a fresh clone.
 
+// Clippy policy: the kernel/numeric code here deliberately uses
+// explicit index loops, operator-named helpers (`Mat::add`), and
+// `vec!` literals in tests; the style/complexity lints below fight
+// that idiom, so they are allowed target-wide while CI's
+// `clippy --all-targets -- -D warnings` enforces everything else.
+// (Centralize into a `[lints.clippy]` manifest table once a
+// Cargo.toml lands in-tree.)
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::should_implement_trait,
+    clippy::manual_range_contains,
+    clippy::comparison_chain,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if,
+    clippy::useless_vec,
+    clippy::manual_memcpy,
+    clippy::large_enum_variant,
+    clippy::module_inception,
+    clippy::new_without_default
+)]
+
 use slab::experiments::{self, Lab};
 use std::path::Path;
 

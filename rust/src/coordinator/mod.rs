@@ -1,9 +1,12 @@
 //! Layer-3 coordination: the one-shot compression pipeline
-//! ([`pipeline`]) and the serving router/dynamic batcher ([`serve`])
-//! over its two engines ([`serve::Backend`]).
+//! ([`pipeline`]) and the serving router ([`serve`]) over its three
+//! engines ([`serve::Backend`]) — two dynamic batchers and the
+//! continuous-batching [`serve::Scheduler`].
 
 pub mod pipeline;
 pub mod serve;
 
 pub use pipeline::{compress_model, CompressReport, CompressedModel, Engine, PipelineError};
-pub use serve::{Backend, Request, Response, ServeStats, Server, ServerConfig};
+pub use serve::{
+    Backend, Request, Response, Scheduler, SchedulerConfig, ServeStats, Server, ServerConfig,
+};

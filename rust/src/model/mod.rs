@@ -13,5 +13,5 @@
 pub mod native;
 pub mod params;
 
-pub use native::{greedy_token, KvCache, Linear, SlabModel};
+pub use native::{greedy_token, DecodeSlot, KvCache, KvCachePool, Linear, SlabModel};
 pub use params::Params;

@@ -24,7 +24,7 @@ use crate::runtime::ModelCfg;
 use crate::slab::SlabLayer;
 use crate::tensor::ops::softmax_inplace;
 use crate::tensor::{matmul_bt, Mat};
-use crate::util::pool::ThreadPool;
+use crate::util::pool::{SlotArena, ThreadPool};
 
 /// Matches `model.py::ModelConfig.norm_eps` (not carried by the
 /// manifest — it is an architecture constant, not a size).
@@ -136,6 +136,100 @@ impl KvCache {
         let o = self.base(b, s);
         &self.v[layer][o..o + self.dim]
     }
+
+    /// Resident bytes of this cache's K and V tensors.
+    pub fn nbytes(&self) -> usize {
+        self.k.iter().chain(self.v.iter()).map(|l| l.len() * 4).sum()
+    }
+}
+
+/// Arena of single-session KV caches — the per-session state store
+/// behind the continuous-batching scheduler
+/// ([`crate::coordinator::serve::Scheduler`]).
+///
+/// Each admitted request prefill-builds its own batch-1 [`KvCache`]
+/// (prefill-then-join), the pool [`adopt`](KvCachePool::adopt)s it
+/// under a stable session handle, and [`SlabModel::decode_batch`]
+/// reads and writes per-session positions straight out of the arena.
+/// A session's cache is [`release`](KvCachePool::release)d the moment
+/// it terminates (EOS / budget / eviction), so the resident KV
+/// footprint tracks *live* sessions, and the fixed capacity is the
+/// scheduler's hard batch cap.
+pub struct KvCachePool {
+    arena: SlotArena<KvCache>,
+    n_layers: usize,
+    max_seq: usize,
+    dim: usize,
+}
+
+impl KvCachePool {
+    /// Pool shaped for `model`, holding at most `max_sessions` live
+    /// sessions (`≥ 1` enforced).
+    pub fn for_model(model: &SlabModel, max_sessions: usize) -> KvCachePool {
+        KvCachePool {
+            arena: SlotArena::with_capacity(max_sessions),
+            n_layers: model.cfg.n_layers,
+            max_seq: model.cfg.max_seq,
+            dim: model.cfg.dim,
+        }
+    }
+
+    /// Adopt a freshly prefilled single-session cache (the output of
+    /// [`SlabModel::prefill_session`]); returns its session handle, or
+    /// `None` when the pool is at capacity — the scheduler's signal to
+    /// stop admitting. Panics if the cache's shape does not match the
+    /// pool's model.
+    pub fn adopt(&mut self, cache: KvCache) -> Option<usize> {
+        assert_eq!(cache.bsz, 1, "pool caches are single-session");
+        assert_eq!(cache.k.len(), self.n_layers, "pool/cache layer count mismatch");
+        assert_eq!(cache.max_seq, self.max_seq, "pool/cache max_seq mismatch");
+        assert_eq!(cache.dim, self.dim, "pool/cache dim mismatch");
+        self.arena.insert(cache)
+    }
+
+    /// Free a terminated session's cache; its handle may be reused by
+    /// a later [`adopt`](KvCachePool::adopt). Returns whether the
+    /// handle was live.
+    pub fn release(&mut self, session: usize) -> bool {
+        self.arena.remove(session).is_some()
+    }
+
+    /// Live sessions.
+    pub fn active(&self) -> usize {
+        self.arena.len()
+    }
+
+    /// Hard cap on live sessions.
+    pub fn capacity(&self) -> usize {
+        self.arena.capacity()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.arena.is_full()
+    }
+
+    /// Resident KV bytes across live sessions.
+    pub fn nbytes(&self) -> usize {
+        self.arena.iter().map(|(_, c)| c.nbytes()).sum()
+    }
+
+    fn cache(&self, session: usize) -> &KvCache {
+        self.arena.get(session).expect("live session handle")
+    }
+
+    fn cache_mut(&mut self, session: usize) -> &mut KvCache {
+        self.arena.get_mut(session).expect("live session handle")
+    }
+}
+
+/// One session's contribution to a batched decode step
+/// ([`SlabModel::decode_batch`]): feed `token` at cache position
+/// `pos` for pool session `session`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeSlot {
+    pub session: usize,
+    pub token: i32,
+    pub pos: usize,
 }
 
 /// A whole model in serving form: per-layer [`Linear`]s (packed where
@@ -174,7 +268,13 @@ impl SlabModel {
 
     fn build(params: &Params, packed: &[(String, SlabLayer)], threads: usize) -> SlabModel {
         let cfg = params.cfg.clone();
-        assert_eq!(cfg.dim % cfg.n_heads, 0, "dim {} not divisible by heads {}", cfg.dim, cfg.n_heads);
+        assert_eq!(
+            cfg.dim % cfg.n_heads,
+            0,
+            "dim {} not divisible by heads {}",
+            cfg.dim,
+            cfg.n_heads
+        );
         assert_eq!(cfg.head_dim() % 2, 0, "RoPE needs an even head_dim, got {}", cfg.head_dim());
         let linear = |name: &str| -> Linear {
             match packed.iter().find(|(pn, _)| pn == name) {
@@ -264,7 +364,11 @@ impl SlabModel {
     pub fn prefill(&self, tokens: &[i32], bsz: usize) -> (Mat, KvCache) {
         assert!(bsz > 0 && tokens.len() % bsz == 0, "ragged prefill batch");
         let t = tokens.len() / bsz;
-        assert!(t > 0 && t <= self.cfg.max_seq, "prefill length {t} vs max_seq {}", self.cfg.max_seq);
+        assert!(
+            t > 0 && t <= self.cfg.max_seq,
+            "prefill length {t} vs max_seq {}",
+            self.cfg.max_seq
+        );
         let (dim, nh) = (self.cfg.dim, self.cfg.n_heads);
         let hd = dim / nh;
         let scale = 1.0 / (hd as f32).sqrt();
@@ -336,6 +440,116 @@ impl SlabModel {
             last.row_mut(b).copy_from_slice(xf.row(b * t + t - 1));
         }
         (matmul_bt(&last, &self.lm_head), cache)
+    }
+
+    /// Prefill one session's prompt exactly as the serving router
+    /// does: left-aligned, PAD-padded to `prompt_len`, token ids
+    /// clamped into the vocab (one malformed request must not panic
+    /// the scheduler). Returns the last-position logits `(1, vocab)`
+    /// and a single-session KV cache ready for
+    /// [`KvCachePool::adopt`] — the "prefill" half of
+    /// prefill-then-join admission.
+    pub fn prefill_session(&self, prompt: &[i32]) -> (Mat, KvCache) {
+        let t = self.cfg.prompt_len;
+        let vmax = self.cfg.vocab.saturating_sub(1) as i32;
+        let mut flat = vec![PAD; t];
+        let n = prompt.len().min(t);
+        for (j, &tok) in prompt[..n].iter().enumerate() {
+            flat[j] = tok.clamp(0, vmax);
+        }
+        self.prefill(&flat, 1)
+    }
+
+    /// One decode step for N independent sessions at *per-session*
+    /// positions — the continuous-batching hot path. `steps[r]` feeds
+    /// its token through row `r` of one shared forward pass: every
+    /// linear (packed or dense) runs once over the `(N, dim)`
+    /// activation batch via [`Linear::apply`], so the weight pass —
+    /// where ~all the bytes move — is amortized across sessions
+    /// instead of repeated per session.
+    ///
+    /// Row-wise the math is exactly [`decode_step`](SlabModel::decode_step)
+    /// at batch 1 (the kernels chunk over *weight* rows and accumulate
+    /// each output element in a fixed order, so batching rows is
+    /// bit-identical to serial calls — the token-identity guarantee
+    /// the scheduler's tests pin). Returns logits `(N, vocab)`; `N = 0`
+    /// (an empty scheduler tick) is a no-op returning a 0-row matrix.
+    ///
+    /// Panics on a dead session handle, a duplicate session within
+    /// `steps` (one cache cannot take two writes in one step), a
+    /// position past `max_seq`, or a pool shaped for another model.
+    pub fn decode_batch(&self, kvpool: &mut KvCachePool, steps: &[DecodeSlot]) -> Mat {
+        let n = steps.len();
+        if n == 0 {
+            return Mat::zeros(0, self.cfg.vocab);
+        }
+        assert_eq!(kvpool.n_layers, self.cfg.n_layers, "pool built for another model");
+        assert_eq!(kvpool.dim, self.cfg.dim, "pool built for another model");
+        assert_eq!(kvpool.max_seq, self.cfg.max_seq, "pool built for another model");
+        for (i, st) in steps.iter().enumerate() {
+            assert!(st.pos < self.cfg.max_seq, "pos {} vs max_seq {}", st.pos, self.cfg.max_seq);
+            assert!(kvpool.arena.get(st.session).is_some(), "dead session {}", st.session);
+            for other in &steps[i + 1..] {
+                assert_ne!(st.session, other.session, "duplicate session in batch");
+            }
+        }
+        let (dim, nh) = (self.cfg.dim, self.cfg.n_heads);
+        let hd = dim / nh;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let pool = Some(&self.pool);
+
+        let toks: Vec<i32> = steps.iter().map(|st| st.token).collect();
+        let mut h = self.embed(&toks);
+        let tables: Vec<Vec<(f32, f32)>> = steps.iter().map(|st| rope_table(hd, st.pos)).collect();
+        let mut scores: Vec<f32> = Vec::with_capacity(self.cfg.max_seq);
+        for (li, blk) in self.layers.iter().enumerate() {
+            let x = rmsnorm(&h, &blk.attn_norm);
+            let mut q = blk.wq.apply(&x, pool);
+            let mut k = blk.wk.apply(&x, pool);
+            let v = blk.wv.apply(&x, pool);
+            for r in 0..n {
+                rope_apply(q.row_mut(r), nh, hd, &tables[r]);
+                rope_apply(k.row_mut(r), nh, hd, &tables[r]);
+            }
+            for (r, st) in steps.iter().enumerate() {
+                kvpool
+                    .cache_mut(st.session)
+                    .write(li, 0, st.pos, k.row(r), v.row(r));
+            }
+            let mut att = Mat::zeros(n, dim);
+            for (r, st) in steps.iter().enumerate() {
+                let cache = kvpool.cache(st.session);
+                scores.clear();
+                scores.resize(st.pos + 1, 0.0);
+                let qrow = q.row(r);
+                let arow = att.row_mut(r);
+                for hh in 0..nh {
+                    let qh = &qrow[hh * hd..(hh + 1) * hd];
+                    for (s, sc) in scores.iter_mut().enumerate() {
+                        let kh = &cache.k_at(li, 0, s)[hh * hd..(hh + 1) * hd];
+                        let mut d = 0.0f32;
+                        for e in 0..hd {
+                            d += qh[e] * kh[e];
+                        }
+                        *sc = d * scale;
+                    }
+                    softmax_inplace(&mut scores);
+                    for (s, &p) in scores.iter().enumerate() {
+                        if p != 0.0 {
+                            let vh = &cache.v_at(li, 0, s)[hh * hd..(hh + 1) * hd];
+                            for e in 0..hd {
+                                arow[hh * hd + e] += p * vh[e];
+                            }
+                        }
+                    }
+                }
+            }
+            let proj = blk.wo.apply(&att, pool);
+            h.add_assign(&proj);
+            self.mlp_inplace(blk, &mut h);
+        }
+        let xf = rmsnorm(&h, &self.final_norm);
+        matmul_bt(&xf, &self.lm_head)
     }
 
     /// One decode step for the whole batch at shared position `pos`
@@ -615,6 +829,118 @@ mod tests {
         let gp = packed_model.generate_batch(&prompts, 8);
         let gd = dense_model.generate_batch(&prompts, 8);
         assert_eq!(gp, gd, "packed vs dense-reconstruction tokens");
+    }
+
+    #[test]
+    fn decode_batch_is_bit_identical_to_serial_decode() {
+        // The continuous-batching invariant: N sessions sharing one
+        // batched forward must produce exactly the rows each would
+        // have produced decoding alone — including mid-stream joins at
+        // different positions.
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 205);
+        let model = SlabModel::from_dense(&params, 2);
+        let t = cfg.prompt_len;
+        let pa: Vec<i32> = vec![5, 6, 7];
+        let pb: Vec<i32> = vec![9, 10, 11, 12];
+
+        // Serial reference: each session decodes alone via decode_step.
+        let (la, mut ca) = model.prefill_session(&pa);
+        let (lb, mut cb) = model.prefill_session(&pb);
+        let ta0 = greedy_token(la.row(0));
+        let tb0 = greedy_token(lb.row(0));
+        let la1 = model.decode_step(&mut ca, &[ta0], t);
+        let ta1 = greedy_token(la1.row(0));
+        let la2 = model.decode_step(&mut ca, &[ta1], t + 1);
+        let lb1 = model.decode_step(&mut cb, &[tb0], t);
+
+        // Batched: A decodes one step alone, then B joins one position
+        // behind — the prefill-then-join shape.
+        let mut kv = KvCachePool::for_model(&model, 4);
+        let (la_p, ca_p) = model.prefill_session(&pa);
+        let (lb_p, cb_p) = model.prefill_session(&pb);
+        assert_eq!(la_p.data, la.data, "prefill must be deterministic");
+        assert_eq!(lb_p.data, lb.data, "prefill must be deterministic");
+        let sa = kv.adopt(ca_p).unwrap();
+        let sb = kv.adopt(cb_p).unwrap();
+        assert_eq!(kv.active(), 2);
+        assert!(kv.nbytes() > 0);
+        let l1 = model.decode_batch(
+            &mut kv,
+            &[DecodeSlot { session: sa, token: ta0, pos: t }],
+        );
+        assert_eq!(l1.row(0), la1.row(0), "batch-of-1 row");
+        let l2 = model.decode_batch(
+            &mut kv,
+            &[
+                DecodeSlot { session: sa, token: ta1, pos: t + 1 },
+                DecodeSlot { session: sb, token: tb0, pos: t },
+            ],
+        );
+        assert_eq!(l2.row(0), la2.row(0), "mid-stream session row");
+        assert_eq!(l2.row(1), lb1.row(0), "joining session row");
+
+        assert!(kv.release(sa));
+        assert!(!kv.release(sa), "double release");
+        assert_eq!(kv.active(), 1);
+    }
+
+    #[test]
+    fn decode_batch_empty_tick_is_noop() {
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 206);
+        let model = SlabModel::from_dense(&params, 1);
+        let mut kv = KvCachePool::for_model(&model, 2);
+        let logits = model.decode_batch(&mut kv, &[]);
+        assert_eq!((logits.rows, logits.cols), (0, cfg.vocab));
+        assert_eq!(kv.active(), 0);
+    }
+
+    #[test]
+    fn kv_cache_pool_enforces_capacity_and_reuses_handles() {
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 207);
+        let model = SlabModel::from_dense(&params, 1);
+        let mut kv = KvCachePool::for_model(&model, 2);
+        assert_eq!(kv.capacity(), 2);
+        let s0 = kv.adopt(model.prefill_session(&[5, 6]).1).unwrap();
+        let s1 = kv.adopt(model.prefill_session(&[7]).1).unwrap();
+        assert!(kv.is_full());
+        assert!(kv.adopt(model.prefill_session(&[8]).1).is_none(), "over capacity");
+        kv.release(s0);
+        let s2 = kv.adopt(model.prefill_session(&[9]).1).unwrap();
+        assert_eq!(s2, s0, "freed handle is reused");
+        assert_eq!(kv.active(), 2);
+        let _ = s1;
+    }
+
+    #[test]
+    #[should_panic(expected = "single-session")]
+    fn kv_cache_pool_rejects_multi_session_caches() {
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 208);
+        let model = SlabModel::from_dense(&params, 1);
+        let (_, cache) = model.prefill(&vec![5; 2 * cfg.prompt_len], 2);
+        let mut kv = KvCachePool::for_model(&model, 2);
+        kv.adopt(cache);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate session")]
+    fn decode_batch_rejects_duplicate_sessions() {
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 209);
+        let model = SlabModel::from_dense(&params, 1);
+        let mut kv = KvCachePool::for_model(&model, 2);
+        let s = kv.adopt(model.prefill_session(&[5, 6]).1).unwrap();
+        let t = cfg.prompt_len;
+        model.decode_batch(
+            &mut kv,
+            &[
+                DecodeSlot { session: s, token: 5, pos: t },
+                DecodeSlot { session: s, token: 6, pos: t + 1 },
+            ],
+        );
     }
 
     #[test]

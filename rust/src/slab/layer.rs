@@ -86,10 +86,23 @@ impl SlabLayer {
     /// across the [`ThreadPool`]. `SlabModel` routes every packed
     /// linear through here.
     pub fn forward_fused(&self, x: &Mat, pool: Option<&ThreadPool>) -> Mat {
+        let mut y = Mat::zeros(x.rows, self.dout());
+        self.forward_fused_into(x, pool, &mut y);
+        y
+    }
+
+    /// [`forward_fused`](SlabLayer::forward_fused) writing into a
+    /// caller-owned output (overwritten entirely, same bit-identical
+    /// contraction), completing the `_into` symmetry the bitplane
+    /// kernels already have: a serving loop that holds `y` across
+    /// calls drops one `(B, Dout)` allocation per call. `y` must be
+    /// `(x.rows, dout)`.
+    pub fn forward_fused_into(&self, x: &Mat, pool: Option<&ThreadPool>, y: &mut Mat) {
         assert_eq!(x.cols, self.din());
-        let mut y = match pool {
-            Some(p) => self.w_s.spmm_bt_par(x, p),
-            None => self.w_s.spmm_bt_blocked(x),
+        assert_eq!((y.rows, y.cols), (x.rows, self.dout()), "forward_fused_into: bad output shape");
+        match pool {
+            Some(p) => self.w_s.spmm_bt_par_into(x, p, y),
+            None => self.w_s.spmm_bt_blocked_into(x, y),
         };
         // One scratch pair reused across all ranks.
         let mut scaled = Mat::zeros(x.rows, x.cols);
@@ -116,7 +129,6 @@ impl SlabLayer {
                 }
             }
         }
-        y
     }
 
     /// Dense reconstruction `Ŵ` — used for artifact-path forwards
@@ -383,6 +395,24 @@ mod tests {
         });
         let back = SlabLayer::load_from(&ck, "q").unwrap();
         assert_eq!(back, l);
+    }
+
+    #[test]
+    fn fused_into_overwrites_reused_output() {
+        // The per-tick serving shape: one output matrix held across
+        // calls; stale contents (poisoned with NaN) must be fully
+        // overwritten, and the result must stay bit-identical to the
+        // reference forward.
+        let (_, l) = layer(110);
+        let mut rng = Pcg64::seed_from_u64(111);
+        let pool = ThreadPool::new(4);
+        let mut y = Mat::filled(3, l.dout(), f32::NAN);
+        let x1 = Mat::randn(3, 72, 1.0, &mut rng);
+        l.forward_fused_into(&x1, None, &mut y);
+        assert_eq!(y, l.forward(&x1));
+        let x2 = Mat::randn(3, 72, 1.0, &mut rng);
+        l.forward_fused_into(&x2, Some(&pool), &mut y);
+        assert_eq!(y, l.forward(&x2));
     }
 
     #[test]

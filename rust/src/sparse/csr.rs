@@ -121,11 +121,19 @@ impl Csr {
     /// [`spmm_bt`]: Csr::spmm_bt
     /// [`spmm_bt_par`]: Csr::spmm_bt_par
     pub fn spmm_bt_blocked(&self, x: &Mat) -> Mat {
-        assert_eq!(x.cols, self.cols, "spmm_bt_blocked: x cols {} vs W cols {}", x.cols, self.cols);
         let mut y = Mat::zeros(x.rows, self.rows);
+        self.spmm_bt_blocked_into(x, &mut y);
+        y
+    }
+
+    /// [`spmm_bt_blocked`](Csr::spmm_bt_blocked) writing into a
+    /// caller-owned output (overwritten entirely) — the allocation-free
+    /// form for per-tick serving loops. `y` must be `(x.rows, self.rows)`.
+    pub fn spmm_bt_blocked_into(&self, x: &Mat, y: &mut Mat) {
+        assert_eq!(x.cols, self.cols, "spmm_bt_blocked: x cols {} vs W cols {}", x.cols, self.cols);
+        assert_eq!((y.rows, y.cols), (x.rows, self.rows), "spmm_bt_into: bad output shape");
         // Full-range strip layout coincides with y's row-major layout.
         self.spmm_rows_blocked(x, 0, self.rows, &mut y.data);
-        y
     }
 
     /// [`ThreadPool`]-parallel `spmm_bt`: weight rows are chunked
@@ -134,11 +142,20 @@ impl Csr {
     /// private strip, and strips are scattered into `y` afterwards.
     /// Output is bit-identical to the scalar [`spmm_bt`](Csr::spmm_bt).
     pub fn spmm_bt_par(&self, x: &Mat, pool: &ThreadPool) -> Mat {
-        assert_eq!(x.cols, self.cols, "spmm_bt_par: x cols {} vs W cols {}", x.cols, self.cols);
-        if pool.size() <= 1 || self.rows < 2 {
-            return self.spmm_bt_blocked(x);
-        }
         let mut y = Mat::zeros(x.rows, self.rows);
+        self.spmm_bt_par_into(x, pool, &mut y);
+        y
+    }
+
+    /// [`spmm_bt_par`](Csr::spmm_bt_par) into a caller-owned output
+    /// (overwritten entirely).
+    pub fn spmm_bt_par_into(&self, x: &Mat, pool: &ThreadPool, y: &mut Mat) {
+        assert_eq!(x.cols, self.cols, "spmm_bt_par: x cols {} vs W cols {}", x.cols, self.cols);
+        assert_eq!((y.rows, y.cols), (x.rows, self.rows), "spmm_bt_into: bad output shape");
+        if pool.size() <= 1 || self.rows < 2 {
+            self.spmm_rows_blocked(x, 0, self.rows, &mut y.data);
+            return;
+        }
         let ranges = chunk_ranges(self.rows, pool.size());
         let mut strips: Vec<Vec<f32>> = ranges
             .iter()
@@ -156,7 +173,6 @@ impl Csr {
                 y.row_mut(b)[r0..r1].copy_from_slice(&strip[b * w..(b + 1) * w]);
             }
         }
-        y
     }
 
     /// Blocked kernel over weight rows `[r0, r1)`; `out` is a strip in

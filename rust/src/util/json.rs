@@ -147,14 +147,8 @@ impl Json {
     }
 
     // ------------------------------------------------------------------
-    // Serialization
+    // Serialization (compact form via `Display`/`to_string`)
     // ------------------------------------------------------------------
-
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out, None, 0);
-        out
-    }
 
     /// Pretty-print with 2-space indentation.
     pub fn to_pretty(&self) -> String {
@@ -227,6 +221,17 @@ impl Json {
             return Err(p.err("trailing characters"));
         }
         Ok(v)
+    }
+}
+
+/// Compact (no-whitespace) serialization; `value.to_string()` comes
+/// via the blanket `ToString`. Use [`Json::to_pretty`] for the
+/// indented form.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        f.write_str(&out)
     }
 }
 

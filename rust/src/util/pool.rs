@@ -160,6 +160,90 @@ impl ThreadPool {
     }
 }
 
+/// A bounded slot arena with stable integer handles and a free list —
+/// the allocation substrate for per-session serving state (the
+/// [`KvCachePool`](crate::model::KvCachePool) of the continuous
+/// batcher). Slots are reused in LIFO order; a handle stays valid
+/// until [`remove`](SlotArena::remove), and the arena never grows past
+/// its capacity, which is what gives the scheduler a hard session cap.
+#[derive(Debug)]
+pub struct SlotArena<T> {
+    slots: Vec<Option<T>>,
+    free: Vec<usize>,
+    cap: usize,
+}
+
+impl<T> SlotArena<T> {
+    /// Arena holding at most `cap` live values (`cap ≥ 1` enforced).
+    pub fn with_capacity(cap: usize) -> SlotArena<T> {
+        SlotArena {
+            slots: Vec::new(),
+            free: Vec::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Live values currently in the arena.
+    pub fn len(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len() >= self.cap
+    }
+
+    /// Insert a value, returning its handle — `None` when the arena is
+    /// at capacity (the caller's backpressure signal).
+    pub fn insert(&mut self, v: T) -> Option<usize> {
+        if self.is_full() {
+            return None;
+        }
+        match self.free.pop() {
+            Some(id) => {
+                debug_assert!(self.slots[id].is_none());
+                self.slots[id] = Some(v);
+                Some(id)
+            }
+            None => {
+                self.slots.push(Some(v));
+                Some(self.slots.len() - 1)
+            }
+        }
+    }
+
+    /// Remove and return the value at `id` (`None` if the slot is
+    /// already vacant or the handle is out of range).
+    pub fn remove(&mut self, id: usize) -> Option<T> {
+        let v = self.slots.get_mut(id)?.take()?;
+        self.free.push(id);
+        Some(v)
+    }
+
+    pub fn get(&self, id: usize) -> Option<&T> {
+        self.slots.get(id)?.as_ref()
+    }
+
+    pub fn get_mut(&mut self, id: usize) -> Option<&mut T> {
+        self.slots.get_mut(id)?.as_mut()
+    }
+
+    /// Iterate `(handle, &value)` over live slots in handle order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &T)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|v| (i, v)))
+    }
+}
+
 /// Split `0..n` into at most `parts` contiguous ranges of near-equal
 /// length — the chunking scheme every row-parallel kernel uses. Empty
 /// for `n == 0`; never yields an empty range.
@@ -317,6 +401,40 @@ mod tests {
             })
             .collect();
         pool.scoped(jobs);
+    }
+
+    #[test]
+    fn slot_arena_reuses_slots_and_respects_capacity() {
+        let mut a: SlotArena<String> = SlotArena::with_capacity(2);
+        assert_eq!(a.capacity(), 2);
+        assert!(a.is_empty());
+        let i0 = a.insert("a".to_string()).unwrap();
+        let i1 = a.insert("b".to_string()).unwrap();
+        assert_ne!(i0, i1);
+        assert!(a.is_full());
+        assert!(a.insert("c".to_string()).is_none(), "over capacity");
+        assert_eq!(a.get(i0).unwrap(), "a");
+        assert_eq!(a.remove(i0).unwrap(), "a");
+        assert!(a.remove(i0).is_none(), "double remove is vacant");
+        assert_eq!(a.len(), 1);
+        // Freed slot is reused; the other handle stays valid.
+        let i2 = a.insert("c".to_string()).unwrap();
+        assert_eq!(i2, i0);
+        assert_eq!(a.get(i1).unwrap(), "b");
+        a.get_mut(i1).unwrap().push('!');
+        let live: Vec<usize> = a.iter().map(|(i, _)| i).collect();
+        assert_eq!(live.len(), 2);
+        assert_eq!(a.get(i1).unwrap(), "b!");
+        assert!(a.get(99).is_none());
+        assert!(a.remove(99).is_none());
+    }
+
+    #[test]
+    fn slot_arena_zero_capacity_clamps_to_one() {
+        let mut a: SlotArena<u32> = SlotArena::with_capacity(0);
+        assert_eq!(a.capacity(), 1);
+        assert!(a.insert(7).is_some());
+        assert!(a.insert(8).is_none());
     }
 
     #[test]

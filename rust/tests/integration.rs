@@ -4,6 +4,29 @@
 //! note) when `artifacts/manifest.json` is absent so `cargo test`
 //! works on a fresh clone.
 
+// Clippy policy: the kernel/numeric code here deliberately uses
+// explicit index loops, operator-named helpers (`Mat::add`), and
+// `vec!` literals in tests; the style/complexity lints below fight
+// that idiom, so they are allowed target-wide while CI's
+// `clippy --all-targets -- -D warnings` enforces everything else.
+// (Centralize into a `[lints.clippy]` manifest table once a
+// Cargo.toml lands in-tree.)
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::should_implement_trait,
+    clippy::manual_range_contains,
+    clippy::comparison_chain,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if,
+    clippy::useless_vec,
+    clippy::manual_memcpy,
+    clippy::large_enum_variant,
+    clippy::module_inception,
+    clippy::new_without_default
+)]
+
 use slab::coordinator::{Backend, Request, Server, ServerConfig};
 use slab::data::{build_corpus, Grammar};
 use slab::model::{Params, SlabModel};
@@ -369,6 +392,72 @@ fn native_packed_serving_matches_dense_reconstruction_end_to_end() {
     // And the whole thing is deterministic under re-serving.
     let again = serve(SlabModel::from_packed(&params, &packed, 4));
     assert_eq!(again, got_packed);
+}
+
+#[test]
+fn batched_scheduler_matches_serial_packed_serving_end_to_end() {
+    // The continuous-batching acceptance e2e: a NativeBatched server
+    // over the *packed* engine must answer a mixed-length request set
+    // token-identically to the serial NativePacked router over the
+    // same compressed model — batching, prefill-then-join admission,
+    // and per-session termination must never change a single token.
+    let cfg = native_test_cfg();
+    let params = Params::init(&cfg, 91);
+    let (packed, _) = compress_native(&params, 92);
+
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![5, 9, 14, 20],
+        vec![33, 34, 35, 36, 37, 38, 39, 40], // longer than prompt_len
+        vec![7],
+        vec![],
+        vec![40, 11, 22],
+        vec![19, 18, 17, 16, 15],
+        vec![25, 26],
+    ];
+    let budgets = [9usize, 4, 12, 3, 7, 1, 0];
+    let serve = |backend: Backend, scfg: ServerConfig| -> Vec<Vec<i32>> {
+        let server = Server::start_with(backend, scfg);
+        let rxs: Vec<_> = prompts
+            .iter()
+            .zip(budgets.iter())
+            .map(|(p, &b)| {
+                server.submit(Request {
+                    prompt: p.clone(),
+                    max_new: b,
+                })
+            })
+            .collect();
+        let out = rxs
+            .into_iter()
+            .map(|rx| {
+                let r = rx.recv().expect("response");
+                assert!(!r.rejected, "default queue bound must admit all");
+                r.tokens
+            })
+            .collect();
+        server.shutdown().expect("stats");
+        out
+    };
+
+    let serial = serve(
+        Backend::NativePacked(Box::new(SlabModel::from_packed(&params, &packed, 2))),
+        ServerConfig::default(),
+    );
+    let scfg = ServerConfig {
+        sched: slab::coordinator::SchedulerConfig {
+            max_batch: 3, // smaller than the request count: forced churn
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let batched = serve(
+        Backend::NativeBatched(Box::new(SlabModel::from_packed(&params, &packed, 2))),
+        scfg,
+    );
+    assert_eq!(serial, batched, "continuous batcher diverged from serial packed serving");
+    for (tokens, &b) in batched.iter().zip(budgets.iter()) {
+        assert!(tokens.len() <= b.min(cfg.max_seq - cfg.prompt_len));
+    }
 }
 
 #[test]
