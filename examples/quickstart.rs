@@ -1,5 +1,7 @@
 //! Quickstart: decompose one weight matrix with SLaB and inspect what
-//! you get — no artifacts needed (pure native path).
+//! you get, then compress a whole tiny model through the staged
+//! pipeline (native capture → parallel decompose → streaming emit) —
+//! no artifacts needed anywhere (pure native path).
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -69,4 +71,45 @@ fn main() {
     let wanda = slab::baselines::wanda_prune(&w, &stats, 0.5, None);
     println!("  ‖W−Ŵ‖_F: SLaB {:.4} vs Wanda {:.4}",
         w.frob_dist(&d.reconstruct()), wanda.frob_err);
+
+    // ---- whole-model compression through the staged pipeline --------
+    // Native calibration capture (no XLA artifacts), layer-parallel
+    // decompose (bit-identical to serial), streaming emit: packed
+    // layers hit disk as each block finishes, and nothing dense is
+    // retained — the memory-lean configuration.
+    use slab::baselines::Method;
+    use slab::coordinator::{load_packed_checkpoint, CompressJob};
+    use slab::data::TokenSet;
+    use slab::model::{Params, SlabModel};
+    use slab::runtime::ModelCfg;
+
+    let mcfg = ModelCfg::llama("quickstart", 48, 32, 2, 4, 64, 24, 8);
+    let params = Params::init(&mcfg, 11);
+    let calib = TokenSet::synthetic(8, mcfg.max_seq, mcfg.vocab);
+    let method = Method::Slab(SlabConfig { iters: 4, svd_iters: 8, ..Default::default() });
+    let ckpt = std::env::temp_dir().join("slab-quickstart/packed.slabckpt");
+    let out = CompressJob::new(&params, &calib, &method)
+        .threads(0) // available parallelism
+        .keep_dense(false)
+        .keep_packed(false)
+        .stream_to(ckpt.clone())
+        .run()
+        .expect("compress job");
+    println!(
+        "\nstaged pipeline: {} linears compressed in {:.2}s, peak ≈{:.2} MiB (streaming, no dense copy)",
+        out.report.layers.len(),
+        out.report.wall_secs,
+        out.report.peak_bytes as f64 / (1 << 20) as f64
+    );
+
+    // Reload the streamed checkpoint and serve from it directly.
+    let packed = load_packed_checkpoint(&ckpt).expect("reload packed checkpoint");
+    let model = SlabModel::from_packed(&params, &packed, 0);
+    let generated = model.generate_batch(&[vec![5, 6, 7]], 8);
+    println!(
+        "  reloaded {} packed linears ({:.2} MiB resident) and generated {:?}",
+        model.packed_linear_count(),
+        model.weights_nbytes() as f64 / (1 << 20) as f64,
+        generated[0]
+    );
 }

@@ -1,7 +1,11 @@
 //! Compression-time benches: Algorithm 1 (native + AOT Pallas
 //! artifact) against the baselines, across layer shapes and iteration
-//! counts. This is the pipeline's dominant cost at `slab compress`
-//! time.
+//! counts — plus the staged pipeline end to end, serial vs
+//! layer-parallel, writing a machine-readable summary to
+//! `BENCH_decompose.json` (CI's bench-smoke job uploads it alongside
+//! `BENCH_serve.json`). This is the pipeline's dominant cost at
+//! `slab compress` time. `SLAB_BENCH_FAST=1` shrinks everything to a
+//! smoke run.
 
 // Clippy policy: the kernel/numeric code here deliberately uses
 // explicit index loops, operator-named helpers (`Mat::add`), and
@@ -26,15 +30,49 @@
     clippy::new_without_default
 )]
 
-use slab::baselines::{magnitude_prune, sparsegpt_prune, wanda_prune, SparseGptConfig};
-use slab::slab::{decompose, ActStats, SlabConfig};
+use slab::baselines::{magnitude_prune, sparsegpt_prune, wanda_prune, Method, SparseGptConfig};
+use slab::coordinator::CompressJob;
+use slab::data::TokenSet;
+use slab::model::Params;
+use slab::runtime::ModelCfg;
+use slab::slab::{decompose, decompose_par, ActStats, SlabConfig};
 use slab::tensor::Mat;
 use slab::util::bench::Bench;
+use slab::util::json::Json;
+use slab::util::pool::ThreadPool;
 use slab::util::rng::Pcg64;
 use std::path::Path;
 
+/// One staged-pipeline run; returns (best wall secs over `reps`,
+/// peak-bytes proxy of the last run).
+fn run_pipeline(
+    params: &Params,
+    calib: &TokenSet,
+    method: &Method,
+    threads: usize,
+    stream: Option<&Path>,
+    reps: usize,
+) -> (f64, usize) {
+    let mut best = f64::INFINITY;
+    let mut peak = 0usize;
+    for _ in 0..reps.max(1) {
+        let mut job = CompressJob::new(params, calib, method).threads(threads);
+        if let Some(p) = stream {
+            job = job.keep_dense(false).keep_packed(false).stream_to(p.to_path_buf());
+        }
+        let out = job.run().expect("compress job");
+        best = best.min(out.report.wall_secs);
+        peak = out.report.peak_bytes;
+    }
+    (best, peak)
+}
+
 fn main() {
+    let fast = std::env::var("SLAB_BENCH_FAST").as_deref() == Ok("1");
     let mut rng = Pcg64::seed_from_u64(88);
+    // One pool for every parallel row in this bench (spawning/joining
+    // worker threads per group would pollute the timings).
+    let pool = ThreadPool::new(0);
 
     for (dout, din) in [(256usize, 256usize), (688, 256)] {
         let mut b = Bench::new(&format!("decompose {dout}x{din}"));
@@ -64,6 +102,17 @@ fn main() {
                 .expect("sparsegpt")
         });
 
+        // Inner row-parallelism of a single decomposition (the
+        // low-rank-binary materialization + Wanda scoring loops),
+        // bit-identical to serial by construction.
+        let cfg_par = SlabConfig { iters: 5, ..Default::default() };
+        b.run_throughput(
+            &format!("slab native s=5 par x{}", pool.size()),
+            numel,
+            "elem",
+            || decompose_par(&w, &stats, &cfg_par, Some(&pool)).expect("decompose_par"),
+        );
+
         // Design-choice ablation (DESIGN.md §8 / EXPERIMENTS.md §Perf):
         // O(n) partition vs O(n log n) full sort inside the threshold —
         // the hottest native loop of the 20-iteration Alg-1 sweep.
@@ -76,6 +125,68 @@ fn main() {
         });
         b.finish();
     }
+
+    // --- staged pipeline: serial vs layer-parallel, keep vs stream ----
+    // The ISSUE-3 acceptance row: whole-model compression through
+    // CompressJob at ≥2 block counts, serial wall-clock vs the
+    // scoped-worker decompose fan-out (bit-identical outputs), plus
+    // the peak-resident proxy for keep-everything vs streaming emit.
+    let reps = if fast { 1 } else { 3 };
+    let (dim, ffn, seq) = if fast { (48, 96, 16) } else { (96, 192, 24) };
+    let calib_rows = if fast { 4 } else { 8 };
+    let iters = if fast { 2 } else { 4 };
+    let mut rows: Vec<Json> = Vec::new();
+    println!("\n== bench group: staged compression pipeline ==");
+    for n_layers in [2usize, 4] {
+        let cfg = ModelCfg::llama(
+            &format!("bench-compress-{n_layers}"),
+            64,
+            dim,
+            n_layers,
+            4,
+            ffn,
+            seq,
+            8,
+        );
+        let params = Params::init(&cfg, 99);
+        let calib = TokenSet::synthetic(calib_rows, cfg.max_seq, cfg.vocab);
+        let method = Method::Slab(SlabConfig {
+            iters,
+            svd_iters: 8,
+            ..Default::default()
+        });
+        let (serial_s, serial_peak) = run_pipeline(&params, &calib, &method, 1, None, reps);
+        let (par_s, _) = run_pipeline(&params, &calib, &method, 0, None, reps);
+        let stream_path = std::env::temp_dir().join(format!("slab-bench/stream-{n_layers}.slabckpt"));
+        let (stream_s, stream_peak) =
+            run_pipeline(&params, &calib, &method, 0, Some(&stream_path), reps);
+        let speedup = serial_s / par_s.max(1e-9);
+        println!(
+            "blocks={n_layers}: serial {serial_s:.2}s vs parallel {par_s:.2}s ({speedup:.2}x); \
+             peak keep {:.1} MiB vs stream {:.1} MiB",
+            serial_peak as f64 / (1 << 20) as f64,
+            stream_peak as f64 / (1 << 20) as f64
+        );
+        rows.push(Json::obj(vec![
+            ("blocks", Json::from_usize(n_layers)),
+            ("dim", Json::from_usize(cfg.dim)),
+            ("ffn", Json::from_usize(cfg.ffn)),
+            ("serial_secs", Json::num(serial_s)),
+            ("parallel_secs", Json::num(par_s)),
+            ("stream_secs", Json::num(stream_s)),
+            ("speedup_parallel_vs_serial", Json::num(speedup)),
+            ("peak_bytes_keep", Json::from_usize(serial_peak)),
+            ("peak_bytes_stream", Json::from_usize(stream_peak)),
+        ]));
+    }
+    let summary = Json::obj(vec![
+        ("bench", Json::str("compress_pipeline")),
+        ("threads_parallel", Json::from_usize(pool.size())),
+        ("configs", Json::arr(rows)),
+    ]);
+    std::fs::write("BENCH_decompose.json", summary.to_pretty())
+        .expect("write BENCH_decompose.json");
+    println!("wrote BENCH_decompose.json");
 
     // AOT decompose artifact (Pallas inner kernel, XLA sort threshold).
     let dir = Path::new("artifacts");

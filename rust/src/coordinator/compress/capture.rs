@@ -1,0 +1,345 @@
+//! Stage 1 — **capture**: forward the calibration batches through the
+//! current (partially pruned) model block by block and accumulate
+//! [`ActStats`] for the four activation sources — `x_attn` (feeds
+//! wq/wk/wv), `att_out` (wo), `x_mlp` (w_gate/w_up), `mlp_inner`
+//! (w_down).
+//!
+//! Two engines behind one stage API:
+//!
+//! * [`CaptureEngine::Native`] — the pure-Rust block forward
+//!   ([`CaptureBlock::capture_forward`]): RoPE/MHA/SwiGLU out of
+//!   `model::native`, dense matmuls row-chunked on the job's pool,
+//!   activations accumulated straight into [`ActStats`] without ever
+//!   leaving the process. No `embed_*`/`block_capture_*` artifacts
+//!   required.
+//! * [`CaptureEngine::Artifact`] — the historical XLA path
+//!   (`embed_{cfg}` / `block_capture_{cfg}` / `gram_{shape}`
+//!   executables), retained as a cross-check engine; integration
+//!   tests pin the two against each other. Per-layer literals are
+//!   built **once per block** and borrowed by every batch call
+//!   (`execute_refs`) — the old pipeline re-cloned them through a
+//!   host round-trip for every batch.
+
+use super::PipelineError;
+use crate::data::TokenSet;
+use crate::model::{embed_rows, CaptureBlock, Params};
+use crate::runtime::{lit_f32, lit_i32, lit_mat, to_vec_f32, Runtime};
+use crate::slab::ActStats;
+use crate::tensor::Mat;
+use crate::util::pool::ThreadPool;
+
+/// Which engine executes the calibration forward.
+#[derive(Clone, Copy)]
+pub enum CaptureEngine<'a> {
+    /// Pure-Rust capture on the native block machinery — no XLA
+    /// artifacts anywhere near the compression path.
+    Native,
+    /// The `embed_{cfg}`/`block_capture_{cfg}` executables of `rt` —
+    /// the cross-check engine (and the only one that can feed the
+    /// `decompose_{shape}` artifact, see [`super::Engine::Artifact`]).
+    Artifact(&'a Runtime),
+}
+
+/// One block's dense weights in canonical order — the unit of work
+/// handed from capture to decompose to emit. Holds the *current*
+/// weights: originals at capture time; the decompose stage swaps the
+/// pruned reconstructions in before output propagation.
+pub struct BlockWeights {
+    pub layer: usize,
+    pub attn_norm: Vec<f32>,
+    pub mlp_norm: Vec<f32>,
+    /// The seven pruned linears in [`crate::runtime::ModelCfg::block_linears`]
+    /// order: (name, activation-source index, weight).
+    pub linears: Vec<(String, usize, Mat)>,
+}
+
+impl BlockWeights {
+    pub fn from_params(params: &Params, layer: usize) -> BlockWeights {
+        let vec1 = |name: &str| {
+            let i = params.index(name).unwrap_or_else(|| panic!("no param {name}"));
+            params.tensors[i].clone()
+        };
+        // Norm names come from the same per-block contract as the
+        // linears (`block_param_names` is the block_capture argument
+        // order: attn_norm first, mlp_norm sixth).
+        let names = params.cfg.block_param_names(layer);
+        BlockWeights {
+            layer,
+            attn_norm: vec1(&names[0]),
+            mlp_norm: vec1(&names[5]),
+            linears: params
+                .cfg
+                .block_linears(layer)
+                .map(|(name, src)| {
+                    let w = params.mat(&name);
+                    (name, src, w)
+                })
+                .into(),
+        }
+    }
+
+    /// Borrow as a native capture block.
+    fn as_capture_block(&self, n_heads: usize) -> CaptureBlock<'_> {
+        CaptureBlock {
+            attn_norm: &self.attn_norm,
+            wq: &self.linears[0].2,
+            wk: &self.linears[1].2,
+            wv: &self.linears[2].2,
+            wo: &self.linears[3].2,
+            mlp_norm: &self.mlp_norm,
+            w_gate: &self.linears[4].2,
+            w_up: &self.linears[5].2,
+            w_down: &self.linears[6].2,
+            n_heads,
+        }
+    }
+
+    /// The nine parameter literals in `block_capture` artifact order —
+    /// built once per block, borrowed by every batch call.
+    fn to_literals(&self) -> Vec<xla::Literal> {
+        vec![
+            lit_f32(&self.attn_norm, &[self.attn_norm.len()]),
+            lit_mat(&self.linears[0].2),
+            lit_mat(&self.linears[1].2),
+            lit_mat(&self.linears[2].2),
+            lit_mat(&self.linears[3].2),
+            lit_f32(&self.mlp_norm, &[self.mlp_norm.len()]),
+            lit_mat(&self.linears[4].2),
+            lit_mat(&self.linears[5].2),
+            lit_mat(&self.linears[6].2),
+        ]
+    }
+
+    /// Resident bytes of this block's weights (peak accounting).
+    pub fn nbytes(&self) -> usize {
+        self.linears.iter().map(|(_, _, w)| w.numel() * 4).sum::<usize>()
+            + (self.attn_norm.len() + self.mlp_norm.len()) * 4
+    }
+}
+
+/// The capture stage's live state: the calibration residual stream
+/// for every batch, advanced block by block.
+pub(crate) enum Capture<'a> {
+    Native {
+        /// One `(rows_b·t, dim)` residual matrix per calibration
+        /// batch; the final batch may carry fewer rows — the
+        /// sample-weighted [`ActStats::merge`] pools unequal batches
+        /// exactly, so every calibration row counts once.
+        h: Vec<Mat>,
+        t: usize,
+        n_heads: usize,
+        pool: Option<&'a ThreadPool>,
+    },
+    Artifact {
+        rt: &'a Runtime,
+        /// One `(bsz, t, dim)` device literal per calibration batch.
+        h: Vec<xla::Literal>,
+        bsz: usize,
+        t: usize,
+        dim: usize,
+        ffn: usize,
+        cap_name: String,
+    },
+}
+
+impl<'a> Capture<'a> {
+    /// Embed every calibration batch. The native engine consumes
+    /// **every row exactly once** — the final batch may be partial,
+    /// and the sample-weighted [`ActStats::merge`] pools unequal
+    /// batches exactly, so the `batch` setting only regroups the same
+    /// rows (pinned by a test). The artifact engine's batch shape is
+    /// baked into its executables: a trailing remainder is truncated
+    /// (with a stderr note), and a calibration set smaller than one
+    /// batch is an error rather than a silent double-count.
+    pub fn start(
+        engine: CaptureEngine<'a>,
+        params: &Params,
+        calib: &TokenSet,
+        batch: usize,
+        pool: Option<&'a ThreadPool>,
+    ) -> Result<Capture<'a>, PipelineError> {
+        let cfg = &params.cfg;
+        let t = cfg.max_seq;
+        if calib.rows == 0 {
+            return Err(PipelineError::Other("empty calibration set".into()));
+        }
+        let flat_tokens = |start: usize, count: usize| {
+            let mut flat = Vec::with_capacity(count * t);
+            for k in 0..count {
+                flat.extend_from_slice(&calib.row(start + k)[..t]);
+            }
+            flat
+        };
+        match engine {
+            CaptureEngine::Native => {
+                let bsz = batch.max(1);
+                let n_batches = calib.rows.div_ceil(bsz);
+                let tok_emb = params.mat("tok_emb");
+                let h = (0..n_batches)
+                    .map(|b| {
+                        let start = b * bsz;
+                        let count = bsz.min(calib.rows - start);
+                        embed_rows(&tok_emb, &flat_tokens(start, count))
+                    })
+                    .collect();
+                Ok(Capture::Native {
+                    h,
+                    t,
+                    n_heads: cfg.n_heads,
+                    pool,
+                })
+            }
+            CaptureEngine::Artifact(rt) => {
+                let bsz = rt.manifest.eval_batch;
+                if calib.rows < bsz {
+                    return Err(PipelineError::Other(format!(
+                        "calibration set ({} rows) smaller than the artifact eval batch \
+                         ({bsz}) — the capture executables are static-shaped; use \
+                         CaptureEngine::Native",
+                        calib.rows
+                    )));
+                }
+                let n_batches = calib.rows / bsz;
+                if calib.rows % bsz != 0 {
+                    eprintln!(
+                        "[compress] artifact capture truncates calibration to {} of {} rows \
+                         (static batch {bsz})",
+                        n_batches * bsz,
+                        calib.rows
+                    );
+                }
+                let emb_name = format!("embed_{}", cfg.name);
+                // Hoisted once and borrowed per call — no per-batch
+                // host round-trip of the embedding table. Resolved by
+                // name (like every other parameter here), not by flat
+                // position.
+                let emb_idx = params.index("tok_emb").ok_or_else(|| {
+                    PipelineError::Other("no tok_emb parameter in config".into())
+                })?;
+                let tok_emb_lit =
+                    lit_f32(&params.tensors[emb_idx], &cfg.param_shapes[emb_idx]);
+                let mut h = Vec::with_capacity(n_batches);
+                for b in 0..n_batches {
+                    let tok_lit = lit_i32(&flat_tokens(b * bsz, bsz), &[bsz, t]);
+                    let outs = rt.execute_refs(&emb_name, &[&tok_emb_lit, &tok_lit])?;
+                    h.push(outs.into_iter().next().ok_or_else(|| {
+                        PipelineError::Other("embed artifact returned no outputs".into())
+                    })?);
+                }
+                Ok(Capture::Artifact {
+                    rt,
+                    h,
+                    bsz,
+                    t,
+                    dim: cfg.dim,
+                    ffn: cfg.ffn,
+                    cap_name: format!("block_capture_{}", cfg.name),
+                })
+            }
+        }
+    }
+
+    /// Forward every batch through `blockw` with its *current*
+    /// weights, folding the four activation sources into per-source
+    /// [`ActStats`] (sample-weighted merges — batches of unequal row
+    /// counts pool exactly). The residual stream is **not** advanced.
+    pub fn capture_block(
+        &self,
+        blockw: &BlockWeights,
+        needs_gram: bool,
+    ) -> Result<[ActStats; 4], PipelineError> {
+        let mut stats: [Option<ActStats>; 4] = [None, None, None, None];
+        let fold = |stats: &mut [Option<ActStats>; 4], slot: usize, st: ActStats| {
+            match &mut stats[slot] {
+                Some(acc) => acc.merge(&st),
+                None => stats[slot] = Some(st),
+            }
+        };
+        match self {
+            Capture::Native { h, t, n_heads, pool } => {
+                let blk = blockw.as_capture_block(*n_heads);
+                for hb in h {
+                    let acts = blk.capture_forward(hb, hb.rows / *t, *pool);
+                    for (slot, x) in [
+                        (0usize, &acts.x_attn),
+                        (1, &acts.att_out),
+                        (2, &acts.x_mlp),
+                        (3, &acts.mlp_inner),
+                    ] {
+                        let st = if needs_gram {
+                            ActStats::from_activations_with_gram_par(x, *pool)
+                        } else {
+                            ActStats::from_activations(x)
+                        };
+                        fold(&mut stats, slot, st);
+                    }
+                }
+            }
+            Capture::Artifact { rt, h, bsz, t, dim, ffn, cap_name } => {
+                let lits = blockw.to_literals();
+                for hlit in h {
+                    let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+                    inputs.push(hlit);
+                    let outs = rt.execute_refs(cap_name, &inputs)?;
+                    // outs: h_out, x_attn, att_out, x_mlp, mlp_inner
+                    if outs.len() < 5 {
+                        return Err(PipelineError::Other(format!(
+                            "{cap_name} returned {} outputs, expected 5",
+                            outs.len()
+                        )));
+                    }
+                    for (slot, idx) in [(0usize, 1usize), (1, 2), (2, 3), (3, 4)] {
+                        let din = if slot == 3 { *ffn } else { *dim };
+                        let rows = bsz * t;
+                        let x = Mat::from_vec(rows, din, to_vec_f32(&outs[idx]));
+                        let st = if needs_gram {
+                            // Gram via the XLA kernel (Din³-scale work).
+                            let gname = format!("gram_{rows}x{din}");
+                            let gouts = rt.execute(&gname, &[lit_mat(&x)])?;
+                            let gram = Mat::from_vec(din, din, to_vec_f32(&gouts[0]));
+                            ActStats::from_raw(x.col_norms(), Some(gram), rows)
+                        } else {
+                            ActStats::from_activations(&x)
+                        };
+                        fold(&mut stats, slot, st);
+                    }
+                }
+            }
+        }
+        Ok(stats.map(|s| s.expect("at least one calibration batch")))
+    }
+
+    /// Propagate the residual stream through `blockw` with its
+    /// (now pruned) weights — the hand-off to the next block.
+    pub fn advance(&mut self, blockw: &BlockWeights) -> Result<(), PipelineError> {
+        match self {
+            Capture::Native { h, t, n_heads, pool } => {
+                let blk = blockw.as_capture_block(*n_heads);
+                for hb in h.iter_mut() {
+                    *hb = blk.capture_forward(hb, hb.rows / *t, *pool).h_out;
+                }
+                Ok(())
+            }
+            Capture::Artifact { rt, h, cap_name, .. } => {
+                let lits = blockw.to_literals();
+                for hlit in h.iter_mut() {
+                    let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+                    inputs.push(hlit);
+                    let outs = rt.execute_refs(cap_name, &inputs)?;
+                    *hlit = outs.into_iter().next().ok_or_else(|| {
+                        PipelineError::Other("block_capture returned no outputs".into())
+                    })?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Resident bytes of the calibration stream (peak accounting).
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            Capture::Native { h, .. } => h.iter().map(|m| m.numel() * 4).sum(),
+            Capture::Artifact { h, bsz, t, dim, .. } => h.len() * bsz * t * dim * 4,
+        }
+    }
+}

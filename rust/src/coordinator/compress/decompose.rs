@@ -1,0 +1,162 @@
+//! Stage 2 — **decompose**: prune/decompose the seven linears of a
+//! captured block.
+//!
+//! After capture the linears share only the read-only per-source
+//! [`ActStats`] (HASSLE-free's framing: sparse+low-rank compression
+//! is a set of independent per-layer local-loss problems), so they
+//! fan out across [`ThreadPool::scoped_map`] workers. The reduction
+//! is slot-ordered — reports and packed layers come back in the
+//! canonical [`crate::runtime::ModelCfg::block_linears`] order — so a
+//! parallel run is **bit-identical** to the serial one (pinned by
+//! tests at the job level and end-to-end).
+//!
+//! For SLaB the dense reconstruction `Ŵ` and the packed layer now come
+//! from a *single* Algorithm-1 run; the old pipeline ran the
+//! decomposition twice per linear (once inside
+//! `Method::compress_layer`, once for the packed output).
+
+use super::capture::BlockWeights;
+use super::{Engine, LayerReport, PipelineError};
+use crate::baselines::{Method, MethodError};
+use crate::runtime::{lit_mat, lit_scalar_i32, to_vec_f32, Runtime};
+use crate::slab::{ActStats, SlabConfig, SlabLayer};
+use crate::tensor::Mat;
+use crate::util::pool::ThreadPool;
+
+/// One linear's stage output, in canonical block order.
+pub(crate) struct LinearOut {
+    pub report: LayerReport,
+    /// Dense reconstruction — always materialized (the capture stage
+    /// needs it to propagate pruned outputs); retained past the block
+    /// only on `keep_dense` jobs.
+    pub w_hat: Mat,
+    pub packed: Option<SlabLayer>,
+}
+
+/// Decompose every linear of `blockw` against its activation source.
+pub(crate) fn decompose_block(
+    method: &Method,
+    engine: Engine,
+    rt: Option<&Runtime>,
+    blockw: &BlockWeights,
+    stats: &[ActStats; 4],
+    pool: Option<&ThreadPool>,
+) -> Result<Vec<LinearOut>, PipelineError> {
+    // SLaB through the AOT `decompose_{shape}` artifact stays serial:
+    // the PJRT client is not a fan-out target, and the artifact path
+    // exists as the paper-faithful cross-check, not the fast path.
+    if let (Method::Slab(scfg), Engine::Artifact) = (method, engine) {
+        let rt = rt.ok_or_else(|| {
+            PipelineError::Other(
+                "artifact decompose engine requires the artifact capture engine".into(),
+            )
+        })?;
+        return blockw
+            .linears
+            .iter()
+            .map(|(name, src, w)| decompose_one_artifact(rt, name, w, &stats[*src], scfg))
+            .collect();
+    }
+    let items: Vec<(&str, &Mat, &ActStats)> = blockw
+        .linears
+        .iter()
+        .map(|(name, src, w)| (name.as_str(), w, &stats[*src]))
+        .collect();
+    match pool {
+        Some(p) if p.size() > 1 => p
+            .scoped_map(items, |(name, w, st)| decompose_one(method, name, w, st))
+            .into_iter()
+            .collect(),
+        _ => items
+            .into_iter()
+            .map(|(name, w, st)| decompose_one(method, name, w, st))
+            .collect(),
+    }
+}
+
+/// Compress one linear natively. This is the unit of work a pool
+/// worker runs, so it must not touch the pool itself (no nested
+/// fork-join); the per-row inner parallelism of
+/// [`crate::slab::decompose_par`] is for single-layer callers.
+fn decompose_one(
+    method: &Method,
+    name: &str,
+    w: &Mat,
+    stats: &ActStats,
+) -> Result<LinearOut, PipelineError> {
+    let (w_hat, kept, frob, packed) = match method {
+        Method::Slab(scfg) => {
+            let d = crate::slab::decompose(w, stats, scfg).map_err(MethodError::Config)?;
+            let packed = SlabLayer::from_decomposition(&d);
+            let frob = *d.frob_trace.last().unwrap_or(&0.0);
+            (d.reconstruct(), d.kept, frob, Some(packed))
+        }
+        _ => {
+            let c = method.compress_layer(w, stats)?;
+            (c.w_hat, c.kept, c.frob_err, None)
+        }
+    };
+    Ok(LinearOut {
+        report: LayerReport {
+            name: name.to_string(),
+            kept,
+            numel: w.numel(),
+            frob_err: frob,
+        },
+        w_hat,
+        packed,
+    })
+}
+
+/// Execute `decompose_{dout}x{din}` and rebuild both the dense `Ŵ`
+/// and the packed layer from its outputs.
+fn decompose_one_artifact(
+    rt: &Runtime,
+    name: &str,
+    w: &Mat,
+    stats: &ActStats,
+    scfg: &SlabConfig,
+) -> Result<LinearOut, PipelineError> {
+    let (dout, din) = w.shape();
+    let keep = scfg
+        .keep_fraction(dout, din)
+        .map_err(|e| PipelineError::Other(e.to_string()))?;
+    let art_name = format!("decompose_{dout}x{din}");
+    let outs = rt.execute(
+        &art_name,
+        &[
+            lit_mat(w),
+            crate::runtime::lit_f32(&stats.col_norms, &[din]),
+            crate::runtime::literal::lit_scalar_f32(keep as f32),
+            lit_scalar_i32(scfg.iters as i32),
+        ],
+    )?;
+    if outs.len() < 4 {
+        return Err(PipelineError::Other(format!(
+            "{art_name} returned {} outputs, expected 4",
+            outs.len()
+        )));
+    }
+    let w_s = Mat::from_vec(dout, din, to_vec_f32(&outs[0]));
+    let u = to_vec_f32(&outs[1]);
+    let v = to_vec_f32(&outs[2]);
+    let w_b = Mat::from_vec(dout, din, to_vec_f32(&outs[3]));
+    let w_hat = w_s.add(&Mat::outer(&u, &v).hadamard(&w_b));
+    let packed = SlabLayer {
+        w_s: crate::sparse::Csr::from_dense(&w_s),
+        u: vec![u],
+        v: vec![v],
+        w_b: crate::binary::BitMat::from_sign_of(&w_b),
+    };
+    let frob = w.frob_dist(&w_hat);
+    Ok(LinearOut {
+        report: LayerReport {
+            name: name.to_string(),
+            kept: packed.w_s.nnz(),
+            numel: w.numel(),
+            frob_err: frob,
+        },
+        w_hat,
+        packed: Some(packed),
+    })
+}

@@ -1,0 +1,70 @@
+//! Stage 3 — **emit**: stream each block's packed layers to disk the
+//! moment the block finishes.
+//!
+//! A [`CheckpointWriter`] appends [`SlabLayer::entries`] per linear
+//! and never holds more than the current block's tensors; combined
+//! with `keep_dense(false)`/`keep_packed(false)` on the job, peak
+//! memory is the input model plus the calibration stream plus ~one
+//! block — not a second full model (DESIGN.md §10). The resulting
+//! file is a plain `.slabckpt` container, byte-identical to a batch
+//! save of the same entries, loadable by [`load_packed_checkpoint`]
+//! or entry-by-entry by `SlabLayer::load_from`.
+
+use crate::slab::SlabLayer;
+use crate::tensor::{Checkpoint, CheckpointWriter};
+use std::io;
+use std::path::Path;
+
+/// Where packed layers go as blocks finish: a streaming checkpoint
+/// writer, or nowhere (in-memory-only jobs).
+pub(crate) struct Sink {
+    writer: Option<CheckpointWriter>,
+}
+
+impl Sink {
+    pub fn new(path: Option<&Path>) -> io::Result<Sink> {
+        Ok(Sink {
+            writer: path.map(CheckpointWriter::create).transpose()?,
+        })
+    }
+
+    /// Append one packed linear under its parameter name.
+    pub fn emit(&mut self, name: &str, layer: &SlabLayer) -> io::Result<()> {
+        if let Some(w) = &mut self.writer {
+            for e in layer.entries(name) {
+                w.append(&e)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Finalize the stream; returns the entry count (0 when nothing
+    /// was streamed).
+    pub fn finish(self) -> io::Result<usize> {
+        match self.writer {
+            Some(w) => w.finalize(),
+            None => Ok(0),
+        }
+    }
+}
+
+/// Load a packed-layer checkpoint written by the emit stage (or by
+/// `SlabLayer::save_into`): every `{prefix}.shape` entry marks one
+/// packed linear; prefixes keep their block emission order, so the
+/// result plugs straight into `SlabModel::from_packed`.
+pub fn load_packed_checkpoint(path: &Path) -> io::Result<Vec<(String, SlabLayer)>> {
+    let ck = Checkpoint::load(path)?;
+    let mut out = Vec::new();
+    for e in &ck.entries {
+        if let Some(prefix) = e.name.strip_suffix(".shape") {
+            let layer = SlabLayer::load_from(&ck, prefix).ok_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("malformed packed layer '{prefix}'"),
+                )
+            })?;
+            out.push((prefix.to_string(), layer));
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,511 @@
+//! The staged layer-wise one-shot compression pipeline (paper
+//! §II-A.1) — three decoupled stages behind one [`CompressJob`] API
+//! (DESIGN.md §10), the offline mirror of the serving refactor:
+//!
+//! 1. [`capture`] — forward the calibration batches through the
+//!    *current* (already partially pruned) weights block by block,
+//!    accumulating [`crate::slab::ActStats`] for the four activation
+//!    sources. Runs natively on the `model::native` block machinery
+//!    ([`CaptureEngine::Native`]) or through the
+//!    `embed_{cfg}`/`block_capture_{cfg}` XLA artifacts
+//!    ([`CaptureEngine::Artifact`], the cross-check engine).
+//! 2. [`decompose`] — prune the seven linears of the block. They
+//!    share only read-only stats, so they fan out across
+//!    `ThreadPool::scoped` workers with a slot-ordered reduction:
+//!    reports and packed layers are bit-identical to the serial path.
+//! 3. [`emit`] — stream the block's packed [`SlabLayer`]s to a
+//!    checkpoint as the block finishes; with `keep_dense(false)` and
+//!    `keep_packed(false)` peak memory is one block, not one model —
+//!    the configuration that compresses models too large for the old
+//!    all-in-memory loop.
+//!
+//! The historical single-call API ([`compress_model`]) survives as a
+//! thin wrapper: artifact capture, serial decompose, everything
+//! retained in memory.
+
+pub mod capture;
+pub mod decompose;
+pub mod emit;
+
+pub use capture::{BlockWeights, CaptureEngine};
+pub use emit::load_packed_checkpoint;
+
+use crate::baselines::{Method, MethodError};
+use crate::data::TokenSet;
+use crate::model::Params;
+use crate::runtime::client::RuntimeError;
+use crate::runtime::Runtime;
+use crate::slab::SlabLayer;
+use crate::util::pool::ThreadPool;
+use std::path::PathBuf;
+
+/// Where the SLaB decomposition itself runs (the capture engine is a
+/// separate, orthogonal choice — [`CompressJob::capture`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Pure-rust decomposition (used by all baselines; SLaB optional).
+    Native,
+    /// SLaB through the AOT Pallas `decompose_{shape}` artifact.
+    /// Requires [`CaptureEngine::Artifact`] (it needs the runtime).
+    Artifact,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerReport {
+    pub name: String,
+    pub kept: usize,
+    pub numel: usize,
+    pub frob_err: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct CompressReport {
+    pub method: String,
+    pub layers: Vec<LayerReport>,
+    pub wall_secs: f64,
+    /// Mean ‖W − Ŵ‖_F across layers (the Fig. 3 metric).
+    pub mean_frob: f64,
+    /// Peak resident tensor bytes — an accounting proxy (inputs +
+    /// calibration stream + retained outputs + the largest per-block
+    /// transient), not an RSS measurement; comparable across job
+    /// configurations, which is what the streaming-emit story needs.
+    pub peak_bytes: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum PipelineError {
+    #[error("runtime: {0}")]
+    Runtime(#[from] RuntimeError),
+    #[error("method: {0}")]
+    Method(#[from] MethodError),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("pipeline: {0}")]
+    Other(String),
+}
+
+/// Result of the legacy [`compress_model`] call: swapped-in dense
+/// reconstructions plus (for SLaB) the packed deployable layers.
+pub struct CompressedModel {
+    pub params: Params,
+    pub slab_layers: Vec<(String, SlabLayer)>,
+    pub report: CompressReport,
+}
+
+/// Everything a [`CompressJob`] run produces. `params`/`slab_layers`
+/// are present only when the job was asked to retain them — a
+/// streaming job's packed layers live in its checkpoint instead.
+pub struct CompressOut {
+    /// Dense params with `Ŵ` swapped in (`None` on `keep_dense(false)`
+    /// jobs).
+    pub params: Option<Params>,
+    /// Packed layers in emission order (empty on `keep_packed(false)`
+    /// jobs).
+    pub slab_layers: Vec<(String, SlabLayer)>,
+    pub report: CompressReport,
+}
+
+/// One compression run, configured then [`run`](CompressJob::run):
+///
+/// ```text
+/// CompressJob::new(&params, &calib, &method)
+///     .threads(0)                      // decompose fan-out + capture matmuls
+///     .keep_dense(false)               // don't clone the model
+///     .keep_packed(false)
+///     .stream_to("runs/m.slabckpt".into())  // emit per block
+///     .run()?
+/// ```
+///
+/// Defaults reproduce the historical pipeline: native capture with
+/// batch 8, native decompose, serial (`threads = 1`), everything
+/// retained, nothing streamed.
+pub struct CompressJob<'a> {
+    params: &'a Params,
+    calib: &'a TokenSet,
+    method: &'a Method,
+    capture: CaptureEngine<'a>,
+    engine: Engine,
+    threads: usize,
+    batch: usize,
+    keep_dense: bool,
+    keep_packed: bool,
+    stream_to: Option<PathBuf>,
+}
+
+impl<'a> CompressJob<'a> {
+    pub fn new(params: &'a Params, calib: &'a TokenSet, method: &'a Method) -> CompressJob<'a> {
+        CompressJob {
+            params,
+            calib,
+            method,
+            capture: CaptureEngine::Native,
+            engine: Engine::Native,
+            threads: 1,
+            batch: 8,
+            keep_dense: true,
+            keep_packed: true,
+            stream_to: None,
+        }
+    }
+
+    /// Which engine runs the calibration forward (default: native).
+    pub fn capture(mut self, engine: CaptureEngine<'a>) -> Self {
+        self.capture = engine;
+        self
+    }
+
+    /// Which engine runs the SLaB decomposition (default: native).
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Worker threads for the decompose fan-out and the native capture
+    /// matmuls: `1` = serial (the reference path), `0` = available
+    /// parallelism, `n` = exactly `n`. Any setting is bit-identical to
+    /// serial (pinned by tests).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Calibration rows per native-capture forward; the final batch
+    /// may be partial, so every row counts exactly once regardless of
+    /// the setting (the artifact engine's batch is instead baked into
+    /// its executables, which truncates a trailing remainder).
+    /// Default 8.
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Retain a full dense model with `Ŵ` swapped in (default true).
+    /// `false` skips the model clone entirely — each block's dense
+    /// reconstructions die right after output propagation.
+    pub fn keep_dense(mut self, keep: bool) -> Self {
+        self.keep_dense = keep;
+        self
+    }
+
+    /// Retain the packed layers in memory (default true).
+    pub fn keep_packed(mut self, keep: bool) -> Self {
+        self.keep_packed = keep;
+        self
+    }
+
+    /// Stream packed layers to this checkpoint as blocks finish.
+    pub fn stream_to(mut self, path: PathBuf) -> Self {
+        self.stream_to = Some(path);
+        self
+    }
+
+    /// Run capture → decompose → emit over every block.
+    pub fn run(self) -> Result<CompressOut, PipelineError> {
+        let t0 = std::time::Instant::now();
+        let cfg = self.params.cfg.clone();
+        let pool_owned = (self.threads != 1).then(|| ThreadPool::new(self.threads));
+        let pool = pool_owned.as_ref();
+        let rt: Option<&Runtime> = match self.capture {
+            CaptureEngine::Artifact(rt) => Some(rt),
+            CaptureEngine::Native => None,
+        };
+        if self.engine == Engine::Artifact && rt.is_none() {
+            return Err(PipelineError::Other(
+                "artifact decompose engine requires the artifact capture engine".into(),
+            ));
+        }
+        // Only SLaB produces packed layers; streaming any other method
+        // would quietly write a valid-but-empty checkpoint that later
+        // loads as "no packed linears" — reject the misconfiguration
+        // up front instead.
+        if self.stream_to.is_some() && !matches!(self.method, Method::Slab(_)) {
+            return Err(PipelineError::Other(format!(
+                "stream_to set but method '{}' emits no packed layers (SLaB only)",
+                self.method.name()
+            )));
+        }
+
+        let mut cap = capture::Capture::start(self.capture, self.params, self.calib, self.batch, pool)?;
+        let needs_gram = self.method.needs_gram();
+        let mut out_params = if self.keep_dense { Some(self.params.clone()) } else { None };
+        let mut sink = emit::Sink::new(self.stream_to.as_deref())?;
+        let mut slab_layers: Vec<(String, SlabLayer)> = Vec::new();
+        let mut reports: Vec<LayerReport> = Vec::new();
+
+        // Peak-resident accounting (a proxy, not an RSS reading):
+        // inputs + calibration stream (+ the keep_dense clone) are
+        // always live; retained packed layers accumulate; per-block
+        // transients add the current weights, their reconstructions,
+        // the packed triples, and the stats.
+        let params_bytes = cfg.n_params() * 4;
+        let base = params_bytes * (1 + self.keep_dense as usize) + cap.resident_bytes();
+        let mut retained = 0usize;
+        let mut peak = base;
+
+        for layer in 0..cfg.n_layers {
+            let mut blockw = BlockWeights::from_params(self.params, layer);
+            let stats = cap.capture_block(&blockw, needs_gram)?;
+            let outs =
+                decompose::decompose_block(self.method, self.engine, rt, &blockw, &stats, pool)?;
+            let transient = 2 * blockw.nbytes()
+                + stats.iter().map(|s| s.nbytes()).sum::<usize>()
+                + outs
+                    .iter()
+                    .map(|o| o.packed.as_ref().map_or(0, |p| p.nbytes_deploy()))
+                    .sum::<usize>();
+            peak = peak.max(base + retained + transient);
+            for (slot, out) in outs.into_iter().enumerate() {
+                let decompose::LinearOut { report, w_hat, packed } = out;
+                if let Some(p) = &mut out_params {
+                    p.set_mat(&report.name, &w_hat);
+                }
+                if let Some(packed) = packed {
+                    sink.emit(&report.name, &packed)?;
+                    if self.keep_packed {
+                        retained += packed.nbytes_deploy();
+                        slab_layers.push((report.name.clone(), packed));
+                    }
+                }
+                // Swap the reconstruction in for output propagation;
+                // on !keep_dense jobs it dies with `blockw` below.
+                blockw.linears[slot].2 = w_hat;
+                reports.push(report);
+            }
+            // The last block's output feeds nothing — skip the
+            // propagation forward (one full calibration pass saved).
+            if layer + 1 < cfg.n_layers {
+                cap.advance(&blockw)?;
+            }
+            eprintln!(
+                "[compress] {} block {}/{} done",
+                self.method.name(),
+                layer + 1,
+                cfg.n_layers
+            );
+        }
+        let streamed = sink.finish()?;
+        if let Some(path) = &self.stream_to {
+            eprintln!("[compress] streamed {streamed} entries → {}", path.display());
+        }
+
+        let mean_frob = reports.iter().map(|l| l.frob_err as f64).sum::<f64>()
+            / reports.len().max(1) as f64;
+        Ok(CompressOut {
+            params: out_params,
+            slab_layers,
+            report: CompressReport {
+                method: self.method.name(),
+                layers: reports,
+                wall_secs: t0.elapsed().as_secs_f64(),
+                mean_frob,
+                peak_bytes: peak,
+            },
+        })
+    }
+}
+
+/// Compress every pruned linear of `params` with `method` — the
+/// historical single-call API: artifact capture, serial decompose,
+/// dense and packed outputs retained in memory. Callers that want
+/// native capture, a parallel decompose stage, or streaming emission
+/// use [`CompressJob`] directly.
+pub fn compress_model(
+    rt: &Runtime,
+    params: &Params,
+    calib: &TokenSet,
+    method: &Method,
+    engine: Engine,
+) -> Result<CompressedModel, PipelineError> {
+    let out = CompressJob::new(params, calib, method)
+        .capture(CaptureEngine::Artifact(rt))
+        .engine(engine)
+        .run()?;
+    Ok(CompressedModel {
+        params: out
+            .params
+            .ok_or_else(|| PipelineError::Other("keep_dense run returned no params".into()))?,
+        slab_layers: out.slab_layers,
+        report: out.report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    //! The native capture engine needs no artifacts, so the staged
+    //! pipeline's invariants run on every `cargo test`; the
+    //! native-vs-artifact cross-checks live in
+    //! `rust/tests/integration.rs` (artifact-gated).
+
+    use super::*;
+    use crate::model::SlabModel;
+    use crate::runtime::ModelCfg;
+    use crate::slab::SlabConfig;
+
+    fn tiny_cfg(n_layers: usize) -> ModelCfg {
+        ModelCfg::llama("tiny-compress", 32, 8, n_layers, 2, 16, 10, 4)
+    }
+
+    /// Deterministic in-vocab calibration rows — no grammar needed.
+    fn calib(cfg: &ModelCfg, rows: usize) -> TokenSet {
+        TokenSet::synthetic(rows, cfg.max_seq, cfg.vocab)
+    }
+
+    fn slab_method() -> Method {
+        Method::Slab(SlabConfig {
+            iters: 2,
+            svd_iters: 4,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn native_capture_wanda_matches_paper_semantics() {
+        // The native twin of the artifact-gated pipeline test: exact
+        // per-row sparsity on every pruned linear, untouched params
+        // bit-identical, full report coverage.
+        let cfg = tiny_cfg(2);
+        let params = Params::init(&cfg, 400);
+        let method = Method::Wanda { sparsity: 0.5, pattern: None };
+        let out = CompressJob::new(&params, &calib(&cfg, 4), &method).run().unwrap();
+        let p = out.params.as_ref().unwrap();
+        for (name, (dout, din)) in &cfg.pruned {
+            let m = p.mat(name);
+            for i in 0..*dout {
+                let nnz = m.row(i).iter().filter(|&&v| v != 0.0).count();
+                assert_eq!(nnz, din / 2, "{name} row {i}");
+            }
+        }
+        for (i, name) in cfg.param_names.iter().enumerate() {
+            if !cfg.pruned.iter().any(|(pn, _)| pn == name) {
+                assert_eq!(p.tensors[i], params.tensors[i], "{name} must be untouched");
+            }
+        }
+        assert_eq!(out.report.layers.len(), cfg.pruned.len());
+        assert!(out.slab_layers.is_empty(), "wanda emits no packed layers");
+        assert!(out.report.peak_bytes > 0);
+    }
+
+    #[test]
+    fn parallel_job_is_bit_identical_to_serial() {
+        // The tentpole determinism contract, end to end: fanning the
+        // decompose stage (and the capture matmuls) across workers
+        // must not change one bit of any packed layer, parameter, or
+        // report.
+        let cfg = tiny_cfg(2);
+        let params = Params::init(&cfg, 401);
+        let cal = calib(&cfg, 4);
+        let method = slab_method();
+        let serial = CompressJob::new(&params, &cal, &method).run().unwrap();
+        let par = CompressJob::new(&params, &cal, &method).threads(4).run().unwrap();
+        assert_eq!(serial.slab_layers, par.slab_layers, "packed layers");
+        assert_eq!(
+            serial.params.as_ref().unwrap().tensors,
+            par.params.as_ref().unwrap().tensors,
+            "dense reconstructions"
+        );
+        assert_eq!(serial.report.layers, par.report.layers, "reports");
+        assert_eq!(serial.slab_layers.len(), cfg.pruned.len());
+        // Canonical emission order: block-major, block_linears-minor.
+        let names: Vec<&str> = serial.slab_layers.iter().map(|(n, _)| n.as_str()).collect();
+        let expect: Vec<String> = (0..cfg.n_layers)
+            .flat_map(|l| cfg.block_linears(l).map(|(n, _)| n))
+            .collect();
+        assert_eq!(names, expect.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn streaming_lean_job_matches_in_memory_and_shrinks_peak() {
+        // keep nothing + stream: the checkpoint must reload to exactly
+        // the in-memory packed layers, serve token-identically, and
+        // the peak-bytes proxy must come in under the keep-everything
+        // run.
+        let cfg = tiny_cfg(2);
+        let params = Params::init(&cfg, 402);
+        let cal = calib(&cfg, 4);
+        let method = slab_method();
+        let keep = CompressJob::new(&params, &cal, &method).run().unwrap();
+        let path = std::env::temp_dir().join("slab-tests/compress-stream.slabckpt");
+        let lean = CompressJob::new(&params, &cal, &method)
+            .threads(2)
+            .keep_dense(false)
+            .keep_packed(false)
+            .stream_to(path.clone())
+            .run()
+            .unwrap();
+        assert!(lean.params.is_none());
+        assert!(lean.slab_layers.is_empty());
+        assert!(
+            lean.report.peak_bytes < keep.report.peak_bytes,
+            "stream {} vs keep {}",
+            lean.report.peak_bytes,
+            keep.report.peak_bytes
+        );
+        assert_eq!(lean.report.layers, keep.report.layers, "reports still complete");
+
+        let loaded = load_packed_checkpoint(&path).unwrap();
+        assert_eq!(loaded, keep.slab_layers, "streamed layers reload bit-identically");
+
+        // And the streamed checkpoint serves: packed engine over the
+        // reloaded layers vs dense engine over the kept Ŵ.
+        let packed_model = SlabModel::from_packed(&params, &loaded, 1);
+        let dense_model = SlabModel::from_dense(keep.params.as_ref().unwrap(), 1);
+        let prompts = vec![vec![5, 6, 7], vec![9, 10]];
+        assert_eq!(
+            packed_model.generate_batch(&prompts, 4),
+            dense_model.generate_batch(&prompts, 4),
+            "streamed checkpoint must serve token-identically"
+        );
+    }
+
+    #[test]
+    fn batch_size_only_regroups_the_same_rows() {
+        // Any batch size — dividing or not — feeds every calibration
+        // row exactly once through identical weights; the
+        // sample-weighted ActStats merge pools the (possibly partial)
+        // batches to the same statistic up to rounding, so per-layer
+        // error stays put to float tolerance.
+        let cfg = tiny_cfg(1);
+        let params = Params::init(&cfg, 403);
+        let cal = calib(&cfg, 4);
+        let method = Method::Wanda { sparsity: 0.5, pattern: None };
+        let a = CompressJob::new(&params, &cal, &method).batch(4).run().unwrap();
+        // batch 3 → batches of 3 and 1 rows; batch 7 → one short batch.
+        for batch in [2usize, 3, 7] {
+            let b = CompressJob::new(&params, &cal, &method).batch(batch).run().unwrap();
+            for (la, lb) in a.report.layers.iter().zip(b.report.layers.iter()) {
+                assert_eq!(la.kept, lb.kept, "batch {batch}");
+                assert!(
+                    (la.frob_err - lb.frob_err).abs() <= 1e-3 * (1.0 + la.frob_err.abs()),
+                    "batch {batch} {}: {} vs {}",
+                    la.name,
+                    la.frob_err,
+                    lb.frob_err
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_a_non_packed_method_is_rejected() {
+        // Wanda emits no packed layers; streaming it would produce a
+        // valid-but-empty checkpoint — the job must refuse up front.
+        let cfg = tiny_cfg(1);
+        let params = Params::init(&cfg, 405);
+        let cal = calib(&cfg, 2);
+        let method = Method::Wanda { sparsity: 0.5, pattern: None };
+        let err = CompressJob::new(&params, &cal, &method)
+            .stream_to(std::env::temp_dir().join("slab-tests/never-written.slabckpt"))
+            .run();
+        assert!(matches!(err, Err(PipelineError::Other(_))));
+    }
+
+    #[test]
+    fn artifact_decompose_requires_artifact_capture() {
+        let cfg = tiny_cfg(1);
+        let params = Params::init(&cfg, 404);
+        let cal = calib(&cfg, 2);
+        let method = slab_method();
+        let err = CompressJob::new(&params, &cal, &method).engine(Engine::Artifact).run();
+        assert!(matches!(err, Err(PipelineError::Other(_))));
+    }
+}

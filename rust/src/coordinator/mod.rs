@@ -1,12 +1,16 @@
-//! Layer-3 coordination: the one-shot compression pipeline
-//! ([`pipeline`]) and the serving router ([`serve`]) over its three
-//! engines ([`serve::Backend`]) — two dynamic batchers and the
-//! continuous-batching [`serve::Scheduler`].
+//! Layer-3 coordination: the staged one-shot compression pipeline
+//! ([`compress`] — capture → decompose → emit behind one
+//! [`compress::CompressJob`]) and the serving router ([`serve`]) over
+//! its three engines ([`serve::Backend`]) — two dynamic batchers and
+//! the continuous-batching [`serve::Scheduler`].
 
-pub mod pipeline;
+pub mod compress;
 pub mod serve;
 
-pub use pipeline::{compress_model, CompressReport, CompressedModel, Engine, PipelineError};
+pub use compress::{
+    compress_model, load_packed_checkpoint, CaptureEngine, CompressJob, CompressOut,
+    CompressReport, CompressedModel, Engine, LayerReport, PipelineError,
+};
 pub use serve::{
     Backend, Request, Response, Scheduler, SchedulerConfig, ServeStats, Server, ServerConfig,
 };

@@ -40,6 +40,20 @@ impl TokenSet {
     pub fn token_count(&self) -> usize {
         self.rows * self.seq_len
     }
+
+    /// Deterministic synthetic rows cycling through the non-special
+    /// token range `[4, vocab)` — grammar-free calibration input for
+    /// tests, benches, and examples (the compression pipeline only
+    /// needs *some* in-vocab activations, not fluent text).
+    pub fn synthetic(rows: usize, seq_len: usize, vocab: usize) -> TokenSet {
+        assert!(vocab > 4, "vocab {vocab} must exceed the 4 special tokens");
+        let w = seq_len + 1;
+        TokenSet {
+            seq_len,
+            rows,
+            data: (0..rows * w).map(|i| 4 + (i * 7 % (vocab - 4)) as i32).collect(),
+        }
+    }
 }
 
 /// Pack grammar sentences into fixed rows.

@@ -29,7 +29,8 @@
 //! * [`data`] — synthetic grammar corpus, tokenizer, calibration sets.
 //! * [`train`] — drives the AOT train-step artifact.
 //! * [`eval`] — perplexity + zero-shot suites.
-//! * [`coordinator`] — layer-wise pruning pipeline + serving router
+//! * [`coordinator`] — staged compression pipeline (capture →
+//!   decompose → emit behind one `CompressJob`) + serving router
 //!   with three engines (AOT artifacts / native packed / native
 //!   packed behind the continuous-batching scheduler).
 //! * [`report`] — paper-style table rendering.

@@ -4,6 +4,7 @@
 //! ```text
 //! slab train   --model base --steps 350
 //! slab compress --model base --method slab --cr 0.5 [--pattern 2:4] [--engine artifact]
+//!              [--capture native|artifact] [--threads N] [--stream out.slabckpt]
 //! slab eval    --model base [--ckpt runs/base_slab.slabckpt]
 //! slab table1  --models small,base,large [--groups "US (50%)"]
 //! slab table2 | table3 | fig1 | fig3
@@ -34,7 +35,7 @@
 )]
 
 use slab::baselines::{Method, SparseGptConfig};
-use slab::coordinator::{compress_model, Engine, Request, Server, ServerConfig};
+use slab::coordinator::{CaptureEngine, CompressJob, Engine, Request, Server, ServerConfig};
 use slab::eval::{perplexity, zero_shot};
 use slab::experiments::{self, Lab};
 use slab::model::Params;
@@ -131,16 +132,35 @@ fn run(args: &Args) -> anyhow::Result<()> {
             };
             let dense = lab.dense_params(&model, lab.default_steps(&model))?;
             let corpus = lab.corpus(&model);
-            let c = compress_model(&lab.rt, &dense, &corpus.calib, &method, engine)?;
+            // Staged job: --capture native runs the calibration forward
+            // without the embed/block_capture artifacts; --threads N
+            // fans the decompose stage out (bit-identical to serial);
+            // --stream writes packed layers per block.
+            let capture = match args.get_str("capture", "artifact").as_str() {
+                "native" => CaptureEngine::Native,
+                _ => CaptureEngine::Artifact(&lab.rt),
+            };
+            let mut job = CompressJob::new(&dense, &corpus.calib, &method)
+                .capture(capture)
+                .engine(engine)
+                .threads(args.get_usize("threads", 1)?);
+            if let Some(p) = args.get("stream") {
+                job = job.stream_to(PathBuf::from(p));
+            }
+            let c = job.run()?;
             let out = lab
                 .runs_dir
                 .join(format!("{model}_{}.slabckpt", method.name().to_lowercase()));
-            c.params.save(&out)?;
+            let params = c
+                .params
+                .ok_or_else(|| anyhow::anyhow!("compress job dropped its dense params"))?;
+            params.save(&out)?;
             println!(
-                "{} compressed '{model}' in {:.1}s — mean ‖W−Ŵ‖_F {:.4} → {}",
+                "{} compressed '{model}' in {:.1}s — mean ‖W−Ŵ‖_F {:.4}, peak ≈{:.1} MiB → {}",
                 method.name(),
                 c.report.wall_secs,
                 c.report.mean_frob,
+                c.report.peak_bytes as f64 / (1 << 20) as f64,
                 out.display()
             );
         }

@@ -13,5 +13,8 @@
 pub mod native;
 pub mod params;
 
-pub use native::{greedy_token, DecodeSlot, KvCache, KvCachePool, Linear, SlabModel};
+pub use native::{
+    embed_rows, greedy_token, BlockActs, CaptureBlock, DecodeSlot, KvCache, KvCachePool, Linear,
+    SlabModel,
+};
 pub use params::Params;

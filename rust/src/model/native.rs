@@ -23,7 +23,7 @@ use crate::model::Params;
 use crate::runtime::ModelCfg;
 use crate::slab::SlabLayer;
 use crate::tensor::ops::softmax_inplace;
-use crate::tensor::{matmul_bt, Mat};
+use crate::tensor::{matmul_bt, matmul_bt_par, Mat};
 use crate::util::pool::{SlotArena, ThreadPool};
 
 /// Matches `model.py::ModelConfig.norm_eps` (not carried by the
@@ -56,10 +56,16 @@ impl Linear {
         }
     }
 
-    /// `y = x·Wᵀ` for a batch of rows.
+    /// `y = x·Wᵀ` for a batch of rows. Dense weights row-chunk the
+    /// activation batch across the pool ([`matmul_bt_par`],
+    /// bit-identical to the serial kernel); packed ones run the fused
+    /// CSR/bitplane kernels.
     pub fn apply(&self, x: &Mat, pool: Option<&ThreadPool>) -> Mat {
         match self {
-            Linear::Dense(w) => matmul_bt(x, w),
+            Linear::Dense(w) => match pool {
+                Some(p) => matmul_bt_par(x, w, p),
+                None => matmul_bt(x, w),
+            },
             Linear::Packed(l) => l.forward_fused(x, pool),
         }
     }
@@ -345,16 +351,7 @@ impl SlabModel {
     }
 
     fn embed(&self, tokens: &[i32]) -> Mat {
-        let mut h = Mat::zeros(tokens.len(), self.cfg.dim);
-        for (r, &tok) in tokens.iter().enumerate() {
-            assert!(
-                tok >= 0 && (tok as usize) < self.cfg.vocab,
-                "token {tok} out of vocab {}",
-                self.cfg.vocab
-            );
-            h.row_mut(r).copy_from_slice(self.tok_emb.row(tok as usize));
-        }
-        h
+        embed_rows(&self.tok_emb, tokens)
     }
 
     /// Prefill `tokens` (flat `(B, T)` row-major, left-aligned,
@@ -371,7 +368,6 @@ impl SlabModel {
         );
         let (dim, nh) = (self.cfg.dim, self.cfg.n_heads);
         let hd = dim / nh;
-        let scale = 1.0 / (hd as f32).sqrt();
         let pool = Some(&self.pool);
 
         let mut h = self.embed(tokens);
@@ -394,41 +390,7 @@ impl SlabModel {
                     cache.write(li, b, s, k.row(b * t + s), v.row(b * t + s));
                 }
             }
-            let mut att = Mat::zeros(bsz * t, dim);
-            let mut scores = vec![0.0f32; t];
-            for b in 0..bsz {
-                for tq in 0..t {
-                    let qrow = q.row(b * t + tq);
-                    for hh in 0..nh {
-                        let qh = &qrow[hh * hd..(hh + 1) * hd];
-                        for (s, sc) in scores.iter_mut().enumerate() {
-                            *sc = if s > tq || !key_ok[b * t + s] {
-                                // Same additive-mask value as model.py;
-                                // the all-masked PAD-query row degrades
-                                // to uniform attention there and here.
-                                -1e30
-                            } else {
-                                let kh = &k.row(b * t + s)[hh * hd..(hh + 1) * hd];
-                                let mut d = 0.0f32;
-                                for e in 0..hd {
-                                    d += qh[e] * kh[e];
-                                }
-                                d * scale
-                            };
-                        }
-                        softmax_inplace(&mut scores);
-                        let arow = att.row_mut(b * t + tq);
-                        for (s, &p) in scores.iter().enumerate() {
-                            if p != 0.0 {
-                                let vh = &v.row(b * t + s)[hh * hd..(hh + 1) * hd];
-                                for e in 0..hd {
-                                    arow[hh * hd + e] += p * vh[e];
-                                }
-                            }
-                        }
-                    }
-                }
-            }
+            let att = causal_attention(&q, &k, &v, bsz, t, nh, hd, Some(key_ok.as_slice()));
             let proj = blk.wo.apply(&att, pool);
             h.add_assign(&proj);
             self.mlp_inplace(blk, &mut h);
@@ -670,6 +632,170 @@ impl SlabModel {
             logits = self.decode_step(&mut cache, &next, t + step);
         }
         generated
+    }
+}
+
+/// Token-embedding gather: `h[r] = tok_emb[tokens[r]]` — shared by
+/// the serving forwards and the calibration-capture path. Panics on
+/// out-of-vocab ids (serving clamps before calling; calibration
+/// streams are in-vocab by construction).
+pub fn embed_rows(tok_emb: &Mat, tokens: &[i32]) -> Mat {
+    let mut h = Mat::zeros(tokens.len(), tok_emb.cols);
+    for (r, &tok) in tokens.iter().enumerate() {
+        assert!(
+            tok >= 0 && (tok as usize) < tok_emb.rows,
+            "token {tok} out of vocab {}",
+            tok_emb.rows
+        );
+        h.row_mut(r).copy_from_slice(tok_emb.row(tok as usize));
+    }
+    h
+}
+
+/// Causal self-attention over a full `(B, T)` batch: `q`, `k`, `v`
+/// are `(B·T, dim)` row-major (RoPE already applied), `key_ok`
+/// optionally masks PAD keys (the serving prefill); `None` means every
+/// key is visible under causality — the calibration-capture case,
+/// where packed rows carry no padding. Returns the pre-`wo` context
+/// `(B·T, dim)`. Same additive-mask semantics as model.py
+/// `_attention`; an all-masked PAD-query row degrades to uniform
+/// attention there and here.
+fn causal_attention(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    bsz: usize,
+    t: usize,
+    nh: usize,
+    hd: usize,
+    key_ok: Option<&[bool]>,
+) -> Mat {
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut att = Mat::zeros(bsz * t, nh * hd);
+    let mut scores = vec![0.0f32; t];
+    for b in 0..bsz {
+        for tq in 0..t {
+            let qrow = q.row(b * t + tq);
+            for hh in 0..nh {
+                let qh = &qrow[hh * hd..(hh + 1) * hd];
+                for (s, sc) in scores.iter_mut().enumerate() {
+                    let masked = s > tq || key_ok.is_some_and(|ok| !ok[b * t + s]);
+                    *sc = if masked {
+                        // Same additive-mask value as model.py.
+                        -1e30
+                    } else {
+                        let kh = &k.row(b * t + s)[hh * hd..(hh + 1) * hd];
+                        let mut d = 0.0f32;
+                        for e in 0..hd {
+                            d += qh[e] * kh[e];
+                        }
+                        d * scale
+                    };
+                }
+                softmax_inplace(&mut scores);
+                let arow = att.row_mut(b * t + tq);
+                for (s, &p) in scores.iter().enumerate() {
+                    if p != 0.0 {
+                        let vh = &v.row(b * t + s)[hh * hd..(hh + 1) * hd];
+                        for e in 0..hd {
+                            arow[hh * hd + e] += p * vh[e];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    att
+}
+
+/// The four activation sources of one block plus the updated residual
+/// stream — the native twin of the `block_capture_{cfg}` artifact's
+/// outputs (aot.py `block_capture_flat`). All matrices are `(B·T, ·)`
+/// row-major; sources map to the pruned linears as: `x_attn` →
+/// wq/wk/wv, `att_out` → wo, `x_mlp` → w_gate/w_up, `mlp_inner` →
+/// w_down.
+pub struct BlockActs {
+    pub h_out: Mat,
+    pub x_attn: Mat,
+    pub att_out: Mat,
+    pub x_mlp: Mat,
+    pub mlp_inner: Mat,
+}
+
+/// One transformer block's dense weights, borrowed, in
+/// calibration-capture form — the compression pipeline's capture
+/// stage builds one per block from the *current* (already partially
+/// pruned) weights and forwards every calibration batch through it
+/// without touching an XLA artifact (DESIGN.md §10).
+pub struct CaptureBlock<'a> {
+    pub attn_norm: &'a [f32],
+    pub wq: &'a Mat,
+    pub wk: &'a Mat,
+    pub wv: &'a Mat,
+    pub wo: &'a Mat,
+    pub mlp_norm: &'a [f32],
+    pub w_gate: &'a Mat,
+    pub w_up: &'a Mat,
+    pub w_down: &'a Mat,
+    pub n_heads: usize,
+}
+
+impl CaptureBlock<'_> {
+    /// Forward a `(B·T, dim)` residual batch through the block,
+    /// capturing the four activation sources. Mirrors aot.py
+    /// `block_capture_flat` operation for operation: RoPE at positions
+    /// `0..T`, **pure causal** masking (calibration rows are packed,
+    /// never padded), pre-norm attention and SwiGLU residuals. Built
+    /// on the same RoPE/MHA/SwiGLU machinery as the serving forwards —
+    /// the dense matmuls run [`matmul_bt_par`] on `pool`, and every
+    /// kernel is row-wise bit-identical to its serial form, so the
+    /// capture is deterministic for any thread count.
+    pub fn capture_forward(&self, h: &Mat, bsz: usize, pool: Option<&ThreadPool>) -> BlockActs {
+        assert!(bsz > 0 && h.rows % bsz == 0, "ragged capture batch");
+        let t = h.rows / bsz;
+        let dim = self.wq.cols;
+        assert_eq!(h.cols, dim, "capture h width {} vs dim {dim}", h.cols);
+        let nh = self.n_heads;
+        let hd = dim / nh;
+        let mm = |x: &Mat, w: &Mat| match pool {
+            Some(p) => matmul_bt_par(x, w, p),
+            None => matmul_bt(x, w),
+        };
+
+        let x_attn = rmsnorm(h, self.attn_norm);
+        let mut q = mm(&x_attn, self.wq);
+        let mut k = mm(&x_attn, self.wk);
+        let v = mm(&x_attn, self.wv);
+        let tables: Vec<Vec<(f32, f32)>> = (0..t).map(|pos| rope_table(hd, pos)).collect();
+        for r in 0..bsz * t {
+            rope_apply(q.row_mut(r), nh, hd, &tables[r % t]);
+            rope_apply(k.row_mut(r), nh, hd, &tables[r % t]);
+        }
+        let att_out = causal_attention(&q, &k, &v, bsz, t, nh, hd, None);
+        let mut h_out = h.clone();
+        h_out.add_assign(&mm(&att_out, self.wo));
+
+        let x_mlp = rmsnorm(&h_out, self.mlp_norm);
+        let gate = mm(&x_mlp, self.w_gate);
+        let up = mm(&x_mlp, self.w_up);
+        let ffn = gate.cols;
+        let mut mlp_inner = Mat::zeros(h.rows, ffn);
+        for r in 0..h.rows {
+            let g = gate.row(r);
+            let u = up.row(r);
+            let irow = mlp_inner.row_mut(r);
+            for j in 0..ffn {
+                irow[j] = silu(g[j]) * u[j];
+            }
+        }
+        h_out.add_assign(&mm(&mlp_inner, self.w_down));
+        BlockActs {
+            h_out,
+            x_attn,
+            att_out,
+            x_mlp,
+            mlp_inner,
+        }
     }
 }
 
@@ -961,6 +1087,104 @@ mod tests {
         for g in &c {
             assert!(g.len() <= cfg.max_seq - cfg.prompt_len);
         }
+    }
+
+    /// Borrow pre-materialized block tensors as a [`CaptureBlock`].
+    fn capture_block(mats: &[Mat; 7], norms: &[Vec<f32>; 2], n_heads: usize) -> CaptureBlock<'_> {
+        CaptureBlock {
+            attn_norm: &norms[0],
+            wq: &mats[0],
+            wk: &mats[1],
+            wv: &mats[2],
+            wo: &mats[3],
+            mlp_norm: &norms[1],
+            w_gate: &mats[4],
+            w_up: &mats[5],
+            w_down: &mats[6],
+            n_heads,
+        }
+    }
+
+    fn block_tensors(params: &Params, layer: usize) -> ([Mat; 7], [Vec<f32>; 2]) {
+        let idx = |n: &str| params.index(&format!("l{layer}.{n}")).unwrap();
+        let mats = [
+            params.mat(&format!("l{layer}.wq")),
+            params.mat(&format!("l{layer}.wk")),
+            params.mat(&format!("l{layer}.wv")),
+            params.mat(&format!("l{layer}.wo")),
+            params.mat(&format!("l{layer}.w_gate")),
+            params.mat(&format!("l{layer}.w_up")),
+            params.mat(&format!("l{layer}.w_down")),
+        ];
+        let norms = [
+            params.tensors[idx("attn_norm")].clone(),
+            params.tensors[idx("mlp_norm")].clone(),
+        ];
+        (mats, norms)
+    }
+
+    #[test]
+    fn capture_forward_chain_is_bit_identical_to_prefill() {
+        // The capture path and the serving prefill share the block
+        // machinery (rmsnorm, RoPE, causal_attention, SwiGLU, the row
+        // kernels), so with a pad-free prompt the chained h_out of
+        // every block — finished with final-norm + head — must land on
+        // prefill's last-position logits *bit for bit*, pool or not.
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 210);
+        let model = SlabModel::from_dense(&params, 2);
+        let (bsz, t) = (2usize, cfg.max_seq);
+        let tokens: Vec<i32> = (0..bsz * t).map(|i| 5 + (i as i32 % 20)).collect();
+        let (logits, _) = model.prefill(&tokens, bsz);
+
+        let pool = ThreadPool::new(3);
+        for pool in [None, Some(&pool)] {
+            let mut h = embed_rows(&params.mat("tok_emb"), &tokens);
+            for layer in 0..cfg.n_layers {
+                let (mats, norms) = block_tensors(&params, layer);
+                let blk = capture_block(&mats, &norms, cfg.n_heads);
+                let acts = blk.capture_forward(&h, bsz, pool);
+                assert_eq!(acts.x_attn.shape(), (bsz * t, cfg.dim));
+                assert_eq!(acts.att_out.shape(), (bsz * t, cfg.dim));
+                assert_eq!(acts.x_mlp.shape(), (bsz * t, cfg.dim));
+                assert_eq!(acts.mlp_inner.shape(), (bsz * t, cfg.ffn));
+                h = acts.h_out;
+            }
+            let xf = rmsnorm(&h, &model.final_norm);
+            let mut last = Mat::zeros(bsz, cfg.dim);
+            for b in 0..bsz {
+                last.row_mut(b).copy_from_slice(xf.row(b * t + t - 1));
+            }
+            let chained = matmul_bt(&last, &model.lm_head);
+            assert_eq!(chained.data, logits.data, "pool={}", pool.is_some());
+        }
+    }
+
+    #[test]
+    fn capture_sources_match_block_definitions() {
+        // Spot-check the four captured sources against their paper
+        // definitions: x_attn = rmsnorm(h), mlp_inner = silu(gate)⊙up,
+        // h_out = h + att·woᵀ + inner·w_downᵀ.
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 211);
+        let mut rng = Pcg64::seed_from_u64(212);
+        let h = Mat::randn(2 * cfg.max_seq, cfg.dim, 1.0, &mut rng);
+        let (mats, norms) = block_tensors(&params, 0);
+        let blk = capture_block(&mats, &norms, cfg.n_heads);
+        let acts = blk.capture_forward(&h, 2, None);
+        assert_eq!(acts.x_attn, rmsnorm(&h, &norms[0]));
+        let gate = matmul_bt(&acts.x_mlp, &mats[4]);
+        let up = matmul_bt(&acts.x_mlp, &mats[5]);
+        for r in 0..h.rows {
+            for j in 0..cfg.ffn {
+                let expect = silu(gate.at(r, j)) * up.at(r, j);
+                assert!((acts.mlp_inner.at(r, j) - expect).abs() < 1e-6);
+            }
+        }
+        let mut expect_h = h.clone();
+        expect_h.add_assign(&matmul_bt(&acts.att_out, &mats[3]));
+        expect_h.add_assign(&matmul_bt(&acts.mlp_inner, &mats[6]));
+        assert!(acts.h_out.allclose(&expect_h, 1e-5, 1e-5));
     }
 
     #[test]

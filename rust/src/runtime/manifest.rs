@@ -124,6 +124,41 @@ impl ModelCfg {
     pub fn param_index(&self, name: &str) -> Option<usize> {
         self.param_names.iter().position(|n| n == name)
     }
+
+    /// The nine per-layer parameter names in `block_capture` artifact
+    /// order — the per-block shape contract the compression pipeline's
+    /// capture stage shares with aot.py (`block_capture_flat`).
+    pub fn block_param_names(&self, layer: usize) -> [String; 9] {
+        [
+            format!("l{layer}.attn_norm"),
+            format!("l{layer}.wq"),
+            format!("l{layer}.wk"),
+            format!("l{layer}.wv"),
+            format!("l{layer}.wo"),
+            format!("l{layer}.mlp_norm"),
+            format!("l{layer}.w_gate"),
+            format!("l{layer}.w_up"),
+            format!("l{layer}.w_down"),
+        ]
+    }
+
+    /// The seven pruned linears of block `layer` paired with their
+    /// activation-source index in the capture outputs: 0 = `x_attn`
+    /// (wq/wk/wv), 1 = `att_out` (wo), 2 = `x_mlp` (w_gate/w_up),
+    /// 3 = `mlp_inner` (w_down). This order is the canonical reduction
+    /// order of the decompose stage — reports and packed layers are
+    /// emitted in it whether the stage ran serial or fanned out.
+    pub fn block_linears(&self, layer: usize) -> [(String, usize); 7] {
+        [
+            (format!("l{layer}.wq"), 0),
+            (format!("l{layer}.wk"), 0),
+            (format!("l{layer}.wv"), 0),
+            (format!("l{layer}.wo"), 1),
+            (format!("l{layer}.w_gate"), 2),
+            (format!("l{layer}.w_up"), 2),
+            (format!("l{layer}.w_down"), 3),
+        ]
+    }
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -359,6 +394,34 @@ mod tests {
             ("l0.wq".to_string(), (16, 16))
         );
         assert_eq!(&cfg.slab_param_names[1..5], &["l0.attn_norm", "l0.wq.ws", "l0.wq.u", "l0.wq.v"]);
+    }
+
+    #[test]
+    fn block_layout_matches_canonical_param_order() {
+        // The per-block helpers must agree with the flat manifest
+        // order and with `pruned` — they are the same contract viewed
+        // block-wise.
+        let cfg = ModelCfg::llama("t", 48, 16, 2, 4, 24, 20, 6);
+        for layer in 0..cfg.n_layers {
+            let names = cfg.block_param_names(layer);
+            for (i, n) in names.iter().enumerate() {
+                assert_eq!(cfg.param_index(n), Some(1 + layer * 9 + i), "{n}");
+            }
+            let linears = cfg.block_linears(layer);
+            for (n, src) in &linears {
+                assert!(cfg.pruned.iter().any(|(pn, _)| pn == n), "{n} not pruned");
+                assert!(*src < 4);
+            }
+            // Exactly the layer's pruned entries, in pruned order.
+            let from_pruned: Vec<&String> = cfg
+                .pruned
+                .iter()
+                .map(|(n, _)| n)
+                .filter(|n| n.starts_with(&format!("l{layer}.")))
+                .collect();
+            let from_block: Vec<&String> = linears.iter().map(|(n, _)| n).collect();
+            assert_eq!(from_block, from_pruned);
+        }
     }
 
     #[test]

@@ -30,9 +30,10 @@
 //! the work of a much higher plain rank (paper Fig. 3).
 
 use super::config::{ConfigError, SlabConfig, Structure};
-use super::scores::{wanda_scores, ActStats};
+use super::scores::{wanda_scores_par, ActStats};
 use super::threshold::{group_topk_mask, semi_structured_mask};
 use crate::tensor::{svd_truncated, Mat};
+use crate::util::pool::{chunk_ranges, ThreadPool};
 
 /// Decomposition output (dense form; see [`crate::slab::layer`] for
 /// the packed deployment format).
@@ -70,6 +71,26 @@ impl Decomposition {
 
 /// Run Algorithm 1. `stats` must cover the layer's Din.
 pub fn decompose(w: &Mat, stats: &ActStats, cfg: &SlabConfig) -> Result<Decomposition, ConfigError> {
+    decompose_par(w, stats, cfg, None)
+}
+
+/// [`decompose`] with the per-row inner work — the `Σ u_k v_kᵀ ⊙ B`
+/// materialization and the Wanda scoring, the two O(Dout·Din) loops
+/// of every iteration — chunked across `pool`. **Bit-identical** to
+/// the serial path (each row's arithmetic is untouched; pinned by a
+/// property test), so callers can pick parallelism freely.
+///
+/// Same caveat as [`ThreadPool::scoped`]: must not run *inside* a
+/// worker of the same pool — the compression pipeline fans across a
+/// block's linears at the outer level and keeps the inner loops
+/// serial, while single-layer callers (benches, the quickstart) use
+/// the inner parallelism directly.
+pub fn decompose_par(
+    w: &Mat,
+    stats: &ActStats,
+    cfg: &SlabConfig,
+    pool: Option<&ThreadPool>,
+) -> Result<Decomposition, ConfigError> {
     let (dout, din) = w.shape();
     assert_eq!(stats.din(), din, "stats Din mismatch");
     let keep = cfg.keep_fraction(dout, din)?;
@@ -99,9 +120,9 @@ pub fn decompose(w: &Mat, stats: &ActStats, cfg: &SlabConfig) -> Result<Decompos
         }
 
         // --- W_S from the low-rank-binary residual --------------------
-        let lb = low_rank_binary(&u, &v, &w_b);
+        let lb = low_rank_binary(&u, &v, &w_b, pool);
         let y_s = w.sub(&lb);
-        let s = wanda_scores(&y_s, stats);
+        let s = wanda_scores_par(&y_s, stats, pool);
         let mask = match cfg.structure {
             Structure::Unstructured => group_topk_mask(&s, keep, gr, gc),
             Structure::SemiStructured(p) => semi_structured_mask(&s, keep, p, gr, gc),
@@ -124,31 +145,60 @@ pub fn decompose(w: &Mat, stats: &ActStats, cfg: &SlabConfig) -> Result<Decompos
     })
 }
 
-/// `Σ_k u_k v_kᵀ ⊙ B` without materializing `W_L` separately.
-fn low_rank_binary(u: &[Vec<f32>], v: &[Vec<f32>], b: &Mat) -> Mat {
+/// `Σ_k u_k v_kᵀ ⊙ B` without materializing `W_L` separately; rows
+/// optionally chunked across `pool` (row-wise independent, so the
+/// parallel result is bit-identical).
+fn low_rank_binary(u: &[Vec<f32>], v: &[Vec<f32>], b: &Mat, pool: Option<&ThreadPool>) -> Mat {
     let (dout, din) = b.shape();
     let mut m = Mat::zeros(dout, din);
+    match pool {
+        Some(p) if p.size() > 1 && dout > 1 => {
+            let mut jobs = Vec::new();
+            let mut rest: &mut [f32] = &mut m.data;
+            for (r0, r1) in chunk_ranges(dout, p.size()) {
+                let (head, tail) = rest.split_at_mut((r1 - r0) * din);
+                rest = tail;
+                jobs.push(move || low_rank_binary_rows(u, v, b, r0, r1, head));
+            }
+            p.scoped(jobs);
+        }
+        _ => low_rank_binary_rows(u, v, b, 0, dout, &mut m.data),
+    }
+    m
+}
+
+/// Rows `[r0, r1)` of `Σ_k u_k v_kᵀ ⊙ B` into `out` — the kernel both
+/// the serial and pool-parallel paths share.
+fn low_rank_binary_rows(
+    u: &[Vec<f32>],
+    v: &[Vec<f32>],
+    b: &Mat,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+) {
+    let din = b.cols;
     for k in 0..u.len() {
         let (uk, vk) = (&u[k], &v[k]);
-        for i in 0..dout {
+        for i in r0..r1 {
             let ui = uk[i];
             if ui == 0.0 {
                 continue;
             }
             let brow = b.row(i);
-            let mrow = m.row_mut(i);
+            let mrow = &mut out[(i - r0) * din..(i - r0 + 1) * din];
             for j in 0..din {
                 mrow[j] += ui * vk[j] * brow[j];
             }
         }
     }
-    m
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::slab::config::GroupShape;
+    use crate::slab::scores::wanda_scores;
     use crate::sparse::PATTERN_2_4;
     use crate::util::rng::Pcg64;
 
@@ -213,6 +263,70 @@ mod tests {
             );
         }
         assert!(d.frob_trace.last().unwrap() < &d.frob_trace[0]);
+    }
+
+    #[test]
+    fn reconstruct_error_matches_final_trace_entry() {
+        // The trace's last entry is computed from the same-iteration
+        // (W_S, u, v, W_B); reconstructing after the fact must land on
+        // the same error (different summation path ⇒ f32 tolerance).
+        for seed in [90u64, 91, 92] {
+            let (w, stats) = setup(40, 72, seed);
+            let d = decompose(&w, &stats, &cfg50()).unwrap();
+            let last = *d.frob_trace.last().unwrap();
+            let err = w.frob_dist(&d.reconstruct());
+            assert!(
+                (err - last).abs() <= 1e-4 * (1.0 + last.abs()),
+                "seed {seed}: reconstruct {err} vs trace {last}"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_decompose_is_bit_identical_to_serial() {
+        // The decompose stage's determinism contract, across
+        // adversarial shapes (rows fewer than workers, non-square,
+        // shrunk dims where Eq. 10 rejects): the pooled inner loops
+        // must reproduce the serial decomposition bit for bit — or
+        // fail with the same config error.
+        use crate::util::pool::ThreadPool;
+        use crate::util::prop::{check, gens};
+        let pool = ThreadPool::new(4);
+        check(
+            "decompose-par-vs-serial",
+            10,
+            |rng| gens::dims(rng, 8, 48),
+            |&(dout, din)| {
+                let (w, stats) = setup(dout, din, (dout * 131 + din) as u64);
+                let cfg = SlabConfig {
+                    iters: 3,
+                    svd_iters: 6,
+                    rank: 2,
+                    ..cfg50()
+                };
+                match (decompose(&w, &stats, &cfg), decompose_par(&w, &stats, &cfg, Some(&pool))) {
+                    (Ok(a), Ok(b)) => {
+                        if a.w_s != b.w_s
+                            || a.u != b.u
+                            || a.v != b.v
+                            || a.w_b != b.w_b
+                            || a.kept != b.kept
+                            || a.frob_trace != b.frob_trace
+                        {
+                            Err(format!("parallel != serial at {dout}x{din}"))
+                        } else {
+                            Ok(())
+                        }
+                    }
+                    (Err(_), Err(_)) => Ok(()),
+                    (a, b) => Err(format!(
+                        "error disagreement at {dout}x{din}: serial ok={} parallel ok={}",
+                        a.is_ok(),
+                        b.is_ok()
+                    )),
+                }
+            },
+        );
     }
 
     #[test]

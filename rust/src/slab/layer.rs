@@ -164,35 +164,41 @@ impl SlabLayer {
     // Serialization (into the shared checkpoint container)
     // ------------------------------------------------------------------
 
-    /// Append this layer's tensors under `prefix` to a checkpoint.
-    pub fn save_into(&self, ck: &mut Checkpoint, prefix: &str) {
-        ck.push(Entry {
+    /// This layer's checkpoint entries under `prefix` — the unit the
+    /// pipeline's streaming emit stage appends per block (a
+    /// [`crate::tensor::CheckpointWriter`] consumer never holds more
+    /// than one block's entries in memory; DESIGN.md §10). The leading
+    /// `{prefix}.shape` entry doubles as the layer marker the loader
+    /// scans for.
+    pub fn entries(&self, prefix: &str) -> Vec<Entry> {
+        let mut out = Vec::with_capacity(5 + 2 * self.rank());
+        out.push(Entry {
             name: format!("{prefix}.shape"),
             dims: vec![2],
             data: TensorData::I32(vec![self.dout() as i32, self.din() as i32]),
         });
-        ck.push(Entry {
+        out.push(Entry {
             name: format!("{prefix}.ws.row_ptr"),
             dims: vec![self.w_s.row_ptr.len()],
             data: TensorData::I32(self.w_s.row_ptr.iter().map(|&x| x as i32).collect()),
         });
-        ck.push(Entry {
+        out.push(Entry {
             name: format!("{prefix}.ws.col_idx"),
             dims: vec![self.w_s.col_idx.len()],
             data: TensorData::I32(self.w_s.col_idx.iter().map(|&x| x as i32).collect()),
         });
-        ck.push(Entry::f32(
+        out.push(Entry::f32(
             &format!("{prefix}.ws.vals"),
             vec![self.w_s.vals.len()],
             self.w_s.vals.clone(),
         ));
         for k in 0..self.rank() {
-            ck.push(Entry::f32(
+            out.push(Entry::f32(
                 &format!("{prefix}.u{k}"),
                 vec![self.u[k].len()],
                 self.u[k].clone(),
             ));
-            ck.push(Entry::f32(
+            out.push(Entry::f32(
                 &format!("{prefix}.v{k}"),
                 vec![self.v[k].len()],
                 self.v[k].clone(),
@@ -207,11 +213,19 @@ impl SlabLayer {
         for &w in words {
             bytes.extend_from_slice(&w.to_le_bytes());
         }
-        ck.push(Entry {
+        out.push(Entry {
             name: format!("{prefix}.wb.bits"),
             dims: vec![self.dout(), self.w_b.words_per_row() * 8],
             data: TensorData::U8(bytes),
         });
+        out
+    }
+
+    /// Append this layer's tensors under `prefix` to a checkpoint.
+    pub fn save_into(&self, ck: &mut Checkpoint, prefix: &str) {
+        for e in self.entries(prefix) {
+            ck.push(e);
+        }
     }
 
     /// Load a layer saved by [`save_into`].

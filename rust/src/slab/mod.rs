@@ -16,7 +16,7 @@ pub mod threshold;
 
 pub use ablation::{ablate, AblationOut, Variant};
 pub use config::{GroupShape, SlabConfig, Structure};
-pub use decompose::{decompose, Decomposition};
+pub use decompose::{decompose, decompose_par, Decomposition};
 pub use layer::SlabLayer;
-pub use scores::{wanda_scores, ActStats};
+pub use scores::{wanda_scores, wanda_scores_par, ActStats};
 pub use threshold::{group_topk_mask, semi_structured_mask};

@@ -1,26 +1,47 @@
 //! Activation-aware pruning scores (Wanda, Sun et al. 2023).
 //!
-//! The score of weight `Y_ij` is `S_ij = |Y_ij| · ||X_j||₂` where
-//! `||X_j||₂` is the L2 norm of input feature `j` over the calibration
-//! batch (paper Algorithm 1 line 3: `S_X = diag(√(XᵀX))`). The SLaB
-//! loop reuses the same statistic every iteration, so we compute
-//! `S_X` once per layer and keep it in [`ActStats`].
+//! The score of weight `Y_ij` is `S_ij = |Y_ij| · S_X[j]` where `S_X`
+//! is a per-input-feature activation statistic (paper Algorithm 1
+//! line 3: `S_X = diag(√(XᵀX))`). The SLaB loop reuses the same
+//! statistic every iteration, so we compute `S_X` once per layer and
+//! keep it in [`ActStats`].
+//!
+//! **Normalization convention.** [`ActStats`] stores *per-sample*
+//! statistics: `col_norms[j] = √(Σ_rows X_ij² / samples)` (the RMS
+//! activation) and `gram = XᵀX / samples`. Relative to the paper's raw
+//! `‖X_j‖₂` this scales every score of a layer by the same constant
+//! `1/√samples`, so every top-k / threshold selection — and therefore
+//! every mask, decomposition, and OBS update (SparseGPT's damping is
+//! relative to `mean diag H`, so `H → H/n` cancels throughout) — is
+//! unchanged. What the normalization buys is *mergeability*: two
+//! statistics built from calibration batches of different row counts
+//! live on one scale, and [`ActStats::merge`] pools them weighted by
+//! `samples`, reproducing the single-pass statistic exactly (pinned by
+//! tests below). The raw-norm convention only merged correctly because
+//! `√(a² + b²)` happens to equal the concat norm; as soon as a
+//! statistic is averaged, resampled, or compared across calibration
+//! sizes, sample weighting is load-bearing.
 
 use crate::tensor::Mat;
+use crate::util::pool::{chunk_ranges, ThreadPool};
 
 /// Per-input-feature activation statistics for one linear layer.
 ///
-/// `col_norms` feeds the Wanda/SLaB score; `gram` (optional, `XᵀX`)
-/// feeds SparseGPT's OBS Hessian. The Gram diagonal equals the squared
-/// column norms, so when `gram` is present the two views are
-/// consistent by construction.
+/// `col_norms` feeds the Wanda/SLaB score; `gram` (optional,
+/// `XᵀX / samples`) feeds SparseGPT's OBS Hessian. The Gram diagonal
+/// equals the squared `col_norms`, so when `gram` is present the two
+/// views are consistent by construction.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ActStats {
-    /// `||X_j||₂` for each input feature j (length Din).
+    /// RMS activation `√(Σ_rows X_ij² / samples)` per input feature j
+    /// (length Din).
     pub col_norms: Vec<f32>,
-    /// Optional `XᵀX` (Din, Din) for Hessian-based methods.
+    /// Optional per-sample Gram `XᵀX / samples` (Din, Din) for
+    /// Hessian-based methods.
     pub gram: Option<Mat>,
-    /// Number of calibration rows folded in (N·L).
+    /// Number of calibration rows folded in (N·L). `0` marks a
+    /// synthetic statistic ([`ActStats::uniform`]) that carries no
+    /// weight in a merge.
     pub samples: usize,
 }
 
@@ -28,39 +49,80 @@ impl ActStats {
     /// From a single calibration activation matrix X (N·L, Din).
     /// Norms only — cheap path for Wanda/SLaB.
     pub fn from_activations(x: &Mat) -> ActStats {
-        ActStats {
-            col_norms: x.col_norms(),
-            gram: None,
-            samples: x.rows,
-        }
+        ActStats::from_raw(x.col_norms(), None, x.rows)
     }
 
     /// Norms + Gram matrix — needed by SparseGPT.
     pub fn from_activations_with_gram(x: &Mat) -> ActStats {
+        ActStats::from_activations_with_gram_par(x, None)
+    }
+
+    /// [`from_activations_with_gram`](ActStats::from_activations_with_gram)
+    /// with the Din³-scale Gram accumulation chunked across `pool`
+    /// (bit-identical — see [`crate::tensor::ops::gram_par`]); the
+    /// capture stage's path for Hessian methods.
+    pub fn from_activations_with_gram_par(x: &Mat, pool: Option<&ThreadPool>) -> ActStats {
+        let gram = match pool {
+            Some(p) => crate::tensor::ops::gram_par(x, p),
+            None => crate::tensor::ops::gram(x),
+        };
+        ActStats::from_raw(x.col_norms(), Some(gram), x.rows)
+    }
+
+    /// From raw concat-convention statistics — `norms = ‖X_j‖₂` and
+    /// `gram = XᵀX` over `samples` rows (e.g. the outputs of the XLA
+    /// `gram_{shape}` kernel); normalized on the way in.
+    pub fn from_raw(norms: Vec<f32>, gram: Option<Mat>, samples: usize) -> ActStats {
+        assert!(samples > 0, "empty calibration batch");
+        let inv = 1.0 / samples as f64;
+        let inv_sqrt = inv.sqrt();
         ActStats {
-            col_norms: x.col_norms(),
-            gram: Some(crate::tensor::ops::gram(x)),
-            samples: x.rows,
+            col_norms: norms.iter().map(|&n| (n as f64 * inv_sqrt) as f32).collect(),
+            gram: gram.map(|g| g.scale(inv as f32)),
+            samples,
         }
     }
 
-    /// Streaming accumulation: fold another batch in. Norms combine as
-    /// sqrt(a² + b²) elementwise, Grams add — exact, order-independent.
+    /// Streaming accumulation: fold another batch in, **weighted by
+    /// sample count** — batches of different row counts pool to
+    /// exactly the single-pass statistic over their concatenation
+    /// (order-independent up to f32 rounding). Zero-sample operands
+    /// (synthetic stats) carry no weight.
     pub fn merge(&mut self, other: &ActStats) {
         assert_eq!(self.col_norms.len(), other.col_norms.len());
-        for (a, b) in self.col_norms.iter_mut().zip(other.col_norms.iter()) {
-            *a = (*a * *a + *b * *b).sqrt();
+        // Weightless operands are ignored (and a weightless self is
+        // replaced wholesale) *before* the gram-consistency check —
+        // synthetic stats never carry a gram, and they never count.
+        if other.samples == 0 {
+            return;
         }
-        match (&mut self.gram, &other.gram) {
-            (Some(g), Some(og)) => g.add_assign(og),
-            (None, None) => {}
-            _ => panic!("ActStats::merge: inconsistent gram presence"),
+        if self.samples == 0 {
+            *self = other.clone();
+            return;
+        }
+        if self.gram.is_some() != other.gram.is_some() {
+            panic!("ActStats::merge: inconsistent gram presence");
+        }
+        let na = self.samples as f64;
+        let nb = other.samples as f64;
+        let nt = na + nb;
+        for (a, b) in self.col_norms.iter_mut().zip(other.col_norms.iter()) {
+            let pooled = ((*a as f64) * (*a as f64) * na + (*b as f64) * (*b as f64) * nb) / nt;
+            *a = pooled.sqrt() as f32;
+        }
+        if let (Some(g), Some(og)) = (&mut self.gram, &other.gram) {
+            let wa = (na / nt) as f32;
+            let wb = (nb / nt) as f32;
+            for (x, y) in g.data.iter_mut().zip(og.data.iter()) {
+                *x = *x * wa + *y * wb;
+            }
         }
         self.samples += other.samples;
     }
 
     /// Uniform statistics (all ones) — reduces Wanda scoring to plain
     /// magnitude pruning; used by tests and the magnitude baseline.
+    /// `samples = 0`: synthetic, weightless in merges.
     pub fn uniform(din: usize) -> ActStats {
         ActStats {
             col_norms: vec![1.0; din],
@@ -72,21 +134,54 @@ impl ActStats {
     pub fn din(&self) -> usize {
         self.col_norms.len()
     }
+
+    /// Resident bytes of this statistic (the pipeline's peak-memory
+    /// accounting).
+    pub fn nbytes(&self) -> usize {
+        self.col_norms.len() * 4 + self.gram.as_ref().map_or(0, |g| g.numel() * 4)
+    }
 }
 
 /// `S = |Y| ⊙ S_X` (broadcast over rows): the Wanda score of every
 /// element of `y` (usually the residual `W − W_L ⊙ W_B`).
 pub fn wanda_scores(y: &Mat, stats: &ActStats) -> Mat {
+    wanda_scores_par(y, stats, None)
+}
+
+/// [`wanda_scores`] with rows chunked across `pool` — bit-identical
+/// (each output element is one product either way). `None` or a
+/// single-worker pool falls back to the serial loop.
+pub fn wanda_scores_par(y: &Mat, stats: &ActStats, pool: Option<&ThreadPool>) -> Mat {
     assert_eq!(y.cols, stats.din(), "score dims: y cols {} vs stats {}", y.cols, stats.din());
     let mut s = Mat::zeros(y.rows, y.cols);
-    for i in 0..y.rows {
+    match pool {
+        Some(p) if p.size() > 1 && y.rows > 1 => {
+            let cols = y.cols;
+            let mut jobs = Vec::new();
+            let mut rest: &mut [f32] = &mut s.data;
+            for (r0, r1) in chunk_ranges(y.rows, p.size()) {
+                let (head, tail) = rest.split_at_mut((r1 - r0) * cols);
+                rest = tail;
+                jobs.push(move || score_rows(y, stats, r0, r1, head));
+            }
+            p.scoped(jobs);
+        }
+        _ => score_rows(y, stats, 0, y.rows, &mut s.data),
+    }
+    s
+}
+
+/// Score rows `[r0, r1)` of `y` into `out` — the shared kernel of the
+/// serial and pool-parallel score paths.
+fn score_rows(y: &Mat, stats: &ActStats, r0: usize, r1: usize, out: &mut [f32]) {
+    let cols = y.cols;
+    for i in r0..r1 {
         let yrow = y.row(i);
-        let srow = s.row_mut(i);
-        for j in 0..y.cols {
+        let srow = &mut out[(i - r0) * cols..(i - r0 + 1) * cols];
+        for j in 0..cols {
             srow[j] = yrow[j].abs() * stats.col_norms[j];
         }
     }
-    s
 }
 
 #[cfg(test)]
@@ -98,14 +193,53 @@ mod tests {
     fn stats_match_manual_norms() {
         let x = Mat::from_vec(2, 2, vec![3.0, 1.0, 4.0, 2.0]);
         let st = ActStats::from_activations(&x);
-        assert!((st.col_norms[0] - 5.0).abs() < 1e-6);
-        assert!((st.col_norms[1] - 5.0f32.sqrt()).abs() < 1e-6);
+        // RMS convention: ‖X_j‖₂ / √samples.
+        let inv = 1.0 / 2.0f32.sqrt();
+        assert!((st.col_norms[0] - 5.0 * inv).abs() < 1e-6);
+        assert!((st.col_norms[1] - 5.0f32.sqrt() * inv).abs() < 1e-6);
         assert_eq!(st.samples, 2);
+        assert_eq!(st.nbytes(), 8);
+    }
+
+    #[test]
+    fn merge_weights_by_samples() {
+        // The satellite pin: batches with very different row counts
+        // (3 vs 301) must pool to exactly the single-pass statistic
+        // over their concatenation — only sample weighting does this.
+        let mut rng = Pcg64::seed_from_u64(70);
+        let a = Mat::randn(3, 6, 1.0, &mut rng);
+        let b = Mat::randn(301, 6, 0.3, &mut rng);
+        let whole = ActStats::from_activations(&Mat::vstack(&[&a, &b]));
+        let mut merged = ActStats::from_activations(&a);
+        merged.merge(&ActStats::from_activations(&b));
+        for j in 0..6 {
+            assert!(
+                (whole.col_norms[j] - merged.col_norms[j]).abs() < 1e-5,
+                "col {j}: {} vs {}",
+                whole.col_norms[j],
+                merged.col_norms[j]
+            );
+        }
+        assert_eq!(merged.samples, 304);
+
+        // An unweighted pool (the old √(a²+b²) shape on normalized
+        // stats) would be visibly wrong here; make sure we are not
+        // silently equal to it.
+        let unweighted: Vec<f32> = ActStats::from_activations(&a)
+            .col_norms
+            .iter()
+            .zip(ActStats::from_activations(&b).col_norms.iter())
+            .map(|(&x, &y)| ((x * x + y * y) / 2.0).sqrt())
+            .collect();
+        assert!(
+            (0..6).any(|j| (unweighted[j] - whole.col_norms[j]).abs() > 1e-3),
+            "test vectors too symmetric to distinguish weighting"
+        );
     }
 
     #[test]
     fn merge_equals_concat() {
-        let mut rng = Pcg64::seed_from_u64(70);
+        let mut rng = Pcg64::seed_from_u64(71);
         let a = Mat::randn(13, 6, 1.0, &mut rng);
         let b = Mat::randn(9, 6, 1.0, &mut rng);
         let whole = ActStats::from_activations(&Mat::vstack(&[&a, &b]));
@@ -121,7 +255,7 @@ mod tests {
     fn gram_merge_equals_concat() {
         let mut rng = Pcg64::seed_from_u64(72);
         let a = Mat::randn(11, 5, 1.0, &mut rng);
-        let b = Mat::randn(7, 5, 1.0, &mut rng);
+        let b = Mat::randn(40, 5, 1.0, &mut rng);
         let whole = ActStats::from_activations_with_gram(&Mat::vstack(&[&a, &b]));
         let mut merged = ActStats::from_activations_with_gram(&a);
         merged.merge(&ActStats::from_activations_with_gram(&b));
@@ -129,12 +263,46 @@ mod tests {
             .gram
             .as_ref()
             .unwrap()
-            .allclose(whole.gram.as_ref().unwrap(), 1e-3, 1e-4));
-        // Gram diagonal == squared col norms.
+            .allclose(whole.gram.as_ref().unwrap(), 1e-4, 1e-4));
+        // Gram diagonal == squared col norms (both per-sample).
         let g = merged.gram.as_ref().unwrap();
         for j in 0..5 {
-            assert!((g.at(j, j) - merged.col_norms[j].powi(2)).abs() < 1e-2);
+            assert!((g.at(j, j) - merged.col_norms[j].powi(2)).abs() < 1e-3);
         }
+        assert_eq!(merged.samples, 51);
+    }
+
+    #[test]
+    fn merge_ignores_weightless_stats() {
+        let x = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let real = ActStats::from_activations(&x);
+        // uniform (samples 0) merged into real: no-op.
+        let mut a = real.clone();
+        a.merge(&ActStats::uniform(3));
+        assert_eq!(a, real);
+        // real merged into uniform: adopts the real statistic.
+        let mut b = ActStats::uniform(3);
+        b.merge(&real);
+        assert_eq!(b, real);
+        // Weightlessness wins over gram-presence checking: a gram-free
+        // synthetic stat folds into (or is replaced by) a gram-carrying
+        // one without panicking.
+        let with_gram = ActStats::from_activations_with_gram(&x);
+        let mut c = with_gram.clone();
+        c.merge(&ActStats::uniform(3));
+        assert_eq!(c, with_gram);
+        let mut d = ActStats::uniform(3);
+        d.merge(&with_gram);
+        assert_eq!(d, with_gram);
+    }
+
+    #[test]
+    #[should_panic(expected = "inconsistent gram presence")]
+    fn merge_rejects_mixed_gram_presence() {
+        let mut rng = Pcg64::seed_from_u64(73);
+        let a = Mat::randn(4, 3, 1.0, &mut rng);
+        let mut with = ActStats::from_activations_with_gram(&a);
+        with.merge(&ActStats::from_activations(&a));
     }
 
     #[test]
@@ -152,9 +320,24 @@ mod tests {
 
     #[test]
     fn scores_are_magnitude_when_uniform() {
-        let mut rng = Pcg64::seed_from_u64(71);
+        let mut rng = Pcg64::seed_from_u64(74);
         let y = Mat::randn(5, 7, 1.0, &mut rng);
         let s = wanda_scores(&y, &ActStats::uniform(7));
         assert_eq!(s, y.abs());
+    }
+
+    #[test]
+    fn parallel_scores_are_bit_identical() {
+        let pool = ThreadPool::new(4);
+        let mut rng = Pcg64::seed_from_u64(75);
+        for rows in [1usize, 2, 7, 33] {
+            let y = Mat::randn(rows, 13, 1.0, &mut rng);
+            let stats = ActStats::from_activations(&Mat::randn(24, 13, 1.0, &mut rng));
+            assert_eq!(
+                wanda_scores_par(&y, &stats, Some(&pool)),
+                wanda_scores(&y, &stats),
+                "rows {rows}"
+            );
+        }
     }
 }

@@ -20,7 +20,7 @@
 
 use super::mat::Mat;
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"SLABCKP1";
@@ -138,31 +138,7 @@ impl Checkpoint {
         w.write_all(MAGIC)?;
         w.write_all(&(self.entries.len() as u32).to_le_bytes())?;
         for e in &self.entries {
-            let name = e.name.as_bytes();
-            w.write_all(&(name.len() as u32).to_le_bytes())?;
-            w.write_all(name)?;
-            w.write_all(&(e.dims.len() as u32).to_le_bytes())?;
-            for &d in &e.dims {
-                w.write_all(&(d as u64).to_le_bytes())?;
-            }
-            match &e.data {
-                TensorData::F32(v) => {
-                    w.write_all(&[0u8])?;
-                    for &x in v {
-                        w.write_all(&x.to_le_bytes())?;
-                    }
-                }
-                TensorData::I32(v) => {
-                    w.write_all(&[1u8])?;
-                    for &x in v {
-                        w.write_all(&x.to_le_bytes())?;
-                    }
-                }
-                TensorData::U8(v) => {
-                    w.write_all(&[2u8])?;
-                    w.write_all(v)?;
-                }
-            }
+            write_entry(&mut w, e)?;
         }
         w.flush()
     }
@@ -230,6 +206,95 @@ impl Checkpoint {
     }
 }
 
+/// One entry in the container encoding shared by [`Checkpoint::save`]
+/// and [`CheckpointWriter::append`].
+fn write_entry<W: Write>(w: &mut W, e: &Entry) -> std::io::Result<()> {
+    let name = e.name.as_bytes();
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name)?;
+    w.write_all(&(e.dims.len() as u32).to_le_bytes())?;
+    for &d in &e.dims {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    match &e.data {
+        TensorData::F32(v) => {
+            w.write_all(&[0u8])?;
+            for &x in v {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        TensorData::I32(v) => {
+            w.write_all(&[1u8])?;
+            for &x in v {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        TensorData::U8(v) => {
+            w.write_all(&[2u8])?;
+            w.write_all(v)?;
+        }
+    }
+    Ok(())
+}
+
+/// Incremental checkpoint writer: append entries one at a time and
+/// never hold more than one entry's tensors in memory — the streaming
+/// half of the compression pipeline's emit stage (a block's packed
+/// layers go to disk the moment the block finishes; peak memory is one
+/// block, not one model).
+///
+/// The on-disk bytes are identical to a batch [`Checkpoint::save`] of
+/// the same entries in the same order (pinned by a test): the header's
+/// entry count starts at zero and is patched in by
+/// [`finalize`](CheckpointWriter::finalize). A writer dropped without
+/// `finalize` therefore leaves a valid-but-empty checkpoint, never a
+/// torn one.
+pub struct CheckpointWriter {
+    w: BufWriter<File>,
+    count: u32,
+}
+
+impl CheckpointWriter {
+    /// Create the file (parents included) and write the header with a
+    /// zero entry count.
+    pub fn create(path: &Path) -> std::io::Result<CheckpointWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&0u32.to_le_bytes())?;
+        Ok(CheckpointWriter { w, count: 0 })
+    }
+
+    /// Append one entry; it can be dropped by the caller immediately.
+    pub fn append(&mut self, e: &Entry) -> std::io::Result<()> {
+        write_entry(&mut self.w, e)?;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Entries appended so far.
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Flush, patch the header's entry count, and close; returns the
+    /// entry count.
+    pub fn finalize(mut self) -> std::io::Result<usize> {
+        self.w.flush()?;
+        let f = self.w.get_mut();
+        f.seek(SeekFrom::Start(MAGIC.len() as u64))?;
+        f.write_all(&self.count.to_le_bytes())?;
+        f.flush()?;
+        Ok(self.count as usize)
+    }
+}
+
 fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
@@ -287,6 +352,51 @@ mod tests {
         let back = Checkpoint::load(&path).unwrap();
         let names: Vec<&str> = back.entries.iter().map(|e| e.name.as_str()).collect();
         assert_eq!(names, vec!["z", "a", "m"]);
+    }
+
+    #[test]
+    fn streaming_writer_matches_batch_save_byte_for_byte() {
+        let mut rng = Pcg64::seed_from_u64(31);
+        let mut ck = Checkpoint::new();
+        ck.push(Entry::from_mat("w", &Mat::randn(5, 9, 1.0, &mut rng)));
+        ck.push(Entry {
+            name: "ids".into(),
+            dims: vec![2],
+            data: TensorData::I32(vec![3, -4]),
+        });
+        ck.push(Entry {
+            name: "bits".into(),
+            dims: vec![3],
+            data: TensorData::U8(vec![1, 2, 3]),
+        });
+        let batch = tmpfile("batch.slabckpt");
+        ck.save(&batch).unwrap();
+        let streamed = tmpfile("streamed.slabckpt");
+        let mut w = CheckpointWriter::create(&streamed).unwrap();
+        assert!(w.is_empty());
+        for e in &ck.entries {
+            w.append(e).unwrap();
+        }
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.finalize().unwrap(), 3);
+        assert_eq!(
+            std::fs::read(&streamed).unwrap(),
+            std::fs::read(&batch).unwrap(),
+            "streamed bytes must equal batch save"
+        );
+        assert_eq!(Checkpoint::load(&streamed).unwrap(), ck);
+    }
+
+    #[test]
+    fn unfinalized_writer_leaves_an_empty_but_valid_checkpoint() {
+        let path = tmpfile("unfinalized.slabckpt");
+        {
+            let mut w = CheckpointWriter::create(&path).unwrap();
+            w.append(&Entry::f32("x", vec![1], vec![1.0])).unwrap();
+            // dropped without finalize
+        }
+        let back = Checkpoint::load(&path).unwrap();
+        assert!(back.is_empty(), "count was never patched in");
     }
 
     #[test]

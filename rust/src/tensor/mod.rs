@@ -9,7 +9,9 @@ pub mod linalg;
 pub mod mat;
 pub mod ops;
 
-pub use io::{Checkpoint, Entry, TensorData};
+pub use io::{Checkpoint, CheckpointWriter, Entry, TensorData};
 pub use linalg::{cholesky, spd_inverse, svd_rank1, svd_truncated, Svd};
 pub use mat::Mat;
-pub use ops::{gram, matmul, matmul_bt, matvec, matvec_t};
+pub use ops::{
+    gram, gram_par, matmul, matmul_bt, matmul_bt_par, matmul_bt_par_into, matvec, matvec_t,
+};

@@ -4,6 +4,7 @@
 //! weights as `(Dout, Din)` and computes `X·Wᵀ`.
 
 use super::mat::Mat;
+use crate::util::pool::{chunk_ranges, ThreadPool};
 
 /// C = A·B. Blocked ikj with row-major accumulation (auto-vectorizes).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
@@ -35,11 +36,21 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 /// the layout both activations and weights already use.
 pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_bt inner dim {} vs {}", a.cols, b.cols);
-    let (m, k, n) = (a.rows, a.cols, b.rows);
-    let mut c = Mat::zeros(m, n);
-    for i in 0..m {
+    let mut c = Mat::zeros(a.rows, b.rows);
+    matmul_bt_rows(a, b, 0, a.rows, &mut c.data);
+    c
+}
+
+/// The shared row kernel: output rows `[r0, r1)` of A·Bᵀ into `out`
+/// (`(r1 − r0) × b.rows`, row-major). Both [`matmul_bt`] and the
+/// pool-parallel variants go through here, so per-element accumulation
+/// order — and therefore the result — is identical across all of them.
+fn matmul_bt_rows(a: &Mat, b: &Mat, r0: usize, r1: usize, out: &mut [f32]) {
+    let (k, n) = (a.cols, b.rows);
+    debug_assert_eq!(out.len(), (r1 - r0) * n);
+    for i in r0..r1 {
         let arow = a.row(i);
-        let crow = &mut c.data[i * n..(i + 1) * n];
+        let crow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
         for j in 0..n {
             let brow = b.row(j);
             let mut acc0 = 0.0f32;
@@ -61,7 +72,42 @@ pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
             crow[j] = acc;
         }
     }
+}
+
+/// [`matmul_bt`] with the rows of `a` chunked across `pool` — the
+/// dense twin of `Csr::spmm_bt_par`/`BitMat::matmul_bt_par`. Each
+/// output row is produced by exactly one worker running the shared
+/// row kernel, so the result is **bit-identical** to the serial call
+/// (pinned by a property test below).
+pub fn matmul_bt_par(a: &Mat, b: &Mat, pool: &ThreadPool) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.rows);
+    matmul_bt_par_into(a, b, pool, &mut c);
     c
+}
+
+/// [`matmul_bt_par`] writing into a caller-owned output (overwritten
+/// entirely). `c` must be `(a.rows, b.rows)`.
+pub fn matmul_bt_par_into(a: &Mat, b: &Mat, pool: &ThreadPool, c: &mut Mat) {
+    assert_eq!(a.cols, b.cols, "matmul_bt inner dim {} vs {}", a.cols, b.cols);
+    assert_eq!(
+        (c.rows, c.cols),
+        (a.rows, b.rows),
+        "matmul_bt_par_into: bad output shape"
+    );
+    let n = b.rows;
+    let ranges = chunk_ranges(a.rows, pool.size());
+    if ranges.len() <= 1 {
+        matmul_bt_rows(a, b, 0, a.rows, &mut c.data);
+        return;
+    }
+    let mut jobs = Vec::with_capacity(ranges.len());
+    let mut rest: &mut [f32] = &mut c.data;
+    for &(r0, r1) in &ranges {
+        let (head, tail) = rest.split_at_mut((r1 - r0) * n);
+        rest = tail;
+        jobs.push(move || matmul_bt_rows(a, b, r0, r1, head));
+    }
+    pool.scoped(jobs);
 }
 
 /// y = A·x (matrix-vector).
@@ -123,6 +169,60 @@ pub fn gram(x: &Mat) -> Mat {
         }
     }
     h
+}
+
+/// [`gram`] with the output rows chunked across `pool` — each worker
+/// owns a disjoint band of H's upper triangle and accumulates over the
+/// sample rows in the same order as the serial kernel, so the result
+/// is **bit-identical** to [`gram`] (the mirror pass is an exact
+/// copy). This is the Din³-scale cost of Hessian methods' calibration
+/// capture; everything else in that path is already row-parallel.
+pub fn gram_par(x: &Mat, pool: &ThreadPool) -> Mat {
+    let d = x.cols;
+    let ranges = chunk_ranges(d, pool.size());
+    if ranges.len() <= 1 {
+        return gram(x);
+    }
+    let mut acc = vec![0.0f64; d * d];
+    {
+        let mut jobs = Vec::with_capacity(ranges.len());
+        let mut rest: &mut [f64] = &mut acc;
+        for &(a0, a1) in &ranges {
+            let (band, tail) = rest.split_at_mut((a1 - a0) * d);
+            rest = tail;
+            jobs.push(move || gram_rows(x, a0, a1, band));
+        }
+        pool.scoped(jobs);
+    }
+    let mut h = Mat::zeros(d, d);
+    for a in 0..d {
+        for b in a..d {
+            let v = acc[a * d + b] as f32;
+            h.set(a, b, v);
+            h.set(b, a, v);
+        }
+    }
+    h
+}
+
+/// Upper-triangle rows `[a0, a1)` of `XᵀX` accumulated into `band`
+/// (`(a1 − a0) × d`, row-major) — the shared kernel of [`gram`]'s
+/// per-element arithmetic: samples accumulate in row order, f64.
+fn gram_rows(x: &Mat, a0: usize, a1: usize, band: &mut [f64]) {
+    let d = x.cols;
+    for i in 0..x.rows {
+        let row = x.row(i);
+        for a in a0..a1 {
+            let ra = row[a] as f64;
+            if ra == 0.0 {
+                continue;
+            }
+            let base = (a - a0) * d;
+            for b in a..d {
+                band[base + b] += ra * row[b] as f64;
+            }
+        }
+    }
 }
 
 /// Dot product in f64.
@@ -200,6 +300,35 @@ mod tests {
     }
 
     #[test]
+    fn matmul_bt_par_is_bit_identical_to_serial() {
+        // Same contract as the packed kernels: chunking rows across
+        // the pool must not change a single bit, across adversarial
+        // shapes (fewer rows than workers, odd inner dims, batch 1).
+        let pool = ThreadPool::new(4);
+        crate::util::prop::check(
+            "matmul-bt-par-vs-serial",
+            25,
+            |rng| crate::util::prop::gens::dims(rng, 1, 40),
+            |&(m, k)| {
+                let mut rng = Pcg64::seed_from_u64((m * 1000 + k) as u64);
+                let a = Mat::randn(m, k, 1.0, &mut rng);
+                let b = Mat::randn((k % 7) + 1, k, 1.0, &mut rng);
+                let serial = matmul_bt(&a, &b);
+                let par = matmul_bt_par(&a, &b, &pool);
+                if par != serial {
+                    return Err(format!("par != serial at {m}x{k}"));
+                }
+                let mut into = Mat::filled(m, b.rows, f32::NAN);
+                matmul_bt_par_into(&a, &b, &pool, &mut into);
+                if into != serial {
+                    return Err(format!("par_into != serial at {m}x{k}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn matvec_consistency() {
         let mut rng = Pcg64::seed_from_u64(12);
         let a = Mat::randn(9, 14, 1.0, &mut rng);
@@ -231,6 +360,17 @@ mod tests {
             for b in 0..8 {
                 assert_eq!(h.at(a, b), h.at(b, a));
             }
+        }
+    }
+
+    #[test]
+    fn gram_par_is_bit_identical_to_serial() {
+        let pool = ThreadPool::new(4);
+        let mut rng = Pcg64::seed_from_u64(14);
+        for (rows, d) in [(1usize, 1usize), (7, 3), (25, 8), (13, 33)] {
+            let mut x = Mat::randn(rows, d, 1.0, &mut rng);
+            x.set(0, 0, 0.0); // exercise the zero-skip branch
+            assert_eq!(gram_par(&x, &pool).data, gram(&x).data, "{rows}x{d}");
         }
     }
 

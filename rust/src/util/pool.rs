@@ -158,6 +158,40 @@ impl ThreadPool {
             panic!("scoped pool job panicked");
         }
     }
+
+    /// Run `f` over `items` as *borrowing* jobs on the pool and return
+    /// the results **in input order** — [`scoped`](ThreadPool::scoped)
+    /// plus a deterministic reduction, which is exactly the shape the
+    /// compression pipeline's decompose stage needs: fan the
+    /// independent linears of a block out, collect their reports and
+    /// packed layers in the canonical order so the parallel run is
+    /// bit-identical to the serial one.
+    ///
+    /// Same caveat as `scoped`: must not be called from inside a pool
+    /// worker (nested fork-join on one pool can deadlock), and a
+    /// panicking job propagates after all jobs settle.
+    pub fn scoped_map<'env, T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'env,
+        R: Send + 'env,
+        F: Fn(T) -> R + Send + Sync + 'env,
+    {
+        let n = items.len();
+        let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        {
+            let fref = &f;
+            let jobs: Vec<_> = items
+                .into_iter()
+                .zip(slots.iter_mut())
+                .map(|(item, slot)| move || *slot = Some(fref(item)))
+                .collect();
+            self.scoped(jobs);
+        }
+        // `scoped` has already panicked if any job did, so every slot
+        // is filled here.
+        slots.into_iter().map(|s| s.expect("scoped job filled its slot")).collect()
+    }
 }
 
 /// A bounded slot arena with stable integer handles and a free list —
@@ -378,6 +412,39 @@ mod tests {
                 assert_eq!(v, i, "pool size {size}");
             }
         }
+    }
+
+    #[test]
+    fn scoped_map_preserves_order_and_borrows() {
+        // Jobs borrow caller-stack data and return owned results; the
+        // reduction must be input-ordered regardless of completion
+        // order (the decompose stage's determinism contract).
+        let base = vec![10usize, 20, 30, 40, 50, 60, 70];
+        for size in [1usize, 4] {
+            let pool = ThreadPool::new(size);
+            let out = pool.scoped_map((0..base.len()).collect(), |i| base[i] + i);
+            let expect: Vec<usize> = base.iter().enumerate().map(|(i, &b)| b + i).collect();
+            assert_eq!(out, expect, "pool size {size}");
+        }
+    }
+
+    #[test]
+    fn scoped_map_empty_is_noop() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.scoped_map(Vec::<usize>::new(), |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped pool job panicked")]
+    fn scoped_map_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.scoped_map(vec![0usize, 1, 2], |i| {
+            if i == 1 {
+                panic!("boom");
+            }
+            i
+        });
     }
 
     #[test]

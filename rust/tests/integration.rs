@@ -307,6 +307,90 @@ fn pipeline_wanda_layerwise_matches_paper_semantics() {
     assert_eq!(out.report.layers.len(), cfg.pruned.len());
 }
 
+#[test]
+fn native_capture_cross_checks_artifact_capture() {
+    // ISSUE-3 acceptance: native-capture compression of a small config
+    // vs the serial artifact-engine path. The two capture engines
+    // differ only by f32 summation order inside the forward, so the
+    // structural outputs (layer coverage, exact per-row kept counts)
+    // must be identical and the reconstruction errors must land within
+    // a tight band. The native path is fed the artifact engine's
+    // batching (eval_batch) so the statistics pool over the same rows.
+    let Some((_guard, rt)) = runtime() else { return };
+    let cfg = rt.manifest.config("small").unwrap().clone();
+    let params = Params::init(&cfg, 33);
+    let g = Grammar::standard();
+    let corpus = build_corpus(&g, 5, 16, 8, 16, cfg.max_seq);
+    let method = slab::baselines::Method::Wanda {
+        sparsity: 0.5,
+        pattern: None,
+    };
+    let art = slab::coordinator::compress_model(
+        &rt,
+        &params,
+        &corpus.calib,
+        &method,
+        slab::coordinator::Engine::Native,
+    )
+    .expect("artifact-capture pipeline");
+    let nat = slab::coordinator::CompressJob::new(&params, &corpus.calib, &method)
+        .batch(rt.manifest.eval_batch)
+        .run()
+        .expect("native-capture pipeline");
+    assert_eq!(art.report.layers.len(), nat.report.layers.len());
+    for (a, b) in art.report.layers.iter().zip(nat.report.layers.iter()) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.kept, b.kept, "{}: kept counts are structural", a.name);
+        assert!(
+            (a.frob_err - b.frob_err).abs() <= 2e-2 * (1.0 + a.frob_err.abs()),
+            "{}: artifact {} vs native {}",
+            a.name,
+            a.frob_err,
+            b.frob_err
+        );
+    }
+    assert!(
+        (art.report.mean_frob - nat.report.mean_frob).abs()
+            <= 2e-2 * (1.0 + art.report.mean_frob.abs()),
+        "mean frob: artifact {} vs native {}",
+        art.report.mean_frob,
+        nat.report.mean_frob
+    );
+}
+
+#[test]
+fn artifact_capture_parallel_decompose_is_bit_identical_to_serial() {
+    // Within one capture engine, parallelism must be invisible: the
+    // scoped-worker decompose fan-out over the artifact-captured stats
+    // reproduces the serial packed layers bit for bit.
+    let Some((_guard, rt)) = runtime() else { return };
+    let cfg = rt.manifest.config("small").unwrap().clone();
+    let params = Params::init(&cfg, 35);
+    let g = Grammar::standard();
+    let corpus = build_corpus(&g, 7, 16, 8, 16, cfg.max_seq);
+    let method = slab::baselines::Method::Slab(SlabConfig {
+        iters: 2,
+        svd_iters: 4,
+        ..Default::default()
+    });
+    let run = |threads: usize| {
+        slab::coordinator::CompressJob::new(&params, &corpus.calib, &method)
+            .capture(slab::coordinator::CaptureEngine::Artifact(&rt))
+            .threads(threads)
+            .run()
+            .expect("compress job")
+    };
+    let serial = run(1);
+    let par = run(4);
+    assert_eq!(serial.slab_layers, par.slab_layers, "packed layers");
+    assert_eq!(
+        serial.params.as_ref().unwrap().tensors,
+        par.params.as_ref().unwrap().tensors,
+        "dense reconstructions"
+    );
+    assert_eq!(serial.report.layers, par.report.layers, "reports");
+}
+
 // ---------------------------------------------------------------------------
 // Native packed-serving engine — needs NO artifacts, runs everywhere.
 // ---------------------------------------------------------------------------
