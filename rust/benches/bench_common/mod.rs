@@ -1,0 +1,33 @@
+//! Shared bench fixtures (`bench_serve`, `bench_end_to_end`,
+//! `bench_eval`): the native SLaB decomposition that feeds every
+//! packed-engine bench. A bench opts in with `mod bench_common;` —
+//! cargo does not auto-discover `benches/*/mod.rs` as targets, so
+//! this compiles only as part of the benches that include it.
+
+// Each bench uses a subset; unused helpers must not trip -D warnings.
+#![allow(dead_code)]
+
+use slab::model::Params;
+use slab::slab::{decompose, ActStats, SlabConfig, SlabLayer};
+use slab::tensor::Mat;
+use slab::util::rng::Pcg64;
+
+/// Decompose every pruned linear of `params` natively — the packed
+/// engine input, without artifacts or a runtime. (Bench-sized
+/// Algorithm-1 budget: 3 iterations, 6 SVD power steps.)
+pub fn compress_native(params: &Params, seed: u64) -> Vec<(String, SlabLayer)> {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let scfg = SlabConfig {
+        iters: 3,
+        svd_iters: 6,
+        ..Default::default()
+    };
+    let mut packed = Vec::new();
+    for (name, (_, din)) in params.cfg.pruned.clone() {
+        let w = params.mat(&name);
+        let stats = ActStats::from_activations(&Mat::randn(64, din, 1.0, &mut rng));
+        let d = decompose(&w, &stats, &scfg).expect("decompose");
+        packed.push((name, SlabLayer::from_decomposition(&d)));
+    }
+    packed
+}

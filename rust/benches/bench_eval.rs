@@ -1,0 +1,171 @@
+//! Evaluation-throughput bench — the native batched-NLL harness over
+//! the packed engine, serial vs row-parallel (`ThreadPool::scoped_map`
+//! fan-out, bit-identical outputs), with the dense engine as a
+//! reference row and — when `artifacts/` exists — the XLA
+//! `eval_nll_{cfg}` path on the same rows as the cross-engine
+//! comparison.
+//!
+//! Besides the human-readable table, writes a machine-readable summary
+//! to `BENCH_eval.json` (CI's bench-smoke job uploads it alongside
+//! `BENCH_serve.json` / `BENCH_decompose.json`), so eval-throughput
+//! regressions are diffable across runs. `SLAB_BENCH_FAST=1` shrinks
+//! everything to a smoke run.
+
+// Clippy policy: the kernel/numeric code here deliberately uses
+// explicit index loops, operator-named helpers (`Mat::add`), and
+// `vec!` literals in tests; the style/complexity lints below fight
+// that idiom, so they are allowed target-wide while CI's
+// `clippy --all-targets -- -D warnings` enforces everything else.
+// (Centralize into a `[lints.clippy]` manifest table once a
+// Cargo.toml lands in-tree.)
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::should_implement_trait,
+    clippy::manual_range_contains,
+    clippy::comparison_chain,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if,
+    clippy::useless_vec,
+    clippy::manual_memcpy,
+    clippy::large_enum_variant,
+    clippy::module_inception,
+    clippy::new_without_default
+)]
+
+mod bench_common;
+
+use bench_common::compress_native;
+use slab::data::{build_corpus, Grammar, TokenSet};
+use slab::eval::native::{batched_nll, EvalOptions};
+use slab::model::{Params, SlabModel};
+use slab::runtime::ModelCfg;
+use slab::util::bench::Bench;
+use slab::util::json::Json;
+use std::path::Path;
+
+fn main() {
+    let fast = std::env::var("SLAB_BENCH_FAST").as_deref() == Ok("1");
+    // Big enough that the weight pass dominates per-row overhead,
+    // small enough that a SLAB_BENCH_FAST smoke run stays in seconds.
+    let cfg = ModelCfg::llama("bench-eval", 128, 64, 2, 4, 128, 48, 8);
+    let params = Params::init(&cfg, 9);
+    let packed = compress_native(&params, 10);
+    let model = SlabModel::from_packed(&params, &packed, 1);
+    let n_rows = if fast { 8usize } else { 32 };
+    let rows = TokenSet::synthetic(n_rows, cfg.max_seq, cfg.vocab).to_rows();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!(
+        "bench-eval model: dim {}, {} layers, {} packed linears, {} rows × {} tokens",
+        cfg.dim,
+        cfg.n_layers,
+        model.packed_linear_count(),
+        n_rows,
+        cfg.max_seq
+    );
+
+    let mut b = Bench::new("native eval NLL (packed engine)");
+    let serial = b.run_throughput("batched_nll serial", n_rows as f64, "row", || {
+        batched_nll(&model, &rows, EvalOptions { batch: 8, threads: 1 })
+    });
+    let par = b.run_throughput(
+        &format!("batched_nll parallel x{threads}"),
+        n_rows as f64,
+        "row",
+        || batched_nll(&model, &rows, EvalOptions { batch: 8, threads: 0 }),
+    );
+    let dense_model = SlabModel::from_dense(&params, 1);
+    let dense = b.run_throughput("batched_nll serial (dense engine)", n_rows as f64, "row", || {
+        batched_nll(&dense_model, &rows, EvalOptions { batch: 8, threads: 1 })
+    });
+    b.finish();
+    let serial_rps = serial.throughput(n_rows as f64);
+    let par_rps = par.throughput(n_rows as f64);
+    println!(
+        "parallel x{threads} vs serial: {:.2}x rows/s",
+        par_rps / serial_rps.max(1e-9)
+    );
+
+    // Cross-engine comparison on the "small" config — the same rows
+    // through the XLA eval_nll artifact vs the native harness.
+    // Artifact-gated: skipped (with a note) on a fresh clone.
+    let mut xla_json = Json::Null;
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        if let Ok(rt) = slab::runtime::Runtime::new(dir) {
+            if let Some(small) = rt.manifest.config("small").cloned() {
+                let sparams = Params::init(&small, 11);
+                let smodel = SlabModel::from_dense(&sparams, 1);
+                let g = Grammar::standard();
+                let corpus = build_corpus(&g, 21, 1, n_rows, 1, small.max_seq);
+                let srows = corpus.valid.to_rows();
+                let dev =
+                    slab::eval::ParamsOnDevice::upload(&rt, &sparams).expect("params upload");
+                let width = small.max_seq + 1;
+                let mut bx = Bench::new("cross-engine eval NLL (small config)");
+                let x = bx.run_throughput("xla eval_nll", n_rows as f64, "row", || {
+                    slab::eval::nll_rows(&rt, &small.name, &dev, &srows, width).expect("xla nll")
+                });
+                let ns = bx.run_throughput("native serial (same rows)", n_rows as f64, "row", || {
+                    batched_nll(
+                        &smodel,
+                        &srows,
+                        EvalOptions { batch: rt.manifest.eval_batch, threads: 1 },
+                    )
+                });
+                let np = bx.run_throughput(
+                    &format!("native parallel x{threads} (same rows)"),
+                    n_rows as f64,
+                    "row",
+                    || {
+                        batched_nll(
+                            &smodel,
+                            &srows,
+                            EvalOptions { batch: rt.manifest.eval_batch, threads: 0 },
+                        )
+                    },
+                );
+                bx.finish();
+                xla_json = Json::obj(vec![
+                    ("config", Json::str("small")),
+                    ("xla_rows_per_sec", Json::num(x.throughput(n_rows as f64))),
+                    ("native_serial_rows_per_sec", Json::num(ns.throughput(n_rows as f64))),
+                    ("native_parallel_rows_per_sec", Json::num(np.throughput(n_rows as f64))),
+                ]);
+            }
+        }
+    } else {
+        eprintln!("(artifacts/ missing — skipping the XLA eval bench rows)");
+    }
+
+    let summary = Json::obj(vec![
+        ("bench", Json::str("eval_nll")),
+        (
+            "model",
+            Json::obj(vec![
+                ("dim", Json::from_usize(cfg.dim)),
+                ("n_layers", Json::from_usize(cfg.n_layers)),
+                ("ffn", Json::from_usize(cfg.ffn)),
+                ("vocab", Json::from_usize(cfg.vocab)),
+                ("max_seq", Json::from_usize(cfg.max_seq)),
+                ("rows", Json::from_usize(n_rows)),
+            ]),
+        ),
+        (
+            "rows_per_sec",
+            Json::obj(vec![
+                ("native_serial", Json::num(serial_rps)),
+                ("native_parallel", Json::num(par_rps)),
+                ("native_dense_serial", Json::num(dense.throughput(n_rows as f64))),
+            ]),
+        ),
+        ("threads_parallel", Json::from_usize(threads)),
+        ("speedup_parallel_vs_serial", Json::num(par_rps / serial_rps.max(1e-9))),
+        ("xla", xla_json),
+    ]);
+    std::fs::write("BENCH_eval.json", summary.to_pretty()).expect("write BENCH_eval.json");
+    println!("wrote BENCH_eval.json");
+}

@@ -35,32 +35,13 @@
     clippy::new_without_default
 )]
 
+mod bench_common;
+
+use bench_common::compress_native;
 use slab::model::{DecodeSlot, KvCachePool, Params, SlabModel};
 use slab::runtime::ModelCfg;
-use slab::slab::{decompose, ActStats, SlabConfig, SlabLayer};
-use slab::tensor::Mat;
 use slab::util::bench::Bench;
 use slab::util::json::Json;
-use slab::util::rng::Pcg64;
-
-/// Decompose every pruned linear of `params` natively — the packed
-/// engine input, without artifacts or a runtime.
-fn compress_native(params: &Params, seed: u64) -> Vec<(String, SlabLayer)> {
-    let mut rng = Pcg64::seed_from_u64(seed);
-    let scfg = SlabConfig {
-        iters: 3,
-        svd_iters: 6,
-        ..Default::default()
-    };
-    let mut packed = Vec::new();
-    for (name, (_, din)) in params.cfg.pruned.clone() {
-        let w = params.mat(&name);
-        let stats = ActStats::from_activations(&Mat::randn(64, din, 1.0, &mut rng));
-        let d = decompose(&w, &stats, &scfg).expect("decompose");
-        packed.push((name, SlabLayer::from_decomposition(&d)));
-    }
-    packed
-}
 
 /// A deterministic valid prompt for session `i`.
 fn bench_prompt(i: usize, len: usize) -> Vec<i32> {

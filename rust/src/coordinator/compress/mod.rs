@@ -32,7 +32,7 @@ pub use emit::load_packed_checkpoint;
 
 use crate::baselines::{Method, MethodError};
 use crate::data::TokenSet;
-use crate::model::Params;
+use crate::model::{Params, SlabModel};
 use crate::runtime::client::RuntimeError;
 use crate::runtime::Runtime;
 use crate::slab::SlabLayer;
@@ -103,6 +103,36 @@ pub struct CompressOut {
     /// jobs).
     pub slab_layers: Vec<(String, SlabLayer)>,
     pub report: CompressReport,
+}
+
+impl CompressOut {
+    /// The native serving/eval engine for this run's output: a method
+    /// that emitted packed layers (SLaB) is served straight out of the
+    /// compressed format ([`SlabModel::from_packed`]; the untouched
+    /// dense tensors — embeddings, norms, head — come from
+    /// `original`), while pure-pruning baselines serve their dense
+    /// reconstruction `Ŵ`. This is the hand-off the evaluation sweep
+    /// uses: compress → serve → score, all artifact-free. Errors when
+    /// the job retained neither representation (a
+    /// `keep_dense(false) + keep_packed(false)` streaming run —
+    /// reload its checkpoint via [`load_packed_checkpoint`] instead).
+    pub fn serving_model(
+        &self,
+        original: &Params,
+        threads: usize,
+    ) -> Result<SlabModel, PipelineError> {
+        if !self.slab_layers.is_empty() {
+            return Ok(SlabModel::from_packed(original, &self.slab_layers, threads));
+        }
+        match &self.params {
+            Some(p) => Ok(SlabModel::from_dense(p, threads)),
+            None => Err(PipelineError::Other(
+                "job retained neither packed layers nor dense params — \
+                 reload the streamed checkpoint via load_packed_checkpoint"
+                    .into(),
+            )),
+        }
+    }
 }
 
 /// One compression run, configured then [`run`](CompressJob::run):
@@ -497,6 +527,38 @@ mod tests {
             .stream_to(std::env::temp_dir().join("slab-tests/never-written.slabckpt"))
             .run();
         assert!(matches!(err, Err(PipelineError::Other(_))));
+    }
+
+    #[test]
+    fn serving_model_picks_packed_else_dense() {
+        let cfg = tiny_cfg(1);
+        let params = Params::init(&cfg, 406);
+        let cal = calib(&cfg, 2);
+        // SLaB retained packed layers: the packed engine, token-identical
+        // to serving the dense reconstruction of the same decomposition.
+        let slab_out = CompressJob::new(&params, &cal, &slab_method()).run().unwrap();
+        let packed = slab_out.serving_model(&params, 1).unwrap();
+        assert_eq!(packed.packed_linear_count(), cfg.pruned.len());
+        let dense_ref = SlabModel::from_dense(slab_out.params.as_ref().unwrap(), 1);
+        let prompts = vec![vec![5, 6], vec![7]];
+        assert_eq!(
+            packed.generate_batch(&prompts, 3),
+            dense_ref.generate_batch(&prompts, 3),
+            "packed vs dense-reconstruction tokens"
+        );
+        // Wanda emits no packed layers → the dense-reconstruction engine.
+        let wanda = Method::Wanda { sparsity: 0.5, pattern: None };
+        let wout = CompressJob::new(&params, &cal, &wanda).run().unwrap();
+        assert_eq!(wout.serving_model(&params, 1).unwrap().packed_linear_count(), 0);
+        // A streaming-lean job retains neither → explicit error, not a panic.
+        let path = std::env::temp_dir().join("slab-tests/serving-model-lean.slabckpt");
+        let lean = CompressJob::new(&params, &cal, &slab_method())
+            .keep_dense(false)
+            .keep_packed(false)
+            .stream_to(path)
+            .run()
+            .unwrap();
+        assert!(matches!(lean.serving_model(&params, 1), Err(PipelineError::Other(_))));
     }
 
     #[test]

@@ -41,6 +41,12 @@ impl TokenSet {
         self.rows * self.seq_len
     }
 
+    /// All rows as owned vectors — the shape the eval harness and the
+    /// benches consume (`eval::native::batched_nll` scores `&[Vec<i32>]`).
+    pub fn to_rows(&self) -> Vec<Vec<i32>> {
+        (0..self.rows).map(|i| self.row(i).to_vec()).collect()
+    }
+
     /// Deterministic synthetic rows cycling through the non-special
     /// token range `[4, vocab)` — grammar-free calibration input for
     /// tests, benches, and examples (the compression pipeline only
@@ -147,5 +153,15 @@ mod tests {
         let mut rng = Pcg64::seed_from_u64(302);
         let ts = pack_stream(&g, &mut rng, 7, 16);
         assert_eq!(ts.token_count(), 7 * 16);
+    }
+
+    #[test]
+    fn to_rows_matches_row_views() {
+        let ts = TokenSet::synthetic(3, 8, 16);
+        let rows = ts.to_rows();
+        assert_eq!(rows.len(), 3);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.as_slice(), ts.row(i));
+        }
     }
 }

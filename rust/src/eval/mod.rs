@@ -1,16 +1,29 @@
 //! Evaluation harness: perplexity (WikiText-2 substitute) and the
-//! seven zero-shot suites (LM-Eval substitute).
+//! seven zero-shot suites (LM-Eval substitute), behind **two
+//! engines** (DESIGN.md §11):
 //!
-//! Both run exclusively through the `eval_nll_{cfg}` artifact, with
-//! model parameters uploaded to the device once per evaluation
-//! (`ParamsOnDevice`) — the paper's Table I sweeps evaluate dozens of
-//! compressed variants, so parameter re-upload is the hot cost.
+//! * the XLA path in this module — runs through the `eval_nll_{cfg}`
+//!   artifact with model parameters pinned once per evaluation
+//!   ([`ParamsOnDevice`]); the cross-check engine, and the only one
+//!   that can score through the AOT Pallas forward.
+//! * [`native`] — batched NLL / corpus perplexity / task accuracy /
+//!   zero-shot computed directly on a [`crate::model::SlabModel`]
+//!   (packed CSR + bitplane + low-rank triples or dense weights), no
+//!   artifacts anywhere — the path that makes the paper's results
+//!   tables reproducible on a fresh clone.
+//!
+//! Both engines share the row construction ([`build_task_rows`]) and
+//! the option scoring ([`pick_option`] / [`count_correct`]) below, so
+//! cross-engine conformance reduces to per-row NLL agreement — which
+//! the integration suite pins within tolerance.
+
+pub mod native;
 
 use crate::data::tasks::{Task, TaskItem};
 use crate::data::TokenSet;
 use crate::model::Params;
-use crate::runtime::{lit_i32, to_vec_f32, Runtime};
 use crate::runtime::client::RuntimeError;
+use crate::runtime::{lit_i32, to_vec_f32, Runtime};
 
 /// Host-pinned model parameter literals, built once per evaluation
 /// and borrowed by every artifact call (the device-buffer path is
@@ -28,73 +41,21 @@ impl ParamsOnDevice {
     }
 }
 
-/// Run `eval_nll_{cfg}` over row-batches of a token set; returns
-/// (Σ nll, Σ tokens).
-fn nll_over_rows(
-    rt: &Runtime,
-    cfg_name: &str,
-    dev: &ParamsOnDevice,
-    rows: &[Vec<i32>],
-    width: usize,
-    batch: usize,
-) -> Result<(f64, f64), RuntimeError> {
-    let name = format!("eval_nll_{cfg_name}");
-    let mut total_nll = 0.0f64;
-    let mut total_cnt = 0.0f64;
-    let mut i = 0;
-    while i < rows.len() {
-        let take = (rows.len() - i).min(batch);
-        let mut flat = Vec::with_capacity(batch * width);
-        for k in 0..batch {
-            if k < take {
-                flat.extend_from_slice(&rows[i + k]);
-            } else {
-                flat.extend(std::iter::repeat(0).take(width)); // PAD rows
-            }
-        }
-        let tok = lit_i32(&flat, &[batch, width]);
-        let mut inputs: Vec<&xla::Literal> = dev.lits.iter().collect();
-        inputs.push(&tok);
-        let out = rt.execute_refs(&name, &inputs)?;
-        let nll = to_vec_f32(&out[0]);
-        let cnt = to_vec_f32(&out[1]);
-        for k in 0..take {
-            total_nll += nll[k] as f64;
-            total_cnt += cnt[k] as f64;
-        }
-        i += take;
-    }
-    Ok((total_nll, total_cnt))
-}
+// ---------------------------------------------------------------------------
+// Engine-shared scoring: row construction + option selection
+// ---------------------------------------------------------------------------
 
-/// Corpus perplexity: `exp(Σ nll / Σ tokens)` over a held-out shard.
-pub fn perplexity(
-    rt: &Runtime,
-    params: &Params,
-    shard: &TokenSet,
-) -> Result<f64, RuntimeError> {
-    let cfg = &params.cfg;
-    let width = cfg.max_seq + 1;
-    assert_eq!(shard.seq_len + 1, width, "shard width vs model seq");
-    let dev = ParamsOnDevice::upload(rt, params)?;
-    let rows: Vec<Vec<i32>> = (0..shard.rows).map(|i| shard.row(i).to_vec()).collect();
-    let (nll, cnt) = nll_over_rows(rt, &cfg.name, &dev, &rows, width, rt.manifest.eval_batch)?;
-    Ok((nll / cnt.max(1.0)).exp())
-}
-
-/// Score one task: length-normalized option likelihoods via
-/// `nll(prompt ⧺ option) − nll(prompt)`.
-pub fn task_accuracy(
-    rt: &Runtime,
-    params: &Params,
-    dev: &ParamsOnDevice,
+/// Build the NLL rows of a task suite: per item, the bare prompt row
+/// followed by one `prompt ⧺ option` row per option, each PAD-padded
+/// to `width`. Returns the rows plus, per item, `(prompt_row,
+/// option_rows)` indices into them. Shared by the XLA and native
+/// engines so both score *exactly* the same token rows.
+pub fn build_task_rows(
     items: &[TaskItem],
-) -> Result<f64, RuntimeError> {
-    let cfg = &params.cfg;
-    let width = cfg.max_seq + 1;
-    // Build all rows: per item, the prompt row then each option row.
+    width: usize,
+) -> (Vec<Vec<i32>>, Vec<(usize, Vec<usize>)>) {
     let mut rows: Vec<Vec<i32>> = Vec::new();
-    let mut index: Vec<(usize, Vec<usize>)> = Vec::new(); // (prompt_row, option_rows)
+    let mut index: Vec<(usize, Vec<usize>)> = Vec::new();
     for it in items {
         let pad_to = |mut v: Vec<i32>| {
             assert!(v.len() <= width, "task row too long: {}", v.len());
@@ -112,10 +73,79 @@ pub fn task_accuracy(
         }
         index.push((p_row, opt_rows));
     }
-    // Batch-evaluate all rows, keeping per-row sums.
-    let name = format!("eval_nll_{}", cfg.name);
+    (rows, index)
+}
+
+/// Argmin over option scores with the **strict-less tie-break rule**:
+/// an option wins only by being *strictly* lower than every earlier
+/// option, so equal normalized NLLs keep the earliest option — the
+/// deterministic analogue of LM-Eval's first-argmax convention, and
+/// now an explicit contract rather than an accident of the loop.
+/// Returns `None` for an empty option list (no argmin exists; the
+/// caller scores such an item as incorrect).
+pub fn pick_option(scores: &[f64]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    let mut best_score = f64::INFINITY;
+    for (o, &s) in scores.iter().enumerate() {
+        if s < best_score {
+            best_score = s;
+            best = Some(o);
+        }
+    }
+    // NaN scores never satisfy `<`: an all-NaN row keeps `None` and
+    // scores as incorrect instead of silently picking option 0.
+    best
+}
+
+/// Count correct items given every row's NLL: per item, the option
+/// with the lowest length-normalized score
+/// `(nll(prompt ⧺ opt) − nll(prompt)) / |opt|` wins under the
+/// [`pick_option`] strict-less rule; items with no options score
+/// incorrect. Shared by both engines.
+pub fn count_correct(
+    items: &[TaskItem],
+    index: &[(usize, Vec<usize>)],
+    row_nll: &[f64],
+) -> usize {
+    let mut correct = 0usize;
+    for (it, (p_row, opt_rows)) in items.iter().zip(index.iter()) {
+        let base = row_nll[*p_row];
+        let scores: Vec<f64> = opt_rows
+            .iter()
+            .enumerate()
+            .map(|(o, &r)| (row_nll[r] - base) / it.options[o].len().max(1) as f64)
+            .collect();
+        if pick_option(&scores) == Some(it.answer) {
+            correct += 1;
+        }
+    }
+    correct
+}
+
+// ---------------------------------------------------------------------------
+// XLA engine
+// ---------------------------------------------------------------------------
+
+/// Per-row `(nll, token_count)` through the `eval_nll_{cfg_name}`
+/// artifact — the XLA engine's conformance surface: the native engine
+/// must reproduce these numbers within tolerance on the same rows
+/// (pinned by the cross-engine integration tests). Takes the config
+/// *name* rather than a `Params` because the parameters actually
+/// scored are the ones pinned in `dev` — a wider signature would
+/// invite passing host params that silently disagree with the upload.
+/// Rows are grouped into the artifact's static `batch` with PAD-row
+/// padding; PAD fill rows cost compute but never leak into the
+/// results.
+pub fn nll_rows(
+    rt: &Runtime,
+    cfg_name: &str,
+    dev: &ParamsOnDevice,
+    rows: &[Vec<i32>],
+    width: usize,
+) -> Result<Vec<(f64, f64)>, RuntimeError> {
+    let name = format!("eval_nll_{cfg_name}");
     let batch = rt.manifest.eval_batch;
-    let mut row_nll = vec![0.0f64; rows.len()];
+    let mut out = Vec::with_capacity(rows.len());
     let mut i = 0;
     while i < rows.len() {
         let take = (rows.len() - i).min(batch);
@@ -124,38 +154,57 @@ pub fn task_accuracy(
             if k < take {
                 flat.extend_from_slice(&rows[i + k]);
             } else {
-                flat.extend(std::iter::repeat(0).take(width));
+                flat.extend(std::iter::repeat(0).take(width)); // PAD rows
             }
         }
         let tok = lit_i32(&flat, &[batch, width]);
         let mut inputs: Vec<&xla::Literal> = dev.lits.iter().collect();
         inputs.push(&tok);
-        let out = rt.execute_refs(&name, &inputs)?;
-        let nll = to_vec_f32(&out[0]);
+        let outs = rt.execute_refs(&name, &inputs)?;
+        let nll = to_vec_f32(&outs[0]);
+        let cnt = to_vec_f32(&outs[1]);
         for k in 0..take {
-            row_nll[i + k] = nll[k] as f64;
+            out.push((nll[k] as f64, cnt[k] as f64));
         }
         i += take;
     }
-    // Pick argmin normalized option NLL.
-    let mut correct = 0usize;
-    for (it, (p_row, opt_rows)) in items.iter().zip(index.iter()) {
-        let base = row_nll[*p_row];
-        let mut best = 0usize;
-        let mut best_score = f64::INFINITY;
-        for (o, &r) in opt_rows.iter().enumerate() {
-            let len = it.options[o].len().max(1) as f64;
-            let score = (row_nll[r] - base) / len;
-            if score < best_score {
-                best_score = score;
-                best = o;
-            }
-        }
-        if best == it.answer {
-            correct += 1;
-        }
-    }
-    Ok(correct as f64 / items.len().max(1) as f64)
+    Ok(out)
+}
+
+/// Corpus perplexity: `exp(Σ nll / Σ tokens)` over a held-out shard.
+pub fn perplexity(
+    rt: &Runtime,
+    params: &Params,
+    shard: &TokenSet,
+) -> Result<f64, RuntimeError> {
+    let cfg = &params.cfg;
+    let width = cfg.max_seq + 1;
+    assert_eq!(shard.seq_len + 1, width, "shard width vs model seq");
+    let dev = ParamsOnDevice::upload(rt, params)?;
+    let rows = shard.to_rows();
+    let per_row = nll_rows(rt, &cfg.name, &dev, &rows, width)?;
+    let (nll, cnt) = per_row
+        .iter()
+        .fold((0.0f64, 0.0f64), |(a, b), (n, c)| (a + n, b + c));
+    Ok((nll / cnt.max(1.0)).exp())
+}
+
+/// Score one task: length-normalized option likelihoods via
+/// `nll(prompt ⧺ option) − nll(prompt)`, ties broken by the
+/// [`pick_option`] strict-less rule. An empty suite scores 0.0.
+pub fn task_accuracy(
+    rt: &Runtime,
+    params: &Params,
+    dev: &ParamsOnDevice,
+    items: &[TaskItem],
+) -> Result<f64, RuntimeError> {
+    let width = params.cfg.max_seq + 1;
+    let (rows, index) = build_task_rows(items, width);
+    let row_nll: Vec<f64> = nll_rows(rt, &params.cfg.name, dev, &rows, width)?
+        .into_iter()
+        .map(|(n, _)| n)
+        .collect();
+    Ok(count_correct(items, &index, &row_nll) as f64 / items.len().max(1) as f64)
 }
 
 /// Full zero-shot sweep: (task, accuracy) plus the macro average.
@@ -172,4 +221,85 @@ pub fn zero_shot(
     }
     let avg = per_task.iter().map(|(_, a)| a).sum::<f64>() / per_task.len().max(1) as f64;
     Ok((per_task, avg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_option_is_strict_less_first_wins() {
+        // Ties keep the earliest option: 1.0 at index 0 is never
+        // displaced by the equal 1.0 at index 2.
+        assert_eq!(pick_option(&[1.0, 2.0, 1.0]), Some(0));
+        assert_eq!(pick_option(&[3.0, 2.0, 2.0]), Some(1));
+        assert_eq!(pick_option(&[2.0, -1.0, 0.5]), Some(1));
+        assert_eq!(pick_option(&[]), None, "no options → no argmin");
+        assert_eq!(pick_option(&[f64::NAN, f64::NAN]), None, "all-NaN → incorrect");
+        // NaN entries are skipped, finite entries still win.
+        assert_eq!(pick_option(&[f64::NAN, 4.0]), Some(1));
+    }
+
+    #[test]
+    fn count_correct_hand_computed_length_normalization() {
+        // One item, two options of different lengths. Row NLLs chosen
+        // so the *unnormalized* deltas would pick option 0
+        // (3.0 < 4.0) but per-token normalization picks option 1
+        // (3.0/1 = 3.0 vs 4.0/2 = 2.0).
+        let items = vec![TaskItem {
+            prompt: vec![5, 6],
+            options: vec![vec![7], vec![8, 9]],
+            answer: 1,
+        }];
+        let index = vec![(0usize, vec![1usize, 2])];
+        // nll(prompt)=10, nll(p⧺opt0)=13, nll(p⧺opt1)=14.
+        let row_nll = vec![10.0, 13.0, 14.0];
+        assert_eq!(count_correct(&items, &index, &row_nll), 1);
+        // Exact tie on normalized scores (13.0 → 12.0: both 2.0/tok):
+        // strict-less keeps option 0, so answer 1 now scores wrong.
+        let tied = vec![10.0, 12.0, 14.0];
+        assert_eq!(count_correct(&items, &index, &tied), 0);
+        // …and an item whose answer IS the earliest tied option wins.
+        let items0 = vec![TaskItem {
+            prompt: vec![5, 6],
+            options: vec![vec![7], vec![8, 9]],
+            answer: 0,
+        }];
+        assert_eq!(count_correct(&items0, &index, &tied), 1);
+    }
+
+    #[test]
+    fn count_correct_empty_options_scores_incorrect() {
+        // An item with no options has no argmin; it must not count as
+        // correct just because `answer == 0`.
+        let items = vec![TaskItem {
+            prompt: vec![5],
+            options: vec![],
+            answer: 0,
+        }];
+        let index = vec![(0usize, vec![])];
+        assert_eq!(count_correct(&items, &index, &[2.0]), 0);
+    }
+
+    #[test]
+    fn build_task_rows_layout_and_padding() {
+        let items = vec![
+            TaskItem {
+                prompt: vec![5, 6],
+                options: vec![vec![7], vec![8, 9]],
+                answer: 0,
+            },
+            TaskItem {
+                prompt: vec![10],
+                options: vec![],
+                answer: 0,
+            },
+        ];
+        let (rows, index) = build_task_rows(&items, 6);
+        assert_eq!(rows.len(), 4); // prompt+2 options, prompt+0 options
+        assert_eq!(index, vec![(0, vec![1, 2]), (3, vec![])]);
+        assert_eq!(rows[0], vec![5, 6, 0, 0, 0, 0]);
+        assert_eq!(rows[2], vec![5, 6, 8, 9, 0, 0]);
+        assert_eq!(rows[3], vec![10, 0, 0, 0, 0, 0]);
+    }
 }

@@ -1,0 +1,370 @@
+//! Native evaluation harness — batched NLL, corpus perplexity, task
+//! accuracy, and the zero-shot sweep computed **directly on a
+//! [`SlabModel`]**: the packed `W_S + u vᵀ ⊙ W_B` triples (or dense
+//! weights) are scored through the serving engine's own forward
+//! machinery ([`SlabModel::forward_full`]), so none of the
+//! `embed_*`/`eval_nll_*` XLA artifacts are required anywhere — the
+//! paper's evidence tables become reproducible on a fresh clone
+//! (DESIGN.md §11).
+//!
+//! **Semantics.** Identical to the `eval_nll_{cfg}` artifact
+//! (`model.py::eval_nll`): a row of `width` tokens scores
+//! `inputs = row[..width−1]`, `targets = row[1..]` under the pure
+//! causal forward; PAD targets are masked out of both the NLL sum and
+//! the token count. Because trailing PAD *inputs* can only influence
+//! positions whose targets are PAD (causality), a row's `(nll, count)`
+//! never depends on its padding, its batch neighbours, or its slot.
+//!
+//! **Determinism contract** (same shape as the compression pipeline's
+//! decompose stage, DESIGN.md §10): eval rows fan out across
+//! [`ThreadPool::scoped_map`] workers in contiguous chunks with a
+//! slot-ordered reduction, and each worker scores its rows through
+//! serial kernels — so `threads(N)` is **bit-identical** to
+//! `threads(1)`, and per-row results are invariant to row order and
+//! batch size, pinned at unit, property, and integration levels.
+//! Workers never touch the model's own pool (nesting a fork-join on
+//! one pool could deadlock — see [`ThreadPool::scoped`]); here the
+//! parallelism budget belongs to rows, not weight chunks.
+
+use crate::data::tasks::{Task, TaskItem};
+use crate::data::{TokenSet, PAD};
+use crate::eval::{build_task_rows, count_correct};
+use crate::model::SlabModel;
+use crate::tensor::ops::logsumexp;
+use crate::tensor::Mat;
+use crate::util::pool::{chunk_ranges, ThreadPool};
+
+/// How the native harness schedules eval rows.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOptions {
+    /// Rows per forward call within one worker — amortizes per-call
+    /// overhead; per-row results are bit-identical for any setting.
+    pub batch: usize,
+    /// Worker threads for the row fan-out: `1` = serial (the
+    /// reference path), `0` = available parallelism, `n` = exactly
+    /// `n`. Any setting is bit-identical to serial.
+    pub threads: usize,
+}
+
+impl Default for EvalOptions {
+    fn default() -> EvalOptions {
+        EvalOptions { batch: 8, threads: 1 }
+    }
+}
+
+impl EvalOptions {
+    pub fn with_threads(threads: usize) -> EvalOptions {
+        EvalOptions {
+            threads,
+            ..Default::default()
+        }
+    }
+}
+
+/// Score a slice of uniform-width rows: per row `(Σ nll, Σ tokens)`
+/// with PAD targets masked — the native twin of the XLA engine's
+/// [`crate::eval::nll_rows`], and the function the cross-engine
+/// conformance tests compare. Rows must share one width in
+/// `2..=max_seq+1`; token ids must be in-vocab (PAD fill is).
+pub fn batched_nll(model: &SlabModel, rows: &[Vec<i32>], opts: EvalOptions) -> Vec<(f64, f64)> {
+    if rows.is_empty() {
+        return Vec::new();
+    }
+    let width = rows[0].len();
+    assert!(
+        width >= 2 && width - 1 <= model.cfg.max_seq,
+        "eval row width {width} vs max_seq {}",
+        model.cfg.max_seq
+    );
+    for r in rows {
+        assert_eq!(r.len(), width, "ragged eval rows");
+    }
+    let batch = opts.batch.max(1);
+
+    // One worker's serial pass over rows [r0, r1): forwards `batch`
+    // rows at a time through serial kernels (pool = None).
+    let score_chunk = |r0: usize, r1: usize| -> Vec<(f64, f64)> {
+        let t = width - 1;
+        let mut out = Vec::with_capacity(r1 - r0);
+        let mut i = r0;
+        while i < r1 {
+            let take = (r1 - i).min(batch);
+            let mut flat = Vec::with_capacity(take * t);
+            for k in 0..take {
+                flat.extend_from_slice(&rows[i + k][..t]);
+            }
+            let logits = model.forward_full(&flat, take, None);
+            for k in 0..take {
+                out.push(row_nll(&logits, k, t, &rows[i + k]));
+            }
+            i += take;
+        }
+        out
+    };
+
+    if opts.threads == 1 {
+        return score_chunk(0, rows.len());
+    }
+    // Contiguous near-equal chunks, one per worker; `scoped_map`
+    // returns results in input (= slot) order, so the concatenation
+    // below is the same reduction the serial loop performs.
+    let pool = ThreadPool::new(opts.threads);
+    let ranges = chunk_ranges(rows.len(), pool.size());
+    pool.scoped_map(ranges, |(r0, r1)| score_chunk(r0, r1))
+        .into_iter()
+        .flatten()
+        .collect()
+}
+
+/// One row's `(Σ nll, Σ tokens)` from a `(take·t, vocab)` logits
+/// batch: `nll(pos) = logsumexp(logits) − logits[target]` (the stable
+/// `-log_softmax[target]`), PAD targets skipped — `model.py::eval_nll`
+/// per position.
+fn row_nll(logits: &Mat, k: usize, t: usize, row: &[i32]) -> (f64, f64) {
+    let mut nll = 0.0f64;
+    let mut cnt = 0.0f64;
+    for pos in 0..t {
+        let target = row[pos + 1];
+        if target == PAD {
+            continue;
+        }
+        let lrow = logits.row(k * t + pos);
+        debug_assert!((target as usize) < lrow.len(), "target {target} out of vocab");
+        nll += (logsumexp(lrow) - lrow[target as usize]) as f64;
+        cnt += 1.0;
+    }
+    (nll, cnt)
+}
+
+/// Corpus `(Σ nll, Σ tokens)` over a held-out shard — the perplexity
+/// numerator/denominator, exposed for benches and cross-checks.
+pub fn corpus_nll(model: &SlabModel, shard: &TokenSet, opts: EvalOptions) -> (f64, f64) {
+    assert_eq!(shard.seq_len, model.cfg.max_seq, "shard width vs model seq");
+    batched_nll(model, &shard.to_rows(), opts)
+        .into_iter()
+        .fold((0.0, 0.0), |(a, b), (n, c)| (a + n, b + c))
+}
+
+/// Corpus perplexity `exp(Σ nll / Σ tokens)` over a held-out shard —
+/// the native twin of [`crate::eval::perplexity`].
+pub fn perplexity(model: &SlabModel, shard: &TokenSet, opts: EvalOptions) -> f64 {
+    let (nll, cnt) = corpus_nll(model, shard, opts);
+    (nll / cnt.max(1.0)).exp()
+}
+
+/// Tightest row width for a task suite: the longest real
+/// `prompt ⧺ option` row, clamped into `[2, max_seq + 1]`. The XLA
+/// engine must pad task rows to its artifact's static `max_seq + 1`
+/// shape; the native engine has no such constraint, and trailing-PAD
+/// invariance (module docs) makes a tight width a pure speedup —
+/// attention is O(t²) per layer, and task rows are far shorter than
+/// the window on the larger configs — with bit-identical scores.
+fn task_width(items: &[TaskItem], max_seq: usize) -> usize {
+    let longest = items
+        .iter()
+        .map(|it| {
+            let opt = it.options.iter().map(|o| o.len()).max().unwrap_or(0);
+            it.prompt.len() + opt
+        })
+        .max()
+        .unwrap_or(0);
+    longest.clamp(2, max_seq + 1)
+}
+
+/// Score one task suite: length-normalized option likelihoods with
+/// the [`crate::eval::pick_option`] strict-less tie-break; items with
+/// no options score incorrect; an empty suite scores 0.0. Same rows
+/// (up to trailing PAD, which cannot change a score), same scoring
+/// rule as the XLA engine — only the NLL numbers come from the native
+/// forward.
+pub fn task_accuracy(model: &SlabModel, items: &[TaskItem], opts: EvalOptions) -> f64 {
+    let width = task_width(items, model.cfg.max_seq);
+    let (rows, index) = build_task_rows(items, width);
+    let row_nll: Vec<f64> = batched_nll(model, &rows, opts)
+        .into_iter()
+        .map(|(n, _)| n)
+        .collect();
+    count_correct(items, &index, &row_nll) as f64 / items.len().max(1) as f64
+}
+
+/// Full zero-shot sweep: (task, accuracy) per suite plus the macro
+/// average. All suites' rows are scored through **one** batched pass
+/// so the row fan-out amortizes across the whole sweep.
+pub fn zero_shot(
+    model: &SlabModel,
+    suites: &[(Task, Vec<TaskItem>)],
+    opts: EvalOptions,
+) -> (Vec<(Task, f64)>, f64) {
+    // One shared (tight) width so every suite rides one batched pass.
+    let width = suites
+        .iter()
+        .map(|(_, items)| task_width(items, model.cfg.max_seq))
+        .max()
+        .unwrap_or(2);
+    let mut all_rows: Vec<Vec<i32>> = Vec::new();
+    let mut spans: Vec<(usize, usize, Vec<(usize, Vec<usize>)>)> = Vec::with_capacity(suites.len());
+    for (_, items) in suites {
+        let (rows, index) = build_task_rows(items, width);
+        spans.push((all_rows.len(), rows.len(), index));
+        all_rows.extend(rows);
+    }
+    let nll: Vec<f64> = batched_nll(model, &all_rows, opts)
+        .into_iter()
+        .map(|(n, _)| n)
+        .collect();
+    let mut per_task = Vec::with_capacity(suites.len());
+    for ((task, items), (off, n, index)) in suites.iter().zip(spans.iter()) {
+        let correct = count_correct(items, index, &nll[*off..off + n]);
+        per_task.push((*task, correct as f64 / items.len().max(1) as f64));
+    }
+    let avg = per_task.iter().map(|(_, a)| a).sum::<f64>() / per_task.len().max(1) as f64;
+    (per_task, avg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Params;
+    use crate::runtime::ModelCfg;
+    use crate::util::prop;
+    use crate::util::rng::Pcg64;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg::llama("tiny-eval", 32, 8, 2, 2, 16, 12, 4)
+    }
+
+    fn tiny_model(seed: u64) -> SlabModel {
+        SlabModel::from_dense(&Params::init(&tiny_cfg(), seed), 1)
+    }
+
+    fn random_rows(rng: &mut Pcg64, n: usize, width: usize, vocab: usize) -> Vec<Vec<i32>> {
+        (0..n)
+            .map(|_| {
+                (0..width)
+                    .map(|_| 4 + rng.below_usize(vocab - 4) as i32)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn nll_masks_pad_targets_and_counts_tokens() {
+        let model = tiny_model(500);
+        let width = model.cfg.max_seq + 1;
+        // A fully PAD-padded tail: count must equal the real prefix's
+        // target count, and padding must not change the scores.
+        let mut short = vec![5, 9, 11];
+        short.resize(width, PAD);
+        let out = batched_nll(&model, &[short.clone()], EvalOptions::default());
+        assert_eq!(out.len(), 1);
+        let (nll, cnt) = out[0];
+        // Targets: 9, 11 (then PADs, masked).
+        assert_eq!(cnt, 2.0);
+        assert!(nll.is_finite() && nll > 0.0, "nll {nll}");
+        // Full rows count width-1 targets.
+        let full: Vec<i32> = (0..width).map(|i| 5 + (i as i32 % 20)).collect();
+        let (_, cfull) = batched_nll(&model, &[full], EvalOptions::default())[0];
+        assert_eq!(cfull, (width - 1) as f64);
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial_and_invariant_to_batch_and_order() {
+        // The tentpole determinism contract as a property: for random
+        // row sets, any (threads, batch) schedule reproduces the
+        // serial batch-1 result bit for bit, and permuting rows
+        // permutes results.
+        let model = tiny_model(501);
+        let width = model.cfg.max_seq + 1;
+        let vocab = model.cfg.vocab;
+        prop::check(
+            "native-nll-schedule-invariance",
+            6,
+            |rng| (1 + rng.below_usize(10), 1 + rng.below_usize(5)),
+            |&(n, batch)| {
+                let mut rng = Pcg64::seed_from_u64((n * 31 + batch) as u64);
+                let rows = random_rows(&mut rng, n, width, vocab);
+                let reference = batched_nll(&model, &rows, EvalOptions { batch: 1, threads: 1 });
+                for threads in [1usize, 3] {
+                    let got = batched_nll(&model, &rows, EvalOptions { batch, threads });
+                    if got != reference {
+                        return Err(format!("threads={threads} batch={batch} diverged"));
+                    }
+                }
+                // Row-order invariance: reversed rows → reversed results.
+                let rev: Vec<Vec<i32>> = rows.iter().rev().cloned().collect();
+                let got_rev = batched_nll(&model, &rev, EvalOptions { batch, threads: 2 });
+                let want: Vec<(f64, f64)> = reference.iter().rev().cloned().collect();
+                if got_rev != want {
+                    return Err("row order leaked into results".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn perplexity_of_untrained_model_is_near_uniform() {
+        let model = tiny_model(502);
+        let shard = TokenSet::synthetic(6, model.cfg.max_seq, model.cfg.vocab);
+        let p1 = perplexity(&model, &shard, EvalOptions::default());
+        let p2 = perplexity(&model, &shard, EvalOptions::with_threads(4));
+        assert_eq!(p1, p2, "threads must be invisible");
+        // Scaled-normal init ≈ uniform logits: ppl near vocab size.
+        let v = model.cfg.vocab as f64;
+        assert!(p1 > v * 0.5 && p1 < v * 2.0, "ppl {p1} vs vocab {v}");
+    }
+
+    #[test]
+    fn task_accuracy_edge_cases() {
+        let model = tiny_model(503);
+        // Empty suite: defined as 0.0, not NaN.
+        assert_eq!(task_accuracy(&model, &[], EvalOptions::default()), 0.0);
+        // An item with no options scores incorrect regardless of the
+        // model (no argmin exists), never spuriously correct.
+        let no_opts = vec![TaskItem {
+            prompt: vec![5, 6],
+            options: vec![],
+            answer: 0,
+        }];
+        assert_eq!(task_accuracy(&model, &no_opts, EvalOptions::default()), 0.0);
+        // A two-option item always picks *some* option → accuracy over
+        // {correct item, empty item} is 0.0 or 0.5.
+        let mixed = vec![
+            TaskItem {
+                prompt: vec![5, 6],
+                options: vec![vec![7], vec![8]],
+                answer: 0,
+            },
+            TaskItem {
+                prompt: vec![5],
+                options: vec![],
+                answer: 0,
+            },
+        ];
+        let acc = task_accuracy(&model, &mixed, EvalOptions::default());
+        assert!(acc == 0.0 || acc == 0.5, "acc {acc}");
+    }
+
+    #[test]
+    fn zero_shot_single_pass_matches_per_suite_calls() {
+        use crate::data::Grammar;
+        let cfg = ModelCfg::llama("tiny-eval-zs", 512, 8, 1, 2, 16, 48, 4);
+        let model = SlabModel::from_dense(&Params::init(&cfg, 504), 1);
+        let g = Grammar::standard();
+        let suites: Vec<(Task, Vec<TaskItem>)> = [Task::Piqa, Task::BoolQ]
+            .iter()
+            .map(|t| (*t, t.generate(&g, 3, 99)))
+            .collect();
+        let opts = EvalOptions { batch: 4, threads: 2 };
+        let (per_task, avg) = zero_shot(&model, &suites, opts);
+        assert_eq!(per_task.len(), 2);
+        for ((task, items), (t2, acc)) in suites.iter().zip(per_task.iter()) {
+            assert_eq!(task, t2);
+            assert_eq!(*acc, task_accuracy(&model, items, opts), "{}", task.name());
+        }
+        let want = per_task.iter().map(|(_, a)| a).sum::<f64>() / 2.0;
+        assert_eq!(avg, want);
+        // Empty sweep is defined.
+        assert_eq!(zero_shot(&model, &[], opts).1, 0.0);
+    }
+}

@@ -5,12 +5,13 @@
 //! identical rows. See DESIGN.md §5 for the experiment index.
 
 use crate::baselines::{Method, SparseGptConfig};
-use crate::coordinator::{compress_model, Engine};
+use crate::coordinator::{compress_model, CompressJob, Engine, PipelineError};
 use crate::data::{build_corpus, CorpusBundle, Grammar, Task, TaskItem, ALL_TASKS};
+use crate::eval::native::EvalOptions;
 use crate::eval::{perplexity, zero_shot};
-use crate::model::Params;
+use crate::model::{Params, SlabModel};
 use crate::report::Table;
-use crate::runtime::Runtime;
+use crate::runtime::{ModelCfg, Runtime};
 use crate::slab::{GroupShape, SlabConfig, Structure, Variant};
 use crate::sparse::{PATTERN_2_4, PATTERN_4_8};
 use crate::train::train;
@@ -331,6 +332,252 @@ pub fn fig1(lab: &Lab, model: &str, ranks: &[usize]) -> anyhow::Result<Table> {
             Err(e) => {
                 eprintln!("[fig1] rank {r}: infeasible ({e})");
                 table.push_row(vec![r.to_string(), "infeasible".into(), "-".into()]);
+            }
+        }
+    }
+    Ok(table)
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-free sweep: the paper's comparison matrix on the native engine
+// ---------------------------------------------------------------------------
+
+/// Configuration of the artifact-free compression/evaluation sweep
+/// ([`sweep`]): which model shape, which ratios, and how much data /
+/// parallelism. Everything here runs without XLA artifacts — the
+/// corpus comes from the grammar, compression from [`CompressJob`]'s
+/// native capture, and scoring from `eval::native` on the packed
+/// serving engine.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Model shape ([`ModelCfg::llama`]); the task suites need
+    /// `max_seq ≥ 47` (their longest prompt ⧺ option is 48 tokens)
+    /// and `vocab ≥ Grammar::standard().vocab()`.
+    pub model: ModelCfg,
+    pub seed: u64,
+    /// Compression ratios / sparsities to sweep (paper Table I's rows).
+    pub ratios: Vec<f64>,
+    /// Held-out perplexity shard rows.
+    pub valid_rows: usize,
+    /// Calibration rows fed to every compression job.
+    pub calib_rows: usize,
+    /// Items per zero-shot suite.
+    pub task_items: usize,
+    /// Worker threads for the compress fan-out and the eval-row
+    /// fan-out: `1` serial, `0` available parallelism — bit-identical
+    /// either way (the shared determinism contract).
+    pub threads: usize,
+    /// Eval rows per forward within one worker.
+    pub eval_batch: usize,
+    /// Algorithm-1 iterations for SLaB and the naive sparse+low-rank
+    /// baseline (testbed-sized; the paper default is 20).
+    pub iters: usize,
+    /// Rank of the naive sparse+low-rank baseline (Fig. 1's knob).
+    pub lowrank_rank: usize,
+}
+
+impl SweepConfig {
+    /// A testbed-sized sweep that finishes in seconds: grammar-sized
+    /// vocab, `max_seq` 48 (the task suites' row bound), two blocks.
+    pub fn quick(seed: u64) -> SweepConfig {
+        let vocab = Grammar::standard().vocab();
+        SweepConfig {
+            model: ModelCfg::llama("sweep", vocab, 48, 2, 4, 96, 48, 8),
+            seed,
+            ratios: vec![0.5, 0.6],
+            valid_rows: 16,
+            calib_rows: 8,
+            task_items: 8,
+            threads: 0,
+            eval_batch: 8,
+            iters: 8,
+            lowrank_rank: 2,
+        }
+    }
+}
+
+/// The method grid one sweep ratio compares — SLaB against the four
+/// baselines the repo carries (paper §III-A4 / Fig. 1), all
+/// unstructured at sparsity/CR `cr`.
+pub fn sweep_methods(scfg: &SweepConfig, cr: f64) -> Vec<Method> {
+    vec![
+        Method::Slab(SlabConfig {
+            cr,
+            iters: scfg.iters,
+            ..Default::default()
+        }),
+        Method::Wanda {
+            sparsity: cr,
+            pattern: None,
+        },
+        Method::SparseGpt {
+            sparsity: cr,
+            pattern: None,
+            cfg: SparseGptConfig::default(),
+        },
+        Method::Magnitude {
+            sparsity: cr,
+            pattern: None,
+        },
+        Method::LowrankSparse {
+            cr,
+            rank: scfg.lowrank_rank,
+            iters: scfg.iters,
+        },
+    ]
+}
+
+/// Shared setup of the artifact-free paths: validate the model shape
+/// against the grammar and task suites, then build the corpus splits
+/// (the same derivation as `Lab::corpus`; the train split is unused)
+/// and the seven task suites.
+fn native_eval_setup(
+    scfg: &SweepConfig,
+    cfg: &ModelCfg,
+) -> anyhow::Result<(CorpusBundle, Vec<(Task, Vec<TaskItem>)>)> {
+    let g = Grammar::standard();
+    anyhow::ensure!(
+        g.vocab() <= cfg.vocab,
+        "model vocab {} smaller than grammar vocab {}",
+        cfg.vocab,
+        g.vocab()
+    );
+    anyhow::ensure!(
+        cfg.max_seq >= 47,
+        "task suites need max_seq ≥ 47, got {}",
+        cfg.max_seq
+    );
+    let corpus = build_corpus(&g, scfg.seed, 1, scfg.valid_rows, scfg.calib_rows, cfg.max_seq);
+    let suites: Vec<(Task, Vec<TaskItem>)> = ALL_TASKS
+        .iter()
+        .map(|t| (*t, t.generate(&g, scfg.task_items, scfg.seed ^ 0x7a5c)))
+        .collect();
+    Ok((corpus, suites))
+}
+
+/// Artifact-free single-model evaluation: perplexity plus the seven
+/// zero-shot suites on the native engine, optionally compressing with
+/// `method` first (native capture + `threads` fan-out; SLaB is served
+/// straight out of the packed format). The `slab eval --engine
+/// native` surface.
+pub fn eval_native_table(
+    scfg: &SweepConfig,
+    params: &Params,
+    method: Option<&Method>,
+) -> anyhow::Result<Table> {
+    let cfg = &params.cfg;
+    let (corpus, suites) = native_eval_setup(scfg, cfg)?;
+    let opts = EvalOptions {
+        batch: scfg.eval_batch,
+        threads: scfg.threads,
+    };
+    let (model, label) = match method {
+        Some(m) if !matches!(m, Method::Dense) => {
+            let out = CompressJob::new(params, &corpus.calib, m)
+                .threads(scfg.threads)
+                .run()?;
+            let model = out
+                .serving_model(params, 1)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            (model, format!("{} {}", m.name(), m.sparsity_label()))
+        }
+        _ => (SlabModel::from_dense(params, 1), "Dense".to_string()),
+    };
+    let ppl = crate::eval::native::perplexity(&model, &corpus.valid, opts);
+    let (per_task, avg) = crate::eval::native::zero_shot(&model, &suites, opts);
+    let mut t = Table::new(
+        &format!(
+            "Evaluation — {} / {label} (native engine, {} packed linears, no artifacts)",
+            cfg.name,
+            model.packed_linear_count()
+        ),
+        &["metric", "value"],
+    );
+    t.push_row(vec!["perplexity".into(), Table::metric(ppl)]);
+    for (task, acc) in per_task {
+        t.push_row(vec![task.name().into(), Table::pct(acc)]);
+    }
+    t.push_row(vec!["avg acc".into(), Table::pct(avg)]);
+    Ok(t)
+}
+
+/// The paper-style results table, end to end on the native engine:
+/// compress `params` at every ratio with SLaB and the four baselines
+/// (native capture, `threads` fan-out), serve each result natively
+/// (SLaB straight out of the packed format, baselines via their dense
+/// reconstruction), and score perplexity + the seven zero-shot suites
+/// through `eval::native` — **no XLA artifacts anywhere**. Rows the
+/// budget cannot realize (e.g. an infeasible low-rank allocation)
+/// render as `infeasible` instead of aborting the sweep.
+pub fn sweep(scfg: &SweepConfig, params: &Params) -> anyhow::Result<Table> {
+    let cfg = &params.cfg;
+    let (corpus, suites) = native_eval_setup(scfg, cfg)?;
+    let opts = EvalOptions {
+        batch: scfg.eval_batch,
+        threads: scfg.threads,
+    };
+
+    let mut header: Vec<&str> = vec!["Method", "Sparsity(CR)", "ppl↓"];
+    header.extend(ALL_TASKS.iter().map(|t| t.name()));
+    header.push("acc↑");
+    let mut table = Table::new(
+        &format!(
+            "Sweep — SLaB vs baselines on the native packed engine \
+             ({}: {} params, {} valid rows, {} items/task)",
+            cfg.name,
+            cfg.n_params(),
+            scfg.valid_rows,
+            scfg.task_items
+        ),
+        &header,
+    );
+
+    let score = |name: String, label: String, model: &SlabModel| {
+        let t0 = std::time::Instant::now();
+        let ppl = crate::eval::native::perplexity(model, &corpus.valid, opts);
+        let (per_task, avg) = crate::eval::native::zero_shot(model, &suites, opts);
+        eprintln!(
+            "[sweep] {name} {label}: ppl {ppl:.3} acc {avg:.3} ({:.1}s, {} packed linears)",
+            t0.elapsed().as_secs_f64(),
+            model.packed_linear_count()
+        );
+        let mut row = vec![name, label, Table::metric(ppl)];
+        row.extend(per_task.iter().map(|(_, a)| Table::pct(*a)));
+        row.push(Table::pct(avg));
+        row
+    };
+
+    // Dense reference row (the paper's 0% anchor).
+    let dense_model = SlabModel::from_dense(params, 1);
+    let row = score("Dense".into(), "0%".into(), &dense_model);
+    table.push_row(row);
+    drop(dense_model);
+
+    for &cr in &scfg.ratios {
+        for method in sweep_methods(scfg, cr) {
+            let out = CompressJob::new(params, &corpus.calib, &method)
+                .threads(scfg.threads)
+                .run();
+            match out {
+                Ok(out) => {
+                    // Packed serving for SLaB, dense reconstruction for
+                    // the baselines; `threads = 1` because eval's
+                    // parallelism lives in the row fan-out, not the
+                    // model's kernel pool.
+                    let model = out
+                        .serving_model(params, 1)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                    let row = score(method.name(), method.sparsity_label(), &model);
+                    table.push_row(row);
+                }
+                Err(PipelineError::Method(e)) => {
+                    eprintln!("[sweep] {} at {cr}: infeasible ({e})", method.name());
+                    let mut row =
+                        vec![method.name(), method.sparsity_label(), "infeasible".into()];
+                    row.extend(vec!["-".to_string(); ALL_TASKS.len() + 1]);
+                    table.push_row(row);
+                }
+                Err(e) => return Err(e.into()),
             }
         }
     }

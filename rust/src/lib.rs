@@ -28,7 +28,10 @@
 //! * [`runtime`] — PJRT client / artifact registry / typed execution.
 //! * [`data`] — synthetic grammar corpus, tokenizer, calibration sets.
 //! * [`train`] — drives the AOT train-step artifact.
-//! * [`eval`] — perplexity + zero-shot suites.
+//! * [`eval`] — perplexity + zero-shot suites behind two engines:
+//!   the XLA `eval_nll` artifact path and the artifact-free
+//!   `eval::native` harness over `SlabModel` (row-parallel,
+//!   bit-identical to serial).
 //! * [`coordinator`] — staged compression pipeline (capture →
 //!   decompose → emit behind one `CompressJob`) + serving router
 //!   with three engines (AOT artifacts / native packed / native

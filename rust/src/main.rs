@@ -6,10 +6,18 @@
 //! slab compress --model base --method slab --cr 0.5 [--pattern 2:4] [--engine artifact]
 //!              [--capture native|artifact] [--threads N] [--stream out.slabckpt]
 //! slab eval    --model base [--ckpt runs/base_slab.slabckpt]
+//! slab eval    --engine native [--model small --ckpt runs/small.slabckpt]
+//!              [--method slab --cr 0.5] [--threads 0]                   # artifact-free
+//! slab sweep   [--model small|base|large] [--ratios 0.5,0.6] [--threads 0]
+//!              [--items 8] [--rows 16] [--csv runs/sweep.csv]           # artifact-free
 //! slab table1  --models small,base,large [--groups "US (50%)"]
 //! slab table2 | table3 | fig1 | fig3
 //! slab serve   --model base --requests 64
 //! ```
+//!
+//! `slab --sweep` / `slab --eval` (no subcommand) are shorthands for
+//! the two artifact-free paths — they need no `make artifacts`, no
+//! checkpoint, and no Python toolchain anywhere.
 
 // Clippy policy: the kernel/numeric code here deliberately uses
 // explicit index loops, operator-named helpers (`Mat::add`), and
@@ -37,9 +45,10 @@
 use slab::baselines::{Method, SparseGptConfig};
 use slab::coordinator::{CaptureEngine, CompressJob, Engine, Request, Server, ServerConfig};
 use slab::eval::{perplexity, zero_shot};
-use slab::experiments::{self, Lab};
+use slab::experiments::{self, Lab, SweepConfig};
 use slab::model::Params;
 use slab::report::Table;
+use slab::runtime::ModelCfg;
 use slab::slab::{SlabConfig, Structure};
 use slab::sparse::{PATTERN_2_4, PATTERN_4_8};
 use slab::util::cli::Args;
@@ -104,6 +113,90 @@ fn parse_method(args: &Args) -> anyhow::Result<Method> {
     })
 }
 
+/// Native (manifest-free) shapes of the three evaluation configs —
+/// mirrors `python/compile/model.py::CONFIGS` plus aot.py's
+/// `prompt_len = max_seq // 2`, so the artifact-free paths score the
+/// same checkpoints `slab train` writes (`Params::load` matches by
+/// config name and per-param shapes).
+fn native_model_cfg(name: &str) -> Option<ModelCfg> {
+    Some(match name {
+        "small" => ModelCfg::llama("small", 512, 64, 2, 4, 176, 64, 32),
+        "base" => ModelCfg::llama("base", 512, 128, 4, 4, 344, 96, 48),
+        "large" => ModelCfg::llama("large", 1024, 256, 6, 8, 688, 96, 48),
+        _ => return None,
+    })
+}
+
+/// Build the artifact-free sweep/eval configuration from CLI options
+/// (defaults: `SweepConfig::quick`). `--model` accepts the built-in
+/// `sweep` toy shape or `small|base|large`; anything else is an error
+/// rather than a silently substituted model.
+fn sweep_config(args: &Args) -> anyhow::Result<SweepConfig> {
+    let mut scfg = SweepConfig::quick(args.get_u64("seed", 42)?);
+    match args.get_str("model", "sweep").as_str() {
+        "sweep" => {}
+        name => {
+            scfg.model = native_model_cfg(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown model '{name}' (sweep | small | base | large)")
+            })?;
+        }
+    }
+    if let Some(r) = args.get("ratios") {
+        scfg.ratios = r
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<Result<Vec<f64>, _>>()
+            .map_err(|_| anyhow::anyhow!("--ratios: expected comma-separated floats"))?;
+    }
+    scfg.valid_rows = args.get_usize("rows", scfg.valid_rows)?;
+    scfg.calib_rows = args.get_usize("calib-rows", scfg.calib_rows)?;
+    scfg.task_items = args.get_usize("items", scfg.task_items)?;
+    scfg.threads = args.get_usize("threads", scfg.threads)?;
+    scfg.eval_batch = args.get_usize("batch", scfg.eval_batch)?;
+    scfg.iters = args.get_usize("iters", scfg.iters)?;
+    Ok(scfg)
+}
+
+/// Sweep-shaped params: a checkpoint if given, else deterministic init.
+fn sweep_params(args: &Args, scfg: &SweepConfig) -> anyhow::Result<Params> {
+    Ok(match args.get("ckpt") {
+        Some(p) => Params::load(&scfg.model, &PathBuf::from(p))?,
+        None => Params::init(&scfg.model, scfg.seed ^ 0x1417),
+    })
+}
+
+/// `slab sweep` / `slab --sweep`: the paper-style comparison matrix
+/// (SLaB vs the four baselines × ratios, perplexity + zero-shot),
+/// computed entirely on the native engine — no artifacts anywhere.
+fn run_sweep(args: &Args) -> anyhow::Result<()> {
+    let out_md = PathBuf::from(args.get_str("out", "runs/results.md"));
+    let scfg = sweep_config(args)?;
+    let params = sweep_params(args, &scfg)?;
+    let t = experiments::sweep(&scfg, &params)?;
+    t.print();
+    t.append_to(&out_md)?;
+    if let Some(p) = args.get("csv") {
+        t.save_csv(&PathBuf::from(p))?;
+        println!("wrote {p}");
+    }
+    println!("appended to {}", out_md.display());
+    Ok(())
+}
+
+/// `slab eval --engine native` / `slab --eval`: artifact-free
+/// single-model evaluation, optionally compressing first.
+fn run_native_eval(args: &Args) -> anyhow::Result<()> {
+    let scfg = sweep_config(args)?;
+    let params = sweep_params(args, &scfg)?;
+    let method = match args.get("method") {
+        Some(_) => Some(parse_method(args)?),
+        None => None,
+    };
+    let t = experiments::eval_native_table(&scfg, &params, method.as_ref())?;
+    t.print();
+    Ok(())
+}
+
 fn run(args: &Args) -> anyhow::Result<()> {
     let out_md = PathBuf::from(args.get_str("out", "runs/results.md"));
     match args.command.as_deref() {
@@ -163,6 +256,12 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 c.report.peak_bytes as f64 / (1 << 20) as f64,
                 out.display()
             );
+        }
+        Some("eval") if args.get_str("engine", "artifact") == "native" => {
+            run_native_eval(args)?;
+        }
+        Some("sweep") => {
+            run_sweep(args)?;
         }
         Some("eval") => {
             let lab = lab(args)?;
@@ -289,12 +388,18 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 stats.occupancy(serve_batch),
             );
         }
+        // `slab --sweep` / `slab --eval`: the artifact-free quickstart
+        // paths, reachable without remembering a subcommand.
+        None if args.has_flag("sweep") => run_sweep(args)?,
+        None if args.has_flag("eval") => run_native_eval(args)?,
         _ => {
             println!(
                 "slab — Sparse-Lowrank-Binary decomposition for efficient LLMs\n\n\
-                 commands: train | compress | eval | table1 | table2 | table3 | fig1 | fig3 | serve\n\
+                 commands: train | compress | eval | sweep | table1 | table2 | table3 | fig1 | fig3 | serve\n\
                  common options: --artifacts <dir> --runs <dir> --model <small|base|large> --items <n>\n\
-                 run `make artifacts` first; see README.md"
+                 artifact-free: `slab --sweep` (SLaB-vs-baselines table) and\n\
+                 `slab eval --engine native` need no artifacts at all;\n\
+                 everything else wants `make artifacts` first — see README.md"
             );
         }
     }

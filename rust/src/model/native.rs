@@ -393,7 +393,7 @@ impl SlabModel {
             let att = causal_attention(&q, &k, &v, bsz, t, nh, hd, Some(key_ok.as_slice()));
             let proj = blk.wo.apply(&att, pool);
             h.add_assign(&proj);
-            self.mlp_inplace(blk, &mut h);
+            self.mlp_inplace(blk, &mut h, pool);
         }
 
         let xf = rmsnorm(&h, &self.final_norm);
@@ -508,7 +508,7 @@ impl SlabModel {
             }
             let proj = blk.wo.apply(&att, pool);
             h.add_assign(&proj);
-            self.mlp_inplace(blk, &mut h);
+            self.mlp_inplace(blk, &mut h, pool);
         }
         let xf = rmsnorm(&h, &self.final_norm);
         matmul_bt(&xf, &self.lm_head)
@@ -569,15 +569,64 @@ impl SlabModel {
             }
             let proj = blk.wo.apply(&att, pool);
             h.add_assign(&proj);
-            self.mlp_inplace(blk, &mut h);
+            self.mlp_inplace(blk, &mut h, pool);
         }
         let xf = rmsnorm(&h, &self.final_norm);
         matmul_bt(&xf, &self.lm_head)
     }
 
+    /// Full-sequence causal logits for *scoring*: `tokens` is a flat
+    /// `(B, T)` row-major batch; returns `(B·T, vocab)` logits at every
+    /// position. Mirrors `model.py::forward` — the forward inside the
+    /// `eval_nll_{cfg}` artifact — operation for operation: **pure
+    /// causal** masking (no PAD-key masking; PAD only ever masks
+    /// *targets* in NLL), no KV cache, RoPE at positions `0..T`.
+    ///
+    /// `pool` selects the kernels' fan-out explicitly (`None` =
+    /// serial) instead of the model's own pool: the native eval
+    /// harness calls this from inside `ThreadPool::scoped_map`
+    /// workers, where nesting a fork-join on one pool could deadlock
+    /// (see [`ThreadPool::scoped`]). Row-wise the result is
+    /// bit-identical for any pool and any batch grouping — every
+    /// kernel chunks over *weight* rows and accumulates each output
+    /// element in a fixed order, and attention is per-sequence — the
+    /// invariance `eval::native`'s property tests pin.
+    pub fn forward_full(&self, tokens: &[i32], bsz: usize, pool: Option<&ThreadPool>) -> Mat {
+        assert!(bsz > 0 && tokens.len() % bsz == 0, "ragged eval batch");
+        let t = tokens.len() / bsz;
+        assert!(
+            t > 0 && t <= self.cfg.max_seq,
+            "eval length {t} vs max_seq {}",
+            self.cfg.max_seq
+        );
+        let (dim, nh) = (self.cfg.dim, self.cfg.n_heads);
+        let hd = dim / nh;
+
+        let mut h = self.embed(tokens);
+        let tables: Vec<Vec<(f32, f32)>> = (0..t).map(|pos| rope_table(hd, pos)).collect();
+        for blk in &self.layers {
+            let x = rmsnorm(&h, &blk.attn_norm);
+            let mut q = blk.wq.apply(&x, pool);
+            let mut k = blk.wk.apply(&x, pool);
+            let v = blk.wv.apply(&x, pool);
+            for r in 0..bsz * t {
+                rope_apply(q.row_mut(r), nh, hd, &tables[r % t]);
+                rope_apply(k.row_mut(r), nh, hd, &tables[r % t]);
+            }
+            let att = causal_attention(&q, &k, &v, bsz, t, nh, hd, None);
+            let proj = blk.wo.apply(&att, pool);
+            h.add_assign(&proj);
+            self.mlp_inplace(blk, &mut h, pool);
+        }
+        let xf = rmsnorm(&h, &self.final_norm);
+        match pool {
+            Some(p) => matmul_bt_par(&xf, &self.lm_head, p),
+            None => matmul_bt(&xf, &self.lm_head),
+        }
+    }
+
     /// Pre-norm SwiGLU MLP, residual-added into `h`.
-    fn mlp_inplace(&self, blk: &Block, h: &mut Mat) {
-        let pool = Some(&self.pool);
+    fn mlp_inplace(&self, blk: &Block, h: &mut Mat, pool: Option<&ThreadPool>) {
         let x = rmsnorm(h, &blk.mlp_norm);
         let gate = blk.w_gate.apply(&x, pool);
         let up = blk.w_up.apply(&x, pool);
@@ -1185,6 +1234,62 @@ mod tests {
         expect_h.add_assign(&matmul_bt(&acts.att_out, &mats[3]));
         expect_h.add_assign(&matmul_bt(&acts.mlp_inner, &mats[6]));
         assert!(acts.h_out.allclose(&expect_h, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn forward_full_matches_prefill_and_is_pool_invariant() {
+        // The scoring forward shares every op with prefill; on a
+        // pad-free batch (key masking degenerates to pure causality)
+        // its last-position rows must land on prefill's logits bit for
+        // bit, for both engines (dense and packed) and any pool.
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 213);
+        let (packed, _) = compress_native(&params, 214);
+        let pool = ThreadPool::new(3);
+        let engines = [
+            SlabModel::from_dense(&params, 1),
+            SlabModel::from_packed(&params, &packed, 1),
+        ];
+        for model in engines {
+            let (bsz, t) = (2usize, cfg.max_seq);
+            let tokens: Vec<i32> = (0..bsz * t).map(|i| 5 + (i as i32 % 20)).collect();
+            let (plogits, _) = model.prefill(&tokens, bsz);
+            let serial = model.forward_full(&tokens, bsz, None);
+            assert_eq!(serial.shape(), (bsz * t, cfg.vocab));
+            for b in 0..bsz {
+                assert_eq!(serial.row(b * t + t - 1), plogits.row(b), "batch row {b}");
+            }
+            let par = model.forward_full(&tokens, bsz, Some(&pool));
+            assert_eq!(par.data, serial.data, "pool must be invisible");
+        }
+    }
+
+    #[test]
+    fn forward_full_rows_are_independent_of_batching() {
+        // Row independence is what makes the native eval harness's
+        // parallel-over-rows reduction bit-identical to serial: each
+        // sequence's logits must not depend on its batch neighbours or
+        // its slot in the batch.
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 215);
+        let model = SlabModel::from_dense(&params, 1);
+        let t = cfg.max_seq;
+        let ra: Vec<i32> = (0..t).map(|i| 5 + (i as i32 % 11)).collect();
+        let rb: Vec<i32> = (0..t).map(|i| 7 + (i as i32 % 13)).collect();
+        let mut ab = ra.clone();
+        ab.extend_from_slice(&rb);
+        let mut ba = rb.clone();
+        ba.extend_from_slice(&ra);
+        let la = model.forward_full(&ra, 1, None);
+        let lb = model.forward_full(&rb, 1, None);
+        let lab = model.forward_full(&ab, 2, None);
+        let lba = model.forward_full(&ba, 2, None);
+        for pos in 0..t {
+            assert_eq!(lab.row(pos), la.row(pos), "a@pos{pos} batched first");
+            assert_eq!(lab.row(t + pos), lb.row(pos), "b@pos{pos} batched second");
+            assert_eq!(lba.row(pos), lb.row(pos), "b@pos{pos} batched first");
+            assert_eq!(lba.row(t + pos), la.row(pos), "a@pos{pos} batched second");
+        }
     }
 
     #[test]

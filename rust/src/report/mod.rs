@@ -70,6 +70,40 @@ impl Table {
         println!("{}", self.render());
     }
 
+    /// Render as CSV (header + rows; cells containing commas, quotes,
+    /// or newlines are quoted RFC-4180 style) — the machine-readable
+    /// twin of [`render`](Table::render) for downstream
+    /// plotting/diffing; the sweep CLI writes it next to the markdown.
+    pub fn render_csv(&self) -> String {
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut out = String::new();
+        let line = |cells: &[String]| {
+            cells.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+        };
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV rendering, overwriting — one file per run, unlike
+    /// the append-only markdown log.
+    pub fn save_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.render_csv())
+    }
+
     /// Append to a results file (EXPERIMENTS.md workflow).
     pub fn append_to(&self, path: &std::path::Path) -> std::io::Result<()> {
         use std::io::Write;
@@ -100,6 +134,21 @@ mod tests {
         assert!(r.contains("66.2"));
         // Markdown separator present.
         assert!(r.lines().any(|l| l.starts_with("|--") || l.starts_with("|-")));
+    }
+
+    #[test]
+    fn csv_escapes_and_roundtrips_to_disk() {
+        let mut t = Table::new("csv", &["Method", "Sparsity(CR)", "ppl"]);
+        t.push_row(vec!["SLaB".into(), "US (50%)".into(), "5.49".into()]);
+        t.push_row(vec!["a,b".into(), "q\"q".into(), "1".into()]);
+        let csv = t.render_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "Method,Sparsity(CR),ppl");
+        assert_eq!(lines[1], "SLaB,US (50%),5.49");
+        assert_eq!(lines[2], "\"a,b\",\"q\"\"q\",1");
+        let path = std::env::temp_dir().join("slab-tests/report.csv");
+        t.save_csv(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), csv);
     }
 
     #[test]

@@ -1,0 +1,71 @@
+//! Shared fixtures for the integration suites (`integration.rs`,
+//! `eval_integration.rs`): the artifact-gated runtime guard and the
+//! tiny-model / native-compression builders that every suite used to
+//! duplicate inline. A `tests/*.rs` binary opts in with `mod common;`.
+
+// Each test binary uses a subset of these helpers; the unused rest
+// must not trip `-D warnings`.
+#![allow(dead_code)]
+
+use slab::model::Params;
+use slab::runtime::{ModelCfg, Runtime};
+use slab::slab::{decompose, ActStats, SlabConfig, SlabLayer};
+use slab::tensor::Mat;
+use slab::util::rng::Pcg64;
+use std::path::Path;
+use std::sync::{Mutex, MutexGuard};
+
+/// xla_extension 0.5.1 is unreliable with concurrent PJRT CPU clients
+/// in one process; serialize test bodies so clients never coexist.
+/// (One guard per test *binary* suffices — cargo runs binaries one at
+/// a time, and the hazard is in-process only.)
+static PJRT_GUARD: Mutex<()> = Mutex::new(());
+
+/// The artifact-gated runtime: `None` (with a stderr note) when
+/// `artifacts/` is absent, so every suite works on a fresh clone.
+pub fn runtime() -> Option<(MutexGuard<'static, ()>, Runtime)> {
+    let guard = PJRT_GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping integration test: artifacts/ missing (run `make artifacts`)");
+        return None;
+    }
+    Some((guard, Runtime::new(dir).expect("runtime")))
+}
+
+/// A 2-layer Llama-shaped config at testbed scale
+/// (`ModelCfg::llama` mirrors model.py's shape contract), so the
+/// native engine is exercised on every fresh clone — the manifest
+/// only exists after `make artifacts`.
+pub fn native_test_cfg() -> ModelCfg {
+    ModelCfg::llama("native-e2e", 48, 16, 2, 4, 24, 20, 6)
+}
+
+/// A task-suite-capable tiny config: `max_seq` 48 fits every
+/// prompt ⧺ option row the seven suites generate, and the vocab
+/// covers `Grammar::standard()` (≤ 512 by its own test).
+pub fn task_test_cfg() -> ModelCfg {
+    ModelCfg::llama("native-eval", 512, 16, 1, 4, 32, 48, 6)
+}
+
+/// Decompose every pruned linear natively (no runtime, no artifacts):
+/// (packed layers, params with the dense reconstruction Ŵ swapped in).
+pub fn compress_native(params: &Params, seed: u64) -> (Vec<(String, SlabLayer)>, Params) {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let scfg = SlabConfig {
+        iters: 4,
+        svd_iters: 8,
+        ..Default::default()
+    };
+    let mut packed = Vec::new();
+    let mut swapped = params.clone();
+    for (name, (_, din)) in params.cfg.pruned.clone() {
+        let w = params.mat(&name);
+        let stats = ActStats::from_activations(&Mat::randn(64, din, 1.0, &mut rng));
+        let d = decompose(&w, &stats, &scfg).expect("decompose");
+        let layer = SlabLayer::from_decomposition(&d);
+        swapped.set_mat(&name, &layer.reconstruct());
+        packed.push((name, layer));
+    }
+    (packed, swapped)
+}

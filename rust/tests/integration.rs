@@ -27,28 +27,17 @@
     clippy::new_without_default
 )]
 
+mod common;
+
+use common::{compress_native, native_test_cfg, runtime};
 use slab::coordinator::{Backend, Request, Server, ServerConfig};
 use slab::data::{build_corpus, Grammar};
 use slab::model::{Params, SlabModel};
-use slab::runtime::{lit_f32, lit_i32, lit_scalar_i32, to_vec_f32, ModelCfg, Runtime};
+use slab::runtime::{lit_f32, lit_i32, lit_scalar_i32, to_vec_f32};
 use slab::slab::{decompose, ActStats, SlabConfig, SlabLayer};
 use slab::tensor::Mat;
 use slab::util::rng::Pcg64;
 use std::path::Path;
-
-/// xla_extension 0.5.1 is unreliable with concurrent PJRT CPU clients
-/// in one process; serialize test bodies so clients never coexist.
-static PJRT_GUARD: std::sync::Mutex<()> = std::sync::Mutex::new(());
-
-fn runtime() -> Option<(std::sync::MutexGuard<'static, ()>, Runtime)> {
-    let guard = PJRT_GUARD.lock().unwrap_or_else(|p| p.into_inner());
-    let dir = Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping integration test: artifacts/ missing (run `make artifacts`)");
-        return None;
-    }
-    Some((guard, Runtime::new(dir).expect("runtime")))
-}
 
 #[test]
 fn manifest_covers_all_configs_and_kernels() {
@@ -393,37 +382,9 @@ fn artifact_capture_parallel_decompose_is_bit_identical_to_serial() {
 
 // ---------------------------------------------------------------------------
 // Native packed-serving engine — needs NO artifacts, runs everywhere.
+// (Fixtures — the tiny llama config and the native decomposition —
+// live in tests/common/mod.rs, shared with eval_integration.rs.)
 // ---------------------------------------------------------------------------
-
-/// A 2-layer Llama-shaped config at testbed scale
-/// (`ModelCfg::llama` mirrors model.py's shape contract), so the
-/// native engine is exercised on every fresh clone — the manifest
-/// only exists after `make artifacts`.
-fn native_test_cfg() -> ModelCfg {
-    ModelCfg::llama("native-e2e", 48, 16, 2, 4, 24, 20, 6)
-}
-
-/// Decompose every pruned linear natively (no runtime, no artifacts):
-/// (packed layers, params with the dense reconstruction Ŵ swapped in).
-fn compress_native(params: &Params, seed: u64) -> (Vec<(String, SlabLayer)>, Params) {
-    let mut rng = Pcg64::seed_from_u64(seed);
-    let scfg = SlabConfig {
-        iters: 4,
-        svd_iters: 8,
-        ..Default::default()
-    };
-    let mut packed = Vec::new();
-    let mut swapped = params.clone();
-    for (name, (_, din)) in params.cfg.pruned.clone() {
-        let w = params.mat(&name);
-        let stats = ActStats::from_activations(&Mat::randn(64, din, 1.0, &mut rng));
-        let d = decompose(&w, &stats, &scfg).expect("decompose");
-        let layer = SlabLayer::from_decomposition(&d);
-        swapped.set_mat(&name, &layer.reconstruct());
-        packed.push((name, layer));
-    }
-    (packed, swapped)
-}
 
 #[test]
 fn native_packed_serving_matches_dense_reconstruction_end_to_end() {
