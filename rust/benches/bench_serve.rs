@@ -7,6 +7,12 @@
 //! (eight weight passes per tick) — the CPU analogue of the
 //! weight-streaming amortization argument in DESIGN.md §6a.
 //!
+//! Also measures the interactive serving surface (DESIGN.md §12):
+//! client-side time-to-first-token through the streaming session API,
+//! cancellation-under-load drain time (plus the TTFT of a fresh
+//! request over the freed KV slots), and HTTP-loopback throughput
+//! through `coordinator::http` over real sockets.
+//!
 //! Besides the human-readable table, writes a machine-readable summary
 //! to `BENCH_serve.json` (CI's bench-smoke job uploads it as a
 //! workflow artifact), so throughput regressions are diffable across
@@ -38,10 +44,15 @@
 mod bench_common;
 
 use bench_common::compress_native;
+use slab::coordinator::http::client;
+use slab::coordinator::{
+    Backend, Event, HttpServer, Request, SchedulerConfig, Server, ServerConfig,
+};
 use slab::model::{DecodeSlot, KvCachePool, Params, SlabModel};
 use slab::runtime::ModelCfg;
 use slab::util::bench::Bench;
 use slab::util::json::Json;
+use std::time::{Duration, Instant};
 
 /// A deterministic valid prompt for session `i`.
 fn bench_prompt(i: usize, len: usize) -> Vec<i32> {
@@ -111,6 +122,136 @@ fn main() {
     let speedup = tps_for(8) / serial_tps.max(1e-9);
     println!("batched x8 vs serial x8: {speedup:.2}x tokens/s");
 
+    let fast = std::env::var("SLAB_BENCH_FAST").as_deref() == Ok("1");
+
+    // --- streaming time-to-first-token (session API) ------------------
+    // Client-side TTFT: submit → first Token event, over the full
+    // Server + Scheduler stack (prefill-then-join admission included).
+    let server = Server::start_with(
+        Backend::NativeBatched(Box::new(SlabModel::from_packed(&params, &packed, 0))),
+        ServerConfig::default(),
+    );
+    let ttft_reqs = if fast { 4 } else { 16 };
+    let mut ttft_samples: Vec<f64> = Vec::new();
+    for i in 0..ttft_reqs {
+        let t0 = Instant::now();
+        let session = server.submit(Request {
+            prompt: bench_prompt(i, cfg.prompt_len),
+            max_new: 8,
+            deadline: None,
+        });
+        let mut first = None;
+        while let Some(ev) = session.recv() {
+            match ev {
+                Event::Token(_) => {
+                    if first.is_none() {
+                        first = Some(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+                _ => break, // terminal
+            }
+        }
+        if let Some(ms) = first {
+            ttft_samples.push(ms);
+        }
+    }
+    server.shutdown().expect("ttft server stats");
+    let ttft_mean = ttft_samples.iter().sum::<f64>() / ttft_samples.len().max(1) as f64;
+    println!(
+        "streaming ttft: {ttft_mean:.2} ms mean over {} requests",
+        ttft_samples.len()
+    );
+
+    // --- cancellation under load --------------------------------------
+    // Fill the batch with long-budget sessions, cancel them all
+    // mid-decode, and measure (a) how fast the scheduler drains them
+    // and (b) the TTFT of a fresh request over the freed slots.
+    let server = Server::start_with(
+        Backend::NativeBatched(Box::new(SlabModel::from_packed(&params, &packed, 0))),
+        ServerConfig {
+            sched: SchedulerConfig {
+                max_batch: 4,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let n_long = 8usize;
+    let long_budget = cfg.max_seq - cfg.prompt_len;
+    let sessions: Vec<_> = (0..n_long)
+        .map(|i| {
+            server.submit(Request {
+                prompt: bench_prompt(i, cfg.prompt_len),
+                max_new: long_budget,
+                deadline: None,
+            })
+        })
+        .collect();
+    // Let the batch fill and decode a little before the purge.
+    std::thread::sleep(Duration::from_millis(if fast { 5 } else { 20 }));
+    let t_cancel = Instant::now();
+    for s in &sessions {
+        s.cancel();
+    }
+    for s in sessions {
+        let _ = s.collect();
+    }
+    let cancel_drain_ms = t_cancel.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    let session = server.submit(Request {
+        prompt: bench_prompt(0, cfg.prompt_len),
+        max_new: 4,
+        deadline: None,
+    });
+    let mut post_cancel_ttft_ms = 0.0;
+    while let Some(ev) = session.recv() {
+        match ev {
+            Event::Token(_) => {
+                if post_cancel_ttft_ms == 0.0 {
+                    post_cancel_ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
+                }
+            }
+            _ => break,
+        }
+    }
+    let cancel_stats = server.shutdown().expect("cancel server stats");
+    println!(
+        "cancel-under-load: drained {n_long} long sessions in {cancel_drain_ms:.2} ms \
+         ({} cancelled), post-cancel ttft {post_cancel_ttft_ms:.2} ms",
+        cancel_stats.cancelled
+    );
+
+    // --- HTTP loopback throughput -------------------------------------
+    // The whole wire path: JSON parse → session → stream → JSON reply,
+    // sequential blocking requests over real sockets.
+    let http = HttpServer::bind(
+        "127.0.0.1:0",
+        Server::start_with(
+            Backend::NativeBatched(Box::new(SlabModel::from_packed(&params, &packed, 0))),
+            ServerConfig::default(),
+        ),
+    )
+    .expect("bind loopback");
+    let addr = http.addr();
+    let http_reqs = if fast { 4 } else { 16 };
+    let t_http = Instant::now();
+    let mut http_tokens = 0usize;
+    for i in 0..http_reqs {
+        let body = format!(
+            "{{\"prompt\": {:?}, \"max_new\": 16}}",
+            bench_prompt(i, cfg.prompt_len)
+        );
+        let reply = client::post(addr, "/v1/generate", &body).expect("http generate");
+        let (_, r) = client::parse_generate_reply(&reply.body).expect("parse http reply");
+        http_tokens += r.tokens.len();
+    }
+    let http_wall = t_http.elapsed().as_secs_f64();
+    let http_tps = http_tokens as f64 / http_wall.max(1e-9);
+    http.shutdown().expect("http server stats");
+    println!(
+        "http loopback: {http_reqs} sequential requests, {http_tokens} tokens, {http_tps:.1} tok/s"
+    );
+
     let summary = Json::obj(vec![
         ("bench", Json::str("serve_batched_decode")),
         (
@@ -133,6 +274,24 @@ fn main() {
         ),
         ("serial_8_sessions_tokens_per_sec", Json::num(serial_tps)),
         ("speedup_batch8_vs_serial8", Json::num(speedup)),
+        ("ttft_ms_mean", Json::num(ttft_mean)),
+        (
+            "cancel_under_load",
+            Json::obj(vec![
+                ("long_sessions", Json::from_usize(n_long)),
+                ("drain_ms", Json::num(cancel_drain_ms)),
+                ("post_cancel_ttft_ms", Json::num(post_cancel_ttft_ms)),
+                ("cancelled", Json::from_usize(cancel_stats.cancelled)),
+            ]),
+        ),
+        (
+            "http_loopback",
+            Json::obj(vec![
+                ("requests", Json::from_usize(http_reqs)),
+                ("generated_tokens", Json::from_usize(http_tokens)),
+                ("tokens_per_sec", Json::num(http_tps)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serve.json", summary.to_pretty()).expect("write BENCH_serve.json");
     println!("wrote BENCH_serve.json");

@@ -37,7 +37,7 @@
 
 use slab::baselines::Method;
 use slab::coordinator::{
-    compress_model, Backend, Engine, Request, SchedulerConfig, Server, ServerConfig,
+    compress_model, Backend, Engine, Event, Request, SchedulerConfig, Server, ServerConfig,
 };
 use slab::experiments::Lab;
 use slab::model::SlabModel;
@@ -53,35 +53,37 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
 }
 
 fn run_server(server: Server, prompts: &[Vec<i32>], label: &str) -> anyhow::Result<()> {
-    // Client threads hammer the queue concurrently.
+    // Clients submit concurrently; each gets a streaming Session and
+    // drains it blocking-style (`collect()` — the historical
+    // whole-completion semantics, token-identical to streaming).
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = prompts
+    let sessions: Vec<_> = prompts
         .iter()
         .map(|p| {
             server.submit(Request {
                 prompt: p.clone(),
                 max_new: 16,
+                deadline: None,
             })
         })
         .collect();
     let mut lat: Vec<f64> = Vec::new();
-    let mut queue: Vec<f64> = Vec::new();
     let mut toks = 0usize;
-    for rx in rxs {
-        let r = rx.recv()?;
+    for session in sessions {
+        let r = session.collect();
         lat.push(r.latency_ms);
-        queue.push(r.queue_ms);
         toks += r.tokens.len();
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.shutdown().map_err(|e| anyhow::anyhow!("{e}"))?;
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     println!(
-        "[{label}] {} req / {} batches (occ {:.2}) — {:.1} gen-tok/s, latency p50 {:.0} ms p95 {:.0} ms, {} tokens in {:.1}s",
+        "[{label}] {} req / {} batches (occ {:.2}) — {:.1} gen-tok/s, ttft {:.1} ms, latency p50 {:.0} ms p95 {:.0} ms, {} tokens in {:.1}s",
         stats.requests,
         stats.batches,
         stats.occupancy(4),
         stats.tokens_per_sec(),
+        stats.mean_ttft_ms(),
         percentile(&lat, 0.5),
         percentile(&lat, 0.95),
         toks,
@@ -181,5 +183,46 @@ fn main() -> anyhow::Result<()> {
         &prompts,
         "slab-native-batched",
     )?;
+    // 5) The streaming session API on the same engine: consume one
+    //    request's event stream token-by-token as the scheduler emits
+    //    it, then cancel a second session mid-stream (its KV slot
+    //    frees immediately). `slab serve --http` exposes exactly this
+    //    over a socket.
+    let streaming = SlabModel::from_packed(&dense, &slab_layers, 0);
+    let server = Server::start_with(
+        Backend::NativeBatched(Box::new(streaming)),
+        ServerConfig::default(),
+    );
+    let session = server.submit(Request {
+        prompt: prompts[0].clone(),
+        max_new: 16,
+        deadline: None,
+    });
+    print!("[stream] tokens:");
+    let mut streamed = 0usize;
+    while let Some(ev) = session.recv() {
+        match ev {
+            Event::Token(t) => {
+                print!(" {t}");
+                streamed += 1;
+            }
+            Event::Done(s) => println!(" — done ({streamed} tokens, ttft {:.2} ms)", s.ttft_ms),
+            Event::Evicted(s) => println!(" — evicted after {} tokens", s.tokens),
+            Event::Rejected => println!(" — rejected (queue full)"),
+        }
+    }
+    let long = server.submit(Request {
+        prompt: prompts[1].clone(),
+        max_new: 16,
+        deadline: None,
+    });
+    long.cancel();
+    let r = long.collect();
+    println!(
+        "[stream] cancelled session kept {} token(s) (cancelled={})",
+        r.tokens.len(),
+        r.cancelled
+    );
+    server.shutdown().map_err(|e| anyhow::anyhow!("{e}"))?;
     Ok(())
 }

@@ -1,0 +1,894 @@
+//! Dependency-free HTTP/1.1 front-end over the streaming session API
+//! (`slab serve --http <addr>`): pure `std::net`, no async runtime,
+//! no TLS, no external crates — a thread-per-connection JSON server
+//! sized for this testbed and its benches (DESIGN.md §12).
+//!
+//! Wire surface:
+//!
+//! * `POST /v1/generate` — body
+//!   `{"prompt": [ints], "max_new": n, "stream": bool, "deadline_ms": ms}`
+//!   (`deadline_ms` of `0` or omitted = no per-request deadline, the
+//!   same convention as `--deadline-ms` and
+//!   [`SchedulerConfig::deadline`](super::serve::SchedulerConfig)).
+//!   Non-streaming: one JSON object with the whole completion
+//!   (`Session::collect` semantics). Streaming (`"stream": true`):
+//!   SSE-style chunked transfer — one `data: {...}\n\n` frame per
+//!   [`Event`], starting with `{"id": n}` so the client can cancel.
+//! * `DELETE /v1/sessions/{id}` — cancel a live session mid-stream;
+//!   its KV slot frees immediately and the stream terminates with
+//!   `{"done": {..., "cancelled": true}}`.
+//! * `GET /healthz` — liveness probe.
+//! * `GET /metrics` — the live [`ServeStats`] snapshot rendered
+//!   through [`report::Table`](crate::report::Table) (text/plain).
+//!
+//! A client that disconnects mid-stream is treated as a cancellation
+//! (the router stops decoding for it); a malformed request gets a
+//! `400` and never reaches the engine. The [`client`] submodule holds
+//! the minimal blocking loopback client the benches and integration
+//! tests drive this server with.
+
+use super::serve::{CancelHandle, Event, Request, Server, SessionStats};
+use crate::runtime::client::RuntimeError;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Read/write guards on connection sockets so a stalled client —
+/// one that stops sending *or* stops reading its stream — cannot pin
+/// a handler thread (a timed-out write cancels the session like any
+/// other hang-up).
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+/// Request-body cap — far above any prompt this testbed serves.
+const MAX_BODY: usize = 1 << 20;
+/// Per-line cap for the request line and each header, and a header
+/// count cap: a client streaming newline-free bytes must hit a bound,
+/// not grow a String until the read timeout.
+const MAX_LINE: usize = 8 * 1024;
+const MAX_HEADERS: usize = 64;
+
+/// State shared by the accept loop and every connection handler.
+struct HttpState {
+    /// The serving router. `None` after shutdown — handlers answer
+    /// `503` instead of panicking on a vanished server.
+    server: Mutex<Option<Server>>,
+    /// Live sessions by id — the `DELETE /v1/sessions/{id}` registry.
+    sessions: Mutex<HashMap<u64, CancelHandle>>,
+    running: AtomicBool,
+    started: Instant,
+}
+
+impl HttpState {
+    fn lock_sessions(&self) -> std::sync::MutexGuard<'_, HashMap<u64, CancelHandle>> {
+        self.sessions.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn lock_server(&self) -> std::sync::MutexGuard<'_, Option<Server>> {
+        self.server.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// The HTTP front-end handle: owns the accept loop and the inner
+/// [`Server`]. Bind, then either [`serve_forever`](HttpServer::serve_forever)
+/// (the CLI) or drive it from tests/benches and
+/// [`shutdown`](HttpServer::shutdown).
+pub struct HttpServer {
+    addr: SocketAddr,
+    state: Arc<HttpState>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:8080`, or port `0` for an
+    /// ephemeral port — see [`addr`](HttpServer::addr)) and start the
+    /// accept loop over `server`. Any [`Backend`](super::serve::Backend)
+    /// works — the front-end only speaks the session API.
+    pub fn bind(addr: &str, server: Server) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let state = Arc::new(HttpState {
+            server: Mutex::new(Some(server)),
+            sessions: Mutex::new(HashMap::new()),
+            running: AtomicBool::new(true),
+            started: Instant::now(),
+        });
+        let accept_state = state.clone();
+        let accept = std::thread::Builder::new()
+            .name("slab-http".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if !accept_state.running.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let conn_state = accept_state.clone();
+                    // Connection threads are detached: they end with
+                    // their connection, and shutdown() cancels any
+                    // session they might still be streaming.
+                    let _ = std::thread::Builder::new()
+                        .name("slab-http-conn".into())
+                        .spawn(move || handle_connection(stream, &conn_state));
+                }
+            })
+            .expect("spawn http accept loop");
+        Ok(HttpServer {
+            addr: local,
+            state,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block the calling thread on the accept loop — the CLI's
+    /// serve-until-killed mode.
+    pub fn serve_forever(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, cancel in-flight sessions, and shut the inner
+    /// [`Server`] down, returning its aggregate stats.
+    pub fn shutdown(mut self) -> Result<super::serve::ServeStats, RuntimeError> {
+        self.state.running.store(false, Ordering::Release);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Take the server *before* the cancel sweep: handlers that
+        // race this point see `None` (503) and cannot submit past the
+        // sweep; a handler that already submitted either lands in the
+        // registry before the sweep (cancelled here) or observes
+        // `running == false` right after registering and cancels
+        // itself (see `handle_generate`).
+        let server = self.state.lock_server().take();
+        for (_, cancel) in self.state.lock_sessions().drain() {
+            cancel.cancel();
+        }
+        match server {
+            Some(s) => s.shutdown(),
+            None => Err(RuntimeError::Router("http server already shut down".into())),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: String,
+}
+
+/// One connection, one request, one response (`Connection: close`) —
+/// the simplest correct HTTP/1.1 subset; curl, the benches, and the
+/// integration tests all speak it.
+fn handle_connection(mut stream: TcpStream, state: &Arc<HttpState>) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let Ok(reader_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(reader_half);
+    match read_request(&mut reader) {
+        Ok(Some(req)) => route(&req, &mut stream, state),
+        Ok(None) => {} // client connected and closed (shutdown poke)
+        Err(msg) => {
+            let body = Json::obj(vec![("error", Json::str(msg))]).to_string();
+            let _ = write_response(&mut stream, 400, "Bad Request", "application/json", &body);
+        }
+    }
+}
+
+/// One request/header line, bounded at [`MAX_LINE`] bytes (a line
+/// that long without a newline is an attack or a bug, never a valid
+/// request of ours). `Ok(None)` on a clean EOF before any byte.
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    what: &str,
+) -> Result<Option<String>, String> {
+    let mut line = String::new();
+    let mut limited = reader.by_ref().take(MAX_LINE as u64);
+    match limited.read_line(&mut line) {
+        Ok(0) => Ok(None),
+        Ok(_) => {
+            if !line.ends_with('\n') && line.len() >= MAX_LINE {
+                return Err(format!("{what} exceeds {MAX_LINE} bytes"));
+            }
+            Ok(Some(line))
+        }
+        Err(e) => Err(format!("read {what}: {e}")),
+    }
+}
+
+/// Parse request line, headers, and a `Content-Length` body.
+/// `Ok(None)` when the client closed without sending anything.
+fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<HttpRequest>, String> {
+    let Some(line) = read_line_bounded(reader, "request line")? else {
+        return Ok(None);
+    };
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || !path.starts_with('/') {
+        return Err("malformed request line".into());
+    }
+    let mut content_length = 0usize;
+    for n_headers in 0.. {
+        if n_headers >= MAX_HEADERS {
+            return Err(format!("more than {MAX_HEADERS} headers"));
+        }
+        let Some(h) = read_line_bounded(reader, "header")? else {
+            return Err("unexpected eof in headers".into());
+        };
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| "bad content-length".to_string())?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(format!("body {content_length} exceeds cap {MAX_BODY}"));
+    }
+    let mut body = vec![0u8; content_length];
+    reader
+        .read_exact(&mut body)
+        .map_err(|e| format!("read body: {e}"))?;
+    let body = String::from_utf8(body).map_err(|_| "body is not utf-8".to_string())?;
+    Ok(Some(HttpRequest { method, path, body }))
+}
+
+fn route(req: &HttpRequest, stream: &mut TcpStream, state: &Arc<HttpState>) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let body = Json::obj(vec![
+                ("status", Json::str("ok")),
+                (
+                    "uptime_secs",
+                    Json::num(state.started.elapsed().as_secs_f64()),
+                ),
+            ])
+            .to_string();
+            let _ = write_response(stream, 200, "OK", "application/json", &body);
+        }
+        ("GET", "/metrics") => {
+            let stats = state.lock_server().as_ref().map(|s| s.stats());
+            match stats {
+                Some(stats) => {
+                    let body = stats.table("serve metrics").render();
+                    let _ = write_response(stream, 200, "OK", "text/plain; charset=utf-8", &body);
+                }
+                None => {
+                    let _ = write_response(stream, 503, "Service Unavailable", "text/plain", "shutting down");
+                }
+            }
+        }
+        ("POST", "/v1/generate") => handle_generate(req, stream, state),
+        ("DELETE", path) if path.starts_with("/v1/sessions/") => {
+            handle_cancel(path, stream, state);
+        }
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/generate") => {
+            let body = Json::obj(vec![("error", Json::str("method not allowed"))]).to_string();
+            let _ = write_response(stream, 405, "Method Not Allowed", "application/json", &body);
+        }
+        _ => {
+            let body = Json::obj(vec![("error", Json::str("not found"))]).to_string();
+            let _ = write_response(stream, 404, "Not Found", "application/json", &body);
+        }
+    }
+}
+
+/// Parsed `POST /v1/generate` body.
+struct GenerateBody {
+    req: Request,
+    stream: bool,
+}
+
+fn parse_generate(body: &str) -> Result<GenerateBody, String> {
+    let v = Json::parse(body).map_err(|e| format!("bad json: {e}"))?;
+    let prompt_json = v.get("prompt");
+    let arr = prompt_json
+        .as_arr()
+        .ok_or_else(|| "missing or non-array 'prompt'".to_string())?;
+    let mut prompt = Vec::with_capacity(arr.len());
+    for item in arr {
+        let tok = item
+            .as_i64()
+            .and_then(|t| i32::try_from(t).ok())
+            .ok_or_else(|| "prompt entries must be i32 integers".to_string())?;
+        prompt.push(tok);
+    }
+    let max_new = match v.get("max_new") {
+        Json::Null => 16,
+        n => n
+            .as_usize()
+            .ok_or_else(|| "'max_new' must be a non-negative integer".to_string())?,
+    };
+    let stream = match v.get("stream") {
+        Json::Null => false,
+        b => b
+            .as_bool()
+            .ok_or_else(|| "'stream' must be a boolean".to_string())?,
+    };
+    let deadline = match v.get("deadline_ms") {
+        Json::Null => None,
+        n => {
+            let ms = n
+                .as_f64()
+                .filter(|ms| *ms >= 0.0)
+                .ok_or_else(|| "'deadline_ms' must be a non-negative number".to_string())?;
+            if ms == 0.0 {
+                // Same convention as `--deadline-ms 0` and
+                // `SchedulerConfig::deadline`: zero disables the
+                // deadline (the expire-immediately form exists only
+                // on the in-process `Request::deadline` API).
+                None
+            } else {
+                // try_from: a finite-but-huge value must be a 400,
+                // not a panic in the connection handler.
+                let d = Duration::try_from_secs_f64(ms / 1e3)
+                    .map_err(|_| "'deadline_ms' out of range".to_string())?;
+                Some(d)
+            }
+        }
+    };
+    Ok(GenerateBody {
+        req: Request {
+            prompt,
+            max_new,
+            deadline,
+        },
+        stream,
+    })
+}
+
+fn handle_generate(req: &HttpRequest, stream: &mut TcpStream, state: &Arc<HttpState>) {
+    let parsed = match parse_generate(&req.body) {
+        Ok(p) => p,
+        Err(msg) => {
+            let body = Json::obj(vec![("error", Json::str(msg))]).to_string();
+            let _ = write_response(stream, 400, "Bad Request", "application/json", &body);
+            return;
+        }
+    };
+    // Submit while holding the server lock only for the enqueue
+    // itself; the stream is consumed lock-free.
+    let session = match state.lock_server().as_ref() {
+        Some(server) => server.submit(parsed.req),
+        None => {
+            let _ = write_response(stream, 503, "Service Unavailable", "text/plain", "shutting down");
+            return;
+        }
+    };
+    let id = session.id();
+    state.lock_sessions().insert(id, session.cancel_handle());
+    // Shutdown race: if the cancel sweep ran between our submit and
+    // this registration, the registry lock we just went through makes
+    // the `running` store visible — self-cancel so no session can
+    // outlive shutdown uncancelled.
+    if !state.running.load(Ordering::Acquire) {
+        session.cancel();
+    }
+    if parsed.stream {
+        stream_events(stream, id, &session);
+    } else {
+        let r = session.collect();
+        let body = Json::obj(vec![
+            ("id", Json::from_usize(id as usize)),
+            ("tokens", Json::arr(r.tokens.iter().map(|&t| Json::num(t)))),
+            ("queue_ms", Json::num(r.queue_ms)),
+            ("latency_ms", Json::num(r.latency_ms)),
+            ("ttft_ms", Json::num(r.ttft_ms)),
+            ("rejected", Json::Bool(r.rejected)),
+            ("evicted", Json::Bool(r.evicted)),
+            ("cancelled", Json::Bool(r.cancelled)),
+            ("incomplete", Json::Bool(r.incomplete)),
+        ])
+        .to_string();
+        if r.rejected {
+            let _ = write_response(stream, 429, "Too Many Requests", "application/json", &body);
+        } else if r.incomplete {
+            // The router died mid-session; the tokens are truncated.
+            let _ =
+                write_response(stream, 500, "Internal Server Error", "application/json", &body);
+        } else {
+            let _ = write_response(stream, 200, "OK", "application/json", &body);
+        }
+    }
+    state.lock_sessions().remove(&id);
+}
+
+/// SSE-style chunked token streaming: one `data: {...}\n\n` frame per
+/// event, opening with `{"id": n}` so the client can `DELETE` the
+/// session mid-stream. A client hang-up cancels the session — the
+/// router must not keep decoding for a socket nobody reads.
+fn stream_events(stream: &mut TcpStream, id: u64, session: &super::serve::Session) {
+    let header = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nTransfer-Encoding: chunked\r\nCache-Control: no-store\r\nConnection: close\r\n\r\n";
+    if stream.write_all(header.as_bytes()).is_err() {
+        session.cancel();
+        return;
+    }
+    let opening = Json::obj(vec![("id", Json::from_usize(id as usize))]);
+    if write_frame(stream, &opening).is_err() {
+        session.cancel();
+        return;
+    }
+    let mut saw_terminal = false;
+    while let Some(ev) = session.recv() {
+        let (frame, terminal) = match ev {
+            Event::Token(t) => (Json::obj(vec![("token", Json::num(t))]), false),
+            Event::Done(s) => (Json::obj(vec![("done", stats_json(&s))]), true),
+            Event::Evicted(s) => (Json::obj(vec![("evicted", stats_json(&s))]), true),
+            Event::Rejected => (Json::obj(vec![("rejected", Json::Bool(true))]), true),
+        };
+        if write_frame(stream, &frame).is_err() {
+            session.cancel();
+            return;
+        }
+        if terminal {
+            saw_terminal = true;
+            break;
+        }
+    }
+    if !saw_terminal {
+        // The stream closed with no terminal event: the router died
+        // mid-session. Tell the client explicitly — a truncated token
+        // stream must not read as a completed one.
+        let aborted = Json::obj(vec![("aborted", Json::Bool(true))]);
+        let _ = write_frame(stream, &aborted);
+    }
+    // Terminal chunk.
+    let _ = stream.write_all(b"0\r\n\r\n");
+}
+
+fn stats_json(s: &SessionStats) -> Json {
+    Json::obj(vec![
+        ("tokens", Json::from_usize(s.tokens)),
+        ("queue_ms", Json::num(s.queue_ms)),
+        ("latency_ms", Json::num(s.latency_ms)),
+        ("ttft_ms", Json::num(s.ttft_ms)),
+        ("cancelled", Json::Bool(s.cancelled)),
+    ])
+}
+
+/// One SSE frame as one HTTP chunk, flushed immediately — that is the
+/// whole point of streaming.
+fn write_frame(stream: &mut TcpStream, payload: &Json) -> std::io::Result<()> {
+    let data = format!("data: {payload}\n\n");
+    write!(stream, "{:x}\r\n{data}\r\n", data.len())?;
+    stream.flush()
+}
+
+fn handle_cancel(path: &str, stream: &mut TcpStream, state: &Arc<HttpState>) {
+    let id_str = path.trim_start_matches("/v1/sessions/");
+    let Ok(id) = id_str.parse::<u64>() else {
+        let body = Json::obj(vec![("error", Json::str("bad session id"))]).to_string();
+        let _ = write_response(stream, 400, "Bad Request", "application/json", &body);
+        return;
+    };
+    let handle = state.lock_sessions().get(&id).cloned();
+    match handle {
+        Some(cancel) => {
+            cancel.cancel();
+            let body = Json::obj(vec![
+                ("id", Json::from_usize(id as usize)),
+                ("cancelled", Json::Bool(true)),
+            ])
+            .to_string();
+            let _ = write_response(stream, 200, "OK", "application/json", &body);
+        }
+        None => {
+            let body =
+                Json::obj(vec![("error", Json::str("unknown or finished session"))]).to_string();
+            let _ = write_response(stream, 404, "Not Found", "application/json", &body);
+        }
+    }
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    ctype: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()
+}
+
+// ---------------------------------------------------------------------
+// Loopback client (benches / integration tests / examples)
+// ---------------------------------------------------------------------
+
+/// Minimal blocking HTTP client for the loopback surface above — just
+/// enough protocol for the benches and integration tests to drive
+/// `slab serve --http` over a real socket without external crates.
+pub mod client {
+    use super::super::serve::Response;
+    use crate::util::json::Json;
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::{SocketAddr, TcpStream};
+    use std::time::Duration;
+
+    /// A completed (non-streaming) HTTP exchange.
+    pub struct HttpReply {
+        pub status: u16,
+        pub body: String,
+    }
+
+    fn connect(addr: SocketAddr) -> std::io::Result<TcpStream> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        Ok(stream)
+    }
+
+    fn read_status_and_headers(
+        reader: &mut BufReader<TcpStream>,
+    ) -> std::io::Result<(u16, bool, usize)> {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        let mut chunked = false;
+        let mut content_length = 0usize;
+        loop {
+            let mut h = String::new();
+            if reader.read_line(&mut h)? == 0 {
+                break;
+            }
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = h.split_once(':') {
+                let name = name.trim().to_ascii_lowercase();
+                let value = value.trim();
+                if name == "transfer-encoding" && value.eq_ignore_ascii_case("chunked") {
+                    chunked = true;
+                }
+                if name == "content-length" {
+                    content_length = value.parse().unwrap_or(0);
+                }
+            }
+        }
+        Ok((status, chunked, content_length))
+    }
+
+    /// One chunk of a chunked response body; `None` at the terminal
+    /// zero-length chunk. A malformed or missing size line (server
+    /// died mid-stream, truncated read) is an **error**, never
+    /// mistaken for the clean terminal chunk.
+    fn read_chunk(reader: &mut BufReader<TcpStream>) -> std::io::Result<Option<String>> {
+        let mut size_line = String::new();
+        reader.read_line(&mut size_line)?;
+        let trimmed = size_line.trim();
+        let size = usize::from_str_radix(trimmed, 16).map_err(|_| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bad chunk size line {trimmed:?} (stream truncated?)"),
+            )
+        })?;
+        if size == 0 {
+            return Ok(None);
+        }
+        let mut payload = vec![0u8; size];
+        reader.read_exact(&mut payload)?;
+        let mut crlf = [0u8; 2];
+        reader.read_exact(&mut crlf)?;
+        Ok(Some(String::from_utf8_lossy(&payload).into_owned()))
+    }
+
+    /// Serialize one request (line + headers + body) — the single
+    /// place the client-side wire framing lives.
+    fn write_request(
+        stream: &mut TcpStream,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> std::io::Result<()> {
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nHost: slab\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )?;
+        stream.flush()
+    }
+
+    /// Send `method path` with an optional JSON body; return the
+    /// fully-read reply (chunked bodies are de-chunked).
+    pub fn request(
+        addr: SocketAddr,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> std::io::Result<HttpReply> {
+        let mut stream = connect(addr)?;
+        write_request(&mut stream, method, path, body.unwrap_or(""))?;
+        let mut reader = BufReader::new(stream);
+        let (status, chunked, content_length) = read_status_and_headers(&mut reader)?;
+        let body = if chunked {
+            let mut out = String::new();
+            while let Some(chunk) = read_chunk(&mut reader)? {
+                out.push_str(&chunk);
+            }
+            out
+        } else if content_length > 0 {
+            let mut buf = vec![0u8; content_length];
+            reader.read_exact(&mut buf)?;
+            String::from_utf8_lossy(&buf).into_owned()
+        } else {
+            let mut out = String::new();
+            reader.read_to_string(&mut out)?;
+            out
+        };
+        Ok(HttpReply { status, body })
+    }
+
+    pub fn get(addr: SocketAddr, path: &str) -> std::io::Result<HttpReply> {
+        request(addr, "GET", path, None)
+    }
+
+    pub fn post(addr: SocketAddr, path: &str, body: &str) -> std::io::Result<HttpReply> {
+        request(addr, "POST", path, Some(body))
+    }
+
+    pub fn delete(addr: SocketAddr, path: &str) -> std::io::Result<HttpReply> {
+        request(addr, "DELETE", path, None)
+    }
+
+    /// An open SSE token stream (a `POST /v1/generate` with
+    /// `"stream": true`): read frames one at a time, cancel from
+    /// another connection, keep reading — exactly what an interactive
+    /// client does.
+    pub struct SseStream {
+        reader: BufReader<TcpStream>,
+        pub status: u16,
+    }
+
+    impl SseStream {
+        pub fn open(addr: SocketAddr, body: &str) -> std::io::Result<SseStream> {
+            let mut stream = connect(addr)?;
+            write_request(&mut stream, "POST", "/v1/generate", body)?;
+            let mut reader = BufReader::new(stream);
+            let (status, _, _) = read_status_and_headers(&mut reader)?;
+            Ok(SseStream { reader, status })
+        }
+
+        /// Next `data:` frame parsed as JSON; `None` once the stream
+        /// is over.
+        pub fn next_frame(&mut self) -> std::io::Result<Option<Json>> {
+            let Some(chunk) = read_chunk(&mut self.reader)? else {
+                return Ok(None);
+            };
+            let payload = chunk
+                .trim_start_matches("data: ")
+                .trim_end_matches('\n')
+                .to_string();
+            let v = Json::parse(&payload).map_err(|e| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad sse frame {payload:?}: {e}"),
+                )
+            })?;
+            Ok(Some(v))
+        }
+    }
+
+    /// Parse a non-streaming `POST /v1/generate` reply body into the
+    /// blocking [`Response`] shape (token-identity checks in tests).
+    pub fn parse_generate_reply(body: &str) -> Option<(u64, Response)> {
+        let v = Json::parse(body).ok()?;
+        let id = v.get("id").as_i64()? as u64;
+        let tokens = v
+            .get("tokens")
+            .as_arr()?
+            .iter()
+            .map(|t| t.as_i64().map(|x| x as i32))
+            .collect::<Option<Vec<i32>>>()?;
+        Some((
+            id,
+            Response {
+                tokens,
+                queue_ms: v.get("queue_ms").as_f64().unwrap_or(0.0),
+                latency_ms: v.get("latency_ms").as_f64().unwrap_or(0.0),
+                ttft_ms: v.get("ttft_ms").as_f64().unwrap_or(0.0),
+                rejected: v.get("rejected").as_bool().unwrap_or(false),
+                evicted: v.get("evicted").as_bool().unwrap_or(false),
+                cancelled: v.get("cancelled").as_bool().unwrap_or(false),
+                incomplete: v.get("incomplete").as_bool().unwrap_or(false),
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Loopback unit tests: every route over a real socket, native
+    //! engine, no artifacts — they run on every `cargo test`.
+
+    use super::client;
+    use super::*;
+    use crate::coordinator::serve::test_support::eos_free_params;
+    use crate::coordinator::serve::{Backend, SchedulerConfig, ServerConfig};
+    use crate::model::{Params, SlabModel};
+    use crate::runtime::ModelCfg;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg::llama("tiny-http", 32, 8, 1, 2, 16, 12, 4)
+    }
+
+    fn spin(cfg: &ModelCfg, seed: u64, scfg: ServerConfig) -> HttpServer {
+        let model = SlabModel::from_dense(&Params::init(cfg, seed), 1);
+        let server = Server::start_with(Backend::NativeBatched(Box::new(model)), scfg);
+        HttpServer::bind("127.0.0.1:0", server).expect("bind loopback")
+    }
+
+    #[test]
+    fn healthz_metrics_and_unknown_routes() {
+        let http = spin(&tiny_cfg(), 81, ServerConfig::default());
+        let addr = http.addr();
+        let ok = client::get(addr, "/healthz").expect("healthz");
+        assert_eq!(ok.status, 200);
+        assert!(ok.body.contains("\"status\":\"ok\""), "{}", ok.body);
+        let metrics = client::get(addr, "/metrics").expect("metrics");
+        assert_eq!(metrics.status, 200);
+        assert!(metrics.body.contains("requests"), "{}", metrics.body);
+        assert!(metrics.body.contains("mean_ttft_ms"), "{}", metrics.body);
+        let missing = client::get(addr, "/nope").expect("404");
+        assert_eq!(missing.status, 404);
+        let wrong_method = client::get(addr, "/v1/generate").expect("405");
+        assert_eq!(wrong_method.status, 405);
+        let bad_delete = client::delete(addr, "/v1/sessions/not-a-number").expect("400");
+        assert_eq!(bad_delete.status, 400);
+        let unknown_session = client::delete(addr, "/v1/sessions/999").expect("404");
+        assert_eq!(unknown_session.status, 404);
+        http.shutdown().expect("shutdown");
+    }
+
+    #[test]
+    fn generate_rejects_malformed_bodies() {
+        let http = spin(&tiny_cfg(), 82, ServerConfig::default());
+        let addr = http.addr();
+        for bad in [
+            "not json at all",
+            "{}",                         // missing prompt
+            r#"{"prompt": "text"}"#,      // non-array prompt
+            r#"{"prompt": [1.5]}"#,       // non-integer token
+            r#"{"prompt": [5000000000]}"#, // out of i32 range
+            r#"{"prompt": [5], "max_new": -2}"#,
+            r#"{"prompt": [5], "stream": "yes"}"#,
+            r#"{"prompt": [5], "deadline_ms": -1}"#,
+            // Finite but not representable as a Duration: must be a
+            // 400, not a panic in the connection handler.
+            r#"{"prompt": [5], "deadline_ms": 1e300}"#,
+        ] {
+            let reply = client::post(addr, "/v1/generate", bad).expect("reply");
+            assert_eq!(reply.status, 400, "body {bad:?} → {}", reply.body);
+        }
+        // The server is still healthy afterwards.
+        let ok = client::post(addr, "/v1/generate", r#"{"prompt": [5, 6], "max_new": 3}"#)
+            .expect("good request");
+        assert_eq!(ok.status, 200);
+        let stats = http.shutdown().expect("shutdown");
+        assert_eq!(stats.requests, 1, "malformed bodies never reach the engine");
+    }
+
+    #[test]
+    fn streamed_tokens_equal_blocking_generate() {
+        let cfg = tiny_cfg();
+        let http = spin(&cfg, 83, ServerConfig::default());
+        let addr = http.addr();
+        let body = r#"{"prompt": [5, 6, 7], "max_new": 6}"#;
+        let blocking = client::post(addr, "/v1/generate", body).expect("blocking");
+        assert_eq!(blocking.status, 200);
+        let (_, reply) = client::parse_generate_reply(&blocking.body).expect("parse");
+        assert!(!reply.rejected);
+
+        let stream_body = r#"{"prompt": [5, 6, 7], "max_new": 6, "stream": true}"#;
+        let mut sse = client::SseStream::open(addr, stream_body).expect("open stream");
+        assert_eq!(sse.status, 200);
+        let first = sse.next_frame().expect("frame").expect("id frame");
+        assert!(first.get("id").as_i64().is_some(), "{first:?}");
+        let mut streamed = Vec::new();
+        let mut saw_done = false;
+        while let Some(frame) = sse.next_frame().expect("frame") {
+            if let Some(tok) = frame.get("token").as_i64() {
+                streamed.push(tok as i32);
+            } else if !frame.get("done").is_null() {
+                assert_eq!(
+                    frame.get("done").get("tokens").as_usize(),
+                    Some(streamed.len())
+                );
+                saw_done = true;
+            } else {
+                panic!("unexpected frame {frame:?}");
+            }
+        }
+        assert!(saw_done, "stream must end with a done frame");
+        assert_eq!(streamed, reply.tokens, "streamed vs blocking tokens");
+        http.shutdown().expect("shutdown");
+    }
+
+    #[test]
+    fn delete_cancels_a_live_stream() {
+        // Long-budget session on a deliberately slow config (dim 64,
+        // ~1k ticks to finish): read two tokens, DELETE the session,
+        // and the stream must terminate early with cancelled=true.
+        let cfg = ModelCfg::llama("slow-http", 32, 64, 2, 2, 128, 1024, 4);
+        let params = eos_free_params(&cfg, 84);
+        let model = SlabModel::from_dense(&params, 1);
+        let server = Server::start_with(
+            Backend::NativeBatched(Box::new(model)),
+            ServerConfig {
+                sched: SchedulerConfig {
+                    max_batch: 1,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let http = HttpServer::bind("127.0.0.1:0", server).expect("bind");
+        let addr = http.addr();
+        let budget = cfg.max_seq - cfg.prompt_len;
+        let body = format!(r#"{{"prompt": [5, 6], "max_new": {budget}, "stream": true}}"#);
+        let mut sse = client::SseStream::open(addr, &body).expect("open");
+        let id = sse
+            .next_frame()
+            .expect("frame")
+            .expect("id frame")
+            .get("id")
+            .as_i64()
+            .expect("id") as u64;
+        let mut tokens = 0usize;
+        while tokens < 2 {
+            let frame = sse.next_frame().expect("frame").expect("open stream");
+            if frame.get("token").as_i64().is_some() {
+                tokens += 1;
+            } else {
+                panic!("terminal before two tokens: {frame:?}");
+            }
+        }
+        let cancel = client::delete(addr, &format!("/v1/sessions/{id}")).expect("cancel");
+        assert_eq!(cancel.status, 200);
+        let mut cancelled_seen = false;
+        while let Some(frame) = sse.next_frame().expect("frame") {
+            if frame.get("token").as_i64().is_some() {
+                tokens += 1;
+            } else if !frame.get("done").is_null() {
+                assert_eq!(frame.get("done").get("cancelled").as_bool(), Some(true));
+                cancelled_seen = true;
+            }
+        }
+        assert!(cancelled_seen, "terminal frame carries cancelled=true");
+        assert!(
+            tokens < budget,
+            "cancel must stop the stream early ({tokens} of {budget})"
+        );
+        let stats = http.shutdown().expect("shutdown");
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(stats.requests, 1, "the cancelled session still counts");
+    }
+}

@@ -1,16 +1,21 @@
 //! Layer-3 coordination: the staged one-shot compression pipeline
 //! ([`compress`] — capture → decompose → emit behind one
-//! [`compress::CompressJob`]) and the serving router ([`serve`]) over
-//! its three engines ([`serve::Backend`]) — two dynamic batchers and
-//! the continuous-batching [`serve::Scheduler`].
+//! [`compress::CompressJob`]), the streaming serving router
+//! ([`serve`]) over its three engines ([`serve::Backend`]) — two
+//! dynamic batchers and the continuous-batching [`serve::Scheduler`]
+//! — and the dependency-free HTTP/1.1 front-end ([`http`]) that
+//! exposes the session API over a socket (DESIGN.md §12).
 
 pub mod compress;
+pub mod http;
 pub mod serve;
 
 pub use compress::{
     compress_model, load_packed_checkpoint, CaptureEngine, CompressJob, CompressOut,
     CompressReport, CompressedModel, Engine, LayerReport, PipelineError,
 };
+pub use http::HttpServer;
 pub use serve::{
-    Backend, Request, Response, Scheduler, SchedulerConfig, ServeStats, Server, ServerConfig,
+    collect_events, Backend, CancelHandle, Event, Request, Response, Scheduler, SchedulerConfig,
+    ServeStats, Server, ServerConfig, Session, SessionStats,
 };

@@ -1,11 +1,17 @@
-//! Serving coordinator: request router over three interchangeable
-//! engines — two batch-at-a-time backends and a continuous-batching
-//! scheduler.
+//! Serving coordinator: a streaming session router over three
+//! interchangeable engines — two dynamic batchers and a
+//! continuous-batching scheduler.
 //!
-//! vLLM-router-shaped, scaled to this testbed: client threads submit
-//! [`Request`]s into an mpsc queue; the router thread owns the engine
-//! and completes the callers' response channels. Greedy decoding;
-//! deterministic.
+//! vLLM-router-shaped, scaled to this testbed: client threads
+//! [`Server::submit`] a [`Request`] and get a [`Session`] handle back
+//! *immediately*; the router thread owns the engine and streams an
+//! ordered [`Event`] sequence into the session — `Token` per generated
+//! token as it is sampled, then exactly one terminal event
+//! (`Done` / `Evicted` / `Rejected`). [`Session::cancel`] (or dropping
+//! the handle) stops generation mid-decode and frees the session's
+//! resources; [`Session::collect`] reproduces the historical blocking
+//! whole-completion call token-identically (DESIGN.md §12). Greedy
+//! decoding; deterministic.
 //!
 //! The engine behind the queue is a [`Backend`]:
 //!
@@ -25,60 +31,312 @@
 //! * [`Backend::NativeBatched`] — the same native engine behind the
 //!   continuous-batching [`Scheduler`]: requests prefill individually
 //!   and *join the running decode batch* (prefill-then-join), finished
-//!   sessions leave it immediately, and a bounded admission queue
-//!   rejects overflow with an explicit backpressure [`Response`]
-//!   (DESIGN.md §6a).
+//!   sessions leave it immediately (DESIGN.md §6a).
 //!
-//! All backends sit behind the same [`Request`]/[`Response`] API, so
-//! the batcher, clients, and stats are engine-agnostic
-//! (`examples/serve_compressed.rs` races all four configurations),
-//! and the native pair is pinned token-identical by tests here and in
-//! `rust/tests/integration.rs`.
+//! Every backend applies the same admission policy: a bounded queue
+//! ([`ServerConfig::queue_cap`]) whose overflow terminates the session
+//! with an immediate [`Event::Rejected`] instead of unbounded growth,
+//! plus optional per-request deadlines
+//! ([`Request::deadline`] / [`SchedulerConfig::deadline`]) that evict
+//! a session — queued or decoding — once its wall-clock budget is
+//! spent. All backends sit behind the same [`Request`]/[`Session`]
+//! API, so the batcher, clients, and stats are engine-agnostic, and
+//! the native pair is pinned token-identical by tests here and in
+//! `rust/tests/integration.rs`. The `coordinator::http` front-end
+//! exposes exactly this API over HTTP/1.1 (DESIGN.md §12).
 
 use crate::data::{EOS, PAD};
 use crate::model::{greedy_token, DecodeSlot, KvCachePool, Params, SlabModel};
+use crate::report::Table;
 use crate::runtime::client::RuntimeError;
 use crate::runtime::{lit_i32, lit_scalar_i32, to_vec_f32, Runtime};
 use std::collections::VecDeque;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Request {
     pub prompt: Vec<i32>,
     pub max_new: usize,
+    /// Wall-clock deadline measured from submission. `Some(d)` always
+    /// applies (even `Some(ZERO)`, which expires immediately); `None`
+    /// falls back to [`SchedulerConfig::deadline`] (where `ZERO`
+    /// means *no* deadline). A session past its deadline is evicted —
+    /// from the queue or mid-decode — with the tokens streamed so far.
+    pub deadline: Option<Duration>,
 }
 
-#[derive(Debug, Clone)]
+/// One step of a [`Session`]'s ordered event stream: zero or more
+/// `Token`s followed by exactly one terminal event. The stream is the
+/// serving contract — `collect()` and the HTTP front-end are both
+/// pure folds over it (DESIGN.md §12).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// One generated token, emitted the tick it was sampled.
+    Token(i32),
+    /// Terminal: the session completed (EOS, token budget, or
+    /// cancellation — see [`SessionStats::cancelled`]).
+    Done(SessionStats),
+    /// Terminal: admission backpressure — the bounded queue was full
+    /// and the request was never scheduled. No tokens were streamed.
+    Rejected,
+    /// Terminal: evicted by the sequence cap or a deadline, with the
+    /// tokens streamed so far.
+    Evicted(SessionStats),
+}
+
+/// Per-session accounting carried by a terminal [`Event`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SessionStats {
+    /// Tokens streamed before the terminal event.
+    pub tokens: usize,
+    /// Queue + batch wait before prefill started.
+    pub queue_ms: f64,
+    /// Total session latency (submission → terminal event).
+    pub latency_ms: f64,
+    /// Submission → first streamed token; `0.0` when none was.
+    pub ttft_ms: f64,
+    /// The session was cancelled (explicitly or by the client
+    /// dropping its [`Session`]) before it finished on its own.
+    pub cancelled: bool,
+}
+
+/// Shared cancellation flag for one session. Cloneable so a registry
+/// (e.g. the HTTP front-end's session table) can cancel a stream it
+/// does not own; setting it is idempotent and safe from any thread.
+#[derive(Debug, Clone, Default)]
+pub struct CancelHandle(Arc<AtomicBool>);
+
+impl CancelHandle {
+    /// Request cancellation: the routers observe the flag at the next
+    /// decode tick, stop streaming, free the session's KV slot, and
+    /// emit the terminal event with `cancelled: true`.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// Client half of one submitted request: consume the ordered
+/// [`Event`] stream, cancel mid-stream, or [`collect`](Session::collect)
+/// into the historical blocking [`Response`]. Dropping an unconsumed
+/// session counts as cancellation — the router stops decoding for a
+/// client that hung up.
+pub struct Session {
+    id: u64,
+    events: Receiver<Event>,
+    cancel: CancelHandle,
+}
+
+impl Session {
+    /// Server-unique session id (the HTTP `DELETE /v1/sessions/{id}`
+    /// key).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Cancel this session; already-streamed tokens stay valid and the
+    /// terminal event still arrives (with `cancelled: true`).
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// A cloneable cancel handle (for registries / other threads).
+    pub fn cancel_handle(&self) -> CancelHandle {
+        self.cancel.clone()
+    }
+
+    /// Blocking: the next event, or `None` once the stream is over.
+    pub fn recv(&self) -> Option<Event> {
+        self.events.recv().ok()
+    }
+
+    /// Non-blocking poll.
+    pub fn try_recv(&self) -> Option<Event> {
+        self.events.try_recv().ok()
+    }
+
+    /// Blocking with a timeout (`None` on timeout or closed stream).
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Event> {
+        self.events.recv_timeout(timeout).ok()
+    }
+
+    /// Blocking iterator over the remaining events (ends after the
+    /// terminal event).
+    pub fn iter(&self) -> std::sync::mpsc::Iter<'_, Event> {
+        self.events.iter()
+    }
+
+    /// Drain the stream to completion — the blocking convenience that
+    /// reproduces the historical whole-completion call
+    /// token-identically (pinned by `streaming_matches_collect_*`).
+    pub fn collect(self) -> Response {
+        collect_events(&self.events)
+    }
+}
+
+impl Drop for Session {
+    /// Dropping the handle IS cancellation: nobody can consume the
+    /// stream anymore, so the router must not keep decoding for it.
+    /// Setting the flag (not just closing the channel) also lets the
+    /// scheduler's reap sweep drop an abandoned job from the *wait
+    /// queue* — a closed channel alone is invisible until a send is
+    /// attempted. Harmless after a terminal event: cancelling a
+    /// finished session is a no-op.
+    fn drop(&mut self) {
+        self.cancel.cancel();
+    }
+}
+
+/// Fold an event stream into a [`Response`] — the blocking
+/// whole-completion view. Public so direct [`Scheduler`] users and
+/// tests can drain a raw event channel the same way
+/// [`Session::collect`] does.
+pub fn collect_events(events: &Receiver<Event>) -> Response {
+    let mut r = Response::default();
+    let mut terminal = false;
+    for ev in events.iter() {
+        match ev {
+            Event::Token(t) => r.tokens.push(t),
+            Event::Rejected => {
+                r.rejected = true;
+                terminal = true;
+                break;
+            }
+            Event::Done(s) => {
+                r.finish_from(&s);
+                terminal = true;
+                break;
+            }
+            Event::Evicted(s) => {
+                r.evicted = true;
+                r.finish_from(&s);
+                terminal = true;
+                break;
+            }
+        }
+    }
+    // The stream closed without a terminal event: the router died
+    // mid-session (engine error / panic). Mark it so callers cannot
+    // mistake a truncated stream for a normal completion.
+    r.incomplete = !terminal;
+    r
+}
+
+/// Whole-completion view of a finished session (what
+/// [`Session::collect`] returns) — the pre-streaming `Response`
+/// contract, token-identical to consuming the event stream directly.
+#[derive(Debug, Clone, Default)]
 pub struct Response {
     pub tokens: Vec<i32>,
     /// Queue + batch wait before prefill started.
     pub queue_ms: f64,
     /// Total request latency.
     pub latency_ms: f64,
+    /// Submission → first token (`0.0` when nothing was generated).
+    pub ttft_ms: f64,
     /// Backpressure: the admission queue was full and the request was
-    /// never scheduled (`tokens` is empty). Only the continuous
-    /// batcher ([`Backend::NativeBatched`]) rejects; the dynamic
-    /// batchers queue without bound.
+    /// never scheduled (`tokens` is empty). Every backend applies the
+    /// same bounded-queue policy ([`ServerConfig::queue_cap`]).
     pub rejected: bool,
+    /// Terminated by the sequence cap or a deadline.
+    pub evicted: bool,
+    /// Terminated by [`Session::cancel`] / client hang-up.
+    pub cancelled: bool,
+    /// The event stream closed **without** a terminal event — the
+    /// router thread died mid-session (engine error / panic), so
+    /// `tokens` is a truncated stream, not a completion. Every
+    /// healthy outcome (including rejection and cancellation) leaves
+    /// this `false`.
+    pub incomplete: bool,
 }
 
+impl Response {
+    fn finish_from(&mut self, s: &SessionStats) {
+        self.queue_ms = s.queue_ms;
+        self.latency_ms = s.latency_ms;
+        self.ttft_ms = s.ttft_ms;
+        self.cancelled = s.cancelled;
+    }
+}
+
+/// One submitted request inside the router: the request plus its
+/// session-side channel and cancellation flag.
 struct Job {
     req: Request,
     submitted: Instant,
-    reply: Sender<Response>,
+    events: Sender<Event>,
+    cancel: CancelHandle,
 }
 
-/// Server handle: submit requests, then `shutdown()`.
+impl Job {
+    /// Absolute deadline, if any: the request's own wins; otherwise
+    /// the scheduler default (`ZERO` = none). `checked_add`: an
+    /// astronomically large (but type-valid) deadline saturates to
+    /// "no deadline" — one request must never panic the router
+    /// thread with `Instant` overflow.
+    fn deadline_at(&self, default: Duration) -> Option<Instant> {
+        let d = match self.req.deadline {
+            Some(d) => d,
+            None if default > Duration::ZERO => default,
+            None => return None,
+        };
+        self.submitted.checked_add(d)
+    }
+}
+
+/// Submit-side state shared between a [`Server`] handle and its
+/// router thread: the admission gate and the live stats snapshot.
+#[derive(Default)]
+struct Gate {
+    /// Jobs submitted but not yet decoding (mpsc + scheduler queue).
+    pending: AtomicUsize,
+    /// Rejections applied at the submit gate (callers' threads) —
+    /// folded into [`ServeStats::rejected`] by `stats`/`shutdown`.
+    gate_rejected: AtomicUsize,
+    /// Router's latest stats snapshot — what `GET /metrics` renders.
+    live: Mutex<ServeStats>,
+}
+
+impl Gate {
+    /// `n` jobs left the waiting state (entered a batch / the decode
+    /// set, or were terminated while queued).
+    fn depart(&self, n: usize) {
+        if n > 0 {
+            self.pending.fetch_sub(n, Ordering::AcqRel);
+        }
+    }
+}
+
+/// Publish the router's current stats to the live snapshot.
+fn sync_live(gate: &Gate, stats: &ServeStats, t_start: Instant) {
+    let mut snap = stats.clone();
+    snap.wall_secs = t_start.elapsed().as_secs_f64();
+    *gate.live.lock().unwrap_or_else(|p| p.into_inner()) = snap;
+}
+
+/// Server handle: submit requests (each returns a streaming
+/// [`Session`]), read live [`stats`](Server::stats), then
+/// [`shutdown`](Server::shutdown).
 pub struct Server {
     tx: Sender<Job>,
     handle: Option<std::thread::JoinHandle<Result<ServeStats, RuntimeError>>>,
+    next_id: AtomicU64,
+    queue_cap: usize,
+    gate: Arc<Gate>,
+    started: Instant,
 }
 
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
-    /// Requests that received a generated (non-rejected) response.
+    /// Requests that received a terminal `Done`/`Evicted` event
+    /// (everything submitted except rejections).
     pub requests: usize,
     /// Dynamic batchers: batches executed. Continuous batcher: decode
     /// ticks executed.
@@ -89,6 +347,17 @@ pub struct ServeStats {
     /// Sessions terminated by the sequence cap (`max_seq_len`) before
     /// reaching their own token budget or EOS.
     pub evicted: usize,
+    /// Sessions evicted because their deadline passed first.
+    pub deadline_evicted: usize,
+    /// Sessions cancelled ([`Session::cancel`] or client hang-up).
+    pub cancelled: usize,
+    /// Sessions whose client dropped the [`Session`] before the
+    /// terminal event could be delivered — never a router panic.
+    pub dropped_clients: usize,
+    /// Sum of per-request time-to-first-token over `ttft_samples`.
+    pub ttft_ms_total: f64,
+    /// Requests that streamed at least one token.
+    pub ttft_samples: usize,
     pub wall_secs: f64,
 }
 
@@ -104,6 +373,34 @@ impl ServeStats {
         }
         self.requests as f64 / (self.batches * batch_cap) as f64
     }
+
+    /// Mean time-to-first-token across requests that produced one.
+    pub fn mean_ttft_ms(&self) -> f64 {
+        self.ttft_ms_total / self.ttft_samples.max(1) as f64
+    }
+
+    /// Render as a metric/value [`Table`] — the `/metrics` body and
+    /// the CLI's summary form.
+    pub fn table(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["metric", "value"]);
+        let rows: Vec<(&str, String)> = vec![
+            ("requests", self.requests.to_string()),
+            ("batches", self.batches.to_string()),
+            ("generated_tokens", self.generated_tokens.to_string()),
+            ("tokens_per_sec", format!("{:.1}", self.tokens_per_sec())),
+            ("rejected", self.rejected.to_string()),
+            ("evicted", self.evicted.to_string()),
+            ("deadline_evicted", self.deadline_evicted.to_string()),
+            ("cancelled", self.cancelled.to_string()),
+            ("dropped_clients", self.dropped_clients.to_string()),
+            ("mean_ttft_ms", format!("{:.3}", self.mean_ttft_ms())),
+            ("wall_secs", format!("{:.3}", self.wall_secs)),
+        ];
+        for (k, v) in rows {
+            t.push_row(vec![k.to_string(), v]);
+        }
+        t
+    }
 }
 
 pub struct ServerConfig {
@@ -113,8 +410,17 @@ pub struct ServerConfig {
     /// cap is baked into its static-shaped executables, so it comes
     /// from the manifest instead).
     pub serve_batch: usize,
-    /// Continuous-batching knobs for [`Backend::NativeBatched`];
-    /// ignored by the dynamic batchers.
+    /// Uniform admission cap, enforced at [`Server::submit`] for
+    /// *every* backend: while `queue_cap` submissions are already
+    /// waiting (not yet decoding), new submissions terminate
+    /// immediately with [`Event::Rejected`]. `0` rejects everything —
+    /// a drain/maintenance mode. The continuous batcher additionally
+    /// bounds its internal queue with [`SchedulerConfig::queue_cap`];
+    /// keep the two equal (the defaults are) unless you want the
+    /// stricter of the two to win.
+    pub queue_cap: usize,
+    /// Continuous-batching knobs for [`Backend::NativeBatched`]; the
+    /// dynamic batchers honor only [`SchedulerConfig::deadline`].
     pub sched: SchedulerConfig,
 }
 
@@ -123,6 +429,7 @@ impl Default for ServerConfig {
         ServerConfig {
             batch_window: Duration::from_millis(5),
             serve_batch: 4,
+            queue_cap: 64,
             sched: SchedulerConfig::default(),
         }
     }
@@ -140,9 +447,14 @@ pub struct SchedulerConfig {
     /// the tokens it has.
     pub max_seq_len: usize,
     /// Admission-queue bound (≥ 1 enforced); submissions past it get
-    /// an immediate `Response { rejected: true, .. }` instead of
-    /// unbounded queue growth.
+    /// an immediate [`Event::Rejected`] instead of unbounded queue
+    /// growth.
     pub queue_cap: usize,
+    /// Default per-request deadline from submission, applied when a
+    /// [`Request`] carries none; `ZERO` (the default) disables it. An
+    /// expired session is evicted with the tokens streamed so far and
+    /// counted in [`ServeStats::deadline_evicted`].
+    pub deadline: Duration,
 }
 
 impl Default for SchedulerConfig {
@@ -151,12 +463,13 @@ impl Default for SchedulerConfig {
             max_batch: 8,
             max_seq_len: 0,
             queue_cap: 64,
+            deadline: Duration::ZERO,
         }
     }
 }
 
 /// The engine a [`Server`] routes requests to. Every variant serves
-/// the same [`Request`]/[`Response`] API with identical
+/// the same [`Request`]/[`Session`] API with identical
 /// greedy-decoding semantics; they differ in *what executes a batch*
 /// and *how requests become batches*:
 ///
@@ -209,6 +522,9 @@ impl Server {
     /// engine owns the device, clients own channels.
     pub fn start_with(backend: Backend, scfg: ServerConfig) -> Server {
         let (tx, rx) = channel::<Job>();
+        let gate = Arc::new(Gate::default());
+        let queue_cap = scfg.queue_cap;
+        let routed = gate.clone();
         let handle = std::thread::Builder::new()
             .name("slab-router".into())
             .spawn(move || match backend {
@@ -217,45 +533,294 @@ impl Server {
                     params,
                 } => {
                     let rt = Runtime::new(&artifacts_dir)?;
-                    router_loop(&rt, params, scfg, rx)
+                    router_loop(&rt, params, scfg, rx, &routed)
                 }
-                Backend::NativePacked(model) => native_router_loop(&model, scfg, rx),
-                Backend::NativeBatched(model) => batched_router_loop(model, scfg, rx),
+                Backend::NativePacked(model) => native_router_loop(&model, scfg, rx, &routed),
+                Backend::NativeBatched(model) => batched_router_loop(model, scfg, rx, &routed),
             })
             .expect("spawn router");
         Server {
             tx,
             handle: Some(handle),
+            next_id: AtomicU64::new(1),
+            queue_cap,
+            gate,
+            started: Instant::now(),
         }
     }
 
-    /// Submit a request; returns the response receiver immediately.
-    pub fn submit(&self, req: Request) -> Receiver<Response> {
-        let (reply, rx) = channel();
-        self.tx
-            .send(Job {
-                req,
-                submitted: Instant::now(),
-                reply,
+    /// Submit a request; returns its streaming [`Session`]
+    /// immediately. Never blocks and never panics: a full admission
+    /// queue (or a dead router) terminates the session with
+    /// [`Event::Rejected`].
+    pub fn submit(&self, req: Request) -> Session {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let cancel = CancelHandle::default();
+        let session = Session {
+            id,
+            events: rx,
+            cancel: cancel.clone(),
+        };
+        // The uniform bounded-queue gate (DESIGN.md §12): admit only
+        // while fewer than `queue_cap` submissions are waiting.
+        let admitted = self
+            .gate
+            .pending
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |p| {
+                if p >= self.queue_cap {
+                    None
+                } else {
+                    Some(p + 1)
+                }
             })
-            .expect("router alive");
-        rx
+            .is_ok();
+        if !admitted {
+            self.gate.gate_rejected.fetch_add(1, Ordering::AcqRel);
+            let _ = tx.send(Event::Rejected);
+            return session;
+        }
+        let job = Job {
+            req,
+            submitted: Instant::now(),
+            events: tx,
+            cancel,
+        };
+        if let Err(failed) = self.tx.send(job) {
+            // Router thread already exited (shutdown race / engine
+            // error): reject instead of panicking the caller.
+            self.gate.depart(1);
+            self.gate.gate_rejected.fetch_add(1, Ordering::AcqRel);
+            let _ = failed.0.events.send(Event::Rejected);
+        }
+        session
     }
 
-    /// Blocking convenience call.
+    /// Blocking convenience call (submit + collect).
     pub fn generate(&self, req: Request) -> Response {
-        self.submit(req).recv().expect("router response")
+        self.submit(req).collect()
+    }
+
+    /// Live stats snapshot (what `GET /metrics` serves): the router's
+    /// latest per-batch/per-tick publication plus gate-side
+    /// rejections, with `wall_secs` measured from server start.
+    pub fn stats(&self) -> ServeStats {
+        let mut s = self
+            .gate
+            .live
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone();
+        s.rejected += self.gate.gate_rejected.load(Ordering::Acquire);
+        s.wall_secs = self.started.elapsed().as_secs_f64();
+        s
     }
 
     /// Stop accepting requests, drain, and return aggregate stats.
+    /// Typed errors instead of panics: a vanished or panicked router
+    /// thread surfaces as [`RuntimeError::Router`].
     pub fn shutdown(mut self) -> Result<ServeStats, RuntimeError> {
         drop(self.tx);
-        self.handle
+        let handle = self
+            .handle
             .take()
-            .unwrap()
+            .ok_or_else(|| RuntimeError::Router("server already shut down".into()))?;
+        let joined = handle
             .join()
-            .expect("router join")
+            .map_err(|_| RuntimeError::Router("router thread panicked".into()))?;
+        let mut stats = joined?;
+        stats.rejected += self.gate.gate_rejected.load(Ordering::Acquire);
+        Ok(stats)
     }
+}
+
+/// Terminal classification of one session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Outcome {
+    /// EOS, token budget, or empty budget — a normal completion.
+    Done,
+    /// Cancelled via [`CancelHandle`] or client hang-up.
+    Cancelled,
+    /// Hit the sequence cap (`max_seq_len`).
+    Evicted,
+    /// Deadline expired first.
+    DeadlineEvicted,
+}
+
+/// Streaming bookkeeping for one live session: emits `Token` events
+/// the tick they are sampled, tracks TTFT, and carries the terminal
+/// outcome. Shared by the dynamic batchers (directly) and the
+/// continuous batcher (embedded in its per-session state).
+struct BatchSession {
+    job: Job,
+    /// When the session left the queue (prefill start).
+    t_admit: Instant,
+    deadline: Option<Instant>,
+    /// Effective token budget: `min(max_new, headroom)` — the
+    /// sequence cap's clamp, identical across all backends.
+    budget: usize,
+    /// True when the sequence cap (not the caller) set `budget` —
+    /// running to it then classifies as [`Outcome::Evicted`], the
+    /// same terminal every backend reports for a capped request.
+    capped: bool,
+    /// Tokens streamed so far.
+    streamed: usize,
+    /// TTFT once known; `0.0` until the first token.
+    first_ms: f64,
+    done: bool,
+    outcome: Outcome,
+    /// The client dropped its [`Session`]; treated as cancellation.
+    client_gone: bool,
+}
+
+impl BatchSession {
+    fn new(job: Job, default_deadline: Duration, t_admit: Instant, headroom: usize) -> BatchSession {
+        let deadline = job.deadline_at(default_deadline);
+        let capped = headroom < job.req.max_new;
+        let budget = job.req.max_new.min(headroom);
+        BatchSession {
+            job,
+            t_admit,
+            deadline,
+            budget,
+            capped,
+            streamed: 0,
+            first_ms: 0.0,
+            done: false,
+            outcome: Outcome::Done,
+            client_gone: false,
+        }
+    }
+
+    /// Pre-step liveness gate: cancellation, client hang-up, deadline,
+    /// then the clamped token budget — in that order, so a cancelled
+    /// session never costs another decode row.
+    fn wants_token(&mut self, step: usize, now: Instant) -> bool {
+        if self.done {
+            return false;
+        }
+        if self.job.cancel.is_cancelled() || self.client_gone {
+            self.done = true;
+            self.outcome = Outcome::Cancelled;
+            return false;
+        }
+        if self.deadline.is_some_and(|d| now >= d) {
+            self.done = true;
+            self.outcome = Outcome::DeadlineEvicted;
+            return false;
+        }
+        if step >= self.budget {
+            self.done = true;
+            return false;
+        }
+        true
+    }
+
+    /// Stream one sampled token (EOS terminates the session instead).
+    fn push(&mut self, tok: i32, stats: &mut ServeStats) {
+        if tok == EOS {
+            self.done = true;
+            return;
+        }
+        if self.streamed == 0 {
+            self.first_ms = self.job.submitted.elapsed().as_secs_f64() * 1e3;
+            stats.ttft_ms_total += self.first_ms;
+            stats.ttft_samples += 1;
+        }
+        self.streamed += 1;
+        stats.generated_tokens += 1;
+        if self.job.events.send(Event::Token(tok)).is_err() {
+            self.client_gone = true;
+        }
+    }
+
+    /// Terminal event + accounting. A failed send (client hung up) is
+    /// counted, never propagated — the router thread must outlive any
+    /// client.
+    fn finish(mut self, stats: &mut ServeStats) {
+        // A capped session that ran to its clamped budget was ended
+        // by the sequence cap, not the caller: classify it Evicted —
+        // uniformly, on every backend.
+        if self.outcome == Outcome::Done && self.capped && self.streamed >= self.budget {
+            self.outcome = Outcome::Evicted;
+        }
+        stats.requests += 1;
+        match self.outcome {
+            Outcome::Done => {}
+            Outcome::Cancelled => stats.cancelled += 1,
+            Outcome::Evicted => stats.evicted += 1,
+            Outcome::DeadlineEvicted => stats.deadline_evicted += 1,
+        }
+        let s = SessionStats {
+            tokens: self.streamed,
+            queue_ms: (self.t_admit - self.job.submitted).as_secs_f64() * 1e3,
+            latency_ms: self.job.submitted.elapsed().as_secs_f64() * 1e3,
+            ttft_ms: self.first_ms,
+            cancelled: matches!(self.outcome, Outcome::Cancelled),
+        };
+        let ev = match self.outcome {
+            Outcome::Evicted | Outcome::DeadlineEvicted => Event::Evicted(s),
+            _ => Event::Done(s),
+        };
+        let hung_up = self.job.events.send(ev).is_err();
+        if self.client_gone || hung_up {
+            stats.dropped_clients += 1;
+        }
+    }
+}
+
+/// Queued-state admission gate shared by the dynamic batchers:
+/// terminate dead jobs (cancelled / expired / zero-budget) without
+/// touching the engine, return the sessions that will decode.
+fn admit_batch(
+    jobs: Vec<Job>,
+    default_deadline: Duration,
+    t_batch: Instant,
+    headroom: usize,
+    stats: &mut ServeStats,
+) -> Vec<BatchSession> {
+    let mut admitted = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        let mut bs = BatchSession::new(job, default_deadline, t_batch, headroom);
+        if !bs.wants_token(0, t_batch) {
+            bs.finish(stats);
+        } else {
+            admitted.push(bs);
+        }
+    }
+    admitted
+}
+
+/// One dynamic-batch decode step's bookkeeping, shared by both
+/// dynamic batchers so their admission/termination semantics cannot
+/// diverge: gate each live session, sample its row via `sample`,
+/// stream the token, and emit each terminal the step it is known — a
+/// deadline or cancellation must not wait for the batch's slowest
+/// member. Returns `true` once every session has finished.
+fn step_batch(
+    live: &mut [Option<BatchSession>],
+    step: usize,
+    next: &mut [i32],
+    stats: &mut ServeStats,
+    mut sample: impl FnMut(usize) -> i32,
+) -> bool {
+    let now = Instant::now();
+    let mut all_done = true;
+    for (s, slot) in live.iter_mut().enumerate() {
+        let Some(bs) = slot.as_mut() else { continue };
+        if bs.wants_token(step, now) {
+            let tok = sample(s);
+            next[s] = tok;
+            bs.push(tok, stats);
+        }
+        if bs.done {
+            let bs = slot.take().expect("session present");
+            bs.finish(stats);
+        } else {
+            all_done = false;
+        }
+    }
+    all_done
 }
 
 fn router_loop(
@@ -263,6 +828,7 @@ fn router_loop(
     params: Params,
     scfg: ServerConfig,
     rx: Receiver<Job>,
+    gate: &Gate,
 ) -> Result<ServeStats, RuntimeError> {
     let cfg = params.cfg.clone();
     let cap = rt.manifest.serve_batch;
@@ -274,21 +840,27 @@ fn router_loop(
     let mut stats = ServeStats::default();
     let t_start = Instant::now();
 
+    let headroom = cfg.max_seq.saturating_sub(prompt_len);
     'outer: loop {
         // --- gather a batch (dynamic batching) -------------------------
         let Some(jobs) = gather_batch(&rx, cap, scfg.batch_window) else {
             break 'outer; // all senders dropped
         };
+        gate.depart(jobs.len());
         let t_batch = Instant::now();
+        let admitted = admit_batch(jobs, scfg.sched.deadline, t_batch, headroom, &mut stats);
+        if admitted.is_empty() {
+            sync_live(gate, &stats, t_start);
+            continue;
+        }
         stats.batches += 1;
-        stats.requests += jobs.len();
 
         // --- prefill -----------------------------------------------------
         // Left-aligned prompts, right-padded to prompt_len, PAD keys are
         // attention-masked inside the artifact.
         let mut flat = vec![0i32; cap * prompt_len];
-        for (s, job) in jobs.iter().enumerate() {
-            let p = &job.req.prompt;
+        for (s, bs) in admitted.iter().enumerate() {
+            let p = &bs.job.req.prompt;
             let n = p.len().min(prompt_len);
             flat[s * prompt_len..s * prompt_len + n].copy_from_slice(&p[..n]);
         }
@@ -296,36 +868,18 @@ fn router_loop(
         let mut inputs: Vec<&xla::Literal> = dev.iter().collect();
         inputs.push(&tok_lit);
         let outs = rt.execute_refs(&prefill_name, &inputs)?;
-        let (mut logits, mut kc, mut vc) = take3(outs);
+        let (mut logits, mut kc, mut vc) = take3(&prefill_name, outs)?;
 
-        // --- decode loop ---------------------------------------------------
-        let max_new: usize = jobs
-            .iter()
-            .map(|j| j.req.max_new)
-            .max()
-            .unwrap_or(0)
-            .min(cfg.max_seq - prompt_len);
-        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); jobs.len()];
-        let mut done = vec![false; jobs.len()];
+        // --- decode loop: stream tokens and terminals as they happen ----
+        let max_new: usize = admitted.iter().map(|b| b.budget).max().unwrap_or(0);
+        let mut live: Vec<Option<BatchSession>> = admitted.into_iter().map(Some).collect();
         for step in 0..max_new {
-            // Greedy sample from the last logits.
             let l = to_vec_f32(&logits);
             let mut next = vec![EOS; cap];
-            for (s, job) in jobs.iter().enumerate() {
-                if done[s] || step >= job.req.max_new {
-                    done[s] = true;
-                    continue;
-                }
-                let tok = greedy_token(&l[s * cfg.vocab..(s + 1) * cfg.vocab]);
-                next[s] = tok;
-                if tok == EOS {
-                    done[s] = true;
-                } else {
-                    generated[s].push(tok);
-                    stats.generated_tokens += 1;
-                }
-            }
-            if done.iter().all(|&d| d) {
+            let done = step_batch(&mut live, step, &mut next, &mut stats, |s| {
+                greedy_token(&l[s * cfg.vocab..(s + 1) * cfg.vocab])
+            });
+            if done {
                 break;
             }
             let pos = (prompt_len + step) as i32;
@@ -337,23 +891,20 @@ fn router_loop(
             inputs.push(&tok);
             inputs.push(&pb);
             let outs = rt.execute_refs(&decode_name, &inputs)?;
-            let (l2, k2, v2) = take3(outs);
+            let (l2, k2, v2) = take3(&decode_name, outs)?;
             logits = l2;
             kc = k2;
             vc = v2;
         }
 
-        // --- respond -------------------------------------------------------
-        for (s, job) in jobs.into_iter().enumerate() {
-            let _ = job.reply.send(Response {
-                tokens: std::mem::take(&mut generated[s]),
-                queue_ms: (t_batch - job.submitted).as_secs_f64() * 1e3,
-                latency_ms: job.submitted.elapsed().as_secs_f64() * 1e3,
-                rejected: false,
-            });
+        // --- terminal events ---------------------------------------------
+        for bs in live.into_iter().flatten() {
+            bs.finish(&mut stats);
         }
+        sync_live(gate, &stats, t_start);
     }
     stats.wall_secs = t_start.elapsed().as_secs_f64();
+    sync_live(gate, &stats, t_start);
     Ok(stats)
 }
 
@@ -383,34 +934,41 @@ fn gather_batch(rx: &Receiver<Job>, cap: usize, window: Duration) -> Option<Vec<
 }
 
 /// The [`Backend::NativePacked`] router: same dynamic batching,
-/// greedy policy, and accounting as [`router_loop`], but prefill and
-/// decode run through [`SlabModel`] — no PJRT, no padding the batch
-/// up to an artifact's static shape (the native engine takes the
-/// actual batch size).
+/// greedy policy, streaming, and accounting as [`router_loop`], but
+/// prefill and decode run through [`SlabModel`] — no PJRT, no padding
+/// the batch up to an artifact's static shape (the native engine
+/// takes the actual batch size).
 fn native_router_loop(
     model: &SlabModel,
     scfg: ServerConfig,
     rx: Receiver<Job>,
+    gate: &Gate,
 ) -> Result<ServeStats, RuntimeError> {
     let cap = scfg.serve_batch.max(1);
     let prompt_len = model.cfg.prompt_len;
     let mut stats = ServeStats::default();
     let t_start = Instant::now();
 
+    let headroom = model.cfg.max_seq.saturating_sub(prompt_len);
     loop {
         let Some(jobs) = gather_batch(&rx, cap, scfg.batch_window) else {
             break;
         };
+        gate.depart(jobs.len());
         let t_batch = Instant::now();
+        let admitted = admit_batch(jobs, scfg.sched.deadline, t_batch, headroom, &mut stats);
+        if admitted.is_empty() {
+            sync_live(gate, &stats, t_start);
+            continue;
+        }
         stats.batches += 1;
-        stats.requests += jobs.len();
-        let bsz = jobs.len();
+        let bsz = admitted.len();
 
         // --- prefill: left-aligned prompts, PAD-padded ------------------
         let vmax = model.cfg.vocab.saturating_sub(1) as i32;
         let mut flat = vec![PAD; bsz * prompt_len];
-        for (s, job) in jobs.iter().enumerate() {
-            let p = &job.req.prompt;
+        for (s, bs) in admitted.iter().enumerate() {
+            let p = &bs.job.req.prompt;
             let n = p.len().min(prompt_len);
             for (j, &tok) in p[..n].iter().enumerate() {
                 // Clamp malformed ids like the artifact backend does
@@ -421,54 +979,35 @@ fn native_router_loop(
         }
         let (mut logits, mut cache) = model.prefill(&flat, bsz);
 
-        // --- decode loop -------------------------------------------------
-        let max_new: usize = jobs
-            .iter()
-            .map(|j| j.req.max_new)
-            .max()
-            .unwrap_or(0)
-            .min(model.cfg.max_seq.saturating_sub(prompt_len));
-        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); bsz];
-        let mut done = vec![false; bsz];
+        // --- decode loop: stream tokens and terminals as they happen ----
+        let max_new: usize = admitted.iter().map(|b| b.budget).max().unwrap_or(0);
+        let mut live: Vec<Option<BatchSession>> = admitted.into_iter().map(Some).collect();
         for step in 0..max_new {
             let mut next = vec![EOS; bsz];
-            for (s, job) in jobs.iter().enumerate() {
-                if done[s] || step >= job.req.max_new {
-                    done[s] = true;
-                    continue;
-                }
-                let tok = greedy_token(logits.row(s));
-                next[s] = tok;
-                if tok == EOS {
-                    done[s] = true;
-                } else {
-                    generated[s].push(tok);
-                    stats.generated_tokens += 1;
-                }
-            }
-            if done.iter().all(|&d| d) {
+            let done = step_batch(&mut live, step, &mut next, &mut stats, |s| {
+                greedy_token(logits.row(s))
+            });
+            if done {
                 break;
             }
             logits = model.decode_step(&mut cache, &next, prompt_len + step);
         }
 
-        // --- respond -------------------------------------------------------
-        for (s, job) in jobs.into_iter().enumerate() {
-            let _ = job.reply.send(Response {
-                tokens: std::mem::take(&mut generated[s]),
-                queue_ms: (t_batch - job.submitted).as_secs_f64() * 1e3,
-                latency_ms: job.submitted.elapsed().as_secs_f64() * 1e3,
-                rejected: false,
-            });
+        for bs in live.into_iter().flatten() {
+            bs.finish(&mut stats);
         }
+        sync_live(gate, &stats, t_start);
     }
     stats.wall_secs = t_start.elapsed().as_secs_f64();
+    sync_live(gate, &stats, t_start);
     Ok(stats)
 }
 
-/// One live request inside the continuous batcher.
-struct Session {
-    job: Job,
+/// One live request inside the continuous batcher: the shared
+/// streaming core (which owns the budget/cap clamp) plus the
+/// decode-batch bookkeeping.
+struct ActiveSession {
+    core: BatchSession,
     /// [`KvCachePool`] handle once the session joined the decode
     /// batch; `None` for sessions that finished at prefill.
     slot: Option<usize>,
@@ -476,31 +1015,24 @@ struct Session {
     pos: usize,
     /// Token to feed at the next decode tick.
     next_tok: i32,
-    /// Effective token budget: `min(max_new, seq_cap − prompt_len)` —
-    /// exactly the serial router's clamp, so the two paths stay
-    /// token-identical.
-    budget: usize,
-    generated: Vec<i32>,
-    /// True when `budget` was cut down by the sequence cap — reaching
-    /// it then counts as an eviction, not a normal completion.
-    capped: bool,
-    /// When the session left the queue (prefill start).
-    t_admit: Instant,
 }
 
 /// Continuous-batching scheduler over the native packed engine — the
-/// state machine behind [`Backend::NativeBatched`] (DESIGN.md §6a).
+/// state machine behind [`Backend::NativeBatched`] (DESIGN.md §6a,
+/// §12).
 ///
 /// Request lifecycle: bounded admission queue → individual prefill
 /// (prefill-then-join) → member of the shared decode batch until EOS
-/// / token budget / sequence-cap eviction → response. One
-/// [`tick`](Scheduler::tick) = admit up to `max_batch` live sessions,
-/// then one [`SlabModel::decode_batch`] step for all of them; new
-/// requests join the running batch between ticks without stalling
-/// in-flight decodes, and finished sessions free their
-/// [`KvCachePool`] slot immediately. Submissions past `queue_cap`
-/// receive an explicit rejected [`Response`] (backpressure) instead
-/// of growing the queue without bound.
+/// / token budget / sequence-cap or deadline eviction / cancellation
+/// → terminal event. One [`tick`](Scheduler::tick) = reap terminated
+/// sessions (cancelled, expired, capped — freeing their
+/// [`KvCachePool`] slots *before* admission, so a cancellation makes
+/// room in the same tick), admit up to `max_batch` live sessions,
+/// then one [`SlabModel::decode_batch_greedy`] step for all of them;
+/// each session's sampled token is streamed as [`Event::Token`] the
+/// tick it is produced — nothing is buffered. Submissions past
+/// `queue_cap` receive an immediate [`Event::Rejected`]
+/// (backpressure) instead of growing the queue without bound.
 ///
 /// Per session the sampling semantics are exactly the serial native
 /// router's (same prompt padding, same greedy policy, same budget
@@ -514,7 +1046,7 @@ pub struct Scheduler {
     seq_cap: usize,
     kv: KvCachePool,
     queue: VecDeque<Job>,
-    active: Vec<Session>,
+    active: Vec<ActiveSession>,
     stats: ServeStats,
 }
 
@@ -540,26 +1072,31 @@ impl Scheduler {
         }
     }
 
-    /// Submit a request. Returns `false` (after sending an immediate
-    /// rejected [`Response`]) when the admission queue is full.
-    pub fn enqueue(&mut self, req: Request, reply: Sender<Response>) -> bool {
-        self.enqueue_job(Job {
+    /// Submit a request directly (no [`Server`] in front), streaming
+    /// its events into `events`. Returns the session's
+    /// [`CancelHandle`], or `None` when the bounded queue rejected it
+    /// (an [`Event::Rejected`] is already in the channel).
+    pub fn enqueue(&mut self, req: Request, events: Sender<Event>) -> Option<CancelHandle> {
+        let cancel = CancelHandle::default();
+        let job = Job {
             req,
             submitted: Instant::now(),
-            reply,
-        })
+            events,
+            cancel: cancel.clone(),
+        };
+        if self.enqueue_job(job) {
+            Some(cancel)
+        } else {
+            None
+        }
     }
 
     fn enqueue_job(&mut self, job: Job) -> bool {
         if self.queue.len() >= self.cfg.queue_cap {
             self.stats.rejected += 1;
-            let waited_ms = job.submitted.elapsed().as_secs_f64() * 1e3;
-            let _ = job.reply.send(Response {
-                tokens: Vec::new(),
-                queue_ms: waited_ms,
-                latency_ms: waited_ms,
-                rejected: true,
-            });
+            if job.events.send(Event::Rejected).is_err() {
+                self.stats.dropped_clients += 1;
+            }
             return false;
         }
         self.queue.push_back(job);
@@ -591,56 +1128,108 @@ impl Scheduler {
         self.stats
     }
 
-    /// One continuous-batching step: admit up to the batch cap, then
-    /// run one shared decode step for every active session. Returns
-    /// the number of sessions decoded; an empty tick (nothing queued,
-    /// nothing active) is a no-op returning 0.
+    /// One continuous-batching step: reap terminated sessions (their
+    /// KV slots free up *before* admission), admit up to the batch
+    /// cap, then run one shared decode step for every active session.
+    /// Returns the number of sessions decoded; an empty tick (nothing
+    /// queued, nothing active) is a no-op returning 0.
     pub fn tick(&mut self) -> usize {
+        self.reap();
         self.admit();
         self.decode_tick()
     }
 
+    /// Remove sessions that terminated outside the decode path —
+    /// cancelled, client-gone, deadline-expired, or at the hard
+    /// sequence cap — and emit their terminal events. Freed KV slots
+    /// are immediately reusable by [`admit`](Scheduler::admit). The
+    /// *wait queue* is swept too: a cancelled or expired entry must
+    /// not sit behind a full batch holding its bounded-queue place
+    /// (and the caller's gate slot) until a KV slot happens to free.
+    fn reap(&mut self) {
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.queue.len() {
+            let job = &self.queue[i];
+            let dead_cancel = job.cancel.is_cancelled();
+            let dead_deadline = job
+                .deadline_at(self.cfg.deadline)
+                .is_some_and(|d| now >= d);
+            if dead_cancel || dead_deadline {
+                let job = self.queue.remove(i).expect("indexed queue entry");
+                let headroom = self.seq_cap.saturating_sub(self.model.cfg.prompt_len);
+                let mut core = BatchSession::new(job, self.cfg.deadline, now, headroom);
+                core.outcome = if dead_cancel {
+                    Outcome::Cancelled
+                } else {
+                    Outcome::DeadlineEvicted
+                };
+                core.finish(&mut self.stats);
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.active.len() {
+            let s = &self.active[i];
+            let gone = s.core.job.cancel.is_cancelled() || s.core.client_gone;
+            let expired = s.core.deadline.is_some_and(|d| now >= d);
+            if gone || expired || s.pos >= self.seq_cap {
+                let sess = self.active.remove(i);
+                let outcome = if gone {
+                    Outcome::Cancelled
+                } else if expired {
+                    Outcome::DeadlineEvicted
+                } else {
+                    Outcome::Evicted
+                };
+                self.finish(sess, outcome);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
     /// Prefill-then-join admission: each queued request prefills
-    /// alone (batch 1), samples its first token, and either finishes
-    /// on the spot (zero budget / immediate EOS / budget of one) or
-    /// adopts its KV cache into the pool and joins the decode batch.
+    /// alone (batch 1), samples and streams its first token, and
+    /// either finishes on the spot (zero budget / immediate EOS /
+    /// budget of one) or adopts its KV cache into the pool and joins
+    /// the decode batch. Cancelled or expired queue entries terminate
+    /// here without touching the engine.
     fn admit(&mut self) {
         while self.active.len() < self.cfg.max_batch && !self.kv.is_full() {
             let Some(job) = self.queue.pop_front() else {
                 break;
             };
             let t_admit = Instant::now();
-            let (logits, cache) = self.model.prefill_session(&job.req.prompt);
             let prompt_len = self.model.cfg.prompt_len;
+            // The serial router's exact clamp (inside BatchSession),
+            // so the two native paths stay token-identical.
             let headroom = self.seq_cap.saturating_sub(prompt_len);
-            // The serial router's exact clamp, so the two native paths
-            // stay token-identical; `capped` remembers whether the
-            // sequence cap (not the caller) set the budget.
-            let capped = headroom < job.req.max_new;
-            let budget = job.req.max_new.min(headroom);
-            let mut sess = Session {
-                job,
+            let mut core = BatchSession::new(job, self.cfg.deadline, t_admit, headroom);
+            // The queued-state gate: cancellation / deadline / empty
+            // budget end the session before prefill (`wants_token`
+            // leaves `core` untouched when it returns true; a capped
+            // zero-budget session classifies Evicted in finish).
+            if !core.wants_token(0, t_admit) {
+                core.finish(&mut self.stats);
+                continue;
+            }
+            let (logits, cache) = self.model.prefill_session(&core.job.req.prompt);
+            let mut sess = ActiveSession {
+                core,
                 slot: None,
                 pos: prompt_len,
                 next_tok: EOS,
-                budget,
-                generated: Vec::new(),
-                capped,
-                t_admit,
             };
-            if sess.budget == 0 {
-                self.finish(sess, capped);
-                continue;
-            }
             let first = greedy_token(logits.row(0));
             if first == EOS {
-                self.finish(sess, false);
+                self.finish(sess, Outcome::Done);
                 continue;
             }
-            sess.generated.push(first);
-            self.stats.generated_tokens += 1;
-            if sess.generated.len() >= sess.budget {
-                self.finish(sess, capped);
+            sess.core.push(first, &mut self.stats);
+            if sess.core.streamed >= sess.core.budget {
+                self.finish(sess, Outcome::Done); // finish caps→Evicted
                 continue;
             }
             sess.next_tok = first;
@@ -651,19 +1240,10 @@ impl Scheduler {
 
     /// One shared decode step for the active batch; terminating
     /// sessions (EOS / budget / cap eviction) leave it immediately.
+    /// Sessions cancelled or expired since the tick's reap pass are
+    /// caught by the same gates one tick later — never decoded past
+    /// their budget either way.
     fn decode_tick(&mut self) -> usize {
-        // Hard guard: never let a session write past the cap. The
-        // budget clamp at admission finishes capped sessions one step
-        // earlier, so this only fires if the bookkeeping drifts.
-        let mut i = 0;
-        while i < self.active.len() {
-            if self.active[i].pos >= self.seq_cap {
-                let sess = self.active.remove(i);
-                self.finish(sess, true);
-            } else {
-                i += 1;
-            }
-        }
         if self.active.is_empty() {
             return 0;
         }
@@ -676,50 +1256,47 @@ impl Scheduler {
                 pos: s.pos,
             })
             .collect();
-        let logits = self.model.decode_batch(&mut self.kv, &steps);
+        // The per-tick emit hook: one shared weight pass, then the
+        // serving argmax per row (bit-identical to serial decode).
+        let next = self.model.decode_batch_greedy(&mut self.kv, &steps);
         self.stats.batches += 1;
         let n = steps.len();
-        let mut new_tokens = 0usize;
-        // (row, evicted) of sessions that terminate this tick.
-        let mut done: Vec<(usize, bool)> = Vec::new();
+        // (row, outcome) of sessions that terminate this tick.
+        let mut done: Vec<(usize, Outcome)> = Vec::new();
         for (r, sess) in self.active.iter_mut().enumerate() {
             sess.pos += 1;
-            let tok = greedy_token(logits.row(r));
+            let tok = next[r];
             if tok == EOS {
-                done.push((r, false)); // EOS, not the cap, ended it
+                done.push((r, Outcome::Done));
                 continue;
             }
-            sess.generated.push(tok);
-            new_tokens += 1;
-            if sess.generated.len() >= sess.budget {
-                done.push((r, sess.capped));
+            sess.core.push(tok, &mut self.stats);
+            if sess.core.streamed >= sess.core.budget {
+                done.push((r, Outcome::Done)); // finish caps→Evicted
             } else {
                 sess.next_tok = tok;
             }
         }
-        self.stats.generated_tokens += new_tokens;
-        for &(r, evicted) in done.iter().rev() {
+        for &(r, outcome) in done.iter().rev() {
             let sess = self.active.remove(r);
-            self.finish(sess, evicted);
+            self.finish(sess, outcome);
         }
         n
     }
 
-    /// Complete a session: free its KV slot, account it, reply.
-    fn finish(&mut self, sess: Session, evicted: bool) {
+    /// Complete a session: free its KV slot, account it, emit the
+    /// terminal event.
+    fn finish(&mut self, mut sess: ActiveSession, outcome: Outcome) {
         if let Some(slot) = sess.slot {
             self.kv.release(slot);
         }
-        if evicted {
-            self.stats.evicted += 1;
-        }
-        self.stats.requests += 1;
-        let _ = sess.job.reply.send(Response {
-            tokens: sess.generated,
-            queue_ms: (sess.t_admit - sess.job.submitted).as_secs_f64() * 1e3,
-            latency_ms: sess.job.submitted.elapsed().as_secs_f64() * 1e3,
-            rejected: false,
-        });
+        sess.core.outcome = outcome;
+        sess.core.finish(&mut self.stats);
+    }
+
+    #[cfg(test)]
+    fn kv_active(&self) -> usize {
+        self.kv.active()
     }
 }
 
@@ -732,6 +1309,7 @@ fn batched_router_loop(
     model: Box<SlabModel>,
     scfg: ServerConfig,
     rx: Receiver<Job>,
+    gate: &Gate,
 ) -> Result<ServeStats, RuntimeError> {
     let mut sched = Scheduler::new(model, scfg.sched.clone());
     let t_start = Instant::now();
@@ -741,7 +1319,9 @@ fn batched_router_loop(
             // Idle: block for the next request (or shutdown).
             match rx.recv() {
                 Ok(job) => {
-                    sched.enqueue_job(job);
+                    if !sched.enqueue_job(job) {
+                        gate.depart(1);
+                    }
                 }
                 Err(_) => open = false,
             }
@@ -749,44 +1329,98 @@ fn batched_router_loop(
         while open {
             match rx.try_recv() {
                 Ok(job) => {
-                    sched.enqueue_job(job);
+                    if !sched.enqueue_job(job) {
+                        gate.depart(1);
+                    }
                 }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => open = false,
             }
         }
         if !sched.has_work() {
+            sync_live(gate, sched.stats(), t_start);
             if !open {
                 break; // drained and no more senders: shutdown
             }
             continue;
         }
+        let waiting = sched.queued();
         sched.tick();
+        // Jobs that left the wait queue this tick (admitted or
+        // terminated while queued) are no longer pending at the gate.
+        gate.depart(waiting.saturating_sub(sched.queued()));
+        sync_live(gate, sched.stats(), t_start);
     }
     let mut stats = sched.into_stats();
     stats.wall_secs = t_start.elapsed().as_secs_f64();
+    sync_live(gate, &stats, t_start);
     Ok(stats)
 }
 
-fn take3(mut outs: Vec<xla::Literal>) -> (xla::Literal, xla::Literal, xla::Literal) {
-    assert!(outs.len() >= 3);
-    let c = outs.pop().unwrap();
-    let b = outs.pop().unwrap();
-    let a = outs.pop().unwrap();
-    (a, b, c)
+/// Pop the three outputs of a prefill/decode artifact call — typed
+/// error instead of a panicking unwrap when an artifact returns a
+/// malformed tuple (the router thread must never die on bad data).
+fn take3(
+    name: &str,
+    mut outs: Vec<xla::Literal>,
+) -> Result<(xla::Literal, xla::Literal, xla::Literal), RuntimeError> {
+    let got = outs.len();
+    let pop = |outs: &mut Vec<xla::Literal>| {
+        outs.pop()
+            .ok_or_else(|| RuntimeError::Outputs(name.to_string(), 3, got))
+    };
+    let c = pop(&mut outs)?;
+    let b = pop(&mut outs)?;
+    let a = pop(&mut outs)?;
+    Ok((a, b, c))
+}
+
+/// In-crate test fixtures shared by the serving and HTTP test suites
+/// (the integration binaries carry their own copy in
+/// `rust/tests/common/mod.rs` — `cfg(test)` items are invisible to
+/// them).
+#[cfg(test)]
+pub(crate) mod test_support {
+    use crate::data::{EOS, PAD};
+    use crate::model::Params;
+    use crate::runtime::ModelCfg;
+
+    /// Params whose EOS logit row duplicates PAD's, so first-max
+    /// tie-breaking (PAD = 0 scans before EOS = 2) can never emit EOS
+    /// — sessions deterministically run to budget/cap. Used wherever
+    /// a test needs sessions of known length.
+    pub(crate) fn eos_free_params(cfg: &ModelCfg, seed: u64) -> Params {
+        let mut params = Params::init(cfg, seed);
+        let mut head = params.mat("lm_head");
+        let pad_row = head.row(PAD as usize).to_vec();
+        head.row_mut(EOS as usize).copy_from_slice(&pad_row);
+        params.set_mat("lm_head", &head);
+        params
+    }
 }
 
 #[cfg(test)]
 mod tests {
-    //! The native backend needs no artifacts, so the router/batcher
-    //! invariants get exercised on every `cargo test`, not only when
-    //! `make artifacts` has run.
+    //! The native backend needs no artifacts, so the router/batcher/
+    //! streaming invariants get exercised on every `cargo test`, not
+    //! only when `make artifacts` has run.
 
+    use super::test_support::eos_free_params;
     use super::*;
     use crate::runtime::ModelCfg;
+    use crate::util::prop::{check, Shrink};
+    use crate::util::rng::Pcg64;
 
     fn tiny_cfg() -> ModelCfg {
         ModelCfg::llama("tiny-serve", 32, 8, 1, 2, 16, 12, 4)
+    }
+
+    fn req(prompt: Vec<i32>, max_new: usize) -> Request {
+        Request {
+            prompt,
+            max_new,
+            deadline: None,
+        }
     }
 
     #[test]
@@ -799,25 +1433,31 @@ mod tests {
         };
         let server = Server::start_with(Backend::NativePacked(Box::new(model)), scfg);
         let n = 10;
-        let rxs: Vec<_> = (0..n)
-            .map(|i| {
-                server.submit(Request {
-                    prompt: vec![5 + i as i32, 6, 7],
-                    max_new: 1 + (i % 4),
-                })
-            })
+        let sessions: Vec<Session> = (0..n)
+            .map(|i| server.submit(req(vec![5 + i as i32, 6, 7], 1 + (i % 4))))
             .collect();
-        for (i, rx) in rxs.into_iter().enumerate() {
-            let r = rx.recv().expect("response");
+        // Session ids are unique and monotone.
+        for w in sessions.windows(2) {
+            assert!(w[0].id() < w[1].id());
+        }
+        for (i, s) in sessions.into_iter().enumerate() {
+            let r = s.collect();
             assert!(r.tokens.len() <= 1 + (i % 4), "token budget violated");
             assert!(r.latency_ms >= r.queue_ms);
             assert!(r.tokens.iter().all(|&t| t != EOS && t != PAD));
+            if !r.tokens.is_empty() {
+                assert!(r.ttft_ms > 0.0, "ttft must be set when tokens streamed");
+            }
         }
         let stats = server.shutdown().expect("stats");
         assert_eq!(stats.requests, n);
         assert!(stats.batches >= n.div_ceil(3));
         assert!(stats.requests <= stats.batches * 3);
         assert!(stats.wall_secs > 0.0);
+        if stats.generated_tokens > 0 {
+            assert!(stats.ttft_samples > 0);
+            assert!(stats.mean_ttft_ms() > 0.0);
+        }
     }
 
     #[test]
@@ -830,23 +1470,17 @@ mod tests {
             Backend::NativePacked(Box::new(model)),
             ServerConfig::default(),
         );
-        let bad = server.generate(Request {
-            prompt: vec![-7, i32::MAX, 9999, 5],
-            max_new: 3,
-        });
+        let bad = server.generate(req(vec![-7, i32::MAX, 9999, 5], 3));
         assert!(bad.tokens.len() <= 3);
         // The server is still alive and serves well-formed requests.
-        let ok = server.generate(Request {
-            prompt: vec![5, 6],
-            max_new: 3,
-        });
+        let ok = server.generate(req(vec![5, 6], 3));
         assert!(ok.tokens.len() <= 3);
         let stats = server.shutdown().expect("stats");
         assert_eq!(stats.requests, 2);
     }
 
     /// Drive a server over `prompts`/`budgets`, returning each
-    /// request's tokens (order-stable).
+    /// request's blocking response (order-stable).
     fn serve_all(
         backend: Backend,
         scfg: ServerConfig,
@@ -854,19 +1488,26 @@ mod tests {
         budgets: &[usize],
     ) -> Vec<Response> {
         let server = Server::start_with(backend, scfg);
-        let rxs: Vec<_> = prompts
+        let sessions: Vec<Session> = prompts
             .iter()
             .zip(budgets)
-            .map(|(p, &b)| {
-                server.submit(Request {
-                    prompt: p.clone(),
-                    max_new: b,
-                })
-            })
+            .map(|(p, &b)| server.submit(req(p.clone(), b)))
             .collect();
-        let out = rxs.into_iter().map(|rx| rx.recv().expect("response")).collect();
+        let out = sessions.into_iter().map(|s| s.collect()).collect();
         server.shutdown().expect("stats");
         out
+    }
+
+    /// Consume a session's raw event stream: (tokens, terminal).
+    fn stream_all(session: Session) -> (Vec<i32>, Event) {
+        let mut tokens = Vec::new();
+        for ev in session.iter() {
+            match ev {
+                Event::Token(t) => tokens.push(t),
+                terminal => return (tokens, terminal),
+            }
+        }
+        panic!("stream ended without a terminal event");
     }
 
     #[test]
@@ -917,6 +1558,111 @@ mod tests {
         assert_eq!(serial, batched, "continuous batcher diverged from serial router");
     }
 
+    /// A request mix for the streaming property test; shrinks by
+    /// dropping requests.
+    #[derive(Debug, Clone)]
+    struct ReqMix(Vec<(Vec<i32>, usize)>);
+
+    impl Shrink for ReqMix {
+        fn shrinks(&self) -> Vec<Self> {
+            let mut out = Vec::new();
+            if self.0.len() > 1 {
+                out.push(ReqMix(self.0[..self.0.len() / 2].to_vec()));
+                out.push(ReqMix(self.0[self.0.len() / 2..].to_vec()));
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn streaming_matches_collect_for_every_native_backend() {
+        // The streaming contract: for random request mixes, the Token
+        // events of a session concatenate bit-identically to the
+        // blocking collect() response, on both native backends, and
+        // both equal the engine-level generate_batch reference.
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 61);
+        let reference_model = SlabModel::from_dense(&params, 1);
+        check(
+            "stream==collect per backend",
+            4,
+            |rng: &mut Pcg64| {
+                let n = 2 + rng.below_usize(4);
+                ReqMix(
+                    (0..n)
+                        .map(|_| {
+                            let len = rng.below_usize(6);
+                            let p: Vec<i32> =
+                                (0..len).map(|_| 5 + rng.below(20) as i32).collect();
+                            (p, rng.below_usize(7))
+                        })
+                        .collect(),
+                )
+            },
+            |mix: &ReqMix| {
+                let prompts: Vec<Vec<i32>> = mix.0.iter().map(|(p, _)| p.clone()).collect();
+                let budgets: Vec<usize> = mix.0.iter().map(|(_, b)| *b).collect();
+                let reference: Vec<Vec<i32>> = mix
+                    .0
+                    .iter()
+                    .map(|(p, b)| reference_model.generate_batch(&[p.clone()], *b).remove(0))
+                    .collect();
+                let backends: [fn(Params) -> Backend; 2] = [
+                    |p| Backend::NativePacked(Box::new(SlabModel::from_dense(&p, 1))),
+                    |p| Backend::NativeBatched(Box::new(SlabModel::from_dense(&p, 1))),
+                ];
+                for mk in backends {
+                    // Streamed consumption.
+                    let server = Server::start_with(mk(params.clone()), ServerConfig::default());
+                    let sessions: Vec<Session> = prompts
+                        .iter()
+                        .zip(&budgets)
+                        .map(|(p, &b)| server.submit(req(p.clone(), b)))
+                        .collect();
+                    let streamed: Vec<(Vec<i32>, Event)> =
+                        sessions.into_iter().map(stream_all).collect();
+                    server.shutdown().expect("stats");
+                    for (i, (tokens, terminal)) in streamed.iter().enumerate() {
+                        if tokens != &reference[i] {
+                            return Err(format!(
+                                "streamed req {i}: {tokens:?} != reference {:?}",
+                                reference[i]
+                            ));
+                        }
+                        match terminal {
+                            Event::Done(s) | Event::Evicted(s) => {
+                                if s.tokens != tokens.len() {
+                                    return Err(format!(
+                                        "terminal stats.tokens {} != streamed {}",
+                                        s.tokens,
+                                        tokens.len()
+                                    ));
+                                }
+                            }
+                            other => return Err(format!("unexpected terminal {other:?}")),
+                        }
+                    }
+                    // Blocking collect() over a fresh identical server.
+                    let collected: Vec<Vec<i32>> = serve_all(
+                        mk(params.clone()),
+                        ServerConfig::default(),
+                        &prompts,
+                        &budgets,
+                    )
+                    .into_iter()
+                    .map(|r| r.tokens)
+                    .collect();
+                    let streamed_tokens: Vec<Vec<i32>> =
+                        streamed.into_iter().map(|(t, _)| t).collect();
+                    if collected != streamed_tokens {
+                        return Err("collect() diverged from streamed tokens".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
     #[test]
     fn scheduler_empty_tick_is_noop() {
         let cfg = tiny_cfg();
@@ -941,16 +1687,16 @@ mod tests {
         let model = Box::new(SlabModel::from_dense(&params, 1));
         let mut s = Scheduler::new(model, SchedulerConfig::default());
         let (tx, rx) = channel();
-        assert!(s.enqueue(Request { prompt: vec![5, 6, 7], max_new: 6 }, tx));
+        assert!(s.enqueue(req(vec![5, 6, 7], 6), tx).is_some());
         while s.has_work() {
             s.tick();
         }
-        let r = rx.recv().expect("response");
-        assert!(!r.rejected);
+        let r = collect_events(&rx);
+        assert!(!r.rejected && !r.cancelled && !r.evicted);
         assert_eq!(r.tokens, reference);
         assert_eq!(s.stats().requests, 1);
         assert_eq!(s.active_sessions(), 0);
-        assert_eq!(s.kv.active(), 0, "kv slot must be released");
+        assert_eq!(s.kv_active(), 0, "kv slot must be released");
     }
 
     #[test]
@@ -961,21 +1707,21 @@ mod tests {
             model,
             SchedulerConfig {
                 max_batch: 1,
-                max_seq_len: 0,
                 queue_cap: 2,
+                ..Default::default()
             },
         );
         let mut rxs = Vec::new();
         for i in 0..5 {
             let (tx, rx) = channel();
-            let admitted = s.enqueue(Request { prompt: vec![5 + i], max_new: 3 }, tx);
+            let admitted = s.enqueue(req(vec![5 + i], 3), tx).is_some();
             assert_eq!(admitted, i < 2, "queue_cap 2 admits exactly the first two");
             rxs.push(rx);
         }
         assert_eq!(s.stats().rejected, 3);
-        // Rejections reply immediately, before any tick.
+        // Rejections terminate immediately, before any tick.
         for rx in &rxs[2..] {
-            let r = rx.recv().expect("rejected response");
+            let r = collect_events(rx);
             assert!(r.rejected);
             assert!(r.tokens.is_empty());
         }
@@ -983,7 +1729,7 @@ mod tests {
             s.tick();
         }
         for rx in &rxs[..2] {
-            let r = rx.recv().expect("served response");
+            let r = collect_events(rx);
             assert!(!r.rejected);
             assert!(r.tokens.len() <= 3);
         }
@@ -997,16 +1743,7 @@ mod tests {
         // one must be evicted exactly at the cap, the other must be
         // untouched, and the batch must shrink mid-flight.
         let cfg = tiny_cfg();
-        let mut params = Params::init(&cfg, 59);
-        // Make EOS unreachable: its lm_head row duplicates PAD's, so
-        // their logits tie bit-exactly and first-max tie-breaking
-        // (PAD = 0 scans before EOS = 2) always picks PAD — sessions
-        // deterministically run to budget/cap.
-        let mut head = params.mat("lm_head");
-        let pad_row = head.row(PAD as usize).to_vec();
-        head.row_mut(EOS as usize).copy_from_slice(&pad_row);
-        params.set_mat("lm_head", &head);
-
+        let params = eos_free_params(&cfg, 59);
         let t = cfg.prompt_len;
         let cap_headroom = 3usize;
         let model = Box::new(SlabModel::from_dense(&params, 1));
@@ -1016,26 +1753,353 @@ mod tests {
                 max_batch: 4,
                 max_seq_len: t + cap_headroom,
                 queue_cap: 8,
+                ..Default::default()
             },
         );
         let (tx_a, rx_a) = channel();
-        s.enqueue(Request { prompt: vec![5, 6], max_new: 10 }, tx_a); // capped at 3
+        s.enqueue(req(vec![5, 6], 10), tx_a); // capped at 3
         assert_eq!(s.tick(), 1, "A admitted and decoding alone");
         let (tx_b, rx_b) = channel();
-        s.enqueue(Request { prompt: vec![9, 8, 7], max_new: 2 }, tx_b); // own budget 2
+        s.enqueue(req(vec![9, 8, 7], 2), tx_b); // own budget 2
         assert_eq!(s.tick(), 2, "B joined A mid-stream");
         while s.has_work() {
             s.tick();
         }
-        let ra = rx_a.recv().expect("A");
-        let rb = rx_b.recv().expect("B");
+        let ra = collect_events(&rx_a);
+        let rb = collect_events(&rx_b);
         assert_eq!(ra.tokens.len(), cap_headroom, "A evicted at the cap");
+        assert!(ra.evicted, "A's terminal event is Evicted");
         assert_eq!(rb.tokens.len(), 2, "B unaffected by A's eviction");
+        assert!(!rb.evicted);
         assert!(ra.tokens.iter().chain(rb.tokens.iter()).all(|&tk| tk != EOS));
         let st = s.stats();
         assert_eq!(st.evicted, 1, "exactly A hit the cap");
         assert_eq!(st.requests, 2);
-        assert_eq!(s.kv.active(), 0, "both kv slots released");
+        assert_eq!(s.kv_active(), 0, "both kv slots released");
+    }
+
+    #[test]
+    fn cancellation_frees_kv_slot_for_waiting_request() {
+        // The cancellation acceptance path: with max_batch 1, a
+        // long-running session blocks a queued one; cancelling the
+        // first frees its KV slot (reap runs before admit inside the
+        // same tick) and the waiting session completes normally with
+        // exactly its serial-reference tokens.
+        let cfg = tiny_cfg();
+        let params = eos_free_params(&cfg, 62);
+        let reference_b = SlabModel::from_dense(&params, 1)
+            .generate_batch(&[vec![9, 8]], 3)
+            .remove(0);
+        let reference_a = SlabModel::from_dense(&params, 1)
+            .generate_batch(&[vec![5, 6]], 8)
+            .remove(0);
+        let model = Box::new(SlabModel::from_dense(&params, 1));
+        let mut s = Scheduler::new(
+            model,
+            SchedulerConfig {
+                max_batch: 1,
+                ..Default::default()
+            },
+        );
+        let (tx_a, rx_a) = channel();
+        let cancel_a = s.enqueue(req(vec![5, 6], 8), tx_a).expect("admitted");
+        let (tx_b, rx_b) = channel();
+        s.enqueue(req(vec![9, 8], 3), tx_b).expect("queued");
+        s.tick(); // A admitted (streams first token), decodes once
+        s.tick();
+        assert_eq!(s.active_sessions(), 1, "batch full: B still queued");
+        assert_eq!(s.queued(), 1);
+        cancel_a.cancel();
+        let decoded = s.tick(); // reap A → admit B → decode B
+        assert_eq!(decoded, 1, "B decoding the tick A was reaped");
+        assert_eq!(s.queued(), 0);
+        while s.has_work() {
+            s.tick();
+        }
+        let ra = collect_events(&rx_a);
+        assert!(ra.cancelled, "A's terminal is cancelled");
+        assert!(!ra.tokens.is_empty(), "A streamed before cancellation");
+        assert_eq!(
+            ra.tokens[..],
+            reference_a[..ra.tokens.len()],
+            "cancelled stream is a prefix of the serial reference"
+        );
+        let rb = collect_events(&rx_b);
+        assert!(!rb.cancelled);
+        assert_eq!(rb.tokens, reference_b, "B unaffected by A's cancellation");
+        let st = s.stats();
+        assert_eq!(st.cancelled, 1);
+        assert_eq!(st.requests, 2);
+        assert_eq!(s.kv_active(), 0, "all kv slots released");
+    }
+
+    #[test]
+    fn dropping_a_session_cancels_it() {
+        // Dropping the handle IS cancellation (Session::drop sets the
+        // flag): the router stops decoding for the abandoned session
+        // and its capacity serves the follow-up request.
+        let cfg = ModelCfg::llama("slow-drop", 32, 64, 2, 2, 128, 1024, 4);
+        let params = eos_free_params(&cfg, 70);
+        let budget = cfg.max_seq - cfg.prompt_len;
+        let model = Box::new(SlabModel::from_dense(&params, 1));
+        let server = Server::start_with(
+            Backend::NativeBatched(model),
+            ServerConfig {
+                sched: SchedulerConfig {
+                    max_batch: 1,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        drop(server.submit(req(vec![5, 6], budget)));
+        let follow = server.generate(req(vec![9, 8], 3));
+        assert!(!follow.rejected && !follow.cancelled && !follow.incomplete);
+        assert_eq!(follow.tokens.len(), 3, "EOS-free follow-up runs to budget");
+        let stats = server.shutdown().expect("stats");
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.cancelled, 1, "dropped handle counts as cancellation");
+    }
+
+    #[test]
+    fn capped_requests_classify_evicted_on_every_backend() {
+        // A request whose budget exceeds the sequence headroom must
+        // terminate as Evicted — with identical tokens — on the
+        // dynamic and continuous backends alike: one Event contract,
+        // not per-backend classification.
+        let cfg = tiny_cfg();
+        let params = eos_free_params(&cfg, 68);
+        let headroom = cfg.max_seq - cfg.prompt_len;
+        let run = |backend: Backend| {
+            let server = Server::start_with(backend, ServerConfig::default());
+            let r = server.generate(req(vec![5, 6], headroom + 5));
+            let stats = server.shutdown().expect("stats");
+            (r, stats)
+        };
+        let (rp, sp) = run(Backend::NativePacked(Box::new(SlabModel::from_dense(&params, 1))));
+        let (rb, sb) = run(Backend::NativeBatched(Box::new(SlabModel::from_dense(&params, 1))));
+        for (r, s) in [(&rp, &sp), (&rb, &sb)] {
+            assert!(r.evicted, "capped request must classify Evicted");
+            assert!(!r.cancelled && !r.rejected && !r.incomplete);
+            assert_eq!(r.tokens.len(), headroom, "EOS-free: runs to the cap");
+            assert_eq!(s.evicted, 1);
+        }
+        assert_eq!(rp.tokens, rb.tokens, "token-identical across backends");
+    }
+
+    #[test]
+    fn dynamic_batcher_emits_terminals_mid_batch() {
+        // A session's terminal event must leave the dynamic batcher
+        // the step it is known, not when the whole batch finishes.
+        // Proof without wall-clock asserts: cancel A mid-batch; once
+        // A's terminal arrives, B must *still* be decoding — so
+        // cancelling B at that moment yields a truncated, cancelled
+        // B stream (were the batch already over, B would have
+        // completed untouched).
+        let cfg = ModelCfg::llama("slow-dyn", 32, 64, 2, 2, 128, 1024, 4);
+        let params = eos_free_params(&cfg, 69);
+        let budget = cfg.max_seq - cfg.prompt_len;
+        let model = SlabModel::from_dense(&params, 1);
+        let server = Server::start_with(
+            Backend::NativePacked(Box::new(model)),
+            ServerConfig {
+                serve_batch: 2,
+                ..Default::default()
+            },
+        );
+        let a = server.submit(req(vec![5, 6], budget));
+        let b = server.submit(req(vec![9, 8], budget));
+        let mut a_tokens = 0usize;
+        while a_tokens < 2 {
+            match a.recv().expect("A streaming") {
+                Event::Token(_) => a_tokens += 1,
+                ev => panic!("early terminal {ev:?}"),
+            }
+        }
+        a.cancel();
+        let ra = a.collect();
+        assert!(ra.cancelled, "A terminates cancelled");
+        assert!(ra.tokens.len() < budget, "A cut short mid-batch");
+        b.cancel();
+        let rb = b.collect();
+        assert!(
+            rb.cancelled,
+            "B was still decoding when A's terminal arrived — terminals must not wait for the batch"
+        );
+        assert!(rb.tokens.len() < budget);
+        let stats = server.shutdown().expect("stats");
+        assert_eq!(stats.cancelled, 2);
+        assert_eq!(stats.requests, 2);
+    }
+
+    #[test]
+    fn queued_session_cancel_is_reaped_behind_a_full_batch() {
+        // A cancelled (or expired) entry must not sit in the wait
+        // queue holding its bounded-queue place until a KV slot
+        // frees: reap sweeps the queue every tick, so its terminal
+        // event arrives while the batch is still fully occupied.
+        let cfg = tiny_cfg();
+        let params = eos_free_params(&cfg, 67);
+        let model = Box::new(SlabModel::from_dense(&params, 1));
+        let mut s = Scheduler::new(
+            model,
+            SchedulerConfig {
+                max_batch: 1,
+                ..Default::default()
+            },
+        );
+        let (tx_a, rx_a) = channel();
+        let headroom = cfg.max_seq - cfg.prompt_len;
+        s.enqueue(req(vec![5, 6], headroom), tx_a).expect("admitted");
+        let (tx_b, rx_b) = channel();
+        let cancel_b = s.enqueue(req(vec![9, 8], 3), tx_b).expect("queued");
+        s.tick(); // A occupies the only slot; B waits
+        assert_eq!((s.active_sessions(), s.queued()), (1, 1));
+        cancel_b.cancel();
+        s.tick(); // reap sweeps the queue: B terminates *now*
+        assert_eq!(s.queued(), 0, "cancelled queue entry reaped");
+        assert_eq!(s.active_sessions(), 1, "A still decoding");
+        let rb = collect_events(&rx_b);
+        assert!(rb.cancelled && rb.tokens.is_empty() && !rb.incomplete);
+        assert_eq!(s.stats().cancelled, 1);
+        while s.has_work() {
+            s.tick();
+        }
+        let ra = collect_events(&rx_a);
+        assert!(!ra.cancelled && ra.tokens.len() == headroom);
+        assert_eq!(s.stats().requests, 2);
+        assert_eq!(s.kv_active(), 0);
+    }
+
+    #[test]
+    fn deadline_evicts_queued_and_running_sessions() {
+        let cfg = tiny_cfg();
+        let params = eos_free_params(&cfg, 63);
+        // (a) Already-expired deadline: evicted at admission, before
+        // the engine runs — zero tokens, Evicted terminal.
+        let model = Box::new(SlabModel::from_dense(&params, 1));
+        let mut s = Scheduler::new(model, SchedulerConfig::default());
+        let (tx, rx) = channel();
+        s.enqueue(
+            Request {
+                prompt: vec![5, 6],
+                max_new: 4,
+                deadline: Some(Duration::ZERO),
+            },
+            tx,
+        )
+        .expect("queued");
+        while s.has_work() {
+            s.tick();
+        }
+        let r = collect_events(&rx);
+        assert!(r.evicted && !r.cancelled);
+        assert!(r.tokens.is_empty());
+        assert_eq!(s.stats().deadline_evicted, 1);
+        assert_eq!(s.stats().generated_tokens, 0);
+        assert_eq!(s.kv_active(), 0);
+
+        // (b) Config-default deadline applies to requests without one.
+        let model = Box::new(SlabModel::from_dense(&params, 1));
+        let mut s = Scheduler::new(
+            model,
+            SchedulerConfig {
+                deadline: Duration::from_nanos(1),
+                ..Default::default()
+            },
+        );
+        let (tx, rx) = channel();
+        s.enqueue(req(vec![5, 6], 4), tx).expect("queued");
+        std::thread::sleep(Duration::from_millis(1));
+        while s.has_work() {
+            s.tick();
+        }
+        let r = collect_events(&rx);
+        assert!(r.evicted);
+        assert_eq!(s.stats().deadline_evicted, 1);
+    }
+
+    #[test]
+    fn cancellation_fuzz_slot_accounting_stays_consistent() {
+        // Random interleavings of enqueue / tick / cancel must never
+        // corrupt the scheduler's slot accounting: every session gets
+        // exactly one terminal event, every KV slot is released, and
+        // every stream — cancelled or not — is a prefix of (or equal
+        // to) its serial reference.
+        let cfg = tiny_cfg();
+        let params = eos_free_params(&cfg, 64);
+        let reference_model = SlabModel::from_dense(&params, 1);
+        let seq_headroom = cfg.max_seq - cfg.prompt_len;
+        let mut rng = Pcg64::seed_from_u64(0xfu64 ^ 0x5e55);
+        for round in 0..6 {
+            let model = Box::new(SlabModel::from_dense(&params, 1));
+            let mut s = Scheduler::new(
+                model,
+                SchedulerConfig {
+                    max_batch: 1 + rng.below_usize(3),
+                    queue_cap: 16,
+                    ..Default::default()
+                },
+            );
+            let n = 3 + rng.below_usize(5);
+            let mut rxs = Vec::new();
+            let mut handles = Vec::new();
+            let mut specs = Vec::new();
+            let mut enqueued = 0usize;
+            while enqueued < n || s.has_work() {
+                let op = rng.below(3);
+                if op == 0 && enqueued < n {
+                    let len = rng.below_usize(5);
+                    let prompt: Vec<i32> = (0..len).map(|_| 5 + rng.below(20) as i32).collect();
+                    let budget = 1 + rng.below_usize(6);
+                    let (tx, rx) = channel();
+                    let handle = s.enqueue(req(prompt.clone(), budget), tx);
+                    assert!(handle.is_some(), "queue_cap 16 never overflows here");
+                    rxs.push(rx);
+                    handles.push(handle.unwrap());
+                    specs.push((prompt, budget));
+                    enqueued += 1;
+                } else if op == 1 && !handles.is_empty() {
+                    // Cancel a random session (possibly already done —
+                    // cancelling a finished session must be harmless).
+                    handles[rng.below_usize(handles.len())].cancel();
+                } else {
+                    s.tick();
+                }
+            }
+            assert_eq!(s.active_sessions(), 0, "round {round}: drained");
+            assert_eq!(s.kv_active(), 0, "round {round}: every kv slot released");
+            let st = s.stats();
+            assert_eq!(st.requests, n, "round {round}: one terminal per session");
+            assert_eq!(st.rejected, 0);
+            let mut cancelled_seen = 0usize;
+            for (i, rx) in rxs.iter().enumerate() {
+                let r = collect_events(rx);
+                let (prompt, budget) = &specs[i];
+                let reference = reference_model
+                    .generate_batch(&[prompt.clone()], *budget)
+                    .remove(0);
+                assert_eq!(reference.len(), (*budget).min(seq_headroom), "EOS-free");
+                if r.cancelled {
+                    cancelled_seen += 1;
+                    assert!(
+                        r.tokens.len() <= reference.len(),
+                        "round {round} req {i}: cancelled stream within budget"
+                    );
+                } else {
+                    assert_eq!(
+                        r.tokens, reference,
+                        "round {round} req {i}: uncancelled stream must be bit-identical"
+                    );
+                }
+                assert_eq!(
+                    r.tokens[..],
+                    reference[..r.tokens.len()],
+                    "round {round} req {i}: stream is a prefix of the serial reference"
+                );
+            }
+            assert_eq!(cancelled_seen, st.cancelled, "round {round}: cancel accounting");
+        }
     }
 
     #[test]
@@ -1048,25 +2112,17 @@ mod tests {
         let scfg = ServerConfig {
             sched: SchedulerConfig {
                 max_batch: 1,
-                max_seq_len: 0,
                 queue_cap: 1,
+                ..Default::default()
             },
             ..Default::default()
         };
         let server = Server::start_with(Backend::NativeBatched(model), scfg);
         let n = 12;
-        let rxs: Vec<_> = (0..n)
-            .map(|i| {
-                server.submit(Request {
-                    prompt: vec![5 + (i % 20) as i32],
-                    max_new: 2,
-                })
-            })
+        let sessions: Vec<Session> = (0..n)
+            .map(|i| server.submit(req(vec![5 + (i % 20) as i32], 2)))
             .collect();
-        let responses: Vec<Response> = rxs
-            .into_iter()
-            .map(|rx| rx.recv().expect("response"))
-            .collect();
+        let responses: Vec<Response> = sessions.into_iter().map(|s| s.collect()).collect();
         let stats = server.shutdown().expect("stats");
         let served = responses.iter().filter(|r| !r.rejected).count();
         let rejected = responses.iter().filter(|r| r.rejected).count();
@@ -1084,6 +2140,91 @@ mod tests {
     }
 
     #[test]
+    fn submit_gate_rejects_uniformly_across_backends() {
+        // queue_cap 0 is the deterministic drain mode: every
+        // submission is rejected at the gate, for dynamic and
+        // continuous backends alike — the uniform backpressure path.
+        let cfg = tiny_cfg();
+        let backends: [fn(&ModelCfg) -> Backend; 2] = [
+            |c| Backend::NativePacked(Box::new(SlabModel::from_dense(&Params::init(c, 65), 1))),
+            |c| Backend::NativeBatched(Box::new(SlabModel::from_dense(&Params::init(c, 65), 1))),
+        ];
+        for mk in backends {
+            let server = Server::start_with(
+                mk(&cfg),
+                ServerConfig {
+                    queue_cap: 0,
+                    ..Default::default()
+                },
+            );
+            let responses: Vec<Response> =
+                (0..3).map(|i| server.generate(req(vec![5 + i], 2))).collect();
+            for r in &responses {
+                assert!(r.rejected);
+                assert!(r.tokens.is_empty());
+            }
+            assert_eq!(server.stats().rejected, 3, "live stats see gate rejections");
+            let stats = server.shutdown().expect("stats");
+            assert_eq!(stats.rejected, 3);
+            assert_eq!(stats.requests, 0);
+        }
+    }
+
+    #[test]
+    fn server_cancel_stops_stream_mid_decode() {
+        // End-to-end over the Server API: cancel after the second
+        // streamed token; the stream terminates with cancelled=true
+        // well before the budget, and the router survives to serve
+        // the next request. The config makes the full completion take
+        // ~1k decode ticks on a dim-64 model, so the client's cancel
+        // (issued microseconds after the first tokens) lands
+        // mid-stream with enormous margin.
+        let cfg = ModelCfg::llama("slow-serve", 32, 64, 2, 2, 128, 1024, 4);
+        let params = eos_free_params(&cfg, 66);
+        let budget = cfg.max_seq - cfg.prompt_len; // long-running
+        let model = Box::new(SlabModel::from_dense(&params, 1));
+        let server = Server::start_with(Backend::NativeBatched(model), ServerConfig::default());
+        let session = server.submit(req(vec![5, 6, 7], budget));
+        let mut tokens = Vec::new();
+        let mut terminal = None;
+        while tokens.len() < 2 {
+            match session.recv().expect("stream open") {
+                Event::Token(t) => tokens.push(t),
+                ev => {
+                    terminal = Some(ev);
+                    break;
+                }
+            }
+        }
+        assert!(terminal.is_none(), "budget {budget} outlives two tokens");
+        session.cancel();
+        let mut saw_terminal = false;
+        for ev in session.iter() {
+            match ev {
+                Event::Token(t) => tokens.push(t),
+                Event::Done(s) => {
+                    assert!(s.cancelled);
+                    assert_eq!(s.tokens, tokens.len());
+                    saw_terminal = true;
+                }
+                other => panic!("unexpected terminal {other:?}"),
+            }
+        }
+        assert!(saw_terminal);
+        assert!(
+            tokens.len() < budget,
+            "cancellation must stop the stream early ({} of {budget})",
+            tokens.len()
+        );
+        // Router alive and the KV slot free: a fresh request serves.
+        let follow_up = server.generate(req(vec![9, 10], 3));
+        assert!(!follow_up.rejected && !follow_up.cancelled);
+        let stats = server.shutdown().expect("stats");
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(stats.requests, 2);
+    }
+
+    #[test]
     fn native_backend_is_deterministic_across_servers() {
         let cfg = tiny_cfg();
         let run = || {
@@ -1092,15 +2233,44 @@ mod tests {
                 Backend::NativePacked(Box::new(model)),
                 ServerConfig::default(),
             );
-            let out = server
-                .generate(Request {
-                    prompt: vec![9, 10, 11],
-                    max_new: 6,
-                })
-                .tokens;
+            let out = server.generate(req(vec![9, 10, 11], 6)).tokens;
             server.shutdown().expect("stats");
             out
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn serve_stats_table_renders_every_counter() {
+        let stats = ServeStats {
+            requests: 7,
+            batches: 3,
+            generated_tokens: 21,
+            rejected: 2,
+            evicted: 1,
+            deadline_evicted: 1,
+            cancelled: 2,
+            dropped_clients: 1,
+            ttft_ms_total: 14.0,
+            ttft_samples: 7,
+            wall_secs: 2.0,
+        };
+        assert!((stats.mean_ttft_ms() - 2.0).abs() < 1e-12);
+        let rendered = stats.table("serve").render();
+        for key in [
+            "requests",
+            "batches",
+            "generated_tokens",
+            "tokens_per_sec",
+            "rejected",
+            "evicted",
+            "deadline_evicted",
+            "cancelled",
+            "dropped_clients",
+            "mean_ttft_ms",
+            "wall_secs",
+        ] {
+            assert!(rendered.contains(key), "missing {key} in:\n{rendered}");
+        }
     }
 }

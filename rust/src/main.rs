@@ -13,6 +13,9 @@
 //! slab table1  --models small,base,large [--groups "US (50%)"]
 //! slab table2 | table3 | fig1 | fig3
 //! slab serve   --model base --requests 64
+//! slab serve   --http 127.0.0.1:8080 [--model small] [--ckpt runs/small.slabckpt]
+//!              [--packed runs/small_slab.packed] [--batch 8] [--queue-cap 64]
+//!              [--seq-cap N] [--deadline-ms 0]                               # artifact-free
 //! ```
 //!
 //! `slab --sweep` / `slab --eval` (no subcommand) are shorthands for
@@ -43,16 +46,20 @@
 )]
 
 use slab::baselines::{Method, SparseGptConfig};
-use slab::coordinator::{CaptureEngine, CompressJob, Engine, Request, Server, ServerConfig};
+use slab::coordinator::{
+    load_packed_checkpoint, Backend, CaptureEngine, CompressJob, Engine, HttpServer, Request,
+    SchedulerConfig, Server, ServerConfig,
+};
 use slab::eval::{perplexity, zero_shot};
 use slab::experiments::{self, Lab, SweepConfig};
-use slab::model::Params;
+use slab::model::{Params, SlabModel};
 use slab::report::Table;
 use slab::runtime::ModelCfg;
 use slab::slab::{SlabConfig, Structure};
 use slab::sparse::{PATTERN_2_4, PATTERN_4_8};
 use slab::util::cli::Args;
 use std::path::PathBuf;
+use std::time::Duration;
 
 fn main() {
     let args = match Args::from_env(true) {
@@ -180,6 +187,59 @@ fn run_sweep(args: &Args) -> anyhow::Result<()> {
         println!("wrote {p}");
     }
     println!("appended to {}", out_md.display());
+    Ok(())
+}
+
+/// `slab serve --http <addr>`: the artifact-free HTTP front-end — a
+/// native [`SlabModel`] behind the continuous-batching scheduler
+/// behind `coordinator::http` (DESIGN.md §12). Streams tokens over
+/// SSE-style chunked responses, cancels via `DELETE
+/// /v1/sessions/{id}`, and reports live `ServeStats` on `/metrics`.
+/// Serves until the process is killed.
+fn run_http_serve(args: &Args, addr: &str) -> anyhow::Result<()> {
+    let model_name = args.get_str("model", "small");
+    let cfg = native_model_cfg(&model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}' (small | base | large)"))?;
+    let params = match args.get("ckpt") {
+        Some(p) => Params::load(&cfg, &PathBuf::from(p))?,
+        None => Params::init(&cfg, args.get_u64("seed", 42)?),
+    };
+    let threads = args.get_usize("threads", 0)?;
+    // --packed: serve the compression pipeline's packed checkpoint
+    // straight through the packed engine (no dense Ŵ anywhere);
+    // without it the dense params serve as-is.
+    let model = match args.get("packed") {
+        Some(p) => {
+            let packed = load_packed_checkpoint(&PathBuf::from(p))
+                .map_err(|e| anyhow::anyhow!("load packed checkpoint {p}: {e}"))?;
+            let model = SlabModel::from_packed(&params, &packed, threads);
+            println!(
+                "serving packed checkpoint {p}: {} packed linears, {:.2} MiB resident",
+                model.packed_linear_count(),
+                model.weights_nbytes() as f64 / (1 << 20) as f64
+            );
+            model
+        }
+        None => SlabModel::from_dense(&params, threads),
+    };
+    let queue_cap = args.get_usize("queue-cap", 64)?;
+    let scfg = ServerConfig {
+        queue_cap,
+        sched: SchedulerConfig {
+            max_batch: args.get_usize("batch", 8)?,
+            max_seq_len: args.get_usize("seq-cap", 0)?,
+            queue_cap,
+            deadline: Duration::from_millis(args.get_u64("deadline-ms", 0)?),
+        },
+        ..Default::default()
+    };
+    let server = Server::start_with(Backend::NativeBatched(Box::new(model)), scfg);
+    let http = HttpServer::bind(addr, server).map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+    println!("listening on http://{}", http.addr());
+    println!("  POST   /v1/generate       {{\"prompt\": [5,6,7], \"max_new\": 16, \"stream\": true, \"deadline_ms\": 500}}");
+    println!("  DELETE /v1/sessions/{{id}}  cancel a live stream");
+    println!("  GET    /healthz | /metrics");
+    http.serve_forever();
     Ok(())
 }
 
@@ -335,6 +395,11 @@ fn run(args: &Args) -> anyhow::Result<()> {
             t.print();
             t.append_to(&out_md)?;
         }
+        Some("serve") if args.get("http").is_some() => {
+            // Artifact-free HTTP front-end over the native engine.
+            let addr = args.get("http").unwrap_or_default().to_string();
+            run_http_serve(args, &addr)?;
+        }
         Some("serve") => {
             // No Lab here: xla_extension 0.5.1 cannot host two PJRT
             // clients in one process, and the Server's router thread
@@ -364,25 +429,26 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let g = &g;
             let mut rng = slab::util::rng::Pcg64::seed_from_u64(9);
             let mut latencies = Vec::new();
-            let rxs: Vec<_> = (0..n_req)
+            let sessions: Vec<_> = (0..n_req)
                 .map(|_| {
                     server.submit(Request {
                         prompt: g.sample_sentence(&mut rng),
                         max_new: 16,
+                        deadline: None,
                     })
                 })
                 .collect();
-            for rx in rxs {
-                let resp = rx.recv()?;
-                latencies.push(resp.latency_ms);
+            for session in sessions {
+                latencies.push(session.collect().latency_ms);
             }
             let stats = server.shutdown().map_err(|e| anyhow::anyhow!("{e}"))?;
             latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
             println!(
-                "served {} requests in {} batches: {:.1} tok/s, p50 {:.0} ms, p95 {:.0} ms, occupancy {:.2}",
+                "served {} requests in {} batches: {:.1} tok/s, ttft {:.0} ms, p50 {:.0} ms, p95 {:.0} ms, occupancy {:.2}",
                 stats.requests,
                 stats.batches,
                 stats.tokens_per_sec(),
+                stats.mean_ttft_ms(),
                 latencies[latencies.len() / 2],
                 latencies[latencies.len() * 95 / 100],
                 stats.occupancy(serve_batch),
@@ -397,8 +463,9 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 "slab — Sparse-Lowrank-Binary decomposition for efficient LLMs\n\n\
                  commands: train | compress | eval | sweep | table1 | table2 | table3 | fig1 | fig3 | serve\n\
                  common options: --artifacts <dir> --runs <dir> --model <small|base|large> --items <n>\n\
-                 artifact-free: `slab --sweep` (SLaB-vs-baselines table) and\n\
-                 `slab eval --engine native` need no artifacts at all;\n\
+                 artifact-free: `slab --sweep` (SLaB-vs-baselines table),\n\
+                 `slab eval --engine native`, and `slab serve --http <addr>`\n\
+                 (streaming JSON/SSE server) need no artifacts at all;\n\
                  everything else wants `make artifacts` first — see README.md"
             );
         }

@@ -514,6 +514,19 @@ impl SlabModel {
         matmul_bt(&xf, &self.lm_head)
     }
 
+    /// [`decode_batch`](SlabModel::decode_batch) followed by the
+    /// serving argmax — the continuous batcher's per-tick *emit hook*:
+    /// returns `steps.len()` next tokens (`out[r]` ↔ `steps[r]`),
+    /// computed from the same shared weight pass, so callers that only
+    /// stream tokens (the session router, the HTTP front-end) never
+    /// touch the `(N, vocab)` logits buffer. Row `r` is exactly
+    /// `greedy_token(decode_batch(..).row(r))` — the token-identity
+    /// guarantee the streaming tests pin.
+    pub fn decode_batch_greedy(&self, kvpool: &mut KvCachePool, steps: &[DecodeSlot]) -> Vec<i32> {
+        let logits = self.decode_batch(kvpool, steps);
+        (0..logits.rows).map(|r| greedy_token(logits.row(r))).collect()
+    }
+
     /// One decode step for the whole batch at shared position `pos`
     /// (the dynamic batcher aligns sequences): writes `pos` into the
     /// cache and attends over `s ≤ pos` — the `decode_step_{cfg}`
@@ -1058,6 +1071,38 @@ mod tests {
         assert!(kv.release(sa));
         assert!(!kv.release(sa), "double release");
         assert_eq!(kv.active(), 1);
+    }
+
+    #[test]
+    fn decode_batch_greedy_matches_argmax_rows() {
+        // The emit hook must be exactly decode_batch + per-row argmax:
+        // run both over identical pool states and compare.
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 216);
+        let model = SlabModel::from_dense(&params, 1);
+        let t = cfg.prompt_len;
+        let mk_steps = |kv: &mut KvCachePool| -> Vec<DecodeSlot> {
+            [vec![5, 6, 7], vec![9, 10]]
+                .iter()
+                .map(|p| {
+                    let (logits, cache) = model.prefill_session(p);
+                    DecodeSlot {
+                        session: kv.adopt(cache).unwrap(),
+                        token: greedy_token(logits.row(0)),
+                        pos: t,
+                    }
+                })
+                .collect()
+        };
+        let mut kv_a = KvCachePool::for_model(&model, 2);
+        let steps_a = mk_steps(&mut kv_a);
+        let logits = model.decode_batch(&mut kv_a, &steps_a);
+        let expect: Vec<i32> = (0..logits.rows).map(|r| greedy_token(logits.row(r))).collect();
+        let mut kv_b = KvCachePool::for_model(&model, 2);
+        let steps_b = mk_steps(&mut kv_b);
+        let got = model.decode_batch_greedy(&mut kv_b, &steps_b);
+        assert_eq!(got, expect);
+        assert!(model.decode_batch_greedy(&mut kv_b, &[]).is_empty(), "empty tick");
     }
 
     #[test]

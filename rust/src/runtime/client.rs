@@ -20,6 +20,10 @@ pub enum RuntimeError {
     UnknownArtifact(String),
     #[error("artifact '{0}': expected {1} inputs, got {2}")]
     Arity(String, usize, usize),
+    #[error("artifact '{0}': expected at least {1} outputs, got {2}")]
+    Outputs(String, usize, usize),
+    #[error("router: {0}")]
+    Router(String),
     #[error("manifest: {0}")]
     Manifest(#[from] super::manifest::ManifestError),
 }

@@ -7,6 +7,7 @@
 // must not trip `-D warnings`.
 #![allow(dead_code)]
 
+use slab::data::{EOS, PAD};
 use slab::model::Params;
 use slab::runtime::{ModelCfg, Runtime};
 use slab::slab::{decompose, ActStats, SlabConfig, SlabLayer};
@@ -46,6 +47,20 @@ pub fn native_test_cfg() -> ModelCfg {
 /// covers `Grammar::standard()` (≤ 512 by its own test).
 pub fn task_test_cfg() -> ModelCfg {
     ModelCfg::llama("native-eval", 512, 16, 1, 4, 32, 48, 6)
+}
+
+/// Params whose EOS logit row duplicates PAD's, so first-max
+/// tie-breaking (PAD = 0 scans before EOS = 2) can never emit EOS —
+/// sessions deterministically run to their full budget. Integration
+/// twin of `coordinator::serve::test_support::eos_free_params`
+/// (`cfg(test)` items are invisible to test binaries).
+pub fn eos_free_params(cfg: &ModelCfg, seed: u64) -> Params {
+    let mut params = Params::init(cfg, seed);
+    let mut head = params.mat("lm_head");
+    let pad_row = head.row(PAD as usize).to_vec();
+    head.row_mut(EOS as usize).copy_from_slice(&pad_row);
+    params.set_mat("lm_head", &head);
+    params
 }
 
 /// Decompose every pruned linear natively (no runtime, no artifacts):

@@ -1,0 +1,276 @@
+//! End-to-end tests for `slab serve --http`: the native packed engine
+//! behind the continuous batcher behind the `coordinator::http`
+//! front-end, driven over a real loopback socket — streaming parity,
+//! cancellation freeing KV slots, `/metrics`, and the actual `slab`
+//! binary. Artifact-free: everything here runs on every `cargo test`.
+
+// Clippy policy: the kernel/numeric code here deliberately uses
+// explicit index loops, operator-named helpers (`Mat::add`), and
+// `vec!` literals in tests; the style/complexity lints below fight
+// that idiom, so they are allowed target-wide while CI's
+// `clippy --all-targets -- -D warnings` enforces everything else.
+// (Centralize into a `[lints.clippy]` manifest table once a
+// Cargo.toml lands in-tree.)
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::should_implement_trait,
+    clippy::manual_range_contains,
+    clippy::comparison_chain,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if,
+    clippy::useless_vec,
+    clippy::manual_memcpy,
+    clippy::large_enum_variant,
+    clippy::module_inception,
+    clippy::new_without_default
+)]
+
+mod common;
+
+use common::{compress_native, eos_free_params, native_test_cfg};
+use slab::coordinator::http::client;
+use slab::coordinator::{Backend, HttpServer, SchedulerConfig, Server, ServerConfig};
+use slab::model::{Params, SlabModel};
+use slab::runtime::ModelCfg;
+use slab::util::json::Json;
+
+#[test]
+fn http_streaming_matches_collect_and_metrics_report_ttft() {
+    // The tentpole acceptance e2e, over the *packed* engine: tokens
+    // stream incrementally over a real loopback socket, equal the
+    // blocking collect() output token-for-token, equal the
+    // engine-level reference, and /metrics reports non-zero TTFT.
+    let cfg = native_test_cfg();
+    let params = Params::init(&cfg, 101);
+    let (packed, _) = compress_native(&params, 102);
+    let reference_model = SlabModel::from_packed(&params, &packed, 1);
+    let server = Server::start_with(
+        Backend::NativeBatched(Box::new(SlabModel::from_packed(&params, &packed, 1))),
+        ServerConfig::default(),
+    );
+    let http = HttpServer::bind("127.0.0.1:0", server).expect("bind loopback");
+    let addr = http.addr();
+
+    let health = client::get(addr, "/healthz").expect("healthz");
+    assert_eq!(health.status, 200);
+
+    let prompts: Vec<Vec<i32>> = vec![vec![5, 9, 14, 20], vec![7], vec![33, 34, 35]];
+    let budget = 8usize;
+    for prompt in &prompts {
+        let reference = reference_model
+            .generate_batch(&[prompt.clone()], budget)
+            .remove(0);
+        let body_json = Json::obj(vec![
+            ("prompt", Json::arr(prompt.iter().map(|&t| Json::num(t)))),
+            ("max_new", Json::from_usize(budget)),
+        ]);
+        // Blocking form (collect() semantics over the wire).
+        let blocking = client::post(addr, "/v1/generate", &body_json.to_string())
+            .expect("blocking generate");
+        assert_eq!(blocking.status, 200, "{}", blocking.body);
+        let (_, reply) = client::parse_generate_reply(&blocking.body).expect("parse reply");
+        assert!(!reply.rejected && !reply.cancelled && !reply.evicted);
+        assert_eq!(reply.tokens, reference, "blocking tokens vs engine reference");
+
+        // Streaming form: one SSE frame per token, then a done frame.
+        let mut stream_req = body_json.clone();
+        stream_req.set("stream", Json::Bool(true));
+        let mut sse = client::SseStream::open(addr, &stream_req.to_string()).expect("open sse");
+        assert_eq!(sse.status, 200);
+        let first = sse.next_frame().expect("frame").expect("id frame");
+        assert!(first.get("id").as_i64().is_some());
+        let mut streamed: Vec<i32> = Vec::new();
+        let mut frames = 0usize;
+        let mut done_stats = None;
+        while let Some(frame) = sse.next_frame().expect("frame") {
+            frames += 1;
+            if let Some(tok) = frame.get("token").as_i64() {
+                streamed.push(tok as i32);
+            } else if !frame.get("done").is_null() {
+                done_stats = Some((
+                    frame.get("done").get("tokens").as_usize().unwrap(),
+                    frame.get("done").get("ttft_ms").as_f64().unwrap(),
+                ));
+            } else {
+                panic!("unexpected frame {frame:?}");
+            }
+        }
+        assert_eq!(streamed, reference, "streamed tokens vs engine reference");
+        let (done_tokens, ttft_ms) = done_stats.expect("terminal done frame");
+        assert_eq!(done_tokens, streamed.len());
+        // One frame per token plus the terminal: genuinely incremental
+        // framing, not one buffered blob.
+        assert_eq!(frames, streamed.len() + 1);
+        if !streamed.is_empty() {
+            assert!(ttft_ms > 0.0, "per-session ttft recorded");
+        }
+    }
+
+    // /metrics renders the live ServeStats table with non-zero TTFT.
+    let metrics = client::get(addr, "/metrics").expect("metrics");
+    assert_eq!(metrics.status, 200);
+    let ttft_row = metrics
+        .body
+        .lines()
+        .find(|l| l.contains("mean_ttft_ms"))
+        .expect("mean_ttft_ms row");
+    let value: f64 = ttft_row
+        .split('|')
+        .map(str::trim)
+        .filter(|c| !c.is_empty())
+        .nth(1)
+        .expect("value cell")
+        .parse()
+        .expect("numeric ttft");
+    assert!(value > 0.0, "/metrics must report non-zero ttft: {ttft_row}");
+    for key in ["requests", "generated_tokens", "tokens_per_sec", "cancelled"] {
+        assert!(metrics.body.contains(key), "missing {key}:\n{}", metrics.body);
+    }
+
+    let stats = http.shutdown().expect("shutdown");
+    assert_eq!(stats.requests, 2 * prompts.len());
+    assert!(stats.ttft_samples > 0 && stats.mean_ttft_ms() > 0.0);
+}
+
+#[test]
+fn http_cancel_frees_kv_slot_for_waiting_request() {
+    // max_batch 1: a long-budget streaming session holds the only KV
+    // slot while a second request waits in the queue; DELETEing the
+    // first over a second connection must free the slot and let the
+    // waiting request complete with exactly its reference tokens.
+    // The slow config (dim 64, ~4k decode ticks with quadratic
+    // attention cost) keeps the long session far from completion
+    // through the waiter-settling sleep below, on any machine.
+    let cfg = ModelCfg::llama("slow-e2e", 32, 64, 2, 2, 128, 4096, 4);
+    let params = eos_free_params(&cfg, 103);
+    let reference = SlabModel::from_dense(&params, 1)
+        .generate_batch(&[vec![9, 8, 7]], 3)
+        .remove(0);
+    assert_eq!(reference.len(), 3, "EOS-free reference runs to budget");
+    let server = Server::start_with(
+        Backend::NativeBatched(Box::new(SlabModel::from_dense(&params, 1))),
+        ServerConfig {
+            sched: SchedulerConfig {
+                max_batch: 1,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let http = HttpServer::bind("127.0.0.1:0", server).expect("bind loopback");
+    let addr = http.addr();
+
+    let budget = cfg.max_seq - cfg.prompt_len;
+    let long_body = format!(r#"{{"prompt": [5, 6], "max_new": {budget}, "stream": true}}"#);
+    let mut sse = client::SseStream::open(addr, &long_body).expect("open long stream");
+    let id = sse
+        .next_frame()
+        .expect("frame")
+        .expect("id frame")
+        .get("id")
+        .as_i64()
+        .expect("id") as u64;
+    let mut long_tokens = 0usize;
+    while long_tokens < 2 {
+        let frame = sse.next_frame().expect("frame").expect("stream open");
+        assert!(frame.get("token").as_i64().is_some(), "early terminal: {frame:?}");
+        long_tokens += 1;
+    }
+
+    // The waiter: a blocking generate that cannot start until the
+    // long session's slot frees.
+    let waiter = std::thread::spawn(move || {
+        client::post(addr, "/v1/generate", r#"{"prompt": [9, 8, 7], "max_new": 3}"#)
+            .expect("waiting generate")
+    });
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    let cancel = client::delete(addr, &format!("/v1/sessions/{id}")).expect("cancel");
+    assert_eq!(cancel.status, 200);
+
+    let mut cancelled_seen = false;
+    while let Some(frame) = sse.next_frame().expect("frame") {
+        if frame.get("token").as_i64().is_some() {
+            long_tokens += 1;
+        } else if !frame.get("done").is_null() {
+            assert_eq!(frame.get("done").get("cancelled").as_bool(), Some(true));
+            cancelled_seen = true;
+        }
+    }
+    assert!(cancelled_seen, "long stream must terminate cancelled");
+    assert!(
+        long_tokens < budget,
+        "cancellation must cut the stream short ({long_tokens} of {budget})"
+    );
+
+    let waited = waiter.join().expect("waiter thread");
+    assert_eq!(waited.status, 200, "{}", waited.body);
+    let (_, reply) = client::parse_generate_reply(&waited.body).expect("parse waiter");
+    assert!(!reply.rejected && !reply.cancelled);
+    assert_eq!(
+        reply.tokens, reference,
+        "the freed slot serves the waiter token-identically"
+    );
+
+    let stats = http.shutdown().expect("shutdown");
+    assert_eq!(stats.cancelled, 1);
+    assert_eq!(stats.requests, 2);
+}
+
+/// Kill-on-drop guard so a failing assert never leaks the child.
+struct ChildGuard(std::process::Child);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+#[test]
+fn slab_serve_http_binary_serves_over_loopback() {
+    // The actual CLI: spawn `slab serve --http 127.0.0.1:0`, parse the
+    // bound address off stdout, and drive it over the socket.
+    let Some(exe) = option_env!("CARGO_BIN_EXE_slab") else {
+        eprintln!("skipping: CARGO_BIN_EXE_slab not set");
+        return;
+    };
+    use std::io::BufRead;
+    let child = std::process::Command::new(exe)
+        .args(["serve", "--http", "127.0.0.1:0", "--model", "small"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn slab serve --http");
+    let mut guard = ChildGuard(child);
+    let stdout = guard.0.stdout.take().expect("child stdout");
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut addr = None;
+    for _ in 0..10 {
+        let mut line = String::new();
+        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+            break;
+        }
+        if let Some(rest) = line.trim().strip_prefix("listening on http://") {
+            addr = Some(rest.parse::<std::net::SocketAddr>().expect("addr"));
+            break;
+        }
+    }
+    let addr = addr.expect("`listening on http://...` line on stdout");
+
+    let health = client::get(addr, "/healthz").expect("healthz");
+    assert_eq!(health.status, 200);
+    let body = r#"{"prompt": [5, 6, 7], "max_new": 4}"#;
+    let first = client::post(addr, "/v1/generate", body).expect("generate");
+    assert_eq!(first.status, 200, "{}", first.body);
+    let (_, r1) = client::parse_generate_reply(&first.body).expect("parse");
+    assert!(r1.tokens.len() <= 4);
+    let second = client::post(addr, "/v1/generate", body).expect("generate again");
+    let (_, r2) = client::parse_generate_reply(&second.body).expect("parse");
+    assert_eq!(r1.tokens, r2.tokens, "the served model is deterministic");
+    let metrics = client::get(addr, "/metrics").expect("metrics");
+    assert!(metrics.body.contains("requests"), "{}", metrics.body);
+    // ChildGuard kills the server on drop.
+}

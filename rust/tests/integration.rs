@@ -234,27 +234,57 @@ fn server_serves_every_request_exactly_once() {
     let g = Grammar::standard();
     let mut rng = Pcg64::seed_from_u64(77);
     let n = 10;
-    let rxs: Vec<_> = (0..n)
-        .map(|i| {
+    let prompts: Vec<Vec<i32>> = (0..n).map(|_| g.sample_sentence(&mut rng)).collect();
+    let sessions: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
             server.submit(slab::coordinator::Request {
-                prompt: g.sample_sentence(&mut rng),
+                prompt: p.clone(),
                 max_new: 3 + (i % 4),
+                deadline: None,
             })
         })
         .collect();
     let mut responses = 0;
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let r = rx.recv().expect("response");
+    let mut collected: Vec<Vec<i32>> = Vec::new();
+    for (i, session) in sessions.into_iter().enumerate() {
+        let r = session.collect();
         assert!(r.tokens.len() <= 3 + (i % 4), "token budget violated");
         assert!(r.latency_ms >= r.queue_ms);
+        collected.push(r.tokens);
         responses += 1;
     }
     assert_eq!(responses, n);
+    // Streaming parity on the artifact backend too: consuming the raw
+    // event stream of an identical request yields exactly the tokens
+    // collect() returned (the engines are deterministic).
+    let session = server.submit(slab::coordinator::Request {
+        prompt: prompts[0].clone(),
+        max_new: 3,
+        deadline: None,
+    });
+    let mut streamed = Vec::new();
+    let mut terminal_tokens = None;
+    while let Some(ev) = session.recv() {
+        match ev {
+            slab::coordinator::Event::Token(t) => streamed.push(t),
+            slab::coordinator::Event::Done(s) | slab::coordinator::Event::Evicted(s) => {
+                terminal_tokens = Some(s.tokens);
+            }
+            slab::coordinator::Event::Rejected => panic!("unexpected rejection"),
+        }
+    }
+    assert_eq!(terminal_tokens, Some(streamed.len()), "one terminal event");
+    assert_eq!(streamed, collected[0], "streamed vs collected tokens (artifact)");
     let stats = server.shutdown().expect("stats");
-    assert_eq!(stats.requests, n);
+    assert_eq!(stats.requests, n + 1);
     assert!(stats.batches >= n.div_ceil(cap), "batches {}", stats.batches);
     // No batch can have exceeded cap: requests ≤ batches * cap.
     assert!(stats.requests <= stats.batches * cap);
+    if stats.generated_tokens > 0 {
+        assert!(stats.mean_ttft_ms() > 0.0, "ttft accounted on the artifact path");
+    }
 }
 
 #[test]
@@ -409,19 +439,17 @@ fn native_packed_serving_matches_dense_reconstruction_end_to_end() {
             Backend::NativePacked(Box::new(model)),
             ServerConfig::default(),
         );
-        let rxs: Vec<_> = prompts
+        let sessions: Vec<_> = prompts
             .iter()
             .map(|p| {
                 server.submit(Request {
                     prompt: p.clone(),
                     max_new: 10,
+                    deadline: None,
                 })
             })
             .collect();
-        let out = rxs
-            .into_iter()
-            .map(|rx| rx.recv().expect("response").tokens)
-            .collect();
+        let out = sessions.into_iter().map(|s| s.collect().tokens).collect();
         server.shutdown().expect("stats");
         out
     };
@@ -462,20 +490,21 @@ fn batched_scheduler_matches_serial_packed_serving_end_to_end() {
     let budgets = [9usize, 4, 12, 3, 7, 1, 0];
     let serve = |backend: Backend, scfg: ServerConfig| -> Vec<Vec<i32>> {
         let server = Server::start_with(backend, scfg);
-        let rxs: Vec<_> = prompts
+        let sessions: Vec<_> = prompts
             .iter()
             .zip(budgets.iter())
             .map(|(p, &b)| {
                 server.submit(Request {
                     prompt: p.clone(),
                     max_new: b,
+                    deadline: None,
                 })
             })
             .collect();
-        let out = rxs
+        let out = sessions
             .into_iter()
-            .map(|rx| {
-                let r = rx.recv().expect("response");
+            .map(|s| {
+                let r = s.collect();
                 assert!(!r.rejected, "default queue bound must admit all");
                 r.tokens
             })
