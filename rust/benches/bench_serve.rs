@@ -48,7 +48,7 @@ use slab::coordinator::http::client;
 use slab::coordinator::{
     Backend, Event, HttpServer, Request, SchedulerConfig, Server, ServerConfig,
 };
-use slab::model::{DecodeSlot, KvCachePool, Params, SlabModel};
+use slab::model::{DecodeSlot, KvCachePool, PagedKvConfig, PagedKvPool, Params, SlabModel};
 use slab::runtime::ModelCfg;
 use slab::util::bench::Bench;
 use slab::util::json::Json;
@@ -252,6 +252,112 @@ fn main() {
         "http loopback: {http_reqs} sequential requests, {http_tokens} tokens, {http_tps:.1} tok/s"
     );
 
+    // --- shared-prefix churn ------------------------------------------
+    // High session churn over one common prompt: every admission after
+    // the first joins the cached prefill copy-on-write (DESIGN.md §13)
+    // instead of re-running prefill, so tokens/s under churn is the
+    // prefix cache's end-to-end win.
+    let server = Server::start_with(
+        Backend::NativeBatched(Box::new(SlabModel::from_packed(&params, &packed, 0))),
+        ServerConfig {
+            sched: SchedulerConfig {
+                max_batch: 4,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let churn_waves = if fast { 2 } else { 12 };
+    let churn_budget = 4usize;
+    let common = bench_prompt(0, cfg.prompt_len);
+    let t_churn = Instant::now();
+    let mut churn_tokens = 0usize;
+    let mut churn_sessions = 0usize;
+    for _ in 0..churn_waves {
+        let wave: Vec<_> = (0..4)
+            .map(|_| {
+                server.submit(Request {
+                    prompt: common.clone(),
+                    max_new: churn_budget,
+                    deadline: None,
+                })
+            })
+            .collect();
+        churn_sessions += wave.len();
+        for s in wave {
+            churn_tokens += s.collect().tokens.len();
+        }
+    }
+    let churn_wall = t_churn.elapsed().as_secs_f64();
+    let churn_stats = server.shutdown().expect("churn server stats");
+    let churn_tps = churn_tokens as f64 / churn_wall.max(1e-9);
+    println!(
+        "shared-prefix churn: {churn_sessions} sessions, hit rate {:.3} \
+         ({} hits / {} misses, {} cow splits), {churn_tps:.1} tok/s",
+        churn_stats.prefix_hit_rate(),
+        churn_stats.prefix_hits,
+        churn_stats.prefix_misses,
+        churn_stats.cow_splits
+    );
+
+    // --- paged capacity at fixed memory -------------------------------
+    // Give the paged pool exactly the page budget a 4-session
+    // contiguous pool preallocates, then count how many *real*
+    // prompt-length sessions each admission path fits: distinct
+    // prompts pay their prompt pages, identical prompts share them.
+    let contiguous_sessions = 4usize;
+    let page_size = 8usize;
+    let eq_pages = contiguous_sessions * cfg.max_seq.div_ceil(page_size);
+    let session_cap = 64usize;
+    let mut distinct_pool = PagedKvPool::for_model(
+        &model,
+        session_cap,
+        PagedKvConfig {
+            page_size,
+            n_pages: eq_pages,
+            prefix_sharing: false,
+        },
+    );
+    let mut distinct = 0usize;
+    while distinct < session_cap {
+        let prompt = bench_prompt(distinct, cfg.prompt_len);
+        let padded = model.pad_prompt(&prompt);
+        let (logits, cache) = model.prefill_session(&prompt);
+        if distinct_pool
+            .adopt_prefill(&padded, logits.row(0), &cache)
+            .is_none()
+        {
+            break;
+        }
+        distinct += 1;
+    }
+    let peak_pages = distinct_pool.counters().pages_peak;
+    let mut shared_pool = PagedKvPool::for_model(
+        &model,
+        session_cap,
+        PagedKvConfig {
+            page_size,
+            n_pages: eq_pages,
+            prefix_sharing: true,
+        },
+    );
+    let common_padded = model.pad_prompt(&common);
+    let (common_logits, common_cache) = model.prefill_session(&common);
+    let mut shared = 0usize;
+    if shared_pool
+        .adopt_prefill(&common_padded, common_logits.row(0), &common_cache)
+        .is_some()
+    {
+        shared = 1;
+        while shared < session_cap && shared_pool.admit_shared(&common_padded).is_some() {
+            shared += 1;
+        }
+    }
+    println!(
+        "fixed-memory capacity ({eq_pages} pages = {contiguous_sessions} contiguous sessions): \
+         {distinct} distinct-prompt sessions, {shared} shared-prefix sessions"
+    );
+
     let summary = Json::obj(vec![
         ("bench", Json::str("serve_batched_decode")),
         (
@@ -290,6 +396,34 @@ fn main() {
                 ("requests", Json::from_usize(http_reqs)),
                 ("generated_tokens", Json::from_usize(http_tokens)),
                 ("tokens_per_sec", Json::num(http_tps)),
+            ]),
+        ),
+        (
+            "prefix_cache",
+            Json::obj(vec![
+                ("sessions", Json::from_usize(churn_sessions)),
+                ("hits", Json::from_usize(churn_stats.prefix_hits)),
+                ("misses", Json::from_usize(churn_stats.prefix_misses)),
+                ("hit_rate", Json::num(churn_stats.prefix_hit_rate())),
+                ("cow_splits", Json::from_usize(churn_stats.cow_splits)),
+                ("churn_tokens_per_sec", Json::num(churn_tps)),
+            ]),
+        ),
+        (
+            "paged_kv",
+            Json::obj(vec![
+                ("page_size", Json::from_usize(page_size)),
+                ("page_budget", Json::from_usize(eq_pages)),
+                ("peak_pages", Json::from_usize(peak_pages)),
+                (
+                    "contiguous_sessions_at_same_memory",
+                    Json::from_usize(contiguous_sessions),
+                ),
+                ("paged_sessions_at_same_memory", Json::from_usize(distinct)),
+                (
+                    "shared_prefix_sessions_at_same_memory",
+                    Json::from_usize(shared),
+                ),
             ]),
         ),
     ]);

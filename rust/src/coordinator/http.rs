@@ -19,7 +19,11 @@
 //!   `{"done": {..., "cancelled": true}}`.
 //! * `GET /healthz` — liveness probe.
 //! * `GET /metrics` — the live [`ServeStats`] snapshot rendered
-//!   through [`report::Table`](crate::report::Table) (text/plain).
+//!   through [`report::Table`](crate::report::Table) (text/plain),
+//!   including the paged-KV gauges (`kv_pages`, `kv_pages_peak`) and
+//!   prefix-cache counters (`prefix_hits` / `prefix_misses` /
+//!   `prefix_hit_rate`, `cow_splits`, `page_evictions`) of
+//!   DESIGN.md §13.
 //!
 //! A client that disconnects mid-stream is treated as a cancellation
 //! (the router stops decoding for it); a malformed request gets a
@@ -757,6 +761,8 @@ mod tests {
         assert_eq!(metrics.status, 200);
         assert!(metrics.body.contains("requests"), "{}", metrics.body);
         assert!(metrics.body.contains("mean_ttft_ms"), "{}", metrics.body);
+        assert!(metrics.body.contains("prefix_hit_rate"), "{}", metrics.body);
+        assert!(metrics.body.contains("kv_pages"), "{}", metrics.body);
         let missing = client::get(addr, "/nope").expect("404");
         assert_eq!(missing.status, 404);
         let wrong_method = client::get(addr, "/v1/generate").expect("405");

@@ -46,7 +46,9 @@
 //! exposes exactly this API over HTTP/1.1 (DESIGN.md §12).
 
 use crate::data::{EOS, PAD};
-use crate::model::{greedy_token, DecodeSlot, KvCachePool, Params, SlabModel};
+use crate::model::{
+    greedy_token, DecodeSlot, KvCachePool, PagedKvConfig, PagedKvPool, Params, SlabModel,
+};
 use crate::report::Table;
 use crate::runtime::client::RuntimeError;
 use crate::runtime::{lit_i32, lit_scalar_i32, to_vec_f32, Runtime};
@@ -358,6 +360,24 @@ pub struct ServeStats {
     pub ttft_ms_total: f64,
     /// Requests that streamed at least one token.
     pub ttft_samples: usize,
+    /// Paged-KV admissions that joined an already-prefilled shared
+    /// prefix (no prefill forward ran). Zero under the contiguous
+    /// fallback or with sharing disabled.
+    pub prefix_hits: usize,
+    /// Paged-KV admissions that prefilled fresh pages.
+    pub prefix_misses: usize,
+    /// Copy-on-write page splits (first divergent write to a shared
+    /// page).
+    pub cow_splits: usize,
+    /// Sessions evicted because no KV page could be secured for their
+    /// next token (page exhaustion after the prefix index was already
+    /// drained).
+    pub page_evictions: usize,
+    /// KV pages currently allocated (gauge; `0` under the contiguous
+    /// fallback).
+    pub kv_pages: usize,
+    /// High-water mark of allocated KV pages.
+    pub kv_pages_peak: usize,
     pub wall_secs: f64,
 }
 
@@ -379,6 +399,12 @@ impl ServeStats {
         self.ttft_ms_total / self.ttft_samples.max(1) as f64
     }
 
+    /// Fraction of paged admissions that shared an existing prefix
+    /// (`0.0` when none were attempted).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        self.prefix_hits as f64 / (self.prefix_hits + self.prefix_misses).max(1) as f64
+    }
+
     /// Render as a metric/value [`Table`] — the `/metrics` body and
     /// the CLI's summary form.
     pub fn table(&self, title: &str) -> Table {
@@ -393,6 +419,13 @@ impl ServeStats {
             ("deadline_evicted", self.deadline_evicted.to_string()),
             ("cancelled", self.cancelled.to_string()),
             ("dropped_clients", self.dropped_clients.to_string()),
+            ("prefix_hits", self.prefix_hits.to_string()),
+            ("prefix_misses", self.prefix_misses.to_string()),
+            ("prefix_hit_rate", format!("{:.3}", self.prefix_hit_rate())),
+            ("cow_splits", self.cow_splits.to_string()),
+            ("page_evictions", self.page_evictions.to_string()),
+            ("kv_pages", self.kv_pages.to_string()),
+            ("kv_pages_peak", self.kv_pages_peak.to_string()),
             ("mean_ttft_ms", format!("{:.3}", self.mean_ttft_ms())),
             ("wall_secs", format!("{:.3}", self.wall_secs)),
         ];
@@ -455,6 +488,22 @@ pub struct SchedulerConfig {
     /// expired session is evicted with the tokens streamed so far and
     /// counted in [`ServeStats::deadline_evicted`].
     pub deadline: Duration,
+    /// KV page size in tokens for the block-paged pool (DESIGN.md
+    /// §13). `0` falls back to the legacy contiguous
+    /// [`KvCachePool`] — kept as the conformance reference.
+    pub kv_page: usize,
+    /// Hard KV page budget for the paged pool; `0` (the default) is
+    /// the worst-case-safe budget
+    /// `max_batch · ⌈max_seq / kv_page⌉`. Tighter budgets trade
+    /// worst-case admission for memory: sessions are admitted against
+    /// *real* page availability and evicted (terminal
+    /// [`Event::Evicted`], counted in [`ServeStats::page_evictions`])
+    /// if a decode write cannot secure a page even after the prefix
+    /// index is drained.
+    pub page_budget: usize,
+    /// Share prefilled pages between sessions with identical padded
+    /// prompts (copy-on-write; paged pool only).
+    pub prefix_sharing: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -464,6 +513,9 @@ impl Default for SchedulerConfig {
             max_seq_len: 0,
             queue_cap: 64,
             deadline: Duration::ZERO,
+            kv_page: 8,
+            page_budget: 0,
+            prefix_sharing: true,
         }
     }
 }
@@ -1044,10 +1096,19 @@ pub struct Scheduler {
     cfg: SchedulerConfig,
     /// `min(model.max_seq, max_seq_len)` — the hard position cap.
     seq_cap: usize,
-    kv: KvCachePool,
+    kv: KvBacking,
     queue: VecDeque<Job>,
     active: Vec<ActiveSession>,
     stats: ServeStats,
+}
+
+/// The scheduler's KV storage: the block-paged pool (default, with
+/// copy-on-write prefix sharing and real-page admission) or the
+/// legacy contiguous pool (`kv_page: 0`) kept as the conformance
+/// reference. Decode is bit-identical across the two (DESIGN.md §13).
+enum KvBacking {
+    Contiguous(KvCachePool),
+    Paged(PagedKvPool),
 }
 
 impl Scheduler {
@@ -1060,7 +1121,19 @@ impl Scheduler {
         } else {
             cfg.max_seq_len.min(model.cfg.max_seq)
         };
-        let kv = KvCachePool::for_model(&model, cfg.max_batch);
+        let kv = if cfg.kv_page == 0 {
+            KvBacking::Contiguous(KvCachePool::for_model(&model, cfg.max_batch))
+        } else {
+            KvBacking::Paged(PagedKvPool::for_model(
+                &model,
+                cfg.max_batch,
+                PagedKvConfig {
+                    page_size: cfg.kv_page,
+                    n_pages: cfg.page_budget,
+                    prefix_sharing: cfg.prefix_sharing,
+                },
+            ))
+        };
         Scheduler {
             model,
             cfg,
@@ -1124,7 +1197,8 @@ impl Scheduler {
 
     /// Tear down, returning the accumulated stats (`wall_secs` is the
     /// router's to fill — the scheduler does not own the clock).
-    pub fn into_stats(self) -> ServeStats {
+    pub fn into_stats(mut self) -> ServeStats {
+        self.sync_kv_stats();
         self.stats
     }
 
@@ -1136,7 +1210,24 @@ impl Scheduler {
     pub fn tick(&mut self) -> usize {
         self.reap();
         self.admit();
-        self.decode_tick()
+        let n = self.decode_tick();
+        self.sync_kv_stats();
+        n
+    }
+
+    /// Mirror the paged pool's counters into [`ServeStats`] so
+    /// `/metrics` and the stats table see live values each tick.
+    /// `page_evictions` stays scheduler-owned — the pool does not
+    /// know *why* a session was removed.
+    fn sync_kv_stats(&mut self) {
+        if let KvBacking::Paged(pool) = &mut self.kv {
+            let c = pool.counters();
+            self.stats.prefix_hits = c.prefix_hits;
+            self.stats.prefix_misses = c.prefix_misses;
+            self.stats.cow_splits = c.cow_splits;
+            self.stats.kv_pages = c.pages_in_use;
+            self.stats.kv_pages_peak = c.pages_peak;
+        }
     }
 
     /// Remove sessions that terminated outside the decode path —
@@ -1196,11 +1287,45 @@ impl Scheduler {
     /// budget of one) or adopts its KV cache into the pool and joins
     /// the decode batch. Cancelled or expired queue entries terminate
     /// here without touching the engine.
+    ///
+    /// On the paged pool admission is gated on *real* page
+    /// availability for the queue head: zero pages when its padded
+    /// prompt is already in the prefix index (the cached prefill is
+    /// joined copy-on-write and the memoized logits replay its first
+    /// token), a full prompt's worth otherwise — draining the prefix
+    /// index first when short, and stalling admission (not rejecting)
+    /// when pages are held by live sessions.
     fn admit(&mut self) {
-        while self.active.len() < self.cfg.max_batch && !self.kv.is_full() {
-            let Some(job) = self.queue.pop_front() else {
+        loop {
+            if self.active.len() >= self.cfg.max_batch || self.queue.is_empty() {
                 break;
-            };
+            }
+            match &mut self.kv {
+                KvBacking::Contiguous(pool) => {
+                    if pool.is_full() {
+                        break;
+                    }
+                }
+                KvBacking::Paged(pool) => {
+                    if pool.is_full() {
+                        break;
+                    }
+                    let front = self.queue.front().expect("checked non-empty");
+                    let padded = self.model.pad_prompt(&front.req.prompt);
+                    let need = if pool.has_prefix(&padded) {
+                        0
+                    } else {
+                        pool.prompt_pages()
+                    };
+                    if pool.free_pages() < need {
+                        pool.evict_prefixes(need);
+                    }
+                    if pool.free_pages() < need {
+                        break;
+                    }
+                }
+            }
+            let job = self.queue.pop_front().expect("checked non-empty");
             let t_admit = Instant::now();
             let prompt_len = self.model.cfg.prompt_len;
             // The serial router's exact clamp (inside BatchSession),
@@ -1215,14 +1340,35 @@ impl Scheduler {
                 core.finish(&mut self.stats);
                 continue;
             }
-            let (logits, cache) = self.model.prefill_session(&core.job.req.prompt);
+            let slot: usize;
+            let first_row: Vec<f32>;
+            match &mut self.kv {
+                KvBacking::Contiguous(pool) => {
+                    let (logits, cache) = self.model.prefill_session(&core.job.req.prompt);
+                    first_row = logits.row(0).to_vec();
+                    slot = pool.adopt(cache).expect("kv pool sized to max_batch");
+                }
+                KvBacking::Paged(pool) => {
+                    let padded = self.model.pad_prompt(&core.job.req.prompt);
+                    if let Some((sid, row)) = pool.admit_shared(&padded) {
+                        slot = sid;
+                        first_row = row;
+                    } else {
+                        let (logits, cache) = self.model.prefill_session(&core.job.req.prompt);
+                        slot = pool
+                            .adopt_prefill(&padded, logits.row(0), &cache)
+                            .expect("admission pre-checked page availability");
+                        first_row = logits.row(0).to_vec();
+                    }
+                }
+            }
             let mut sess = ActiveSession {
                 core,
-                slot: None,
+                slot: Some(slot),
                 pos: prompt_len,
                 next_tok: EOS,
             };
-            let first = greedy_token(logits.row(0));
+            let first = greedy_token(&first_row);
             if first == EOS {
                 self.finish(sess, Outcome::Done);
                 continue;
@@ -1233,7 +1379,6 @@ impl Scheduler {
                 continue;
             }
             sess.next_tok = first;
-            sess.slot = Some(self.kv.adopt(cache).expect("kv pool sized to max_batch"));
             self.active.push(sess);
         }
     }
@@ -1244,6 +1389,40 @@ impl Scheduler {
     /// caught by the same gates one tick later — never decoded past
     /// their budget either way.
     fn decode_tick(&mut self) -> usize {
+        // Paged pool: every active session secures its write page
+        // *before* the shared step — decode itself never allocates.
+        // When a session cannot (page budget exhausted even after
+        // draining the prefix index) the *newest* session is
+        // preempted — evicted with the tokens streamed so far, its
+        // pages freed on the spot — and the starved session retries.
+        // Oldest-first page securing plus newest-first preemption
+        // plus the one-worst-case-session budget floor guarantee the
+        // oldest session always progresses (no eviction livelock).
+        let mut page_evicted: Vec<ActiveSession> = Vec::new();
+        if let KvBacking::Paged(pool) = &mut self.kv {
+            let mut i = 0;
+            while i < self.active.len() {
+                let sid = self.active[i].slot.expect("active session owns a kv slot");
+                let pos = self.active[i].pos;
+                if !pool.can_write(sid, pos) {
+                    pool.evict_prefixes(1);
+                }
+                if pool.prepare_write(sid, pos) {
+                    i += 1;
+                    continue;
+                }
+                let victim = self.active.len() - 1;
+                let mut sess = self.active.remove(victim);
+                if let Some(slot) = sess.slot.take() {
+                    pool.release(slot); // freed *now*, so the retry can win
+                }
+                page_evicted.push(sess);
+            }
+        }
+        for sess in page_evicted {
+            self.stats.page_evictions += 1;
+            self.finish(sess, Outcome::Evicted);
+        }
         if self.active.is_empty() {
             return 0;
         }
@@ -1257,8 +1436,12 @@ impl Scheduler {
             })
             .collect();
         // The per-tick emit hook: one shared weight pass, then the
-        // serving argmax per row (bit-identical to serial decode).
-        let next = self.model.decode_batch_greedy(&mut self.kv, &steps);
+        // serving argmax per row (bit-identical to serial decode —
+        // paged or contiguous, the compute body is the same code).
+        let next = match &mut self.kv {
+            KvBacking::Contiguous(pool) => self.model.decode_batch_greedy(pool, &steps),
+            KvBacking::Paged(pool) => self.model.decode_batch_greedy_paged(pool, &steps),
+        };
         self.stats.batches += 1;
         let n = steps.len();
         // (row, outcome) of sessions that terminate this tick.
@@ -1288,7 +1471,14 @@ impl Scheduler {
     /// terminal event.
     fn finish(&mut self, mut sess: ActiveSession, outcome: Outcome) {
         if let Some(slot) = sess.slot {
-            self.kv.release(slot);
+            match &mut self.kv {
+                KvBacking::Contiguous(pool) => {
+                    pool.release(slot);
+                }
+                KvBacking::Paged(pool) => {
+                    pool.release(slot);
+                }
+            }
         }
         sess.core.outcome = outcome;
         sess.core.finish(&mut self.stats);
@@ -1296,7 +1486,10 @@ impl Scheduler {
 
     #[cfg(test)]
     fn kv_active(&self) -> usize {
-        self.kv.active()
+        match &self.kv {
+            KvBacking::Contiguous(pool) => pool.active(),
+            KvBacking::Paged(pool) => pool.active(),
+        }
     }
 }
 
@@ -2251,11 +2444,18 @@ mod tests {
             deadline_evicted: 1,
             cancelled: 2,
             dropped_clients: 1,
+            prefix_hits: 3,
+            prefix_misses: 1,
+            cow_splits: 2,
+            page_evictions: 1,
+            kv_pages: 5,
+            kv_pages_peak: 9,
             ttft_ms_total: 14.0,
             ttft_samples: 7,
             wall_secs: 2.0,
         };
         assert!((stats.mean_ttft_ms() - 2.0).abs() < 1e-12);
+        assert!((stats.prefix_hit_rate() - 0.75).abs() < 1e-12);
         let rendered = stats.table("serve").render();
         for key in [
             "requests",
@@ -2267,10 +2467,187 @@ mod tests {
             "deadline_evicted",
             "cancelled",
             "dropped_clients",
+            "prefix_hits",
+            "prefix_misses",
+            "prefix_hit_rate",
+            "cow_splits",
+            "page_evictions",
+            "kv_pages",
+            "kv_pages_peak",
             "mean_ttft_ms",
             "wall_secs",
         ] {
             assert!(rendered.contains(key), "missing {key} in:\n{rendered}");
         }
+    }
+
+    /// Drive a scheduler directly to completion over a request set,
+    /// returning per-request responses (submission order) and the
+    /// final stats. Direct [`Scheduler`] access so the paged-pool
+    /// conformance tests can pick the KV backing per run.
+    fn sched_all(
+        params: &Params,
+        scfg: SchedulerConfig,
+        prompts: &[Vec<i32>],
+        budgets: &[usize],
+    ) -> (Vec<Response>, ServeStats) {
+        let model = Box::new(SlabModel::from_dense(params, 1));
+        let mut s = Scheduler::new(model, scfg);
+        let rxs: Vec<_> = prompts
+            .iter()
+            .zip(budgets)
+            .map(|(p, &b)| {
+                let (tx, rx) = channel();
+                s.enqueue(req(p.clone(), b), tx).expect("queued");
+                rx
+            })
+            .collect();
+        while s.has_work() {
+            s.tick();
+        }
+        assert_eq!(s.kv_active(), 0, "every kv session released");
+        let out = rxs.iter().map(collect_events).collect();
+        (out, s.into_stats())
+    }
+
+    #[test]
+    fn shared_prefix_decode_is_bit_identical_across_kv_backings() {
+        // The prefix-sharing conformance contract (DESIGN.md §13):
+        // N sessions with an identical padded prompt served off
+        // copy-on-write shared pages must stream token streams
+        // bit-identical to (a) the same N with sharing disabled,
+        // (b) the legacy contiguous pool, and (c) the serial
+        // NativePacked reference — sharing is invisible everywhere
+        // except the hit counters.
+        let cfg = tiny_cfg();
+        let params = eos_free_params(&cfg, 71);
+        let prompts: Vec<Vec<i32>> = vec![vec![5, 6, 7]; 4];
+        let budgets = [6usize, 4, 2, 5];
+        let serial = SlabModel::from_dense(&params, 1);
+        let reference: Vec<Vec<i32>> = budgets
+            .iter()
+            .map(|&b| serial.generate_batch(&[prompts[0].clone()], b).remove(0))
+            .collect();
+        let shared_cfg = SchedulerConfig::default(); // paged + sharing
+        let unshared_cfg = SchedulerConfig {
+            prefix_sharing: false,
+            ..Default::default()
+        };
+        let contiguous_cfg = SchedulerConfig {
+            kv_page: 0,
+            ..Default::default()
+        };
+        let (shared, st_shared) = sched_all(&params, shared_cfg, &prompts, &budgets);
+        let (unshared, st_unshared) = sched_all(&params, unshared_cfg, &prompts, &budgets);
+        let (contig, _) = sched_all(&params, contiguous_cfg, &prompts, &budgets);
+        for i in 0..prompts.len() {
+            assert!(!shared[i].rejected && !shared[i].cancelled);
+            assert_eq!(shared[i].tokens, reference[i], "shared vs serial, req {i}");
+            assert_eq!(unshared[i].tokens, reference[i], "unshared vs serial, req {i}");
+            assert_eq!(contig[i].tokens, reference[i], "contiguous vs serial, req {i}");
+        }
+        // One prefill for four sessions; each diverges by COW-split
+        // of the half-filled prompt page on its first decode write.
+        assert_eq!(st_shared.prefix_misses, 1, "exactly one cold prefill");
+        assert_eq!(st_shared.prefix_hits, 3, "three sessions joined the cached prefill");
+        assert_eq!(st_shared.cow_splits, 4);
+        assert_eq!(st_shared.page_evictions, 0);
+        assert!(st_shared.kv_pages_peak > 0);
+        assert_eq!(st_unshared.prefix_hits, 0, "sharing off: every prompt prefills");
+        assert_eq!(st_unshared.prefix_misses, 4);
+        assert_eq!(st_unshared.cow_splits, 0);
+    }
+
+    #[test]
+    fn cancelling_a_prefix_sharer_mid_decode_leaves_the_rest_intact() {
+        // One of three sessions holding COW-shared prompt pages is
+        // cancelled mid-decode; the survivors must still stream their
+        // exact serial-reference tokens (released shared pages only
+        // drop a refcount — never data out from under a sharer), and
+        // the cancelled stream is a prefix of its own reference.
+        let cfg = tiny_cfg();
+        let params = eos_free_params(&cfg, 72);
+        let prompt = vec![9, 10, 11];
+        let budget = 7usize;
+        let reference = SlabModel::from_dense(&params, 1)
+            .generate_batch(&[prompt.clone()], budget)
+            .remove(0);
+        let model = Box::new(SlabModel::from_dense(&params, 1));
+        let mut s = Scheduler::new(model, SchedulerConfig::default());
+        let mut rxs = Vec::new();
+        let mut cancels = Vec::new();
+        for _ in 0..3 {
+            let (tx, rx) = channel();
+            cancels.push(s.enqueue(req(prompt.clone(), budget), tx).expect("queued"));
+            rxs.push(rx);
+        }
+        s.tick(); // all admitted (first token), one shared decode step
+        s.tick();
+        assert_eq!(s.active_sessions(), 3);
+        cancels[1].cancel();
+        while s.has_work() {
+            s.tick();
+        }
+        let r0 = collect_events(&rxs[0]);
+        let r1 = collect_events(&rxs[1]);
+        let r2 = collect_events(&rxs[2]);
+        assert_eq!(r0.tokens, reference, "sharer 0 unaffected by the cancellation");
+        assert_eq!(r2.tokens, reference, "sharer 2 unaffected by the cancellation");
+        assert!(r1.cancelled);
+        assert!(!r1.tokens.is_empty() && r1.tokens.len() < budget);
+        assert_eq!(r1.tokens[..], reference[..r1.tokens.len()]);
+        assert_eq!(s.kv_active(), 0);
+        let st = s.into_stats();
+        assert_eq!((st.prefix_misses, st.prefix_hits), (1, 2));
+        assert_eq!(st.cancelled, 1);
+        // Sessions are gone but the prefix index keeps the cached
+        // prompt page (one page at the default page size) warm for
+        // future hits — the only allocation left standing.
+        assert_eq!(st.kv_pages, 1);
+    }
+
+    #[test]
+    fn page_exhaustion_preempts_newest_session_and_frees_pages() {
+        // Two EOS-free sessions on a page budget too small for both
+        // to reach their budgets: the *newest* is preempted the tick
+        // pages run out (terminal Evicted, counted in
+        // page_evictions), its pages free on the spot, and the oldest
+        // runs to its full budget with bit-exact serial tokens.
+        let cfg = tiny_cfg();
+        let params = eos_free_params(&cfg, 73);
+        let serial = SlabModel::from_dense(&params, 1);
+        let ref_a = serial.generate_batch(&[vec![5, 6]], 8).remove(0);
+        let ref_b = serial.generate_batch(&[vec![9, 8]], 8).remove(0);
+        let model = Box::new(SlabModel::from_dense(&params, 1));
+        let mut s = Scheduler::new(
+            model,
+            SchedulerConfig {
+                max_batch: 2,
+                kv_page: 2,
+                page_budget: 8, // worst case for one session is 6
+                prefix_sharing: false,
+                ..Default::default()
+            },
+        );
+        let (tx_a, rx_a) = channel();
+        s.enqueue(req(vec![5, 6], 8), tx_a).expect("queued");
+        let (tx_b, rx_b) = channel();
+        s.enqueue(req(vec![9, 8], 8), tx_b).expect("queued");
+        while s.has_work() {
+            s.tick();
+        }
+        let ra = collect_events(&rx_a);
+        let rb = collect_events(&rx_b);
+        assert!(!ra.evicted && !ra.cancelled, "oldest session never preempted");
+        assert_eq!(ra.tokens, ref_a, "oldest runs to budget, bit-exact");
+        assert!(rb.evicted, "newest preempted on page exhaustion");
+        assert!(!rb.tokens.is_empty() && rb.tokens.len() < 8);
+        assert_eq!(rb.tokens[..], ref_b[..rb.tokens.len()]);
+        assert_eq!(s.kv_active(), 0);
+        let st = s.into_stats();
+        assert_eq!(st.page_evictions, 1);
+        assert_eq!(st.evicted, 1, "page preemption classifies Evicted");
+        assert!(st.kv_pages_peak <= 8, "budget is a hard ceiling");
+        assert_eq!(st.kv_pages, 0);
     }
 }

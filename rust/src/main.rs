@@ -15,7 +15,8 @@
 //! slab serve   --model base --requests 64
 //! slab serve   --http 127.0.0.1:8080 [--model small] [--ckpt runs/small.slabckpt]
 //!              [--packed runs/small_slab.packed] [--batch 8] [--queue-cap 64]
-//!              [--seq-cap N] [--deadline-ms 0]                               # artifact-free
+//!              [--seq-cap N] [--deadline-ms 0] [--kv-page 8] [--page-budget 0]
+//!              [--no-prefix-share]                                           # artifact-free
 //! ```
 //!
 //! `slab --sweep` / `slab --eval` (no subcommand) are shorthands for
@@ -230,6 +231,11 @@ fn run_http_serve(args: &Args, addr: &str) -> anyhow::Result<()> {
             max_seq_len: args.get_usize("seq-cap", 0)?,
             queue_cap,
             deadline: Duration::from_millis(args.get_u64("deadline-ms", 0)?),
+            // Paged KV (DESIGN.md §13): --kv-page 0 falls back to the
+            // contiguous pool; --page-budget 0 is worst-case-safe.
+            kv_page: args.get_usize("kv-page", 8)?,
+            page_budget: args.get_usize("page-budget", 0)?,
+            prefix_sharing: !args.has_flag("no-prefix-share"),
         },
         ..Default::default()
     };

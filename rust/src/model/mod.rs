@@ -9,6 +9,14 @@
 //! [`crate::coordinator::serve::Backend::NativePacked`]
 //! (DESIGN.md §6). This module owns the host-side representations the
 //! coordinator mutates when it swaps compressed weights in.
+//!
+//! It also owns the **block-paged KV pool** ([`PagedKvPool`],
+//! DESIGN.md §13): per-session page tables over a refcounted
+//! [`PageArena`], with copy-on-write shared prefixes keyed on the
+//! padded prompt. Paging changes only *address computation* — the
+//! decode forward runs the same operations in the same accumulation
+//! order through [`native::KvStore`] — so paged decode is
+//! bit-identical to the contiguous [`KvCachePool`].
 
 pub mod native;
 pub mod params;
@@ -18,3 +26,803 @@ pub use native::{
     SlabModel,
 };
 pub use params::Params;
+
+use crate::runtime::ModelCfg;
+use crate::util::pool::{PageArena, SlotArena};
+use native::KvStore;
+
+/// Geometry and policy knobs for the block-paged KV pool
+/// ([`PagedKvPool`], DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PagedKvConfig {
+    /// Tokens per KV page (`≥ 1`). Small pages track actual usage
+    /// tightly; large pages amortize page-table overhead.
+    pub page_size: usize,
+    /// Hard page budget. `0` picks the worst-case-safe default
+    /// `max_sessions · ⌈max_seq / page_size⌉` — the budget at which
+    /// paging can never reject a session the contiguous pool would
+    /// have admitted. Non-zero budgets are clamped up to one
+    /// worst-case session (`⌈max_seq / page_size⌉`) so the scheduler
+    /// can always make progress.
+    pub n_pages: usize,
+    /// Share prefilled pages between sessions whose padded prompts
+    /// are identical, copy-on-write on the first divergent write.
+    pub prefix_sharing: bool,
+}
+
+impl Default for PagedKvConfig {
+    fn default() -> PagedKvConfig {
+        PagedKvConfig {
+            page_size: 8,
+            n_pages: 0,
+            prefix_sharing: true,
+        }
+    }
+}
+
+/// Paged-pool observability, surfaced through the scheduler's
+/// `ServeStats` → `/metrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PagedKvCounters {
+    /// Admissions that joined an already-prefilled prefix (no prefill
+    /// forward was run).
+    pub prefix_hits: usize,
+    /// Admissions that prefilled fresh pages.
+    pub prefix_misses: usize,
+    /// Copy-on-write page splits on first divergent write to a shared
+    /// page.
+    pub cow_splits: usize,
+    /// Prefix-index entries dropped to reclaim pages under pressure.
+    pub prefix_evictions: usize,
+    /// Pages currently allocated (gauge, filled at read time).
+    pub pages_in_use: usize,
+    /// High-water mark of allocated pages.
+    pub pages_peak: usize,
+}
+
+/// One session's page table: `pages[i]` holds cache positions
+/// `[i·page_size, (i+1)·page_size)`; `len` is one past the highest
+/// written position.
+#[derive(Debug, Clone)]
+struct PageTable {
+    pages: Vec<usize>,
+    len: usize,
+}
+
+/// One cached prefill in the prefix index: the padded prompt (the
+/// lookup key — DESIGN.md §13's sharing condition), the pages holding
+/// its KV rows (the index owns one reference on each), and the
+/// last-position logits so a hit skips the prefill forward entirely.
+struct PrefixEntry {
+    key: Vec<i32>,
+    pages: Vec<usize>,
+    logits: Vec<f32>,
+}
+
+/// Block-paged per-session KV storage — the paged twin of
+/// [`KvCachePool`] behind the continuous-batching scheduler.
+///
+/// Layout: per layer, one flat K and one flat V buffer addressed as
+/// `(page · page_size + slot) · dim`, grown lazily to the high-water
+/// page; a [`PageArena`] refcounts pages; each session maps cache
+/// positions to pages through its private [`PageTable`].
+///
+/// Sharing: [`adopt_prefill`](PagedKvPool::adopt_prefill) registers
+/// the padded prompt in a prefix index (the index retains the pages),
+/// and [`admit_shared`](PagedKvPool::admit_shared) lets a later
+/// session with the same padded prompt join those pages without
+/// running prefill. The first write into a shared page
+/// ([`prepare_write`](PagedKvPool::prepare_write)) copy-on-write
+/// splits it, so sharers can never observe each other's tokens.
+///
+/// Allocation is confined to `prepare_write` (plus admission): the
+/// decode forward itself never allocates, so a batched tick can never
+/// fail mid-layer — the scheduler secures every write target first
+/// and evicts sessions it cannot secure.
+pub struct PagedKvPool {
+    /// Per layer, pages-major K/V rows, materialized lazily.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    pages: PageArena,
+    sessions: SlotArena<PageTable>,
+    /// FIFO prefix index (oldest evicted first under page pressure).
+    prefix: Vec<PrefixEntry>,
+    counters: PagedKvCounters,
+    n_layers: usize,
+    max_seq: usize,
+    dim: usize,
+    prompt_len: usize,
+    page_size: usize,
+    prefix_sharing: bool,
+}
+
+impl PagedKvPool {
+    /// Pool shaped for `model`, holding at most `max_sessions` live
+    /// sessions under `cfg`'s page geometry.
+    pub fn for_model(model: &SlabModel, max_sessions: usize, cfg: PagedKvConfig) -> PagedKvPool {
+        assert!(cfg.page_size >= 1, "page_size must be ≥ 1");
+        let m = &model.cfg;
+        let worst = m.max_seq.div_ceil(cfg.page_size);
+        let n_pages = if cfg.n_pages == 0 {
+            max_sessions.max(1) * worst
+        } else {
+            cfg.n_pages.max(worst)
+        };
+        PagedKvPool {
+            k: vec![Vec::new(); m.n_layers],
+            v: vec![Vec::new(); m.n_layers],
+            pages: PageArena::with_capacity(n_pages),
+            sessions: SlotArena::with_capacity(max_sessions),
+            prefix: Vec::new(),
+            counters: PagedKvCounters::default(),
+            n_layers: m.n_layers,
+            max_seq: m.max_seq,
+            dim: m.dim,
+            prompt_len: m.prompt_len,
+            page_size: cfg.page_size,
+            prefix_sharing: cfg.prefix_sharing,
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Pages needed to hold `len` cache positions.
+    fn pages_for(&self, len: usize) -> usize {
+        len.div_ceil(self.page_size)
+    }
+
+    /// Pages a fresh prompt occupies.
+    pub fn prompt_pages(&self) -> usize {
+        self.pages_for(self.prompt_len)
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.pages.free_pages()
+    }
+
+    pub fn allocated_pages(&self) -> usize {
+        self.pages.allocated()
+    }
+
+    pub fn capacity_pages(&self) -> usize {
+        self.pages.capacity()
+    }
+
+    /// Live sessions.
+    pub fn active(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Hard cap on live sessions (the scheduler's batch cap).
+    pub fn capacity(&self) -> usize {
+        self.sessions.capacity()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.sessions.is_full()
+    }
+
+    /// Materialized KV bytes (tracks the high-water page, not the
+    /// worst-case budget).
+    pub fn nbytes(&self) -> usize {
+        self.k.iter().chain(self.v.iter()).map(|l| l.len() * 4).sum()
+    }
+
+    /// Counter snapshot with the live-page gauge filled in.
+    pub fn counters(&self) -> PagedKvCounters {
+        let mut c = self.counters;
+        c.pages_in_use = self.pages.allocated();
+        c
+    }
+
+    /// Cache positions written for a live session.
+    pub fn session_len(&self, session: usize) -> usize {
+        self.sessions.get(session).expect("live session handle").len
+    }
+
+    /// A live session's page table (test/diagnostic observability).
+    pub fn session_pages(&self, session: usize) -> &[usize] {
+        &self.sessions.get(session).expect("live session handle").pages
+    }
+
+    /// A page's current reference count (`0` when free).
+    pub fn page_refcount(&self, page: usize) -> u32 {
+        self.pages.refcount(page)
+    }
+
+    /// Prefix-index entries currently cached.
+    pub fn cached_prefixes(&self) -> usize {
+        self.prefix.len()
+    }
+
+    /// Whether `padded` (a [`SlabModel::pad_prompt`] output) would hit
+    /// the prefix index — i.e. admission needs **zero** new pages.
+    pub fn has_prefix(&self, padded: &[i32]) -> bool {
+        self.prefix_sharing && self.prefix.iter().any(|e| e.key == padded)
+    }
+
+    fn alloc_page(&mut self) -> Option<usize> {
+        let p = self.pages.alloc()?;
+        let need = (p + 1) * self.page_size * self.dim;
+        for li in 0..self.n_layers {
+            if self.k[li].len() < need {
+                self.k[li].resize(need, 0.0);
+                self.v[li].resize(need, 0.0);
+            }
+        }
+        self.counters.pages_peak = self.counters.pages_peak.max(self.pages.allocated());
+        Some(p)
+    }
+
+    #[inline]
+    fn offset(&self, page: usize, slot: usize) -> usize {
+        (page * self.page_size + slot) * self.dim
+    }
+
+    fn row_offset(&self, session: usize, pos: usize) -> usize {
+        let t = self.sessions.get(session).expect("live session handle");
+        let page = t.pages[pos / self.page_size];
+        self.offset(page, pos % self.page_size)
+    }
+
+    /// Whether a write at `pos` is already secured: the page exists
+    /// and is exclusively owned. The decode forward's
+    /// [`KvStore::begin_write`] assertion.
+    fn write_ready(&self, session: usize, pos: usize) -> bool {
+        let Some(t) = self.sessions.get(session) else {
+            return false;
+        };
+        let pi = pos / self.page_size;
+        t.pages.get(pi).is_some_and(|&p| self.pages.refcount(p) == 1)
+    }
+
+    /// Adopt a freshly prefilled single-session cache (the output of
+    /// [`SlabModel::prefill_session`] on `padded`'s prompt), scattering
+    /// its rows into fresh pages; returns the session handle, or
+    /// `None` when sessions or pages are exhausted — the scheduler's
+    /// signal to evict prefixes or stop admitting. With sharing on,
+    /// the prefix is registered (pages retained by the index, `logits`
+    /// memoized) so later identical prompts can
+    /// [`admit_shared`](PagedKvPool::admit_shared).
+    pub fn adopt_prefill(
+        &mut self,
+        padded: &[i32],
+        logits: &[f32],
+        cache: &KvCache,
+    ) -> Option<usize> {
+        assert_eq!(cache.batch_size(), 1, "pool caches are single-session");
+        assert_eq!(padded.len(), self.prompt_len, "padded prompt vs prompt_len");
+        let need = self.prompt_pages();
+        if self.sessions.is_full() || self.pages.free_pages() < need {
+            return None;
+        }
+        let pages: Vec<usize> = (0..need)
+            .map(|_| self.alloc_page().expect("free_pages pre-checked"))
+            .collect();
+        let dim = self.dim;
+        for li in 0..self.n_layers {
+            for s in 0..self.prompt_len {
+                let o = self.offset(pages[s / self.page_size], s % self.page_size);
+                self.k[li][o..o + dim].copy_from_slice(cache.k_at(li, 0, s));
+                self.v[li][o..o + dim].copy_from_slice(cache.v_at(li, 0, s));
+            }
+        }
+        self.counters.prefix_misses += 1;
+        if self.prefix_sharing && !self.has_prefix(padded) {
+            for &p in &pages {
+                self.pages.retain(p);
+            }
+            self.prefix.push(PrefixEntry {
+                key: padded.to_vec(),
+                pages: pages.clone(),
+                logits: logits.to_vec(),
+            });
+        }
+        let len = self.prompt_len;
+        let sid = self
+            .sessions
+            .insert(PageTable { pages, len })
+            .expect("session capacity pre-checked");
+        Some(sid)
+    }
+
+    /// Join an already-prefilled prefix: the new session's page table
+    /// aliases the index's pages (each retained once) and the memoized
+    /// last-position logits are returned in place of a prefill
+    /// forward. `None` when sharing is off, the key misses, or the
+    /// session arena is full — the caller falls back to
+    /// [`adopt_prefill`](PagedKvPool::adopt_prefill).
+    pub fn admit_shared(&mut self, padded: &[i32]) -> Option<(usize, Vec<f32>)> {
+        if !self.prefix_sharing || self.sessions.is_full() {
+            return None;
+        }
+        let idx = self.prefix.iter().position(|e| e.key == padded)?;
+        let (pages, logits) = {
+            let e = &self.prefix[idx];
+            (e.pages.clone(), e.logits.clone())
+        };
+        for &p in &pages {
+            self.pages.retain(p);
+        }
+        let len = self.prompt_len;
+        let sid = self
+            .sessions
+            .insert(PageTable { pages, len })
+            .expect("capacity pre-checked above");
+        self.counters.prefix_hits += 1;
+        Some((sid, logits))
+    }
+
+    /// Free a terminated session: its table is dropped and every page
+    /// reference released (pages shared with the index or other
+    /// sessions stay allocated). Returns whether the handle was live.
+    pub fn release(&mut self, session: usize) -> bool {
+        let Some(table) = self.sessions.remove(session) else {
+            return false;
+        };
+        for p in table.pages {
+            self.pages.release(p);
+        }
+        true
+    }
+
+    /// Whether [`prepare_write`](PagedKvPool::prepare_write) for
+    /// `pos` would succeed *right now* (without mutating anything):
+    /// either the target page is exclusively owned, or a free page
+    /// exists for the grow / COW-split.
+    pub fn can_write(&self, session: usize, pos: usize) -> bool {
+        assert!(pos < self.max_seq, "pos {pos} vs max_seq {}", self.max_seq);
+        let t = self.sessions.get(session).expect("live session handle");
+        match t.pages.get(pos / self.page_size) {
+            Some(&p) => self.pages.refcount(p) == 1 || self.pages.free_pages() >= 1,
+            None => self.pages.free_pages() >= 1,
+        }
+    }
+
+    /// Secure the write target for `pos` before a decode tick:
+    /// grows the table by one fresh page when `pos` starts a new one,
+    /// copy-on-write splits the page when it is shared (first
+    /// divergent write — the sharer gets a private copy, the shared
+    /// original keeps its other holders), and is a no-op when the
+    /// page is already exclusive. Idempotent. Returns `false` — with
+    /// **no state change** — when a needed page cannot be allocated;
+    /// the scheduler then evicts prefixes and retries, or evicts the
+    /// session.
+    pub fn prepare_write(&mut self, session: usize, pos: usize) -> bool {
+        assert!(pos < self.max_seq, "pos {pos} vs max_seq {}", self.max_seq);
+        let pi = pos / self.page_size;
+        let existing = {
+            let t = self.sessions.get(session).expect("live session handle");
+            assert!(pi <= t.pages.len(), "non-contiguous page growth at pos {pos}");
+            t.pages.get(pi).copied()
+        };
+        match existing {
+            Some(p) if self.pages.refcount(p) > 1 => {
+                // COW split: private copy of the whole page, release
+                // one reference on the shared original.
+                let Some(np) = self.alloc_page() else {
+                    return false;
+                };
+                let row = self.page_size * self.dim;
+                let (src, dst) = (p * row, np * row);
+                for li in 0..self.n_layers {
+                    self.k[li].copy_within(src..src + row, dst);
+                    self.v[li].copy_within(src..src + row, dst);
+                }
+                self.pages.release(p);
+                let t = self.sessions.get_mut(session).expect("live session handle");
+                t.pages[pi] = np;
+                t.len = t.len.max(pos + 1);
+                self.counters.cow_splits += 1;
+                true
+            }
+            Some(_) => {
+                let t = self.sessions.get_mut(session).expect("live session handle");
+                t.len = t.len.max(pos + 1);
+                true
+            }
+            None => {
+                let Some(np) = self.alloc_page() else {
+                    return false;
+                };
+                let t = self.sessions.get_mut(session).expect("live session handle");
+                t.pages.push(np);
+                t.len = t.len.max(pos + 1);
+                true
+            }
+        }
+    }
+
+    /// Drop prefix-index entries (oldest first) until at least
+    /// `need_free` pages are free or the index is empty; returns how
+    /// many entries were dropped. Pages still shared by live sessions
+    /// stay allocated — only the index's own references are released.
+    pub fn evict_prefixes(&mut self, need_free: usize) -> usize {
+        let mut dropped = 0;
+        while self.pages.free_pages() < need_free && !self.prefix.is_empty() {
+            let e = self.prefix.remove(0);
+            for p in e.pages {
+                self.pages.release(p);
+            }
+            self.counters.prefix_evictions += 1;
+            dropped += 1;
+        }
+        dropped
+    }
+
+    /// Exhaustive bookkeeping audit for the fuzz suites: every page
+    /// referenced by a session table or the prefix index is live, each
+    /// page's refcount equals its number of holders, and the arena's
+    /// allocated count equals the number of distinct referenced pages
+    /// — no leaks, no double-frees, free list consistent. Panics with
+    /// a description on any violation.
+    pub fn check_invariants(&self) {
+        use std::collections::HashMap;
+        let mut held: HashMap<usize, u32> = HashMap::new();
+        for (_, t) in self.sessions.iter() {
+            assert!(t.len <= self.max_seq, "session len past max_seq");
+            assert_eq!(t.pages.len(), self.pages_for(t.len), "table size vs len");
+            for &p in &t.pages {
+                *held.entry(p).or_insert(0) += 1;
+            }
+        }
+        for e in &self.prefix {
+            for &p in &e.pages {
+                *held.entry(p).or_insert(0) += 1;
+            }
+        }
+        assert_eq!(
+            held.len(),
+            self.pages.allocated(),
+            "allocated pages vs distinct referenced pages (leak or stray)"
+        );
+        for (&p, &n) in &held {
+            assert_eq!(self.pages.refcount(p), n, "refcount of page {p} vs holders");
+        }
+        assert_eq!(
+            self.pages.free_pages(),
+            self.pages.capacity() - held.len(),
+            "free-list accounting"
+        );
+    }
+}
+
+impl KvStore for PagedKvPool {
+    fn assert_model(&self, cfg: &ModelCfg) {
+        assert_eq!(self.n_layers, cfg.n_layers, "paged pool built for another model");
+        assert_eq!(self.dim, cfg.dim, "paged pool built for another model");
+        assert_eq!(self.max_seq, cfg.max_seq, "paged pool built for another model");
+    }
+
+    fn has_session(&self, session: usize) -> bool {
+        self.sessions.get(session).is_some()
+    }
+
+    fn begin_write(&mut self, session: usize, pos: usize) {
+        assert!(
+            self.write_ready(session, pos),
+            "page for session {session} pos {pos} not secured — call prepare_write before decode"
+        );
+    }
+
+    fn write_row(&mut self, layer: usize, session: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
+        let o = self.row_offset(session, pos);
+        let dim = self.dim;
+        self.k[layer][o..o + dim].copy_from_slice(krow);
+        self.v[layer][o..o + dim].copy_from_slice(vrow);
+    }
+
+    fn k_row(&self, layer: usize, session: usize, pos: usize) -> &[f32] {
+        let o = self.row_offset(session, pos);
+        &self.k[layer][o..o + self.dim]
+    }
+
+    fn v_row(&self, layer: usize, session: usize, pos: usize) -> &[f32] {
+        let o = self.row_offset(session, pos);
+        &self.v[layer][o..o + self.dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use std::collections::HashMap;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg::llama("tiny-paged", 32, 8, 2, 2, 16, 16, 6)
+    }
+
+    /// Pinned default, overridable via `SLAB_FUZZ_SEED` so CI failures
+    /// replay deterministically (the CI test job pins it explicitly).
+    fn fuzz_seed(default: u64) -> u64 {
+        std::env::var("SLAB_FUZZ_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    #[test]
+    fn page_allocator_fuzz_no_leaks_no_double_frees() {
+        // Satellite: random admit/share/grow/COW/release/evict
+        // interleavings, audited after every op against the reference
+        // bookkeeping in `check_invariants` (allocated == distinct
+        // referenced pages, refcount == holder count, free-list
+        // consistent) plus exact refcount deltas on release.
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 401);
+        let model = SlabModel::from_dense(&params, 1);
+        let prompts: [Vec<i32>; 3] = [vec![5, 6, 7], vec![9, 10], vec![11, 12, 13, 14]];
+        let prefills: Vec<(Vec<i32>, Vec<f32>, KvCache)> = prompts
+            .iter()
+            .map(|p| {
+                let (logits, cache) = model.prefill_session(p);
+                (model.pad_prompt(p), logits.row(0).to_vec(), cache)
+            })
+            .collect();
+        let seed = fuzz_seed(0x9a6e5);
+        eprintln!("page_allocator_fuzz seed = {seed} (set SLAB_FUZZ_SEED to replay)");
+        let mut rng = Pcg64::seed_from_u64(seed);
+        for round in 0..4u64 {
+            // Tight budget (prompt = 3 pages, worst-case session = 8,
+            // 11 total) so rejection and eviction paths run hot;
+            // sharing toggles per round.
+            let mut pool = PagedKvPool::for_model(
+                &model,
+                4,
+                PagedKvConfig {
+                    page_size: 2,
+                    n_pages: 11,
+                    prefix_sharing: round % 2 == 0,
+                },
+            );
+            let mut live: Vec<usize> = Vec::new();
+            let mut next_pos: HashMap<usize, usize> = HashMap::new();
+            for _ in 0..300 {
+                match rng.below(5) {
+                    0 | 1 => {
+                        let (key, logits, cache) = &prefills[rng.below_usize(prefills.len())];
+                        let sid = match pool.admit_shared(key) {
+                            Some((sid, shared_logits)) => {
+                                assert_eq!(&shared_logits, logits, "memoized logits replay");
+                                Some(sid)
+                            }
+                            None => pool.adopt_prefill(key, logits, cache),
+                        };
+                        if let Some(sid) = sid {
+                            assert!(!live.contains(&sid), "handle collision");
+                            live.push(sid);
+                            next_pos.insert(sid, cfg.prompt_len);
+                        }
+                    }
+                    2 => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let i = rng.below_usize(live.len());
+                        let sid = live.swap_remove(i);
+                        next_pos.remove(&sid);
+                        // A table's pages are pairwise distinct, so each
+                        // refcount must drop by exactly one — hitting
+                        // zero (free) exactly when this was the last
+                        // holder.
+                        let held: Vec<(usize, u32)> = pool
+                            .session_pages(sid)
+                            .iter()
+                            .map(|&p| (p, pool.page_refcount(p)))
+                            .collect();
+                        assert!(pool.release(sid));
+                        assert!(!pool.release(sid), "double release must be a no-op");
+                        for (p, rc) in held {
+                            assert!(rc >= 1);
+                            assert_eq!(pool.page_refcount(p), rc - 1, "one ref per release");
+                        }
+                    }
+                    3 => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let sid = live[rng.below_usize(live.len())];
+                        let pos = next_pos.get_mut(&sid).unwrap();
+                        if *pos < cfg.max_seq {
+                            assert_eq!(pool.can_write(sid, *pos), {
+                                // can_write is a pure preview of
+                                // prepare_write's outcome.
+                                let ok = pool.prepare_write(sid, *pos);
+                                if ok {
+                                    *pos += 1;
+                                }
+                                ok
+                            });
+                        }
+                    }
+                    _ => {
+                        pool.evict_prefixes(rng.below_usize(3) + 1);
+                    }
+                }
+                pool.check_invariants();
+                assert_eq!(pool.allocated_pages() + pool.free_pages(), pool.capacity_pages());
+            }
+            for sid in live.drain(..) {
+                assert!(pool.release(sid));
+            }
+            pool.evict_prefixes(pool.capacity_pages());
+            pool.check_invariants();
+            assert_eq!(pool.allocated_pages(), 0, "drained arena leaks pages");
+            assert!(pool.counters().prefix_misses > 0, "fuzz exercised admission");
+        }
+    }
+
+    #[test]
+    fn cow_split_isolates_sharers_and_preserves_prefix() {
+        // prompt_len 6 with page_size 4: pages [0..4) and [4..8), the
+        // second half-full — position 6 is the first divergent write
+        // and must COW-split, never mutate the shared page.
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 402);
+        let model = SlabModel::from_dense(&params, 1);
+        let prompt = vec![5, 6, 7];
+        let padded = model.pad_prompt(&prompt);
+        let (logits, cache) = model.prefill_session(&prompt);
+        let mut pool = PagedKvPool::for_model(
+            &model,
+            4,
+            PagedKvConfig { page_size: 4, ..Default::default() },
+        );
+        let s0 = pool.adopt_prefill(&padded, logits.row(0), &cache).unwrap();
+        let (s1, shared) = pool.admit_shared(&padded).unwrap();
+        assert_eq!(shared, logits.row(0).to_vec(), "memoized prefill logits");
+        assert_eq!(pool.session_pages(s0), pool.session_pages(s1), "sharers alias pages");
+        assert_eq!(pool.session_len(s1), cfg.prompt_len);
+        assert_eq!(pool.counters().prefix_hits, 1);
+        assert_eq!(pool.counters().prefix_misses, 1);
+        let shared_page = pool.session_pages(s1)[1];
+        assert_eq!(pool.page_refcount(shared_page), 3, "prefix index + two sessions");
+
+        let before = pool.k_row(0, s0, 5).to_vec();
+        assert!(pool.prepare_write(s1, 6));
+        assert_ne!(pool.session_pages(s0)[1], pool.session_pages(s1)[1], "private copy");
+        assert_eq!(pool.page_refcount(shared_page), 2);
+        assert_eq!(pool.counters().cow_splits, 1);
+        // The split copied the prefix rows into the private page…
+        assert_eq!(pool.k_row(0, s1, 5), &before[..]);
+        // …and a divergent write stays invisible to the other sharer.
+        let junk = vec![7.0f32; cfg.dim];
+        pool.write_row(0, s1, 6, &junk, &junk);
+        assert_eq!(pool.k_row(0, s0, 5), &before[..], "sharer s0 unchanged");
+        assert_eq!(pool.k_row(0, s1, 6), &junk[..]);
+        // Idempotent once exclusive.
+        assert!(pool.prepare_write(s1, 6));
+        assert_eq!(pool.counters().cow_splits, 1);
+
+        // Sessions die; the prefix stays cached and still admits.
+        assert!(pool.release(s0));
+        assert!(pool.release(s1));
+        assert!(pool.has_prefix(&padded));
+        let (s2, _) = pool.admit_shared(&padded).unwrap();
+        assert_eq!(pool.counters().prefix_hits, 2);
+        assert!(pool.release(s2));
+        assert_eq!(pool.evict_prefixes(pool.capacity_pages()), 1);
+        assert_eq!(pool.allocated_pages(), 0);
+        assert_eq!(pool.cached_prefixes(), 0);
+        pool.check_invariants();
+    }
+
+    #[test]
+    fn paged_decode_is_bit_identical_to_contiguous() {
+        // The tentpole oracle (DESIGN.md §13): same sessions, one pool
+        // contiguous and one paged with sharing + a page size that
+        // forces COW on the very first decode write — logits must
+        // match *bit for bit* at every step.
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 403);
+        let model = SlabModel::from_dense(&params, 2);
+        let t = cfg.prompt_len;
+        let prompts: [Vec<i32>; 3] = [vec![5, 6, 7], vec![5, 6, 7], vec![9, 10]];
+        let mut kv = KvCachePool::for_model(&model, 4);
+        let mut paged = PagedKvPool::for_model(
+            &model,
+            4,
+            PagedKvConfig { page_size: 4, n_pages: 0, prefix_sharing: true },
+        );
+        let mut steps_c: Vec<DecodeSlot> = Vec::new();
+        let mut steps_p: Vec<DecodeSlot> = Vec::new();
+        for p in &prompts {
+            let padded = model.pad_prompt(p);
+            let (cl, cc) = model.prefill_session(p);
+            let ctok = greedy_token(cl.row(0));
+            let cs = kv.adopt(cc).unwrap();
+            steps_c.push(DecodeSlot { session: cs, token: ctok, pos: t });
+            let (ps, plog) = match paged.admit_shared(&padded) {
+                Some((sid, logits)) => (sid, logits),
+                None => {
+                    let (pl, pc) = model.prefill_session(p);
+                    let sid = paged.adopt_prefill(&padded, pl.row(0), &pc).unwrap();
+                    (sid, pl.row(0).to_vec())
+                }
+            };
+            let ptok = greedy_token(&plog);
+            assert_eq!(ptok, ctok, "first token from memoized logits");
+            steps_p.push(DecodeSlot { session: ps, token: ptok, pos: t });
+        }
+        assert_eq!(paged.counters().prefix_hits, 1, "second sharer hit the index");
+
+        for step in 0..4 {
+            for st in &steps_p {
+                assert!(paged.prepare_write(st.session, st.pos), "worst-case-safe budget");
+            }
+            let lc = model.decode_batch(&mut kv, &steps_c);
+            let lp = model.decode_batch_paged(&mut paged, &steps_p);
+            assert_eq!(lp.data, lc.data, "paged vs contiguous logits at step {step}");
+            for r in 0..steps_c.len() {
+                let tok = greedy_token(lc.row(r));
+                steps_c[r] = DecodeSlot { session: steps_c[r].session, token: tok, pos: steps_c[r].pos + 1 };
+                steps_p[r] = DecodeSlot { session: steps_p[r].session, token: tok, pos: steps_p[r].pos + 1 };
+            }
+            paged.check_invariants();
+        }
+        // First decode write (pos 6) fell inside the half-full shared
+        // page for all three sessions (two sharers + the distinct
+        // prompt's own prefix entry) — each needed a private copy.
+        assert_eq!(paged.counters().cow_splits, 3);
+        // And the greedy emit hooks agree too.
+        for st in &steps_p {
+            assert!(paged.prepare_write(st.session, st.pos));
+        }
+        let gc = model.decode_batch_greedy(&mut kv, &steps_c);
+        let gp = model.decode_batch_greedy_paged(&mut paged, &steps_p);
+        assert_eq!(gp, gc, "greedy emit parity");
+    }
+
+    #[test]
+    fn page_budget_floor_and_exhaustion_signaling() {
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 404);
+        let model = SlabModel::from_dense(&params, 1);
+        // A sub-floor budget is clamped to one worst-case session…
+        let pool = PagedKvPool::for_model(
+            &model,
+            2,
+            PagedKvConfig { page_size: 4, n_pages: 1, prefix_sharing: false },
+        );
+        assert_eq!(pool.capacity_pages(), 4, "⌈16/4⌉ floor");
+        // …and budget 0 is the worst-case-safe default.
+        let pool = PagedKvPool::for_model(
+            &model,
+            3,
+            PagedKvConfig { page_size: 4, ..Default::default() },
+        );
+        assert_eq!(pool.capacity_pages(), 12);
+
+        // Exhaustion: 2 pages, 1-page prompts, sharing off.
+        let mut pool = PagedKvPool::for_model(
+            &model,
+            4,
+            PagedKvConfig { page_size: 8, n_pages: 2, prefix_sharing: false },
+        );
+        let prompt = vec![3, 4];
+        let padded = model.pad_prompt(&prompt);
+        let (logits, cache) = model.prefill_session(&prompt);
+        let s0 = pool.adopt_prefill(&padded, logits.row(0), &cache).unwrap();
+        let s1 = pool.adopt_prefill(&padded, logits.row(0), &cache).unwrap();
+        assert!(pool.adopt_prefill(&padded, logits.row(0), &cache).is_none(), "pages exhausted");
+        assert!(pool.admit_shared(&padded).is_none(), "sharing disabled");
+        assert_eq!(pool.nbytes(), cfg.n_layers * 2 * 2 * 8 * cfg.dim * 4, "two pages materialized");
+        // In-place writes inside the exclusively-owned page still work…
+        assert!(pool.can_write(s0, 6) && pool.prepare_write(s0, 6));
+        assert!(pool.prepare_write(s0, 7));
+        // …but growth past it is refused without a free page, with no
+        // state change (the scheduler's evict signal).
+        assert!(!pool.can_write(s0, 8));
+        assert!(!pool.prepare_write(s0, 8));
+        pool.check_invariants();
+        assert!(pool.release(s1));
+        assert!(pool.can_write(s0, 8) && pool.prepare_write(s0, 8), "freed page reused at once");
+        assert_eq!(pool.session_pages(s0).len(), 2);
+        pool.check_invariants();
+        assert!(pool.release(s0));
+        assert_eq!(pool.allocated_pages(), 0);
+    }
+}

@@ -106,9 +106,13 @@ pub struct KvCache {
 
 impl KvCache {
     fn new(n_layers: usize, bsz: usize, max_seq: usize, dim: usize) -> KvCache {
+        // Lazily materialized: buffers start empty and `write` grows
+        // them to the highest written offset, so a session costs
+        // O(positions actually written) bytes instead of the
+        // worst-case `bsz · max_seq` up-front (DESIGN.md §13).
         KvCache {
-            k: vec![vec![0.0; bsz * max_seq * dim]; n_layers],
-            v: vec![vec![0.0; bsz * max_seq * dim]; n_layers],
+            k: vec![Vec::new(); n_layers],
+            v: vec![Vec::new(); n_layers],
             bsz,
             max_seq,
             dim,
@@ -124,21 +128,28 @@ impl KvCache {
         (b * self.max_seq + s) * self.dim
     }
 
-    fn write(&mut self, layer: usize, b: usize, s: usize, krow: &[f32], vrow: &[f32]) {
+    pub(crate) fn write(&mut self, layer: usize, b: usize, s: usize, krow: &[f32], vrow: &[f32]) {
         let o = self.base(b, s);
         let dim = self.dim;
+        if self.k[layer].len() < o + dim {
+            // Zero-fill any gap (e.g. across the per-batch stride):
+            // reads only ever touch written positions (`s ≤ pos`), so
+            // the filler is never observed.
+            self.k[layer].resize(o + dim, 0.0);
+            self.v[layer].resize(o + dim, 0.0);
+        }
         self.k[layer][o..o + dim].copy_from_slice(krow);
         self.v[layer][o..o + dim].copy_from_slice(vrow);
     }
 
     #[inline]
-    fn k_at(&self, layer: usize, b: usize, s: usize) -> &[f32] {
+    pub(crate) fn k_at(&self, layer: usize, b: usize, s: usize) -> &[f32] {
         let o = self.base(b, s);
         &self.k[layer][o..o + self.dim]
     }
 
     #[inline]
-    fn v_at(&self, layer: usize, b: usize, s: usize) -> &[f32] {
+    pub(crate) fn v_at(&self, layer: usize, b: usize, s: usize) -> &[f32] {
         let o = self.base(b, s);
         &self.v[layer][o..o + self.dim]
     }
@@ -225,6 +236,57 @@ impl KvCachePool {
 
     fn cache_mut(&mut self, session: usize) -> &mut KvCache {
         self.arena.get_mut(session).expect("live session handle")
+    }
+}
+
+/// Uniform KV addressing for the batched decode forward: the
+/// contiguous per-session arena ([`KvCachePool`]) and the block-paged
+/// pool ([`crate::model::PagedKvPool`]) implement the same read/write
+/// surface, so [`SlabModel::decode_batch`] and
+/// [`SlabModel::decode_batch_paged`] share one compute body
+/// ([`SlabModel::decode_batch_in`]) verbatim. Paging can therefore
+/// only change *address computation*, never operation order — the
+/// whole bit-identity argument of DESIGN.md §13: same ops in the same
+/// accumulation order, different offsets.
+pub(crate) trait KvStore {
+    /// Panic unless the store was shaped for `cfg`'s model.
+    fn assert_model(&self, cfg: &ModelCfg);
+    fn has_session(&self, session: usize) -> bool;
+    /// Hook run once per step after validation, before any layer
+    /// touches the cache: the paged store asserts the write target is
+    /// resident and unshared (the scheduler's
+    /// [`prepare_write`](crate::model::PagedKvPool::prepare_write)
+    /// contract — decode itself never allocates); contiguous is a
+    /// no-op.
+    fn begin_write(&mut self, session: usize, pos: usize);
+    fn write_row(&mut self, layer: usize, session: usize, pos: usize, krow: &[f32], vrow: &[f32]);
+    fn k_row(&self, layer: usize, session: usize, pos: usize) -> &[f32];
+    fn v_row(&self, layer: usize, session: usize, pos: usize) -> &[f32];
+}
+
+impl KvStore for KvCachePool {
+    fn assert_model(&self, cfg: &ModelCfg) {
+        assert_eq!(self.n_layers, cfg.n_layers, "pool built for another model");
+        assert_eq!(self.dim, cfg.dim, "pool built for another model");
+        assert_eq!(self.max_seq, cfg.max_seq, "pool built for another model");
+    }
+
+    fn has_session(&self, session: usize) -> bool {
+        self.arena.get(session).is_some()
+    }
+
+    fn begin_write(&mut self, _session: usize, _pos: usize) {}
+
+    fn write_row(&mut self, layer: usize, session: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
+        self.cache_mut(session).write(layer, 0, pos, krow, vrow);
+    }
+
+    fn k_row(&self, layer: usize, session: usize, pos: usize) -> &[f32] {
+        self.cache(session).k_at(layer, 0, pos)
+    }
+
+    fn v_row(&self, layer: usize, session: usize, pos: usize) -> &[f32] {
+        self.cache(session).v_at(layer, 0, pos)
     }
 }
 
@@ -412,6 +474,17 @@ impl SlabModel {
     /// [`KvCachePool::adopt`] — the "prefill" half of
     /// prefill-then-join admission.
     pub fn prefill_session(&self, prompt: &[i32]) -> (Mat, KvCache) {
+        self.prefill(&self.pad_prompt(prompt), 1)
+    }
+
+    /// The padding [`prefill_session`](SlabModel::prefill_session)
+    /// applies, exposed on its own: left-aligned, PAD-padded to
+    /// `prompt_len`, ids clamped into the vocab. The padded form is
+    /// the prefix-sharing cache key (DESIGN.md §13) — two prompts
+    /// share prefilled pages iff their padded forms are equal, which
+    /// is exactly the condition under which their prefills are
+    /// bit-identical.
+    pub fn pad_prompt(&self, prompt: &[i32]) -> Vec<i32> {
         let t = self.cfg.prompt_len;
         let vmax = self.cfg.vocab.saturating_sub(1) as i32;
         let mut flat = vec![PAD; t];
@@ -419,7 +492,7 @@ impl SlabModel {
         for (j, &tok) in prompt[..n].iter().enumerate() {
             flat[j] = tok.clamp(0, vmax);
         }
-        self.prefill(&flat, 1)
+        flat
     }
 
     /// One decode step for N independent sessions at *per-session*
@@ -441,19 +514,39 @@ impl SlabModel {
     /// `steps` (one cache cannot take two writes in one step), a
     /// position past `max_seq`, or a pool shaped for another model.
     pub fn decode_batch(&self, kvpool: &mut KvCachePool, steps: &[DecodeSlot]) -> Mat {
+        self.decode_batch_in(kvpool, steps)
+    }
+
+    /// [`decode_batch`](SlabModel::decode_batch) over the block-paged
+    /// KV pool — the same compute body through the same [`KvStore`]
+    /// surface, so the logits are bit-identical to the contiguous
+    /// pool's for equal cache contents (the conformance suite's
+    /// invariant). Every step's write target must have been secured
+    /// via [`PagedKvPool::prepare_write`](crate::model::PagedKvPool::prepare_write)
+    /// first; decode never allocates or COW-splits.
+    pub fn decode_batch_paged(
+        &self,
+        kvpool: &mut crate::model::PagedKvPool,
+        steps: &[DecodeSlot],
+    ) -> Mat {
+        self.decode_batch_in(kvpool, steps)
+    }
+
+    fn decode_batch_in<S: KvStore>(&self, kv: &mut S, steps: &[DecodeSlot]) -> Mat {
         let n = steps.len();
         if n == 0 {
             return Mat::zeros(0, self.cfg.vocab);
         }
-        assert_eq!(kvpool.n_layers, self.cfg.n_layers, "pool built for another model");
-        assert_eq!(kvpool.dim, self.cfg.dim, "pool built for another model");
-        assert_eq!(kvpool.max_seq, self.cfg.max_seq, "pool built for another model");
+        kv.assert_model(&self.cfg);
         for (i, st) in steps.iter().enumerate() {
             assert!(st.pos < self.cfg.max_seq, "pos {} vs max_seq {}", st.pos, self.cfg.max_seq);
-            assert!(kvpool.arena.get(st.session).is_some(), "dead session {}", st.session);
+            assert!(kv.has_session(st.session), "dead session {}", st.session);
             for other in &steps[i + 1..] {
                 assert_ne!(st.session, other.session, "duplicate session in batch");
             }
+        }
+        for st in steps {
+            kv.begin_write(st.session, st.pos);
         }
         let (dim, nh) = (self.cfg.dim, self.cfg.n_heads);
         let hd = dim / nh;
@@ -474,13 +567,10 @@ impl SlabModel {
                 rope_apply(k.row_mut(r), nh, hd, &tables[r]);
             }
             for (r, st) in steps.iter().enumerate() {
-                kvpool
-                    .cache_mut(st.session)
-                    .write(li, 0, st.pos, k.row(r), v.row(r));
+                kv.write_row(li, st.session, st.pos, k.row(r), v.row(r));
             }
             let mut att = Mat::zeros(n, dim);
             for (r, st) in steps.iter().enumerate() {
-                let cache = kvpool.cache(st.session);
                 scores.clear();
                 scores.resize(st.pos + 1, 0.0);
                 let qrow = q.row(r);
@@ -488,7 +578,7 @@ impl SlabModel {
                 for hh in 0..nh {
                     let qh = &qrow[hh * hd..(hh + 1) * hd];
                     for (s, sc) in scores.iter_mut().enumerate() {
-                        let kh = &cache.k_at(li, 0, s)[hh * hd..(hh + 1) * hd];
+                        let kh = &kv.k_row(li, st.session, s)[hh * hd..(hh + 1) * hd];
                         let mut d = 0.0f32;
                         for e in 0..hd {
                             d += qh[e] * kh[e];
@@ -498,7 +588,7 @@ impl SlabModel {
                     softmax_inplace(&mut scores);
                     for (s, &p) in scores.iter().enumerate() {
                         if p != 0.0 {
-                            let vh = &cache.v_at(li, 0, s)[hh * hd..(hh + 1) * hd];
+                            let vh = &kv.v_row(li, st.session, s)[hh * hd..(hh + 1) * hd];
                             for e in 0..hd {
                                 arow[hh * hd + e] += p * vh[e];
                             }
@@ -524,6 +614,19 @@ impl SlabModel {
     /// guarantee the streaming tests pin.
     pub fn decode_batch_greedy(&self, kvpool: &mut KvCachePool, steps: &[DecodeSlot]) -> Vec<i32> {
         let logits = self.decode_batch(kvpool, steps);
+        (0..logits.rows).map(|r| greedy_token(logits.row(r))).collect()
+    }
+
+    /// [`decode_batch_greedy`](SlabModel::decode_batch_greedy) over
+    /// the block-paged pool — same emit hook, same argmax policy,
+    /// token-identical to the contiguous form for equal cache
+    /// contents.
+    pub fn decode_batch_greedy_paged(
+        &self,
+        kvpool: &mut crate::model::PagedKvPool,
+        steps: &[DecodeSlot],
+    ) -> Vec<i32> {
+        let logits = self.decode_batch_paged(kvpool, steps);
         (0..logits.rows).map(|r| greedy_token(logits.row(r))).collect()
     }
 
@@ -1132,6 +1235,29 @@ mod tests {
         assert_eq!(s2, s0, "freed handle is reused");
         assert_eq!(kv.active(), 2);
         let _ = s1;
+    }
+
+    #[test]
+    fn kv_cache_allocates_lazily_per_written_position() {
+        // Satellite: the contiguous fallback must not pay worst-case
+        // `max_seq` bytes up-front — a prefilled session materializes
+        // exactly its prompt positions and grows one position per
+        // decode write.
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 217);
+        let model = SlabModel::from_dense(&params, 1);
+        let per_pos = cfg.n_layers * 2 * cfg.dim * 4;
+        let (_, cache) = model.prefill_session(&[5, 6]);
+        assert_eq!(cache.nbytes(), cfg.prompt_len * per_pos, "prompt positions only");
+        let mut kv = KvCachePool::for_model(&model, 1);
+        let s = kv.adopt(cache).unwrap();
+        let before = kv.nbytes();
+        model.decode_batch(&mut kv, &[DecodeSlot { session: s, token: 5, pos: cfg.prompt_len }]);
+        assert_eq!(kv.nbytes(), before + per_pos, "one position per decode write");
+        assert!(
+            kv.nbytes() < cfg.n_layers * 2 * cfg.max_seq * cfg.dim * 4,
+            "never the worst-case footprint"
+        );
     }
 
     #[test]

@@ -278,6 +278,81 @@ impl<T> SlotArena<T> {
     }
 }
 
+/// Refcounted page allocator — the block-paged KV storage substrate
+/// ([`PagedKvPool`](crate::model::PagedKvPool), DESIGN.md §13). Built
+/// on [`SlotArena`]: a page id is an arena handle whose value is the
+/// page's reference count, so the free list, LIFO reuse, stable
+/// handles, and the hard capacity are exactly the session-slot
+/// machinery the scheduler already trusts.
+///
+/// [`alloc`](PageArena::alloc) hands out a page at refcount 1;
+/// [`retain`](PageArena::retain) adds a sharer (copy-on-write prefix
+/// sharing); [`release`](PageArena::release) drops one reference and
+/// returns the page to the free list *exactly* when the count hits
+/// zero — the no-double-free / no-leak contract the allocator fuzz
+/// (`model::tests`) pins against a reference model. Releasing or
+/// retaining a free page is a double-free-class bug and panics.
+#[derive(Debug)]
+pub struct PageArena {
+    refs: SlotArena<u32>,
+}
+
+impl PageArena {
+    /// Allocator over at most `n_pages` live pages (`≥ 1` enforced).
+    pub fn with_capacity(n_pages: usize) -> PageArena {
+        PageArena {
+            refs: SlotArena::with_capacity(n_pages),
+        }
+    }
+
+    /// Hard page budget.
+    pub fn capacity(&self) -> usize {
+        self.refs.capacity()
+    }
+
+    /// Pages currently allocated (refcount ≥ 1).
+    pub fn allocated(&self) -> usize {
+        self.refs.len()
+    }
+
+    /// Pages still allocatable.
+    pub fn free_pages(&self) -> usize {
+        self.capacity() - self.allocated()
+    }
+
+    /// Allocate a page at refcount 1 — `None` when the budget is
+    /// exhausted (the caller's admit/evict signal).
+    pub fn alloc(&mut self) -> Option<usize> {
+        self.refs.insert(1)
+    }
+
+    /// Add one reference to a live page (a new sharer of a prefilled
+    /// prefix). Panics on a free page.
+    pub fn retain(&mut self, page: usize) {
+        let rc = self.refs.get_mut(page).expect("retain of a free page");
+        *rc += 1;
+    }
+
+    /// Drop one reference; frees the page (returns `true`) exactly
+    /// when the last sharer releases. Panics on a free page — a
+    /// double free must fail loudly, not corrupt the free list.
+    pub fn release(&mut self, page: usize) -> bool {
+        let rc = self.refs.get_mut(page).expect("release of a free page (double free)");
+        *rc -= 1;
+        if *rc == 0 {
+            self.refs.remove(page);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current reference count (`0` for a free page).
+    pub fn refcount(&self, page: usize) -> u32 {
+        self.refs.get(page).copied().unwrap_or(0)
+    }
+}
+
 /// Split `0..n` into at most `parts` contiguous ranges of near-equal
 /// length — the chunking scheme every row-parallel kernel uses. Empty
 /// for `n == 0`; never yields an empty range.
@@ -502,6 +577,54 @@ mod tests {
         assert_eq!(a.capacity(), 1);
         assert!(a.insert(7).is_some());
         assert!(a.insert(8).is_none());
+    }
+
+    #[test]
+    fn page_arena_refcount_lifecycle() {
+        let mut a = PageArena::with_capacity(3);
+        assert_eq!(a.capacity(), 3);
+        assert_eq!(a.free_pages(), 3);
+        let p0 = a.alloc().unwrap();
+        let p1 = a.alloc().unwrap();
+        let p2 = a.alloc().unwrap();
+        assert_eq!(a.allocated(), 3);
+        assert_eq!(a.free_pages(), 0);
+        assert!(a.alloc().is_none(), "over capacity");
+        assert_eq!(a.refcount(p0), 1);
+        // A second sharer keeps the page live through the first release.
+        a.retain(p1);
+        assert_eq!(a.refcount(p1), 2);
+        assert!(!a.release(p1), "sharer remains");
+        assert_eq!(a.refcount(p1), 1);
+        assert!(a.release(p1), "last ref frees");
+        assert_eq!(a.refcount(p1), 0, "free page reads as refcount 0");
+        assert_eq!(a.free_pages(), 1);
+        // Freed page id is recycled for the next alloc.
+        let p3 = a.alloc().unwrap();
+        assert_eq!(p3, p1);
+        assert!(a.release(p0));
+        assert!(a.release(p2));
+        assert!(a.release(p3));
+        assert_eq!(a.allocated(), 0);
+        assert_eq!(a.free_pages(), a.capacity());
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn page_arena_release_of_free_page_panics() {
+        let mut a = PageArena::with_capacity(2);
+        let p = a.alloc().unwrap();
+        assert!(a.release(p));
+        a.release(p); // page already free: must fail loudly
+    }
+
+    #[test]
+    #[should_panic(expected = "retain of a free page")]
+    fn page_arena_retain_of_free_page_panics() {
+        let mut a = PageArena::with_capacity(2);
+        let p = a.alloc().unwrap();
+        assert!(a.release(p));
+        a.retain(p);
     }
 
     #[test]

@@ -63,6 +63,16 @@ pub fn eos_free_params(cfg: &ModelCfg, seed: u64) -> Params {
     params
 }
 
+/// Seed for the randomized suites: `SLAB_FUZZ_SEED` when set (CI pins
+/// it; a failure report's seed replays locally the same way), else the
+/// suite's default. Every fuzz test eprintln!s the seed it ran with.
+pub fn fuzz_seed(default: u64) -> u64 {
+    std::env::var("SLAB_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .unwrap_or(default)
+}
+
 /// Decompose every pruned linear natively (no runtime, no artifacts):
 /// (packed layers, params with the dense reconstruction Ŵ swapped in).
 pub fn compress_native(params: &Params, seed: u64) -> (Vec<(String, SlabLayer)>, Params) {

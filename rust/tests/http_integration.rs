@@ -219,6 +219,116 @@ fn http_cancel_frees_kv_slot_for_waiting_request() {
     assert_eq!(stats.requests, 2);
 }
 
+#[test]
+fn http_soak_shared_prefix_streams_stay_ordered_under_concurrency() {
+    // The paged-KV soak (DESIGN.md §13): 64 concurrent streaming
+    // clients over 4 distinct prompts, so ~94% of admissions join a
+    // cached prefill copy-on-write. Every stream must keep its
+    // integrity under the churn — id frame first, tokens in engine
+    // order, exactly one terminal frame — and /metrics must report
+    // the non-zero prefix hit-rate.
+    let cfg = native_test_cfg();
+    let params = Params::init(&cfg, 105);
+    let reference_model = SlabModel::from_dense(&params, 1);
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![5, 9, 14, 20],
+        vec![7, 8],
+        vec![33, 34, 35],
+        vec![11, 12, 13, 14, 15],
+    ];
+    let budget = 6usize;
+    let reference: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| reference_model.generate_batch(&[p.clone()], budget).remove(0))
+        .collect();
+    let server = Server::start_with(
+        Backend::NativeBatched(Box::new(SlabModel::from_dense(&params, 1))),
+        ServerConfig {
+            queue_cap: 128,
+            sched: SchedulerConfig {
+                max_batch: 8,
+                queue_cap: 128,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let http = HttpServer::bind("127.0.0.1:0", server).expect("bind loopback");
+    let addr = http.addr();
+
+    let n_clients = 64usize;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|i| {
+            let pidx = i % prompts.len();
+            let prompt = prompts[pidx].clone();
+            std::thread::spawn(move || -> (usize, Vec<i32>) {
+                let body = Json::obj(vec![
+                    ("prompt", Json::arr(prompt.iter().map(|&t| Json::num(t)))),
+                    ("max_new", Json::from_usize(budget)),
+                    ("stream", Json::Bool(true)),
+                ]);
+                let mut sse = client::SseStream::open(addr, &body.to_string()).expect("open sse");
+                assert_eq!(sse.status, 200);
+                let id_frame = sse.next_frame().expect("frame").expect("id frame");
+                assert!(id_frame.get("id").as_i64().is_some(), "id frame must come first");
+                let mut tokens: Vec<i32> = Vec::new();
+                let mut terminals = 0usize;
+                while let Some(frame) = sse.next_frame().expect("frame") {
+                    if let Some(t) = frame.get("token").as_i64() {
+                        assert_eq!(terminals, 0, "token frame after the terminal");
+                        tokens.push(t as i32);
+                    } else if !frame.get("done").is_null() {
+                        terminals += 1;
+                        assert_eq!(
+                            frame.get("done").get("tokens").as_usize(),
+                            Some(tokens.len()),
+                            "terminal token count vs streamed"
+                        );
+                    } else {
+                        panic!("unexpected frame {frame:?}");
+                    }
+                }
+                assert_eq!(terminals, 1, "exactly one terminal frame");
+                (pidx, tokens)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (pidx, tokens) = h.join().expect("client thread");
+        assert_eq!(
+            tokens, reference[pidx],
+            "soak stream diverged from the engine reference (prompt {pidx})"
+        );
+    }
+
+    // /metrics sees the warm prefix cache: one miss per distinct
+    // prompt, a hit for every other admission.
+    let metrics = client::get(addr, "/metrics").expect("metrics");
+    assert_eq!(metrics.status, 200);
+    let cell = |key: &str| -> f64 {
+        metrics
+            .body
+            .lines()
+            .find(|l| l.contains(key))
+            .unwrap_or_else(|| panic!("missing {key} row:\n{}", metrics.body))
+            .split('|')
+            .map(str::trim)
+            .filter(|c| !c.is_empty())
+            .nth(1)
+            .expect("value cell")
+            .parse()
+            .expect("numeric cell")
+    };
+    assert!(cell("prefix_hit_rate") > 0.9, "soak must be hit-dominated");
+    assert!(cell("prefix_hits") >= (n_clients - prompts.len()) as f64);
+
+    let stats = http.shutdown().expect("shutdown");
+    assert_eq!(stats.requests, n_clients);
+    assert_eq!(stats.prefix_hits, n_clients - prompts.len());
+    assert_eq!(stats.prefix_misses, prompts.len());
+    assert!(stats.cow_splits > 0, "divergence after a shared prefix COW-splits");
+}
+
 /// Kill-on-drop guard so a failing assert never leaks the child.
 struct ChildGuard(std::process::Child);
 

@@ -29,8 +29,11 @@
 
 mod common;
 
-use common::{compress_native, native_test_cfg, runtime};
-use slab::coordinator::{Backend, Request, Server, ServerConfig};
+use common::{compress_native, eos_free_params, fuzz_seed, native_test_cfg, runtime};
+use slab::coordinator::{
+    collect_events, Backend, CancelHandle, Event, Request, Scheduler, SchedulerConfig, Server,
+    ServerConfig,
+};
 use slab::data::{build_corpus, Grammar};
 use slab::model::{Params, SlabModel};
 use slab::runtime::{lit_f32, lit_i32, lit_scalar_i32, to_vec_f32};
@@ -38,6 +41,8 @@ use slab::slab::{decompose, ActStats, SlabConfig, SlabLayer};
 use slab::tensor::Mat;
 use slab::util::rng::Pcg64;
 use std::path::Path;
+use std::sync::mpsc::{channel, Receiver};
+use std::time::Duration;
 
 #[test]
 fn manifest_covers_all_configs_and_kernels() {
@@ -532,6 +537,217 @@ fn batched_scheduler_matches_serial_packed_serving_end_to_end() {
     for (tokens, &b) in batched.iter().zip(budgets.iter()) {
         assert!(tokens.len() <= b.min(cfg.max_seq - cfg.prompt_len));
     }
+}
+
+#[test]
+fn paged_scheduler_survives_churn_at_tiny_page_budgets() {
+    // The PR-5 cancellation/deadline churn fuzz, rerun in
+    // page-exhaustion regimes: a paged scheduler on a page budget
+    // barely above the one-worst-case-session floor, under random
+    // submit / cancel / instant-deadline / tick churn. Invariants:
+    // the scheduler always drains (no deadlock), every stream carries
+    // exactly one terminal event with no tokens after it, a rejected
+    // request gets exactly one `Rejected` and nothing else, and every
+    // token stream is a bit-exact prefix of the serial reference —
+    // page pressure may shorten streams, never corrupt them.
+    let cfg = native_test_cfg();
+    let params = eos_free_params(&cfg, 0x51ab);
+    let serial = SlabModel::from_dense(&params, 1);
+    let headroom = cfg.max_seq - cfg.prompt_len;
+    let prompt_pool: Vec<Vec<i32>> = vec![
+        vec![5, 6, 7],
+        vec![9, 10],
+        vec![11, 12, 13, 14],
+        vec![5, 6, 7, 8, 9, 10],
+    ];
+    let reference: Vec<Vec<i32>> = prompt_pool
+        .iter()
+        .map(|p| serial.generate_batch(&[p.clone()], headroom).remove(0))
+        .collect();
+    let seed = fuzz_seed(0xbadcafe);
+    eprintln!("paged churn fuzz seed: {seed} (set SLAB_FUZZ_SEED to replay)");
+    let mut rng = Pcg64::seed_from_u64(seed);
+
+    struct Client {
+        rx: Receiver<Event>,
+        pidx: usize,
+        budget: usize,
+        cancel: Option<CancelHandle>,
+    }
+
+    for round in 0..4usize {
+        // kv_page 2 → the floor is ⌈20/2⌉ = 10 pages; budgets barely
+        // above it keep admission and decode permanently page-starved.
+        let page_budget = 10 + rng.below_usize(8);
+        let mut s = Scheduler::new(
+            Box::new(SlabModel::from_dense(&params, 1)),
+            SchedulerConfig {
+                max_batch: 3,
+                queue_cap: 4,
+                kv_page: 2,
+                page_budget,
+                prefix_sharing: round % 2 == 0,
+                ..Default::default()
+            },
+        );
+        let mut clients: Vec<Client> = Vec::new();
+        for _ in 0..60 {
+            match rng.below(4) {
+                0 | 1 => {
+                    let pidx = rng.below_usize(prompt_pool.len());
+                    let budget = 1 + rng.below_usize(headroom);
+                    // 1-in-4 submissions carry an already-expired
+                    // deadline: reaped from the queue or batch with a
+                    // clean Evicted terminal.
+                    let deadline = if rng.below(4) == 0 {
+                        Some(Duration::ZERO)
+                    } else {
+                        None
+                    };
+                    let (tx, rx) = channel();
+                    let cancel = s.enqueue(
+                        Request {
+                            prompt: prompt_pool[pidx].clone(),
+                            max_new: budget,
+                            deadline,
+                        },
+                        tx,
+                    );
+                    clients.push(Client {
+                        rx,
+                        pidx,
+                        budget,
+                        cancel,
+                    });
+                }
+                2 => {
+                    if !clients.is_empty() {
+                        let i = rng.below_usize(clients.len());
+                        if let Some(c) = &clients[i].cancel {
+                            c.cancel();
+                        }
+                    }
+                }
+                _ => {
+                    s.tick();
+                }
+            }
+        }
+        let mut drain = 0usize;
+        while s.has_work() {
+            s.tick();
+            drain += 1;
+            assert!(drain < 2000, "round {round}: scheduler failed to drain");
+        }
+        for (ci, c) in clients.iter().enumerate() {
+            let rejected = c.cancel.is_none();
+            let mut tokens: Vec<i32> = Vec::new();
+            let mut terminals = 0usize;
+            for ev in c.rx.try_iter() {
+                match ev {
+                    Event::Token(t) => {
+                        assert_eq!(terminals, 0, "round {round} client {ci}: token after terminal");
+                        tokens.push(t);
+                    }
+                    Event::Rejected => {
+                        assert!(rejected, "round {round} client {ci}: spurious Rejected");
+                        terminals += 1;
+                    }
+                    Event::Done(_) | Event::Evicted(_) => terminals += 1,
+                }
+            }
+            assert_eq!(terminals, 1, "round {round} client {ci}: exactly one terminal");
+            if rejected {
+                assert!(tokens.is_empty(), "round {round} client {ci}: tokens on rejection");
+                continue;
+            }
+            let want = &reference[c.pidx];
+            assert!(tokens.len() <= c.budget);
+            assert_eq!(
+                tokens[..],
+                want[..tokens.len()],
+                "round {round} client {ci}: stream must be a prefix of the serial reference"
+            );
+        }
+        let st = s.into_stats();
+        assert!(
+            st.kv_pages_peak <= page_budget,
+            "round {round}: page budget is a hard ceiling"
+        );
+    }
+}
+
+#[test]
+fn page_eviction_frees_pages_for_same_tick_admission() {
+    // A release must make its pages admittable in the *same* tick
+    // (reap → admit → decode ordering): a session blocked purely on
+    // page availability is admitted and decoded the very tick the
+    // page holder is cancelled — and still streams its exact serial
+    // tokens off the recycled pages.
+    let cfg = native_test_cfg();
+    let params = eos_free_params(&cfg, 0x7a9e);
+    let serial = SlabModel::from_dense(&params, 1);
+    let reference_a = serial.generate_batch(&[vec![5, 6, 7]], 14).remove(0);
+    let reference_b = serial.generate_batch(&[vec![9, 10]], 4).remove(0);
+    let mut s = Scheduler::new(
+        Box::new(SlabModel::from_dense(&params, 1)),
+        SchedulerConfig {
+            max_batch: 2,
+            kv_page: 2,
+            page_budget: 10, // exactly one worst-case session
+            prefix_sharing: false,
+            ..Default::default()
+        },
+    );
+    let (tx_a, rx_a) = channel();
+    let cancel_a = s
+        .enqueue(
+            Request {
+                prompt: vec![5, 6, 7],
+                max_new: 14,
+                deadline: None,
+            },
+            tx_a,
+        )
+        .expect("queued");
+    // Let A grow to 8 of the 10 pages (prompt 3 + one per 2 decodes).
+    for _ in 0..9 {
+        s.tick();
+    }
+    let (tx_b, rx_b) = channel();
+    s.enqueue(
+        Request {
+            prompt: vec![9, 10],
+            max_new: 4,
+            deadline: None,
+        },
+        tx_b,
+    )
+    .expect("queued");
+    s.tick();
+    assert_eq!(
+        (s.active_sessions(), s.queued()),
+        (1, 1),
+        "B must stall on page availability, not batch capacity"
+    );
+    cancel_a.cancel();
+    let decoded = s.tick(); // reap A (pages freed) → admit B → decode B
+    assert_eq!(decoded, 1, "B decoding the very tick A's pages freed");
+    assert_eq!((s.active_sessions(), s.queued()), (1, 0));
+    while s.has_work() {
+        s.tick();
+    }
+    let ra = collect_events(&rx_a);
+    assert!(ra.cancelled);
+    assert!(!ra.tokens.is_empty());
+    assert_eq!(ra.tokens[..], reference_a[..ra.tokens.len()]);
+    let rb = collect_events(&rx_b);
+    assert!(!rb.cancelled && !rb.evicted);
+    assert_eq!(rb.tokens, reference_b, "B bit-exact off recycled pages");
+    let st = s.into_stats();
+    assert_eq!(st.page_evictions, 0, "blocking, not preemption, under admission pressure");
+    assert_eq!(st.kv_pages, 0, "sharing off: every page returned");
+    assert!(st.kv_pages_peak <= 10);
 }
 
 #[test]
