@@ -4,13 +4,24 @@
 //! dense GEMM vs CSR sparse vs bitpacked-binary vs the full packed
 //! SLaB layer (CSR + rank-1 + bitplane) — the CPU analogue of the
 //! HBM-bytes argument in DESIGN.md §9 — each in its scalar-reference,
-//! cache-blocked, and ThreadPool-parallel forms, plus the fused
-//! packed forward the serving engine runs and the AOT Pallas
-//! `slab_linear` artifact when `artifacts/` is present.
+//! cache-blocked, ThreadPool-parallel, and word/unrolled `fast`
+//! forms, plus the fused packed forward the serving engine runs and
+//! the AOT Pallas `slab_linear` artifact when `artifacts/` is
+//! present.
+//!
+//! Beyond the printed tables, the decode-shaped (batch-1) and 2:4
+//! semi-structured groups are written to `BENCH_kernels.json` as
+//! roofline rows: tokens/s, bytes moved per token, achieved GB/s,
+//! and the fraction of a measured STREAM-style bandwidth ceiling
+//! (`peak_frac`). CI's bench-smoke job greps these keys and the
+//! perf-gate job diffs the `*_per_sec` / `*_gbps` leaves against the
+//! previous main-branch run via `rust/ci/bench_compare.rs`.
 //!
 //! The ≥512-dim rows are the acceptance gate for the parallel
 //! kernels: row-chunking must beat the scalar loops once the weight
-//! working set leaves L2.
+//! working set leaves L2. The batch-1 group is the acceptance gate
+//! for PR 7's fused decode epilogue: the `forward_decode` rows must
+//! beat the scalar-order fused-parallel baseline.
 
 // Clippy policy: the kernel/numeric code here deliberately uses
 // explicit index loops, operator-named helpers (`Mat::add`), and
@@ -37,16 +48,80 @@
 
 use slab::binary::BitMat;
 use slab::slab::{decompose, ActStats, SlabConfig, SlabLayer};
-use slab::sparse::Csr;
+use slab::sparse::{Csr, NmPacked, PATTERN_2_4};
 use slab::tensor::{matmul_bt, Mat};
-use slab::util::bench::Bench;
+use slab::util::bench::{black_box, Bench, Stats};
+use slab::util::json::Json;
+use slab::util::kernel::KernelMode;
 use slab::util::pool::ThreadPool;
 use slab::util::rng::Pcg64;
 use std::path::Path;
+use std::time::Instant;
+
+/// STREAM-style bandwidth ceiling: best-of-N copy and triad passes
+/// over buffers sized well past L2 so the measurement is DRAM-bound,
+/// not cache-bound. Returns (copy GB/s, triad GB/s). The triad
+/// number is the roofline ceiling the kernel rows are scored
+/// against: like them it mixes reads, writes, and FLOPs.
+fn measure_stream(smoke: bool) -> (f64, f64) {
+    let n: usize = if smoke { 1 << 20 } else { 4 << 20 };
+    let reps = if smoke { 3 } else { 7 };
+    let a = vec![1.0f32; n];
+    let b = vec![2.0f32; n];
+    let mut c = vec![0.0f32; n];
+    let mut best_copy = 0.0f64;
+    let mut best_triad = 0.0f64;
+    for _ in 0..reps {
+        let t = Instant::now();
+        c.copy_from_slice(&a);
+        black_box(&c);
+        let dt = t.elapsed().as_secs_f64();
+        // copy moves 2 arrays (read a, write c) of n f32 each.
+        best_copy = best_copy.max(2.0 * n as f64 * 4.0 / dt / 1e9);
+
+        let t = Instant::now();
+        for i in 0..n {
+            c[i] = a[i] + 3.0f32 * b[i];
+        }
+        black_box(&c);
+        let dt = t.elapsed().as_secs_f64();
+        // triad moves 3 arrays (read a, read b, write c).
+        best_triad = best_triad.max(3.0 * n as f64 * 4.0 / dt / 1e9);
+    }
+    (best_copy, best_triad)
+}
+
+/// One roofline row for the JSON summary. `bytes` is the weight +
+/// activation traffic per iteration (one decode token here), so
+/// `achieved_gbps / ceiling` says how close the kernel runs to the
+/// measured memory-bandwidth roof — decode matvecs have arithmetic
+/// intensity well under 1 FLOP/byte, so bandwidth IS the roof.
+fn roofline_row(name: &str, s: &Stats, bytes: f64, flops: f64, ceiling_gbps: f64) -> Json {
+    let per_sec = s.throughput(1.0);
+    let gbps = bytes * per_sec / 1e9;
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("mean_ns", Json::num(s.mean_ns)),
+        ("tokens_per_sec", Json::num(per_sec)),
+        ("gflops_effective", Json::num(flops * per_sec / 1e9)),
+        ("bytes_per_token", Json::num(bytes)),
+        ("achieved_gbps", Json::num(gbps)),
+        ("peak_frac", Json::num(if ceiling_gbps > 0.0 { gbps / ceiling_gbps } else { 0.0 })),
+    ])
+}
 
 fn main() {
     let mut rng = Pcg64::seed_from_u64(77);
     let pool = ThreadPool::new(0);
+    let smoke = std::env::var("SLAB_BENCH_FAST").as_deref() == Ok("1");
+
+    let (copy_gbps, triad_gbps) = measure_stream(smoke);
+    println!(
+        "STREAM ceiling: copy {copy_gbps:.2} GB/s | triad {triad_gbps:.2} GB/s \
+         ({} f32/array)",
+        if smoke { 1usize << 20 } else { 4usize << 20 }
+    );
+
     let shapes = [
         (256usize, 256usize),
         (688, 256),
@@ -54,6 +129,7 @@ fn main() {
         (1024, 512),
     ];
     let batch = 32usize;
+    let mut shape_rows: Vec<Json> = Vec::new();
 
     for (dout, din) in shapes {
         let mut b = Bench::new(&format!("linear {dout}x{din} (batch {batch})"));
@@ -69,8 +145,9 @@ fn main() {
         let csr = Csr::from_dense(&d.w_s);
         let bits = BitMat::from_sign_of(&d.w_b);
         let flops = 2.0 * batch as f64 * dout as f64 * din as f64;
+        let gfl = |s: &Stats| s.throughput(flops) / 1e9;
 
-        b.run_throughput("dense matmul_bt", flops, "flop", || matmul_bt(&x, &w));
+        let s_dense = b.run_throughput("dense matmul_bt", flops, "flop", || matmul_bt(&x, &w));
         b.run_throughput(
             &format!("csr spmm scalar ({} nnz, {:.0}%)", csr.nnz(), 100.0 * csr.density()),
             flops,
@@ -78,21 +155,33 @@ fn main() {
             || csr.spmm_bt(&x),
         );
         b.run_throughput("csr spmm blocked", flops, "flop", || csr.spmm_bt_blocked(&x));
-        b.run_throughput(
+        let s_csr_par = b.run_throughput(
             &format!("csr spmm parallel x{}", pool.size()),
             flops,
             "flop",
             || csr.spmm_bt_par(&x, &pool),
         );
+        let s_csr_fast = b.run_throughput(
+            &format!("csr spmm fast parallel x{}", pool.size()),
+            flops,
+            "flop",
+            || csr.spmm_bt_fast(&x, Some(&pool)),
+        );
         b.run_throughput("bitpacked ±1 scalar", flops, "flop", || bits.matmul_bt(&x));
         b.run_throughput("bitpacked ±1 blocked", flops, "flop", || {
             bits.matmul_bt_blocked(&x)
         });
-        b.run_throughput(
+        let s_bit_par = b.run_throughput(
             &format!("bitpacked ±1 parallel x{}", pool.size()),
             flops,
             "flop",
             || bits.matmul_bt_par(&x, &pool),
+        );
+        let s_bit_fast = b.run_throughput(
+            &format!("bitpacked ±1 word-fast parallel x{}", pool.size()),
+            flops,
+            "flop",
+            || bits.matmul_bt_fast(&x, Some(&pool)),
         );
         b.run_throughput("slab packed forward (scalar)", flops, "flop", || {
             layer.forward(&x)
@@ -100,7 +189,7 @@ fn main() {
         b.run_throughput("slab fused forward", flops, "flop", || {
             layer.forward_fused(&x, None)
         });
-        b.run_throughput(
+        let s_fused_par = b.run_throughput(
             &format!("slab fused parallel x{}", pool.size()),
             flops,
             "flop",
@@ -113,10 +202,32 @@ fn main() {
             (dout * din * 4) as f64 / layer.nbytes_deploy() as f64
         );
         b.finish();
+
+        shape_rows.push(Json::obj(vec![
+            ("dout", Json::from_usize(dout)),
+            ("din", Json::from_usize(din)),
+            ("batch", Json::from_usize(batch)),
+            (
+                "gflops",
+                Json::obj(vec![
+                    ("dense", Json::num(gfl(&s_dense))),
+                    ("csr_parallel", Json::num(gfl(&s_csr_par))),
+                    ("csr_fast_parallel", Json::num(gfl(&s_csr_fast))),
+                    ("bitpacked_parallel", Json::num(gfl(&s_bit_par))),
+                    ("bitpacked_fast_parallel", Json::num(gfl(&s_bit_fast))),
+                    ("slab_fused_parallel", Json::num(gfl(&s_fused_par))),
+                ]),
+            ),
+        ]));
     }
 
     // Decode-shaped batch: batch 1 is where row-chunking (not batch
-    // parallelism) has to carry the speedup.
+    // parallelism) has to carry the speedup, and where PR 7's fused
+    // epilogue (one activation pass per token) earns its keep. The
+    // baseline for the acceptance gate is the scalar-order fused
+    // parallel path the serving engine ran before `forward_decode`
+    // existed.
+    let decode_summary;
     {
         let (dout, din) = (1024usize, 512usize);
         let mut b = Bench::new(&format!("decode linear {dout}x{din} (batch 1)"));
@@ -127,18 +238,167 @@ fn main() {
             .expect("decompose");
         let layer = SlabLayer::from_decomposition(&d);
         let flops = 2.0 * dout as f64 * din as f64;
-        b.run_throughput("dense matmul_bt", flops, "flop", || matmul_bt(&x, &w));
+        // Per-token traffic: the packed weights stream once, plus the
+        // activation read, the rank-r scaled copies, and the output
+        // write. (Rank-r scratch is din*rank floats, written + read.)
+        let slab_bytes = layer.nbytes_deploy() as f64
+            + (din + 3 * din * layer.rank() + dout) as f64 * 4.0;
+        let dense_bytes = (dout * din + din + dout) as f64 * 4.0;
+
+        let s_dense = b.run_throughput("dense matmul_bt", flops, "flop", || matmul_bt(&x, &w));
         b.run_throughput("slab fused forward", flops, "flop", || {
             layer.forward_fused(&x, None)
         });
-        b.run_throughput(
-            &format!("slab fused parallel x{}", pool.size()),
+        let s_base = b.run_throughput(
+            &format!("slab fused parallel x{} (baseline)", pool.size()),
             flops,
             "flop",
             || layer.forward_fused(&x, Some(&pool)),
         );
+        let s_dec_exact = b.run_throughput("fused decode exact", flops, "flop", || {
+            layer.forward_decode(&x, None, KernelMode::Exact)
+        });
+        let s_dec_exact_par = b.run_throughput(
+            &format!("fused decode exact parallel x{}", pool.size()),
+            flops,
+            "flop",
+            || layer.forward_decode(&x, Some(&pool), KernelMode::Exact),
+        );
+        let s_dec_fast = b.run_throughput("fused decode fast", flops, "flop", || {
+            layer.forward_decode(&x, None, KernelMode::Fast)
+        });
+        let s_dec_fast_par = b.run_throughput(
+            &format!("fused decode fast parallel x{}", pool.size()),
+            flops,
+            "flop",
+            || layer.forward_decode(&x, Some(&pool), KernelMode::Fast),
+        );
         b.finish();
+
+        // Best fused-decode config (serving picks per-shape): lowest
+        // mean over {exact, fast} x {serial, parallel}.
+        let best = [&s_dec_exact, &s_dec_exact_par, &s_dec_fast, &s_dec_fast_par]
+            .iter()
+            .map(|s| s.mean_ns)
+            .fold(f64::INFINITY, f64::min);
+        let speedup = s_base.mean_ns / best;
+        println!(
+            "  fused decode speedup vs scalar-order parallel baseline: {speedup:.2}x \
+             ({:.0} -> {:.0} ns/token)",
+            s_base.mean_ns, best
+        );
+
+        decode_summary = Json::obj(vec![
+            ("dout", Json::from_usize(dout)),
+            ("din", Json::from_usize(din)),
+            ("rank", Json::from_usize(layer.rank())),
+            ("weight_bytes_packed", Json::from_usize(layer.nbytes_deploy())),
+            (
+                "rows",
+                Json::arr(vec![
+                    roofline_row("dense matmul_bt", &s_dense, dense_bytes, flops, triad_gbps),
+                    roofline_row(
+                        "slab fused parallel (baseline)",
+                        &s_base,
+                        slab_bytes,
+                        flops,
+                        triad_gbps,
+                    ),
+                    roofline_row("fused decode exact", &s_dec_exact, slab_bytes, flops, triad_gbps),
+                    roofline_row(
+                        "fused decode exact parallel",
+                        &s_dec_exact_par,
+                        slab_bytes,
+                        flops,
+                        triad_gbps,
+                    ),
+                    roofline_row("fused decode fast", &s_dec_fast, slab_bytes, flops, triad_gbps),
+                    roofline_row(
+                        "fused decode fast parallel",
+                        &s_dec_fast_par,
+                        slab_bytes,
+                        flops,
+                        triad_gbps,
+                    ),
+                ]),
+            ),
+            ("baseline_tokens_per_sec", Json::num(s_base.throughput(1.0))),
+            ("best_fused_decode_tokens_per_sec", Json::num(1e9 / best)),
+            ("fused_decode_speedup_vs_baseline", Json::num(speedup)),
+        ]);
     }
+
+    // 2:4 semi-structured group: the dedicated `row_dot_24` kernel
+    // (compress `--semi` / `--pattern 2:4`) vs the generic packed
+    // matvec and a CSR holding the same matrix.
+    let semi_summary;
+    {
+        let (dout, din) = (1024usize, 512usize);
+        let mut b = Bench::new(&format!("semi 2:4 {dout}x{din} (batch 1)"));
+        let w = Mat::randn(dout, din, 0.02, &mut rng);
+        let mask = PATTERN_2_4.mask_from_scores(&w.abs());
+        let w24 = w.zip(&mask, |a, m| a * m);
+        let packed = NmPacked::pack(PATTERN_2_4, &w24).expect("pack 2:4");
+        let csr = Csr::from_dense(&w24);
+        let x = Mat::randn(1, din, 1.0, &mut rng);
+        let flops = 2.0 * dout as f64 * din as f64;
+        let act_bytes = (din + dout) as f64 * 4.0;
+        let packed_bytes = packed.nbytes() as f64 + act_bytes;
+        let csr_bytes = (csr.nnz() * 8 + (dout + 1) * 4) as f64 + act_bytes;
+
+        let s_csr = b.run_throughput("csr spmm (same matrix)", flops, "flop", || {
+            csr.spmm_bt(&x)
+        });
+        let s_gen = b.run_throughput("nm packed generic", flops, "flop", || packed.spmm_bt(&x));
+        let s_24 = b.run_throughput("nm 2:4 dedicated exact", flops, "flop", || {
+            packed.spmm_bt_24(&x, false)
+        });
+        let s_24f = b.run_throughput("nm 2:4 dedicated fast", flops, "flop", || {
+            packed.spmm_bt_24(&x, true)
+        });
+        b.finish();
+
+        semi_summary = Json::obj(vec![
+            ("pattern", Json::str(PATTERN_2_4.name())),
+            ("dout", Json::from_usize(dout)),
+            ("din", Json::from_usize(din)),
+            ("packed_bytes", Json::from_usize(packed.nbytes())),
+            (
+                "rows",
+                Json::arr(vec![
+                    roofline_row("csr same matrix", &s_csr, csr_bytes, flops, triad_gbps),
+                    roofline_row("nm packed generic", &s_gen, packed_bytes, flops, triad_gbps),
+                    roofline_row("nm 2:4 dedicated exact", &s_24, packed_bytes, flops, triad_gbps),
+                    roofline_row("nm 2:4 dedicated fast", &s_24f, packed_bytes, flops, triad_gbps),
+                ]),
+            ),
+            (
+                "dedicated_speedup_vs_generic",
+                Json::num(s_gen.mean_ns / s_24f.mean_ns.min(s_24.mean_ns)),
+            ),
+        ]);
+    }
+
+    let summary = Json::obj(vec![
+        ("bench", Json::str("kernels")),
+        ("mode", Json::str(if smoke { "smoke" } else { "full" })),
+        ("threads", Json::from_usize(pool.size())),
+        (
+            "stream",
+            Json::obj(vec![
+                // Deliberately not *_gbps keys: the ceiling tracks
+                // the runner's memory system, not this repo's code,
+                // so the perf-gate must not pin it.
+                ("copy_ceiling_gb_s", Json::num(copy_gbps)),
+                ("triad_ceiling_gb_s", Json::num(triad_gbps)),
+            ]),
+        ),
+        ("shapes", Json::arr(shape_rows)),
+        ("decode", decode_summary),
+        ("semi", semi_summary),
+    ]);
+    std::fs::write("BENCH_kernels.json", summary.to_pretty()).expect("write BENCH_kernels.json");
+    println!("wrote BENCH_kernels.json");
 
     // AOT Pallas slab_linear artifact (needs `make artifacts`).
     let dir = Path::new("artifacts");

@@ -1,0 +1,375 @@
+//! Perf-gate comparer for CI: diff two bench summary JSON files and
+//! fail on throughput regressions.
+//!
+//! Usage: `bench_compare <baseline.json> <current.json> [tolerance]`
+//!
+//! Built standalone (`rustc -O rust/ci/bench_compare.rs`) so the
+//! perf-gate job needs no workspace build. Dependency-free: carries
+//! its own minimal JSON reader rather than linking the library crate
+//! it is gating.
+//!
+//! Policy (mirrors DESIGN.md §9 / ci.yml perf-gate):
+//! - Pinned rows are the numeric leaves whose path contains
+//!   `per_sec` or `gbps` — throughput-style, higher is better.
+//!   Latency (`*_ns`), ratios (`peak_frac`, `speedup*`), and the
+//!   STREAM ceilings (`*_gb_s`, runner property, not repo code) are
+//!   deliberately NOT pinned.
+//! - A pinned row regresses when `current < baseline * (1 - tol)`;
+//!   tol defaults to 0.15. Any regression → exit 1.
+//! - Baseline file missing or unreadable → `SKIP`, exit 0 (first
+//!   run on a branch, or main has no artifact yet).
+//! - Pinned row present in baseline but absent in current → warning
+//!   only: bench-smoke's greps pin the names that must exist, so a
+//!   legitimate rename must not brick the gate.
+
+use std::collections::BTreeMap;
+
+// ---------------------------------------------------------------
+// Minimal JSON reader: only what bench summaries need (objects,
+// arrays, strings, f64 numbers, true/false/null). Numbers keep f64;
+// everything else is structure.
+// ---------------------------------------------------------------
+
+enum Json {
+    Num(f64),
+    Str,
+    Bool,
+    Null,
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Parser<'a> {
+        Parser { b: s.as_bytes(), i: 0 }
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && (self.b[self.i] as char).is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8, String> {
+        self.ws();
+        self.b.get(self.i).copied().ok_or_else(|| "unexpected end of input".to_string())
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek()? == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => {
+                self.string()?;
+                Ok(Json::Str)
+            }
+            b't' => self.lit("true").map(|_| Json::Bool),
+            b'f' => self.lit("false").map(|_| Json::Bool),
+            b'n' => self.lit("null").map(|_| Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str) -> Result<(), String> {
+        self.ws();
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(())
+        } else {
+            Err(format!("expected '{word}' at byte {}", self.i))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut pairs = Vec::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            let key = self.string()?;
+            self.eat(b':')?;
+            pairs.push((key, self.value()?));
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                c => return Err(format!("expected ',' or '}}', got '{}'", c as char)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => return Err(format!("expected ',' or ']', got '{}'", c as char)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *self.b.get(self.i).ok_or("bad escape")?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' | b'f' => out.push(' '),
+                        b'u' => {
+                            // Bench summaries are ASCII; keep a
+                            // placeholder rather than decoding
+                            // surrogate pairs.
+                            self.i = (self.i + 4).min(self.b.len());
+                            out.push('?');
+                        }
+                        _ => return Err(format!("bad escape '\\{}'", e as char)),
+                    }
+                }
+                _ => out.push(c as char),
+            }
+        }
+        Err("unterminated string".to_string())
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        self.ws();
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number '{s}' at byte {start}"))
+    }
+}
+
+fn parse(s: &str) -> Result<Json, String> {
+    let mut p = Parser::new(s);
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing garbage at byte {}", p.i));
+    }
+    Ok(v)
+}
+
+// ---------------------------------------------------------------
+// Flatten numeric leaves to path -> value. Array elements that are
+// objects carrying numeric "dout"/"din" fields (per-shape rows) are
+// keyed by those dims so adding a shape doesn't shift every later
+// row's identity; other elements fall back to their index.
+// ---------------------------------------------------------------
+
+fn flatten(j: &Json, prefix: &str, out: &mut BTreeMap<String, f64>) {
+    match j {
+        Json::Num(v) => {
+            out.insert(prefix.to_string(), *v);
+        }
+        Json::Obj(pairs) => {
+            for (k, v) in pairs {
+                let p = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{prefix}/{k}")
+                };
+                flatten(v, &p, out);
+            }
+        }
+        Json::Arr(items) => {
+            for (idx, v) in items.iter().enumerate() {
+                let label = row_label(v).unwrap_or_else(|| idx.to_string());
+                flatten(v, &format!("{prefix}/{label}"), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn row_label(j: &Json) -> Option<String> {
+    if let Json::Obj(pairs) = j {
+        let mut dout = None;
+        let mut din = None;
+        for (k, v) in pairs {
+            if let Json::Num(n) = v {
+                if k == "dout" {
+                    dout = Some(*n);
+                }
+                if k == "din" {
+                    din = Some(*n);
+                }
+            }
+        }
+        if let (Some(a), Some(b)) = (dout, din) {
+            return Some(format!("{a}x{b}"));
+        }
+    }
+    None
+}
+
+fn pinned(path: &str) -> bool {
+    path.contains("per_sec") || path.contains("gbps")
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() < 3 {
+        eprintln!("usage: bench_compare <baseline.json> <current.json> [tolerance]");
+        std::process::exit(2);
+    }
+    let tol: f64 = args.get(3).map(|s| s.parse().expect("bad tolerance")).unwrap_or(0.15);
+
+    let baseline_src = match std::fs::read_to_string(&args[1]) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("SKIP: no baseline at {} ({e}) — nothing to gate against", args[1]);
+            std::process::exit(0);
+        }
+    };
+    let current_src = match std::fs::read_to_string(&args[2]) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("FAIL: current summary {} unreadable: {e}", args[2]);
+            std::process::exit(1);
+        }
+    };
+    let baseline = match parse(&baseline_src) {
+        Ok(j) => j,
+        Err(e) => {
+            // A corrupt baseline artifact must not block every PR.
+            println!("SKIP: baseline {} does not parse ({e})", args[1]);
+            std::process::exit(0);
+        }
+    };
+    let current = match parse(&current_src) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("FAIL: current {} does not parse: {e}", args[2]);
+            std::process::exit(1);
+        }
+    };
+
+    let mut old_rows = BTreeMap::new();
+    let mut new_rows = BTreeMap::new();
+    flatten(&baseline, "", &mut old_rows);
+    flatten(&current, "", &mut new_rows);
+
+    let mut regressions = 0usize;
+    let mut checked = 0usize;
+    println!("{:-<88}", "");
+    println!("{:<56} {:>12} {:>12} {:>6}", "pinned row", "baseline", "current", "delta");
+    println!("{:-<88}", "");
+    for (path, old) in old_rows.iter().filter(|(p, _)| pinned(p)) {
+        match new_rows.get(path) {
+            None => {
+                println!("{path:<56} {old:>12.3} {:>12} {:>6}", "-", "GONE");
+                eprintln!("warning: pinned row '{path}' missing from current run (renamed?)");
+            }
+            Some(new) => {
+                checked += 1;
+                let delta = if *old > 0.0 { new / old - 1.0 } else { 0.0 };
+                let bad = *old > 0.0 && *new < old * (1.0 - tol);
+                println!(
+                    "{path:<56} {old:>12.3} {new:>12.3} {:>+5.1}%{}",
+                    100.0 * delta,
+                    if bad { "  << REGRESSION" } else { "" }
+                );
+                if bad {
+                    regressions += 1;
+                }
+            }
+        }
+    }
+    println!("{:-<88}", "");
+    println!(
+        "{checked} pinned rows checked, {regressions} regressed more than {:.0}%",
+        tol * 100.0
+    );
+    if regressions > 0 {
+        std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leaves(src: &str) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        flatten(&parse(src).expect("parse"), "", &mut out);
+        out
+    }
+
+    #[test]
+    fn flattens_nested_numeric_leaves() {
+        let m = leaves(r#"{"a": {"b_per_sec": 10.5, "c": [1, 2]}, "d": "x", "e": null}"#);
+        assert_eq!(m.get("a/b_per_sec"), Some(&10.5));
+        assert_eq!(m.get("a/c/0"), Some(&1.0));
+        assert_eq!(m.get("a/c/1"), Some(&2.0));
+        assert!(!m.contains_key("d"));
+    }
+
+    #[test]
+    fn pinning_selects_throughput_rows_only() {
+        assert!(pinned("decode/rows/2/tokens_per_sec"));
+        assert!(pinned("decode/rows/2/achieved_gbps"));
+        assert!(!pinned("decode/rows/2/peak_frac"));
+        assert!(!pinned("decode/rows/2/mean_ns"));
+        assert!(!pinned("stream/triad_ceiling_gb_s"));
+    }
+
+    #[test]
+    fn shape_rows_keyed_by_dims_not_index() {
+        let m = leaves(r#"{"shapes": [{"dout": 256, "din": 128, "g_per_sec": 5}]}"#);
+        assert_eq!(m.get("shapes/256x128/g_per_sec"), Some(&5.0));
+    }
+
+    #[test]
+    fn parser_handles_escapes_and_exponents() {
+        let m = leaves(r#"{"a\n": 1e3, "b": -2.5E-1}"#);
+        assert_eq!(m.get("a\n"), Some(&1000.0));
+        assert_eq!(m.get("b"), Some(&-0.25));
+    }
+}

@@ -139,24 +139,147 @@ impl BitMat {
         let total: f32 = x.iter().sum();
         let mut y = vec![0.0f32; self.rows];
         for i in 0..self.rows {
-            let base = i * self.words_per_row;
-            let mut neg_sum = 0.0f32; // Σ x[j] where bit=0 (sign −1)
-            for w in 0..self.words_per_row {
-                let mut word = !self.bits[base + w]; // set bits = −1 lanes
-                let jbase = w * 64;
-                let lanes = (self.cols - jbase).min(64);
-                if lanes < 64 {
-                    word &= (1u64 << lanes) - 1;
-                }
-                while word != 0 {
-                    let t = word.trailing_zeros() as usize;
-                    neg_sum += x[jbase + t];
-                    word &= word - 1;
-                }
-            }
-            y[i] = total - 2.0 * neg_sum;
+            y[i] = total - 2.0 * self.row_neg_sum(i, x);
         }
         y
+    }
+
+    /// Σ x[j] over this row's −1 lanes, accumulated in ascending-j
+    /// (scalar reference) order — the exact-kernel building block:
+    /// [`matvec`](BitMat::matvec) and the fused decode epilogue
+    /// ([`SlabLayer::forward_decode`](crate::slab::SlabLayer::forward_decode))
+    /// both derive `y[i] = total − 2·row_neg_sum(i)` from it, which is
+    /// what keeps them bit-identical to each other.
+    #[inline]
+    pub fn row_neg_sum(&self, i: usize, x: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), self.cols);
+        let base = i * self.words_per_row;
+        let mut neg_sum = 0.0f32; // Σ x[j] where bit=0 (sign −1)
+        for w in 0..self.words_per_row {
+            let mut word = !self.bits[base + w]; // set bits = −1 lanes
+            let jbase = w * 64;
+            let lanes = (self.cols - jbase).min(64);
+            if lanes < 64 {
+                word &= (1u64 << lanes) - 1;
+            }
+            while word != 0 {
+                let t = word.trailing_zeros() as usize;
+                neg_sum += x[jbase + t];
+                word &= word - 1;
+            }
+        }
+        neg_sum
+    }
+
+    /// Fast-path [`row_neg_sum`](BitMat::row_neg_sum): consumes each
+    /// packed word whole — every lane contributes through a branchless
+    /// sign-select (`x & mask`, −1 lanes keep `x`, +1 lanes add +0.0)
+    /// into 8 independent accumulator chains, so the compiler can
+    /// vectorize across lanes and the CPU overlaps FP-add latency
+    /// instead of serializing one chain per `trailing_zeros` bit.
+    ///
+    /// **Tolerance-gated** (DESIGN.md §7): the 8-chain striping
+    /// reassociates the sum, so results differ from the exact kernel
+    /// by a few ULPs — never compare with `==`. The error bound is
+    /// asserted in this module's property tests.
+    pub fn row_neg_sum_fast(&self, i: usize, x: &[f32]) -> f32 {
+        assert_eq!(x.len(), self.cols);
+        assert!(i < self.rows);
+        let base = i * self.words_per_row;
+        let full = self.cols / 64;
+        let mut acc = [0.0f32; 8];
+        for wd in 0..full {
+            // SAFETY: i < rows and wd < full <= words_per_row, so
+            // base + wd < rows * words_per_row == bits.len().
+            let word = !unsafe { *self.bits.get_unchecked(base + wd) };
+            let xw = &x[wd * 64..wd * 64 + 64];
+            for c in 0..8 {
+                let lanes = (word >> (c * 8)) as u32 & 0xff;
+                let xc = &xw[c * 8..c * 8 + 8];
+                for t in 0..8 {
+                    // lane bit set ⇒ −1 weight ⇒ keep x[j]; clear ⇒
+                    // +1 weight ⇒ add +0.0. An accumulator that starts
+                    // at +0.0 and only ever adds can never turn into
+                    // −0.0, so the +0.0 padding is value-preserving.
+                    let keep = (lanes >> t) & 1;
+                    acc[t] += f32::from_bits(xc[t].to_bits() & keep.wrapping_neg());
+                }
+            }
+        }
+        if self.cols % 64 != 0 {
+            // Ragged tail word: scalar extraction, folded into chain 0.
+            let mut word = !self.bits[base + full];
+            let jbase = full * 64;
+            word &= (1u64 << (self.cols - jbase)) - 1;
+            while word != 0 {
+                let t = word.trailing_zeros() as usize;
+                acc[0] += x[jbase + t];
+                word &= word - 1;
+            }
+        }
+        ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+    }
+
+    /// Fast-path [`matvec`](BitMat::matvec) built on
+    /// [`row_neg_sum_fast`](BitMat::row_neg_sum_fast). Tolerance-gated.
+    pub fn matvec_fast(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let total: f32 = x.iter().sum();
+        let mut y = vec![0.0f32; self.rows];
+        for i in 0..self.rows {
+            y[i] = total - 2.0 * self.row_neg_sum_fast(i, x);
+        }
+        y
+    }
+
+    /// Fast-path `matmul_bt`: the word-at-a-time striped kernel per
+    /// row, weight rows chunked across `pool` when given. Tolerance-
+    /// gated like every `*_fast` kernel (the parallel chunking itself
+    /// is deterministic — the striping is what reassociates).
+    pub fn matmul_bt_fast(&self, x: &Mat, pool: Option<&ThreadPool>) -> Mat {
+        assert_eq!(x.cols, self.cols, "matmul_bt: x cols {} vs B cols {}", x.cols, self.cols);
+        let totals = row_totals(x);
+        let mut y = Mat::zeros(x.rows, self.rows);
+        match pool {
+            Some(p) if p.size() > 1 && self.rows >= 2 => {
+                let ranges = chunk_ranges(self.rows, p.size());
+                let mut strips: Vec<Vec<f32>> = ranges
+                    .iter()
+                    .map(|&(r0, r1)| vec![0.0f32; x.rows * (r1 - r0)])
+                    .collect();
+                let totals_ref = &totals;
+                let jobs: Vec<_> = strips
+                    .iter_mut()
+                    .zip(ranges.iter().copied())
+                    .map(|(strip, (r0, r1))| {
+                        move || self.matmul_rows_fast(x, totals_ref, r0, r1, strip)
+                    })
+                    .collect();
+                p.scoped(jobs);
+                for (strip, &(r0, r1)) in strips.iter().zip(ranges.iter()) {
+                    let w = r1 - r0;
+                    for b in 0..x.rows {
+                        y.row_mut(b)[r0..r1].copy_from_slice(&strip[b * w..(b + 1) * w]);
+                    }
+                }
+            }
+            _ => self.matmul_rows_fast(x, &totals, 0, self.rows, &mut y.data),
+        }
+        y
+    }
+
+    /// Fast striped kernel over weight rows `[r0, r1)`; `out` is a
+    /// strip in `[b][i - r0]` layout like
+    /// [`matmul_rows_blocked`](BitMat::matmul_rows_blocked).
+    fn matmul_rows_fast(&self, x: &Mat, totals: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
+        let w = r1 - r0;
+        debug_assert_eq!(out.len(), x.rows * w);
+        for b in 0..x.rows {
+            let xb = x.row(b);
+            for i in r0..r1 {
+                out[b * w + (i - r0)] = totals[b] - 2.0 * self.row_neg_sum_fast(i, xb);
+            }
+        }
     }
 
     /// Y = X·Bᵀ for a batch X (B, Din): the `(x ⊙ v)·Bᵀ` step of the
@@ -386,7 +509,96 @@ mod tests {
         }
     }
 
+    /// Reassociation tolerance for a fast-vs-exact comparison over
+    /// `n` terms whose absolute sum is `mag`: both kernels sum the
+    /// same terms, each in some order, so their difference is bounded
+    /// by c·n·ε·Σ|terms| (standard recursive-summation error, DESIGN.md
+    /// §7). The constant is deliberately generous; the point is that
+    /// the bound is *explicit* and scales correctly, not that it is
+    /// tight.
+    fn reassoc_tol(n: usize, mag: f64) -> f32 {
+        (4.0 * n as f64 * f32::EPSILON as f64 * mag) as f32 + 1e-6
+    }
+
     #[test]
+    fn fast_word_kernel_boundary_shapes() {
+        // Deterministic, pool-free, and small: this is the test the
+        // miri/ASan CI job runs over the `unsafe` word loads — word
+        // boundaries (63/64/65), sub-word rows, all-(+1) and all-(−1)
+        // rows, and a padded tail.
+        for cols in [1usize, 8, 63, 64, 65, 128, 130] {
+            let mut w = Mat::from_fn(4, cols, |i, j| {
+                if (i + j) % 3 == 0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            });
+            w.row_mut(1).fill(1.0); // all +1: neg_sum must be exactly 0.0
+            w.row_mut(2).fill(-1.0); // all −1: neg_sum = Σ x
+            let b = BitMat::from_sign_of(&w);
+            let x: Vec<f32> = (0..cols).map(|j| (j as f32 * 0.37).sin() + 0.1).collect();
+            let exact = b.matvec(&x);
+            let fast = b.matvec_fast(&x);
+            for i in 0..4 {
+                let mag: f64 = x.iter().map(|&v| v.abs() as f64).sum();
+                let tol = reassoc_tol(cols, 2.0 * mag);
+                assert!(
+                    (fast[i] - exact[i]).abs() <= tol,
+                    "cols={cols} i={i}: fast {} vs exact {} (tol {tol})",
+                    fast[i],
+                    exact[i]
+                );
+            }
+            assert_eq!(b.row_neg_sum_fast(1, &x), 0.0, "all-ones row, cols={cols}");
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "randomized shapes + pool fan-out are too slow under miri")]
+    fn prop_fast_matches_exact_within_tolerance() {
+        // Adversarial shapes for the tolerance-gated path: cols off
+        // the word boundary, batch 1 and >1, serial and pooled. The
+        // bound itself is part of the contract — a fast kernel that
+        // drops or duplicates a term fails it immediately, while pure
+        // reassociation passes with huge margin.
+        let pool4 = crate::util::pool::ThreadPool::new(4);
+        crate::util::prop::check(
+            "bitmat-fast-vs-exact",
+            25,
+            |rng| (1 + rng.below_usize(40), 1 + rng.below_usize(150)),
+            |&(rows, cols)| {
+                let mut rng = Pcg64::seed_from_u64((rows * 257 + cols) as u64);
+                let w = random_sign(rows, cols, &mut rng);
+                let b = BitMat::from_sign_of(&w);
+                for batch in [1usize, 3] {
+                    let x = Mat::randn(batch, cols, 1.0, &mut rng);
+                    let y_ref = b.matmul_bt(&x);
+                    for y_fast in [b.matmul_bt_fast(&x, None), b.matmul_bt_fast(&x, Some(&pool4))]
+                    {
+                        for bi in 0..batch {
+                            let mag: f64 =
+                                x.row(bi).iter().map(|&v| v.abs() as f64).sum();
+                            let tol = reassoc_tol(cols, 2.0 * mag);
+                            for i in 0..rows {
+                                let (f, e) = (y_fast.row(bi)[i], y_ref.row(bi)[i]);
+                                if (f - e).abs() > tol {
+                                    return Err(format!(
+                                        "{rows}x{cols} batch {batch} b={bi} i={i}: \
+                                         fast {f} vs exact {e} exceeds tol {tol}"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "pool fan-out + randomized shapes are too slow under miri")]
     fn prop_blocked_and_parallel_match_scalar() {
         // Adversarial shapes: cols off the 64-bit word boundary,
         // batch of 1, pool of 1 vs N. The kernels accumulate in the

@@ -3,7 +3,8 @@
 //!
 //! ```text
 //! slab train   --model base --steps 350
-//! slab compress --model base --method slab --cr 0.5 [--pattern 2:4] [--engine artifact]
+//! slab compress --model base --method slab --cr 0.5 [--pattern 2:4 | --semi]
+//!              [--engine artifact]
 //!              [--capture native|artifact] [--threads N] [--stream out.slabckpt]
 //! slab eval    --model base [--ckpt runs/base_slab.slabckpt]
 //! slab eval    --engine native [--model small --ckpt runs/small.slabckpt]
@@ -22,6 +23,11 @@
 //! `slab --sweep` / `slab --eval` (no subcommand) are shorthands for
 //! the two artifact-free paths — they need no `make artifacts`, no
 //! checkpoint, and no Python toolchain anywhere.
+//!
+//! `--fast-kernels` (any subcommand; or `SLAB_KERNELS=fast`) opts the
+//! batch-1 decode path into the tolerance-gated unrolled kernels
+//! instead of the bit-exact scalar-order ones — see DESIGN.md §7 for
+//! the parity policy.
 
 // Clippy policy: the kernel/numeric code here deliberately uses
 // explicit index loops, operator-named helpers (`Mat::add`), and
@@ -86,11 +92,15 @@ fn lab(args: &Args) -> anyhow::Result<Lab> {
 
 fn parse_method(args: &Args) -> anyhow::Result<Method> {
     let cr = args.get_f64("cr", 0.5)?;
-    let pattern = match args.get("pattern") {
-        Some("2:4") => Some(PATTERN_2_4),
-        Some("4:8") => Some(PATTERN_4_8),
-        None => None,
-        Some(p) => anyhow::bail!("unknown pattern {p} (2:4 | 4:8)"),
+    // --semi is shorthand for --pattern 2:4 — the hardware
+    // semi-structured mode the wanda/sparsegpt baselines assume; the
+    // dedicated 2:4 kernel (`NmPacked::row_dot_24`) serves its output.
+    let pattern = match (args.get("pattern"), args.has_flag("semi")) {
+        (Some("2:4"), _) | (None, true) => Some(PATTERN_2_4),
+        (Some("4:8"), false) => Some(PATTERN_4_8),
+        (Some("4:8"), true) => anyhow::bail!("--semi means 2:4; use --pattern 4:8 alone"),
+        (None, false) => None,
+        (Some(p), _) => anyhow::bail!("unknown pattern {p} (2:4 | 4:8)"),
     };
     let structure = match pattern {
         Some(p) => Structure::SemiStructured(p),
@@ -264,6 +274,14 @@ fn run_native_eval(args: &Args) -> anyhow::Result<()> {
 }
 
 fn run(args: &Args) -> anyhow::Result<()> {
+    if args.has_flag("fast-kernels") {
+        // Latch before any kernel runs; tolerance-gated fast variants
+        // replace the exact kernels on the batch-1 decode path
+        // (DESIGN.md §7 documents the parity policy).
+        if !slab::util::kernel::set_kernel_mode(slab::util::kernel::KernelMode::Fast) {
+            eprintln!("warning: kernel mode already latched; --fast-kernels ignored");
+        }
+    }
     let out_md = PathBuf::from(args.get_str("out", "runs/results.md"));
     match args.command.as_deref() {
         Some("train") => {

@@ -24,6 +24,7 @@ use crate::runtime::ModelCfg;
 use crate::slab::SlabLayer;
 use crate::tensor::ops::softmax_inplace;
 use crate::tensor::{matmul_bt, matmul_bt_par, Mat};
+use crate::util::kernel::kernel_mode;
 use crate::util::pool::{SlotArena, ThreadPool};
 
 /// Matches `model.py::ModelConfig.norm_eps` (not carried by the
@@ -59,13 +60,21 @@ impl Linear {
     /// `y = x·Wᵀ` for a batch of rows. Dense weights row-chunk the
     /// activation batch across the pool ([`matmul_bt_par`],
     /// bit-identical to the serial kernel); packed ones run the fused
-    /// CSR/bitplane kernels.
+    /// CSR/bitplane kernels. A batch of exactly one row — the
+    /// single-session decode shape — takes the fused decode epilogue
+    /// ([`SlabLayer::forward_decode`]): one pass per output element
+    /// under the process-global [`kernel_mode`]. In the default
+    /// `Exact` mode that epilogue is bit-identical to `forward_fused`,
+    /// so the routing is invisible to every token-identity test;
+    /// `--fast-kernels` / `SLAB_KERNELS=fast` swaps in the
+    /// tolerance-gated unrolled row kernels (DESIGN.md §7).
     pub fn apply(&self, x: &Mat, pool: Option<&ThreadPool>) -> Mat {
         match self {
             Linear::Dense(w) => match pool {
                 Some(p) => matmul_bt_par(x, w, p),
                 None => matmul_bt(x, w),
             },
+            Linear::Packed(l) if x.rows == 1 => l.forward_decode(x, pool, kernel_mode()),
             Linear::Packed(l) => l.forward_fused(x, pool),
         }
     }

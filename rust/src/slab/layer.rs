@@ -11,7 +11,8 @@ use super::decompose::Decomposition;
 use crate::binary::BitMat;
 use crate::sparse::Csr;
 use crate::tensor::{Checkpoint, Entry, Mat, TensorData};
-use crate::util::pool::ThreadPool;
+use crate::util::kernel::KernelMode;
+use crate::util::pool::{chunk_ranges, ThreadPool};
 
 /// A compressed linear layer ready to serve.
 #[derive(Debug, Clone, PartialEq)]
@@ -128,6 +129,116 @@ impl SlabLayer {
                     yrow[i] += uk[i] * trow[i];
                 }
             }
+        }
+    }
+
+    /// Fused batch-1 decode epilogue — the single-token serving path.
+    ///
+    /// [`forward_fused`](SlabLayer::forward_fused) at batch 1 still
+    /// materializes a `(1, Dout)` bitplane product per rank and makes
+    /// one pool dispatch per matmul. This epilogue instead computes
+    /// each output element in **one pass**:
+    ///
+    /// `y[i] = Σ_j W_S[i,j]·x[j] + Σ_k u_k[i]·(Σ_j s_k[j] − 2·Σ_{W_B[i,j]=−1} s_k[j])`
+    ///
+    /// with `s_k = x ⊙ v_k` computed once up front — the activation is
+    /// touched once per rank, the sparse and bitplane row kernels run
+    /// back-to-back while the row's `y[i]` is live in a register, and
+    /// a pooled call makes exactly one dispatch for the whole layer.
+    ///
+    /// `KernelMode::Exact` uses the scalar-order row kernels
+    /// ([`Csr::row_dot`], [`BitMat::row_neg_sum`]) and the per-element
+    /// combine matches [`forward`](SlabLayer::forward)'s expression
+    /// tree term for term, so the result is **bit-identical** to
+    /// `forward`/`forward_fused` (pinned by tests — this is what lets
+    /// `SlabModel` route batch-1 decode through here without breaking
+    /// the token-identity suites). `KernelMode::Fast` swaps in the
+    /// tolerance-gated unrolled row kernels (DESIGN.md §7).
+    pub fn forward_decode(&self, x: &Mat, pool: Option<&ThreadPool>, mode: KernelMode) -> Mat {
+        assert_eq!(x.rows, 1, "forward_decode is the batch-1 path");
+        assert_eq!(x.cols, self.din());
+        let mut y = Mat::zeros(1, self.dout());
+        self.forward_decode_into(x.row(0), pool, mode, &mut y.data);
+        y
+    }
+
+    /// [`forward_decode`](SlabLayer::forward_decode) on slices: one
+    /// activation row in, one output row (length `dout`) overwritten.
+    pub fn forward_decode_into(
+        &self,
+        x: &[f32],
+        pool: Option<&ThreadPool>,
+        mode: KernelMode,
+        out: &mut [f32],
+    ) {
+        assert_eq!(x.len(), self.din(), "forward_decode: x len {} vs din {}", x.len(), self.din());
+        let dout = self.dout();
+        assert_eq!(out.len(), dout, "forward_decode: out len {} vs dout {dout}", out.len());
+        // s_k = x ⊙ v_k and its total, one pass over the activation
+        // per rank (ascending j — the same order `row_totals` uses, so
+        // Exact stays bit-identical to the fused matmul path).
+        let r = self.rank();
+        let mut scaled: Vec<Vec<f32>> = Vec::with_capacity(r);
+        let mut totals: Vec<f32> = Vec::with_capacity(r);
+        for k in 0..r {
+            let vk = &self.v[k];
+            let mut s = vec![0.0f32; x.len()];
+            for j in 0..x.len() {
+                s[j] = x[j] * vk[j];
+            }
+            totals.push(s.iter().sum());
+            scaled.push(s);
+        }
+        match pool {
+            Some(p) if p.size() > 1 && self.dout() >= 2 => {
+                let ranges = chunk_ranges(self.dout(), p.size());
+                let mut chunks: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
+                let mut rest = out;
+                for &(r0, r1) in &ranges {
+                    // mem::take moves the &mut out of `rest` so the split
+                    // halves can outlive the loop iteration.
+                    let (head, tail) = std::mem::take(&mut rest).split_at_mut(r1 - r0);
+                    chunks.push(head);
+                    rest = tail;
+                }
+                let (scaled_ref, totals_ref) = (&scaled, &totals);
+                let jobs: Vec<_> = chunks
+                    .into_iter()
+                    .zip(ranges.iter().copied())
+                    .map(|(chunk, (r0, _))| {
+                        move || self.decode_rows(x, scaled_ref, totals_ref, mode, r0, chunk)
+                    })
+                    .collect();
+                p.scoped(jobs);
+            }
+            _ => self.decode_rows(x, &scaled, &totals, mode, 0, out),
+        }
+    }
+
+    /// The per-row decode sweep over output rows `[r0, r0 + out.len())`.
+    fn decode_rows(
+        &self,
+        x: &[f32],
+        scaled: &[Vec<f32>],
+        totals: &[f32],
+        mode: KernelMode,
+        r0: usize,
+        out: &mut [f32],
+    ) {
+        for (oi, slot) in out.iter_mut().enumerate() {
+            let i = r0 + oi;
+            let mut acc = match mode {
+                KernelMode::Exact => self.w_s.row_dot(i, x),
+                KernelMode::Fast => self.w_s.row_dot_fast(i, x),
+            };
+            for k in 0..totals.len() {
+                let neg = match mode {
+                    KernelMode::Exact => self.w_b.row_neg_sum(i, &scaled[k]),
+                    KernelMode::Fast => self.w_b.row_neg_sum_fast(i, &scaled[k]),
+                };
+                acc += self.u[k][i] * (totals[k] - 2.0 * neg);
+            }
+            *slot = acc;
         }
     }
 
@@ -427,6 +538,95 @@ mod tests {
         let x2 = Mat::randn(3, 72, 1.0, &mut rng);
         l.forward_fused_into(&x2, Some(&pool), &mut y);
         assert_eq!(y, l.forward(&x2));
+    }
+
+    #[test]
+    fn fused_decode_is_bit_identical_to_forward() {
+        // The batch-1 epilogue must be exact-equal to the reference
+        // forward (and hence to forward_fused) in Exact mode, serial
+        // and pooled — this is what lets SlabModel route single-token
+        // decode through it without perturbing token-identity tests.
+        let (_, l) = layer(112);
+        let mut rng = Pcg64::seed_from_u64(113);
+        let pool = ThreadPool::new(4);
+        for _ in 0..5 {
+            let x = Mat::randn(1, 72, 1.0, &mut rng);
+            let y_ref = l.forward(&x);
+            assert_eq!(l.forward_decode(&x, None, KernelMode::Exact), y_ref);
+            assert_eq!(l.forward_decode(&x, Some(&pool), KernelMode::Exact), y_ref);
+        }
+    }
+
+    #[test]
+    fn fused_decode_rank0_and_handbuilt_layer() {
+        // Adversarial structure without the decompose fixture: rank-0
+        // (pure sparse) and a ragged din off the 64-bit word boundary.
+        let mut rng = Pcg64::seed_from_u64(114);
+        let din = 70;
+        let w = Mat::from_fn(9, din, |i, j| if (i * 7 + j) % 5 == 0 { 0.3 } else { 0.0 });
+        let rank0 = SlabLayer {
+            w_s: Csr::from_dense(&w),
+            u: vec![],
+            v: vec![],
+            w_b: BitMat::ones(9, din),
+        };
+        let signs = Mat::from_fn(9, din, |i, j| if (i + j) % 3 == 0 { 1.0 } else { -1.0 });
+        let rank2 = SlabLayer {
+            w_s: Csr::from_dense(&w),
+            u: vec![vec![0.5; 9], vec![-0.25; 9]],
+            v: vec![vec![1.0; din], vec![0.1; din]],
+            w_b: BitMat::from_sign_of(&signs),
+        };
+        for l in [&rank0, &rank2] {
+            let x = Mat::randn(1, din, 1.0, &mut rng);
+            let y_ref = l.forward(&x);
+            assert_eq!(l.forward_decode(&x, None, KernelMode::Exact), y_ref);
+            // Fast mode: tolerance-gated, never ==; generous c·n·ε·mag
+            // bound (DESIGN.md §7).
+            let y_fast = l.forward_decode(&x, None, KernelMode::Fast);
+            let mag: f64 = x.row(0).iter().map(|&v| v.abs() as f64).sum();
+            let tol = (16.0 * din as f64 * f32::EPSILON as f64 * (1.0 + mag)) as f32 + 1e-5;
+            for i in 0..9 {
+                assert!(
+                    (y_fast.row(0)[i] - y_ref.row(0)[i]).abs() <= tol,
+                    "i={i}: fast {} vs exact {} (tol {tol})",
+                    y_fast.row(0)[i],
+                    y_ref.row(0)[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_decode_fast_within_tolerance_on_decomposed_layer() {
+        let (_, l) = layer(115);
+        let mut rng = Pcg64::seed_from_u64(116);
+        let pool = ThreadPool::new(4);
+        let x = Mat::randn(1, 72, 1.0, &mut rng);
+        let y_ref = l.forward(&x);
+        let ws_dense = l.w_s.to_dense();
+        for p in [None, Some(&pool)] {
+            let y_fast = l.forward_decode(&x, p, KernelMode::Fast);
+            for i in 0..l.dout() {
+                // Bound from the term magnitudes: sparse row + per-rank
+                // |u|·(|total| + 2·Σ|s|) — the §7 reassociation bound.
+                let mut mag: f64 = (0..l.din())
+                    .map(|j| (ws_dense.at(i, j) * x.row(0)[j]).abs() as f64)
+                    .sum();
+                for k in 0..l.rank() {
+                    let su: f64 = (0..l.din())
+                        .map(|j| (x.row(0)[j] * l.v[k][j]).abs() as f64)
+                        .sum();
+                    mag += (l.u[k][i].abs() as f64) * 3.0 * su;
+                }
+                let tol = (16.0 * l.din() as f64 * f32::EPSILON as f64 * mag) as f32 + 1e-5;
+                assert!(
+                    (y_fast.row(0)[i] - y_ref.row(0)[i]).abs() <= tol,
+                    "i={i} pooled={}",
+                    p.is_some()
+                );
+            }
+        }
     }
 
     #[test]

@@ -81,14 +81,116 @@ impl Csr {
         assert_eq!(x.len(), self.cols);
         let mut y = vec![0.0f32; self.rows];
         for i in 0..self.rows {
-            let (s, e) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
-            let mut acc = 0.0f32;
-            for k in s..e {
-                acc += self.vals[k] * x[self.col_idx[k] as usize];
-            }
-            y[i] = acc;
+            y[i] = self.row_dot(i, x);
         }
         y
+    }
+
+    /// One sparse row · dense vector, accumulated in ascending-k
+    /// (scalar reference) order — the exact-kernel building block
+    /// shared by [`spmv`](Csr::spmv), [`spmm_bt`](Csr::spmm_bt), and
+    /// the fused decode epilogue
+    /// ([`SlabLayer::forward_decode`](crate::slab::SlabLayer::forward_decode)),
+    /// which is what keeps all three bit-identical to each other.
+    #[inline]
+    pub fn row_dot(&self, i: usize, x: &[f32]) -> f32 {
+        let (s, e) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+        let mut acc = 0.0f32;
+        for k in s..e {
+            acc += self.vals[k] * x[self.col_idx[k] as usize];
+        }
+        acc
+    }
+
+    /// Fast-path [`row_dot`](Csr::row_dot): the nnz stream is unrolled
+    /// 4-wide into independent accumulator chains so the gathers and
+    /// FP adds overlap instead of serializing on one add-latency
+    /// chain. `col_idx`/`vals` reads inside the unrolled body are
+    /// unchecked (provably in-bounds — see SAFETY), the `x` gather
+    /// stays bounds-checked so a hand-built CSR with out-of-range
+    /// indices panics rather than reading out of bounds.
+    ///
+    /// **Tolerance-gated** (DESIGN.md §7): the 4-chain unroll
+    /// reassociates the sum — never compare with `==`; the error bound
+    /// is asserted in this module's property tests.
+    pub fn row_dot_fast(&self, i: usize, x: &[f32]) -> f32 {
+        assert_eq!(x.len(), self.cols);
+        let (s, e) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+        let idx = &self.col_idx[s..e];
+        let vals = &self.vals[s..e];
+        let mut acc = [0.0f32; 4];
+        let chunks = idx.len() / 4;
+        for c in 0..chunks {
+            let k = c * 4;
+            for t in 0..4 {
+                // SAFETY: k + t < chunks*4 <= idx.len() == vals.len()
+                // (both are the same s..e subslice).
+                let j = unsafe { *idx.get_unchecked(k + t) } as usize;
+                let v = unsafe { *vals.get_unchecked(k + t) };
+                acc[t] += v * x[j];
+            }
+        }
+        for k in chunks * 4..idx.len() {
+            acc[0] += vals[k] * x[idx[k] as usize];
+        }
+        (acc[0] + acc[1]) + (acc[2] + acc[3])
+    }
+
+    /// Fast-path [`spmv`](Csr::spmv) built on
+    /// [`row_dot_fast`](Csr::row_dot_fast). Tolerance-gated.
+    pub fn spmv_fast(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for i in 0..self.rows {
+            y[i] = self.row_dot_fast(i, x);
+        }
+        y
+    }
+
+    /// Fast-path `spmm_bt`: the unrolled sparse dot per output
+    /// element, weight rows chunked across `pool` when given.
+    /// Tolerance-gated like every `*_fast` kernel (the chunking itself
+    /// is deterministic — the unroll is what reassociates).
+    pub fn spmm_bt_fast(&self, x: &Mat, pool: Option<&ThreadPool>) -> Mat {
+        assert_eq!(x.cols, self.cols, "spmm_bt_fast: x cols {} vs W cols {}", x.cols, self.cols);
+        let mut y = Mat::zeros(x.rows, self.rows);
+        match pool {
+            Some(p) if p.size() > 1 && self.rows >= 2 => {
+                let ranges = chunk_ranges(self.rows, p.size());
+                let mut strips: Vec<Vec<f32>> = ranges
+                    .iter()
+                    .map(|&(r0, r1)| vec![0.0f32; x.rows * (r1 - r0)])
+                    .collect();
+                let jobs: Vec<_> = strips
+                    .iter_mut()
+                    .zip(ranges.iter().copied())
+                    .map(|(strip, (r0, r1))| move || self.spmm_rows_fast(x, r0, r1, strip))
+                    .collect();
+                p.scoped(jobs);
+                for (strip, &(r0, r1)) in strips.iter().zip(ranges.iter()) {
+                    let w = r1 - r0;
+                    for b in 0..x.rows {
+                        y.row_mut(b)[r0..r1].copy_from_slice(&strip[b * w..(b + 1) * w]);
+                    }
+                }
+            }
+            _ => self.spmm_rows_fast(x, 0, self.rows, &mut y.data),
+        }
+        y
+    }
+
+    /// Fast unrolled kernel over weight rows `[r0, r1)`; `out` is a
+    /// strip in `[b][i - r0]` layout like
+    /// [`spmm_rows_blocked`](Csr::spmm_rows_blocked).
+    fn spmm_rows_fast(&self, x: &Mat, r0: usize, r1: usize, out: &mut [f32]) {
+        let w = r1 - r0;
+        debug_assert_eq!(out.len(), x.rows * w);
+        for b in 0..x.rows {
+            let xb = x.row(b);
+            for i in r0..r1 {
+                out[b * w + (i - r0)] = self.row_dot_fast(i, xb);
+            }
+        }
     }
 
     /// Y = X·Wᵀ for activations X (B, Din) against this (Dout, Din)
@@ -101,12 +203,7 @@ impl Csr {
             let xrow = x.row(b);
             let yrow = y.row_mut(b);
             for i in 0..self.rows {
-                let (s, e) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
-                let mut acc = 0.0f32;
-                for k in s..e {
-                    acc += self.vals[k] * xrow[self.col_idx[k] as usize];
-                }
-                yrow[i] = acc;
+                yrow[i] = self.row_dot(i, xrow);
             }
         }
         y
@@ -293,6 +390,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "randomized bulk roundtrips are slow under miri")]
     fn prop_roundtrip_random_matrices() {
         prop::check(
             "csr-roundtrip",
@@ -336,7 +434,105 @@ mod tests {
         }
     }
 
+    /// Reassociation tolerance: c·n·ε·Σ|terms| (see `binary::tests`;
+    /// the same bound form is the §7 fast-kernel contract).
+    fn reassoc_tol(n: usize, mag: f64) -> f32 {
+        (4.0 * n.max(1) as f64 * f32::EPSILON as f64 * mag) as f32 + 1e-6
+    }
+
     #[test]
+    fn fast_unrolled_kernel_boundary_rows() {
+        // Deterministic, pool-free, and small: the miri/ASan CI job's
+        // coverage of the `unsafe` idx/val reads — empty rows, a fully
+        // dense row, and tail lengths 1..3 off the 4-wide unroll.
+        let mut w = Mat::zeros(6, 11);
+        for j in 0..11 {
+            w.set(1, j, 0.5 - j as f32 * 0.1); // dense row
+        }
+        w.set(2, 3, 2.0); // nnz = 1
+        w.set(3, 0, -1.0);
+        w.set(3, 7, 0.25);
+        w.set(3, 10, 4.0); // nnz = 3
+        for j in [1, 2, 5, 6, 8] {
+            w.set(4, j, j as f32); // nnz = 5 (one full chunk + 1)
+        }
+        // rows 0 and 5 stay empty
+        let csr = Csr::from_dense(&w);
+        csr.validate().unwrap();
+        let x: Vec<f32> = (0..11).map(|j| (j as f32 * 0.7).cos()).collect();
+        let exact = csr.spmv(&x);
+        let fast = csr.spmv_fast(&x);
+        for i in 0..6 {
+            let (s, e) = (csr.row_ptr[i] as usize, csr.row_ptr[i + 1] as usize);
+            let mag: f64 = (s..e)
+                .map(|k| (csr.vals[k] * x[csr.col_idx[k] as usize]).abs() as f64)
+                .sum();
+            let tol = reassoc_tol(e - s, mag);
+            assert!(
+                (fast[i] - exact[i]).abs() <= tol,
+                "row {i}: fast {} vs exact {} (tol {tol})",
+                fast[i],
+                exact[i]
+            );
+        }
+        assert_eq!(fast[0], 0.0);
+        assert_eq!(fast[5], 0.0);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "randomized shapes + pool fan-out are too slow under miri")]
+    fn prop_fast_matches_exact_within_tolerance() {
+        // Adversarial shapes for the tolerance-gated path: empty rows
+        // (low density), dense rows (high density), batch 1 and >1,
+        // serial and pooled — with the §7 error bound asserted, so a
+        // fast kernel that drops or duplicates a term fails here while
+        // pure reassociation passes with wide margin.
+        let pool4 = crate::util::pool::ThreadPool::new(4);
+        crate::util::prop::check(
+            "csr-fast-vs-exact",
+            25,
+            |rng| (1 + rng.below_usize(60), 1 + rng.below_usize(60)),
+            |&(rows, cols)| {
+                let mut rng = Pcg64::seed_from_u64((rows * 173 + cols) as u64);
+                // Alternate near-empty and near-dense rows so both the
+                // unroll tail and the full chunks are exercised.
+                let density = if (rows + cols) % 2 == 0 { 0.08 } else { 0.9 };
+                let w = sparse_random(rows, cols, density, &mut rng);
+                let csr = Csr::from_dense(&w);
+                for batch in [1usize, 5] {
+                    let x = Mat::randn(batch, cols, 1.0, &mut rng);
+                    let y_ref = csr.spmm_bt(&x);
+                    for y_fast in [csr.spmm_bt_fast(&x, None), csr.spmm_bt_fast(&x, Some(&pool4))]
+                    {
+                        for b in 0..batch {
+                            for i in 0..rows {
+                                let (s, e) =
+                                    (csr.row_ptr[i] as usize, csr.row_ptr[i + 1] as usize);
+                                let mag: f64 = (s..e)
+                                    .map(|k| {
+                                        (csr.vals[k] * x.row(b)[csr.col_idx[k] as usize]).abs()
+                                            as f64
+                                    })
+                                    .sum();
+                                let tol = reassoc_tol(e - s, mag);
+                                let (f, ex) = (y_fast.row(b)[i], y_ref.row(b)[i]);
+                                if (f - ex).abs() > tol {
+                                    return Err(format!(
+                                        "{rows}x{cols} d={density} batch {batch} b={b} i={i}: \
+                                         fast {f} vs exact {ex} exceeds tol {tol}"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "pool fan-out + randomized shapes are too slow under miri")]
     fn prop_parallel_matches_scalar_adversarial_shapes() {
         // Pool of 1 vs N, batch of 1, rows with no nonzeros, shapes
         // around the cache-block boundary.

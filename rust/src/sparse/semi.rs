@@ -170,6 +170,93 @@ impl NmPacked {
         self.vals.len() * 4 + (self.offs.len() * meta_bits).div_ceil(8)
     }
 
+    /// Re-pack a CSR matrix whose sparsity already obeys `pattern`
+    /// (e.g. the `W_S` a `--semi` compression run emits) into the
+    /// hardware-style N:M layout. Errors if the CSR violates the
+    /// pattern or its width is not a multiple of `m`.
+    pub fn from_csr(pattern: NmPattern, csr: &crate::sparse::Csr) -> Result<NmPacked, String> {
+        NmPacked::pack(pattern, &csr.to_dense())
+    }
+
+    /// One packed row · dense vector through the dedicated 2:4 kernel:
+    /// exactly two value/offset slots per group of four activations,
+    /// so the inner loop is two fixed-stride multiply-adds — no length
+    /// branch, no metadata scan. Accumulation order is the generic
+    /// [`spmm_bt`](NmPacked::spmm_bt)'s (groups ascending, slots in
+    /// order), so this is **bit-identical** to it (pinned by tests).
+    /// Panics unless `pattern` is 2:4.
+    #[inline]
+    pub fn row_dot_24(&self, i: usize, x: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), self.cols);
+        assert_eq!(self.pattern, PATTERN_2_4, "row_dot_24 on a {} matrix", self.pattern.name());
+        let groups = self.cols / 4;
+        let rv = &self.vals[i * groups * 2..(i + 1) * groups * 2];
+        let ro = &self.offs[i * groups * 2..(i + 1) * groups * 2];
+        let mut acc = 0.0f32;
+        for g in 0..groups {
+            let s = g * 2;
+            let base = g * 4;
+            acc += rv[s] * x[base + ro[s] as usize];
+            acc += rv[s + 1] * x[base + ro[s + 1] as usize];
+        }
+        acc
+    }
+
+    /// Fast-path [`row_dot_24`](NmPacked::row_dot_24): two groups per
+    /// step feeding four independent accumulator chains, with the
+    /// slot/offset reads unchecked (provably inside this row's slice —
+    /// see SAFETY) and the activation gather bounds-checked (a
+    /// deserialized `offs` entry ≥ 4 panics instead of reading out of
+    /// bounds). Tolerance-gated (DESIGN.md §7) — the 4-chain unroll
+    /// reassociates the group sum.
+    pub fn row_dot_24_fast(&self, i: usize, x: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), self.cols);
+        assert_eq!(self.pattern, PATTERN_2_4, "row_dot_24 on a {} matrix", self.pattern.name());
+        let groups = self.cols / 4;
+        let rv = &self.vals[i * groups * 2..(i + 1) * groups * 2];
+        let ro = &self.offs[i * groups * 2..(i + 1) * groups * 2];
+        let mut acc = [0.0f32; 4];
+        let pairs = groups / 2;
+        for p in 0..pairs {
+            let s = p * 4; // two groups = four slots
+            let base = p * 8;
+            for t in 0..4 {
+                // SAFETY: s + t < pairs*4 <= groups*2 == rv.len() ==
+                // ro.len() (both are the same row subslice).
+                let v = unsafe { *rv.get_unchecked(s + t) };
+                let o = unsafe { *ro.get_unchecked(s + t) } as usize;
+                acc[t] += v * x[base + (t / 2) * 4 + o];
+            }
+        }
+        for g in pairs * 2..groups {
+            let s = g * 2;
+            let base = g * 4;
+            acc[0] += rv[s] * x[base + ro[s] as usize];
+            acc[1] += rv[s + 1] * x[base + ro[s + 1] as usize];
+        }
+        (acc[0] + acc[1]) + (acc[2] + acc[3])
+    }
+
+    /// [`spmm_bt`](NmPacked::spmm_bt) through the dedicated 2:4 kernel
+    /// (`fast = false` ⇒ bit-identical to the generic path, `true` ⇒
+    /// the tolerance-gated unrolled variant).
+    pub fn spmm_bt_24(&self, x: &Mat, fast: bool) -> Mat {
+        assert_eq!(x.cols, self.cols);
+        let mut y = Mat::zeros(x.rows, self.rows);
+        for b in 0..x.rows {
+            let xrow = x.row(b);
+            let yrow = y.row_mut(b);
+            for i in 0..self.rows {
+                yrow[i] = if fast {
+                    self.row_dot_24_fast(i, xrow)
+                } else {
+                    self.row_dot_24(i, xrow)
+                };
+            }
+        }
+        y
+    }
+
     /// Y = X·Wᵀ directly out of the packed representation.
     pub fn spmm_bt(&self, x: &Mat) -> Mat {
         assert_eq!(x.cols, self.cols);
@@ -256,6 +343,96 @@ mod tests {
         let y1 = packed.spmm_bt(&x);
         let y2 = matmul_bt(&x, &w);
         assert!(y1.allclose(&y2, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn kernel_24_bit_identical_to_generic() {
+        // The dedicated 2:4 kernel accumulates in the generic packed
+        // kernel's order — equality is exact, not allclose. Small and
+        // deterministic: this is the miri/ASan coverage of the unsafe
+        // slot reads (ragged `groups % 2 != 0` tail included).
+        let mut rng = Pcg64::seed_from_u64(53);
+        for cols in [4usize, 8, 12, 24] {
+            let scores = Mat::rand_uniform(5, cols, 0.0, 1.0, &mut rng);
+            let dense = Mat::randn(5, cols, 1.0, &mut rng);
+            let w = dense.hadamard(&PATTERN_2_4.mask_from_scores(&scores));
+            let packed = NmPacked::pack(PATTERN_2_4, &w).unwrap();
+            let x = Mat::randn(3, cols, 1.0, &mut rng);
+            let y_ref = packed.spmm_bt(&x);
+            assert_eq!(packed.spmm_bt_24(&x, false), y_ref, "cols={cols}");
+            // Fast variant: tolerance-gated (4-chain reassociation).
+            let y_fast = packed.spmm_bt_24(&x, true);
+            for b in 0..3 {
+                for i in 0..5 {
+                    let tol = 4.0 * cols as f32 * f32::EPSILON * 16.0 + 1e-6;
+                    assert!(
+                        (y_fast.row(b)[i] - y_ref.row(b)[i]).abs() <= tol,
+                        "cols={cols} b={b} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_csr_roundtrips_pattern_obeying_sparse() {
+        let mut rng = Pcg64::seed_from_u64(54);
+        let scores = Mat::rand_uniform(6, 16, 0.0, 1.0, &mut rng);
+        let dense = Mat::randn(6, 16, 1.0, &mut rng);
+        let w = dense.hadamard(&PATTERN_2_4.mask_from_scores(&scores));
+        let csr = crate::sparse::Csr::from_dense(&w);
+        let packed = NmPacked::from_csr(PATTERN_2_4, &csr).unwrap();
+        assert_eq!(packed.unpack(), w);
+        // A CSR that violates the pattern must be rejected.
+        let bad = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 0.0]);
+        assert!(NmPacked::from_csr(PATTERN_2_4, &crate::sparse::Csr::from_dense(&bad)).is_err());
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "randomized bulk shapes are slow under miri")]
+    fn prop_24_masks_valid_across_shapes() {
+        // 2:4 mask-validity property: for any score matrix (ties,
+        // negatives, ragged widths), the constructed mask validates,
+        // every full group keeps exactly n entries, and the kept
+        // entries are a top-n of the group's scores.
+        crate::util::prop::check(
+            "semi-24-mask-validity",
+            40,
+            |rng| (1 + rng.below_usize(12), 1 + rng.below_usize(40)),
+            |&(rows, cols)| {
+                let mut rng = Pcg64::seed_from_u64((rows * 211 + cols) as u64);
+                let mut scores = Mat::randn(rows, cols, 1.0, &mut rng);
+                if (rows + cols) % 3 == 0 {
+                    // Adversarial ties: quantize scores.
+                    for v in scores.data.iter_mut() {
+                        *v = (*v * 2.0).round() / 2.0;
+                    }
+                }
+                let scores = &scores;
+                let mask = PATTERN_2_4.mask_from_scores(scores);
+                PATTERN_2_4.validate(&mask).map_err(|e| format!("mask invalid: {e}"))?;
+                for i in 0..scores.rows {
+                    let mut g = 0;
+                    while g + 4 <= scores.cols {
+                        let kept: Vec<usize> =
+                            (g..g + 4).filter(|&j| mask.at(i, j) != 0.0).collect();
+                        if kept.len() != 2 {
+                            return Err(format!("row {i} group {g}: kept {}", kept.len()));
+                        }
+                        // Top-n: every kept score >= every dropped score.
+                        let min_kept =
+                            kept.iter().map(|&j| scores.at(i, j)).fold(f32::INFINITY, f32::min);
+                        for j in g..g + 4 {
+                            if mask.at(i, j) == 0.0 && scores.at(i, j) > min_kept {
+                                return Err(format!("row {i} group {g}: dropped a higher score"));
+                            }
+                        }
+                        g += 4;
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -1,0 +1,94 @@
+//! Kernel-variant selection: exact (bit-identical) vs fast
+//! (reassociated SIMD) inner loops.
+//!
+//! The decode hot paths ship two implementations per kernel
+//! (DESIGN.md §7):
+//!
+//! - **Exact** — accumulates each output element in the scalar
+//!   reference order. Blocked/parallel/fused forms are bit-identical
+//!   to the serial kernels, which is what every token-identity and
+//!   conformance test in the repo compares with `==`.
+//! - **Fast** — reassociates the accumulation into 4/8 independent
+//!   chains so the compiler can vectorize across lanes and the CPU can
+//!   overlap FP-add latency. Same math over the same terms, different
+//!   summation tree: results differ from exact by a few ULPs and are
+//!   gated by *tolerance* property tests (never `==`), with the bound
+//!   derived from the term magnitudes (see `sparse::csr` /
+//!   `binary` tests).
+//!
+//! Selection is process-global and write-once: serving defaults to
+//! Exact; opt into Fast via `SLAB_KERNELS=fast` in the environment or
+//! the `--fast-kernels` CLI flag (which must win over the env var, so
+//! the CLI calls [`set_kernel_mode`] before any kernel runs). Bench
+//! and test code bypasses the global by calling the `*_fast` entry
+//! points directly.
+
+use std::sync::OnceLock;
+
+/// Which inner-kernel family the packed decode path runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// Scalar accumulation order — bit-identical across blocked,
+    /// parallel, and fused forms (the repo-wide determinism contract).
+    #[default]
+    Exact,
+    /// Multi-accumulator / unrolled order — tolerance-gated, selected
+    /// explicitly. Currently applied on the batch-1 fused decode path.
+    Fast,
+}
+
+impl KernelMode {
+    /// Read the mode from `SLAB_KERNELS` (`fast` ⇒ [`KernelMode::Fast`],
+    /// anything else or unset ⇒ [`KernelMode::Exact`]).
+    pub fn from_env() -> KernelMode {
+        match std::env::var("SLAB_KERNELS").as_deref() {
+            Ok("fast") | Ok("FAST") => KernelMode::Fast,
+            _ => KernelMode::Exact,
+        }
+    }
+
+    #[inline]
+    pub fn is_fast(self) -> bool {
+        self == KernelMode::Fast
+    }
+}
+
+static MODE: OnceLock<KernelMode> = OnceLock::new();
+
+/// The process-global kernel mode. First call latches the value
+/// ([`set_kernel_mode`] if it ran first, else the environment).
+#[inline]
+pub fn kernel_mode() -> KernelMode {
+    *MODE.get_or_init(KernelMode::from_env)
+}
+
+/// Pin the global mode before any kernel has read it (CLI startup).
+/// Returns `false` if the mode was already latched — callers that
+/// care (the CLI) can warn; tests call the explicit `*_fast` entry
+/// points instead of mutating the global.
+pub fn set_kernel_mode(mode: KernelMode) -> bool {
+    MODE.set(mode).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_exact() {
+        assert_eq!(KernelMode::default(), KernelMode::Exact);
+        assert!(!KernelMode::Exact.is_fast());
+        assert!(KernelMode::Fast.is_fast());
+    }
+
+    #[test]
+    fn global_latches_once() {
+        // The getter latches on first read; a later set must report
+        // "already latched" and leave the value stable. (Deliberately
+        // never sets Fast here — the global is shared by the whole
+        // test binary and the bit-identity suites assume Exact.)
+        let first = kernel_mode();
+        assert!(!set_kernel_mode(first) || kernel_mode() == first);
+        assert_eq!(kernel_mode(), first);
+    }
+}

@@ -8,6 +8,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod kernel;
 pub mod pool;
 pub mod prop;
 pub mod rng;
