@@ -46,7 +46,7 @@ mod bench_common;
 use bench_common::compress_native;
 use slab::coordinator::http::client;
 use slab::coordinator::{
-    Backend, Event, HttpServer, Request, SchedulerConfig, Server, ServerConfig,
+    Backend, Event, HttpServer, Request, SchedulerConfig, ServeStats, Server, ServerConfig,
 };
 use slab::model::{DecodeSlot, KvCachePool, PagedKvConfig, PagedKvPool, Params, SlabModel};
 use slab::runtime::ModelCfg;
@@ -300,6 +300,61 @@ fn main() {
         churn_stats.cow_splits
     );
 
+    // --- self-speculative decode --------------------------------------
+    // The same distinct-prompt workload through a plain scheduler and
+    // a `speculate` one (DESIGN.md §14): tokens/s side by side plus
+    // the served acceptance rate. The contract is lossless — the
+    // speculative run must emit the exact same streams — so any
+    // throughput delta is pure draft/verify scheduling.
+    let spec_sessions = if fast { 4 } else { 16 };
+    let spec_budget = if fast { 6 } else { 24 };
+    let spec_draft_len = 4usize;
+    let run_serve = |speculate: bool| -> (f64, ServeStats, Vec<Vec<i32>>) {
+        let server = Server::start_with(
+            Backend::NativeBatched(Box::new(SlabModel::from_packed(&params, &packed, 0))),
+            ServerConfig {
+                sched: SchedulerConfig {
+                    max_batch: 4,
+                    speculate,
+                    draft_len: spec_draft_len,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let t0 = Instant::now();
+        let sessions: Vec<_> = (0..spec_sessions)
+            .map(|i| {
+                server.submit(Request {
+                    prompt: bench_prompt(i, cfg.prompt_len),
+                    max_new: spec_budget,
+                    deadline: None,
+                })
+            })
+            .collect();
+        let streams: Vec<Vec<i32>> = sessions.into_iter().map(|s| s.collect().tokens).collect();
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = server.shutdown().expect("speculative bench server stats");
+        let tokens: usize = streams.iter().map(|s| s.len()).sum();
+        (tokens as f64 / wall.max(1e-9), stats, streams)
+    };
+    let (spec_plain_tps, _, spec_plain_streams) = run_serve(false);
+    let (spec_tps, spec_stats, spec_streams) = run_serve(true);
+    assert_eq!(
+        spec_streams, spec_plain_streams,
+        "speculative decode must be lossless"
+    );
+    println!(
+        "speculative decode (draft_len {spec_draft_len}): plain {spec_plain_tps:.1} tok/s vs \
+         speculate {spec_tps:.1} tok/s ({:.2}x), acceptance {:.3} \
+         ({} accepted / {} drafted, {} rollbacks)",
+        spec_tps / spec_plain_tps.max(1e-9),
+        spec_stats.acceptance_rate(),
+        spec_stats.spec_accepted,
+        spec_stats.spec_drafted,
+        spec_stats.spec_rollbacks
+    );
+
     // --- paged capacity at fixed memory -------------------------------
     // Give the paged pool exactly the page budget a 4-session
     // contiguous pool preallocates, then count how many *real*
@@ -407,6 +462,19 @@ fn main() {
                 ("hit_rate", Json::num(churn_stats.prefix_hit_rate())),
                 ("cow_splits", Json::from_usize(churn_stats.cow_splits)),
                 ("churn_tokens_per_sec", Json::num(churn_tps)),
+            ]),
+        ),
+        (
+            "speculative_decode",
+            Json::obj(vec![
+                ("sessions", Json::from_usize(spec_sessions)),
+                ("draft_len", Json::from_usize(spec_draft_len)),
+                ("plain_tokens_per_sec", Json::num(spec_plain_tps)),
+                ("speculative_tokens_per_sec", Json::num(spec_tps)),
+                ("acceptance_rate", Json::num(spec_stats.acceptance_rate())),
+                ("drafted", Json::from_usize(spec_stats.spec_drafted)),
+                ("accepted", Json::from_usize(spec_stats.spec_accepted)),
+                ("rollbacks", Json::from_usize(spec_stats.spec_rollbacks)),
             ]),
         ),
         (

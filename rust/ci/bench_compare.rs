@@ -358,6 +358,13 @@ mod tests {
         assert!(!pinned("decode/rows/2/peak_frac"));
         assert!(!pinned("decode/rows/2/mean_ns"));
         assert!(!pinned("stream/triad_ceiling_gb_s"));
+        // Speculative-decode rows: both throughput leaves are gated;
+        // the acceptance rate is a workload property, not a
+        // higher-is-faster number, so it stays unpinned.
+        assert!(pinned("speculative_decode/plain_tokens_per_sec"));
+        assert!(pinned("speculative_decode/speculative_tokens_per_sec"));
+        assert!(!pinned("speculative_decode/acceptance_rate"));
+        assert!(!pinned("speculative_decode/rollbacks"));
     }
 
     #[test]

@@ -23,6 +23,7 @@
 use super::PipelineError;
 use crate::data::TokenSet;
 use crate::model::{embed_rows, CaptureBlock, Params};
+use crate::runtime::client::RuntimeError;
 use crate::runtime::{lit_f32, lit_i32, lit_mat, to_vec_f32, Runtime};
 use crate::slab::ActStats;
 use crate::tensor::Mat;
@@ -54,28 +55,31 @@ pub struct BlockWeights {
 }
 
 impl BlockWeights {
-    pub fn from_params(params: &Params, layer: usize) -> BlockWeights {
-        let vec1 = |name: &str| {
-            let i = params.index(name).unwrap_or_else(|| panic!("no param {name}"));
-            params.tensors[i].clone()
+    /// Gather one block's weights by the per-block name contract.
+    /// A name the params don't carry is a malformed job input (e.g. a
+    /// config/checkpoint mismatch) — a typed error, not a panic, so
+    /// compression jobs fail with context.
+    pub fn from_params(params: &Params, layer: usize) -> Result<BlockWeights, PipelineError> {
+        let missing = |name: &str| RuntimeError::MissingParam(name.to_string());
+        let vec1 = |name: &str| -> Result<Vec<f32>, PipelineError> {
+            let i = params.index(name).ok_or_else(|| missing(name))?;
+            Ok(params.tensors[i].clone())
         };
         // Norm names come from the same per-block contract as the
         // linears (`block_param_names` is the block_capture argument
         // order: attn_norm first, mlp_norm sixth).
         let names = params.cfg.block_param_names(layer);
-        BlockWeights {
-            layer,
-            attn_norm: vec1(&names[0]),
-            mlp_norm: vec1(&names[5]),
-            linears: params
-                .cfg
-                .block_linears(layer)
-                .map(|(name, src)| {
-                    let w = params.mat(&name);
-                    (name, src, w)
-                })
-                .into(),
+        let mut linears = Vec::new();
+        for (name, src) in params.cfg.block_linears(layer) {
+            let w = params.try_mat(&name).ok_or_else(|| missing(&name))?;
+            linears.push((name, src, w));
         }
+        Ok(BlockWeights {
+            layer,
+            attn_norm: vec1(&names[0])?,
+            mlp_norm: vec1(&names[5])?,
+            linears,
+        })
     }
 
     /// Borrow as a native capture block.
@@ -174,7 +178,9 @@ impl<'a> Capture<'a> {
             CaptureEngine::Native => {
                 let bsz = batch.max(1);
                 let n_batches = calib.rows.div_ceil(bsz);
-                let tok_emb = params.mat("tok_emb");
+                let tok_emb = params
+                    .try_mat("tok_emb")
+                    .ok_or_else(|| RuntimeError::MissingParam("tok_emb".into()))?;
                 let h = (0..n_batches)
                     .map(|b| {
                         let start = b * bsz;
@@ -213,9 +219,9 @@ impl<'a> Capture<'a> {
                 // host round-trip of the embedding table. Resolved by
                 // name (like every other parameter here), not by flat
                 // position.
-                let emb_idx = params.index("tok_emb").ok_or_else(|| {
-                    PipelineError::Other("no tok_emb parameter in config".into())
-                })?;
+                let emb_idx = params
+                    .index("tok_emb")
+                    .ok_or_else(|| RuntimeError::MissingParam("tok_emb".into()))?;
                 let tok_emb_lit =
                     lit_f32(&params.tensors[emb_idx], &cfg.param_shapes[emb_idx]);
                 let mut h = Vec::with_capacity(n_batches);
@@ -306,7 +312,15 @@ impl<'a> Capture<'a> {
                 }
             }
         }
-        Ok(stats.map(|s| s.expect("at least one calibration batch")))
+        match stats {
+            [Some(a), Some(b), Some(c), Some(d)] => Ok([a, b, c, d]),
+            // Unreachable through `start` (which rejects empty
+            // calibration sets), but a typed error beats a panic if a
+            // future engine ever yields zero batches.
+            _ => Err(PipelineError::Other(
+                "capture produced no calibration batches".into(),
+            )),
+        }
     }
 
     /// Propagate the residual stream through `blockw` with its

@@ -273,7 +273,7 @@ impl<'a> CompressJob<'a> {
         let mut peak = base;
 
         for layer in 0..cfg.n_layers {
-            let mut blockw = BlockWeights::from_params(self.params, layer);
+            let mut blockw = BlockWeights::from_params(self.params, layer)?;
             let stats = cap.capture_block(&blockw, needs_gram)?;
             let outs =
                 decompose::decompose_block(self.method, self.engine, rt, &blockw, &stats, pool)?;
@@ -396,8 +396,8 @@ mod tests {
         let cfg = tiny_cfg(2);
         let params = Params::init(&cfg, 400);
         let method = Method::Wanda { sparsity: 0.5, pattern: None };
-        let out = CompressJob::new(&params, &calib(&cfg, 4), &method).run().unwrap();
-        let p = out.params.as_ref().unwrap();
+        let out = CompressJob::new(&params, &calib(&cfg, 4), &method).run().expect("compress job");
+        let p = out.params.as_ref().expect("keep_dense default retains params");
         for (name, (dout, din)) in &cfg.pruned {
             let m = p.mat(name);
             for i in 0..*dout {
@@ -425,12 +425,12 @@ mod tests {
         let params = Params::init(&cfg, 401);
         let cal = calib(&cfg, 4);
         let method = slab_method();
-        let serial = CompressJob::new(&params, &cal, &method).run().unwrap();
-        let par = CompressJob::new(&params, &cal, &method).threads(4).run().unwrap();
+        let serial = CompressJob::new(&params, &cal, &method).run().expect("compress job");
+        let par = CompressJob::new(&params, &cal, &method).threads(4).run().expect("compress job");
         assert_eq!(serial.slab_layers, par.slab_layers, "packed layers");
         assert_eq!(
-            serial.params.as_ref().unwrap().tensors,
-            par.params.as_ref().unwrap().tensors,
+            serial.params.as_ref().expect("serial params").tensors,
+            par.params.as_ref().expect("parallel params").tensors,
             "dense reconstructions"
         );
         assert_eq!(serial.report.layers, par.report.layers, "reports");
@@ -453,7 +453,7 @@ mod tests {
         let params = Params::init(&cfg, 402);
         let cal = calib(&cfg, 4);
         let method = slab_method();
-        let keep = CompressJob::new(&params, &cal, &method).run().unwrap();
+        let keep = CompressJob::new(&params, &cal, &method).run().expect("compress job");
         let path = std::env::temp_dir().join("slab-tests/compress-stream.slabckpt");
         let lean = CompressJob::new(&params, &cal, &method)
             .threads(2)
@@ -461,7 +461,7 @@ mod tests {
             .keep_packed(false)
             .stream_to(path.clone())
             .run()
-            .unwrap();
+            .expect("streaming job");
         assert!(lean.params.is_none());
         assert!(lean.slab_layers.is_empty());
         assert!(
@@ -472,13 +472,13 @@ mod tests {
         );
         assert_eq!(lean.report.layers, keep.report.layers, "reports still complete");
 
-        let loaded = load_packed_checkpoint(&path).unwrap();
+        let loaded = load_packed_checkpoint(&path).expect("reload checkpoint");
         assert_eq!(loaded, keep.slab_layers, "streamed layers reload bit-identically");
 
         // And the streamed checkpoint serves: packed engine over the
         // reloaded layers vs dense engine over the kept Ŵ.
         let packed_model = SlabModel::from_packed(&params, &loaded, 1);
-        let dense_model = SlabModel::from_dense(keep.params.as_ref().unwrap(), 1);
+        let dense_model = SlabModel::from_dense(keep.params.as_ref().expect("kept params"), 1);
         let prompts = vec![vec![5, 6, 7], vec![9, 10]];
         assert_eq!(
             packed_model.generate_batch(&prompts, 4),
@@ -498,10 +498,10 @@ mod tests {
         let params = Params::init(&cfg, 403);
         let cal = calib(&cfg, 4);
         let method = Method::Wanda { sparsity: 0.5, pattern: None };
-        let a = CompressJob::new(&params, &cal, &method).batch(4).run().unwrap();
+        let a = CompressJob::new(&params, &cal, &method).batch(4).run().expect("compress job");
         // batch 3 → batches of 3 and 1 rows; batch 7 → one short batch.
         for batch in [2usize, 3, 7] {
-            let b = CompressJob::new(&params, &cal, &method).batch(batch).run().unwrap();
+            let b = CompressJob::new(&params, &cal, &method).batch(batch).run().expect("compress job");
             for (la, lb) in a.report.layers.iter().zip(b.report.layers.iter()) {
                 assert_eq!(la.kept, lb.kept, "batch {batch}");
                 assert!(
@@ -536,10 +536,10 @@ mod tests {
         let cal = calib(&cfg, 2);
         // SLaB retained packed layers: the packed engine, token-identical
         // to serving the dense reconstruction of the same decomposition.
-        let slab_out = CompressJob::new(&params, &cal, &slab_method()).run().unwrap();
-        let packed = slab_out.serving_model(&params, 1).unwrap();
+        let slab_out = CompressJob::new(&params, &cal, &slab_method()).run().expect("compress job");
+        let packed = slab_out.serving_model(&params, 1).expect("packed serving model");
         assert_eq!(packed.packed_linear_count(), cfg.pruned.len());
-        let dense_ref = SlabModel::from_dense(slab_out.params.as_ref().unwrap(), 1);
+        let dense_ref = SlabModel::from_dense(slab_out.params.as_ref().expect("slab dense params"), 1);
         let prompts = vec![vec![5, 6], vec![7]];
         assert_eq!(
             packed.generate_batch(&prompts, 3),
@@ -548,8 +548,8 @@ mod tests {
         );
         // Wanda emits no packed layers → the dense-reconstruction engine.
         let wanda = Method::Wanda { sparsity: 0.5, pattern: None };
-        let wout = CompressJob::new(&params, &cal, &wanda).run().unwrap();
-        assert_eq!(wout.serving_model(&params, 1).unwrap().packed_linear_count(), 0);
+        let wout = CompressJob::new(&params, &cal, &wanda).run().expect("compress job");
+        assert_eq!(wout.serving_model(&params, 1).expect("dense serving model").packed_linear_count(), 0);
         // A streaming-lean job retains neither → explicit error, not a panic.
         let path = std::env::temp_dir().join("slab-tests/serving-model-lean.slabckpt");
         let lean = CompressJob::new(&params, &cal, &slab_method())
@@ -557,7 +557,7 @@ mod tests {
             .keep_packed(false)
             .stream_to(path)
             .run()
-            .unwrap();
+            .expect("streaming job");
         assert!(matches!(lean.serving_model(&params, 1), Err(PipelineError::Other(_))));
     }
 
@@ -569,5 +569,24 @@ mod tests {
         let method = slab_method();
         let err = CompressJob::new(&params, &cal, &method).engine(Engine::Artifact).run();
         assert!(matches!(err, Err(PipelineError::Other(_))));
+    }
+
+    #[test]
+    fn missing_block_params_are_a_typed_error_not_a_panic() {
+        // Asking for a block the config doesn't have (the shape a
+        // config/checkpoint mismatch takes) must surface as a typed
+        // RuntimeError::MissingParam naming the parameter — the
+        // serve-side error policy, applied to compression inputs.
+        let cfg = tiny_cfg(1);
+        let params = Params::init(&cfg, 407);
+        let err = match BlockWeights::from_params(&params, 1) {
+            Err(e) => e,
+            Ok(_) => panic!("layer 1 of a 1-layer model must fail"),
+        };
+        assert!(
+            matches!(err, PipelineError::Runtime(RuntimeError::MissingParam(_))),
+            "unexpected error shape: {err}"
+        );
+        assert!(err.to_string().contains("l1."), "{err}");
     }
 }

@@ -23,7 +23,9 @@
 //!   including the paged-KV gauges (`kv_pages`, `kv_pages_peak`) and
 //!   prefix-cache counters (`prefix_hits` / `prefix_misses` /
 //!   `prefix_hit_rate`, `cow_splits`, `page_evictions`) of
-//!   DESIGN.md §13.
+//!   DESIGN.md §13, and the speculative-decode counters
+//!   (`spec_rounds`, `spec_drafted`, `spec_accepted`,
+//!   `spec_acceptance_rate`, `spec_rollbacks`) of DESIGN.md §14.
 //!
 //! A client that disconnects mid-stream is treated as a cancellation
 //! (the router stops decoding for it); a malformed request gets a
@@ -763,6 +765,7 @@ mod tests {
         assert!(metrics.body.contains("mean_ttft_ms"), "{}", metrics.body);
         assert!(metrics.body.contains("prefix_hit_rate"), "{}", metrics.body);
         assert!(metrics.body.contains("kv_pages"), "{}", metrics.body);
+        assert!(metrics.body.contains("spec_acceptance_rate"), "{}", metrics.body);
         let missing = client::get(addr, "/nope").expect("404");
         assert_eq!(missing.status, 404);
         let wrong_method = client::get(addr, "/v1/generate").expect("405");

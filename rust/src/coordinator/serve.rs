@@ -48,6 +48,7 @@
 use crate::data::{EOS, PAD};
 use crate::model::{
     greedy_token, DecodeSlot, KvCachePool, PagedKvConfig, PagedKvPool, Params, SlabModel,
+    VerifySlot,
 };
 use crate::report::Table;
 use crate::runtime::client::RuntimeError;
@@ -378,6 +379,16 @@ pub struct ServeStats {
     pub kv_pages: usize,
     /// High-water mark of allocated KV pages.
     pub kv_pages_peak: usize,
+    /// Self-speculative decoding (DESIGN.md §14): draft→verify rounds
+    /// executed (one per non-empty speculative tick).
+    pub spec_rounds: usize,
+    /// Draft tokens proposed by the cheap sparse+low-rank path.
+    pub spec_drafted: usize,
+    /// Draft tokens the full-model verify pass accepted.
+    pub spec_accepted: usize,
+    /// Verify passes that rejected at least one draft token, rolling
+    /// the session's KV state back past the divergence point.
+    pub spec_rollbacks: usize,
     pub wall_secs: f64,
 }
 
@@ -405,6 +416,13 @@ impl ServeStats {
         self.prefix_hits as f64 / (self.prefix_hits + self.prefix_misses).max(1) as f64
     }
 
+    /// Fraction of draft tokens the verify pass accepted (`0.0` when
+    /// speculation never ran) — the observability headline of
+    /// DESIGN.md §14: speedup ≈ acceptance, losslessness regardless.
+    pub fn acceptance_rate(&self) -> f64 {
+        self.spec_accepted as f64 / self.spec_drafted.max(1) as f64
+    }
+
     /// Render as a metric/value [`Table`] — the `/metrics` body and
     /// the CLI's summary form.
     pub fn table(&self, title: &str) -> Table {
@@ -426,6 +444,11 @@ impl ServeStats {
             ("page_evictions", self.page_evictions.to_string()),
             ("kv_pages", self.kv_pages.to_string()),
             ("kv_pages_peak", self.kv_pages_peak.to_string()),
+            ("spec_rounds", self.spec_rounds.to_string()),
+            ("spec_drafted", self.spec_drafted.to_string()),
+            ("spec_accepted", self.spec_accepted.to_string()),
+            ("spec_acceptance_rate", format!("{:.3}", self.acceptance_rate())),
+            ("spec_rollbacks", self.spec_rollbacks.to_string()),
             ("mean_ttft_ms", format!("{:.3}", self.mean_ttft_ms())),
             ("wall_secs", format!("{:.3}", self.wall_secs)),
         ];
@@ -504,6 +527,23 @@ pub struct SchedulerConfig {
     /// Share prefilled pages between sessions with identical padded
     /// prompts (copy-on-write; paged pool only).
     pub prefix_sharing: bool,
+    /// Self-speculative decoding (DESIGN.md §14): each tick drafts up
+    /// to [`draft_len`](SchedulerConfig::draft_len) tokens per session
+    /// through the cheap sparse+low-rank view, verifies them in one
+    /// full-model multi-token pass, and emits the longest accepted
+    /// prefix plus the verify's own next token. **Lossless**: streams
+    /// are token-identical to plain greedy decode (pinned by the
+    /// parity and fuzz suites); only throughput and the
+    /// `spec_*`/acceptance-rate counters change.
+    pub speculate: bool,
+    /// Draft tokens proposed per session per speculative round
+    /// (clamped ≥ 1 at use; windows shrink near the sequence cap,
+    /// token budgets, and KV page exhaustion).
+    pub draft_len: usize,
+    /// Truncate the draft view to the top-`r` Hadamard rank-1 terms
+    /// (`None` = full rank). `Some(0)` drafts through the sparse
+    /// component alone — the cheapest, lowest-acceptance draft.
+    pub draft_rank: Option<usize>,
 }
 
 impl Default for SchedulerConfig {
@@ -516,6 +556,9 @@ impl Default for SchedulerConfig {
             kv_page: 8,
             page_budget: 0,
             prefix_sharing: true,
+            speculate: false,
+            draft_len: 4,
+            draft_rank: None,
         }
     }
 }
@@ -1210,7 +1253,11 @@ impl Scheduler {
     pub fn tick(&mut self) -> usize {
         self.reap();
         self.admit();
-        let n = self.decode_tick();
+        let n = if self.cfg.speculate {
+            self.speculative_tick()
+        } else {
+            self.decode_tick()
+        };
         self.sync_kv_stats();
         n
     }
@@ -1340,28 +1387,7 @@ impl Scheduler {
                 core.finish(&mut self.stats);
                 continue;
             }
-            let slot: usize;
-            let first_row: Vec<f32>;
-            match &mut self.kv {
-                KvBacking::Contiguous(pool) => {
-                    let (logits, cache) = self.model.prefill_session(&core.job.req.prompt);
-                    first_row = logits.row(0).to_vec();
-                    slot = pool.adopt(cache).expect("kv pool sized to max_batch");
-                }
-                KvBacking::Paged(pool) => {
-                    let padded = self.model.pad_prompt(&core.job.req.prompt);
-                    if let Some((sid, row)) = pool.admit_shared(&padded) {
-                        slot = sid;
-                        first_row = row;
-                    } else {
-                        let (logits, cache) = self.model.prefill_session(&core.job.req.prompt);
-                        slot = pool
-                            .adopt_prefill(&padded, logits.row(0), &cache)
-                            .expect("admission pre-checked page availability");
-                        first_row = logits.row(0).to_vec();
-                    }
-                }
-            }
+            let (slot, first_row) = self.admit_prefill(&core.job.req.prompt);
             let mut sess = ActiveSession {
                 core,
                 slot: Some(slot),
@@ -1381,6 +1407,33 @@ impl Scheduler {
             sess.next_tok = first;
             self.active.push(sess);
         }
+    }
+
+    /// Prefill-and-adopt for one admitted request — the **single**
+    /// `prefill_session` call site shared by both KV backings (and
+    /// thereby the one integration point the speculative path rides
+    /// on): paged admission first tries to join a cached shared
+    /// prefix (replaying its memoized logits), falling back to a
+    /// fresh prefill adopted into whichever pool is live. Capacity
+    /// was pre-checked by [`admit`](Scheduler::admit).
+    fn admit_prefill(&mut self, prompt: &[i32]) -> (usize, Vec<f32>) {
+        let padded = self.model.pad_prompt(prompt);
+        if let KvBacking::Paged(pool) = &mut self.kv {
+            if let Some((sid, row)) = pool.admit_shared(&padded) {
+                return (sid, row);
+            }
+        }
+        let (logits, cache) = self.model.prefill_session(prompt);
+        let first_row = logits.row(0).to_vec();
+        let slot = match &mut self.kv {
+            KvBacking::Contiguous(pool) => {
+                pool.adopt(cache).expect("kv pool sized to max_batch")
+            }
+            KvBacking::Paged(pool) => pool
+                .adopt_prefill(&padded, logits.row(0), &cache)
+                .expect("admission pre-checked page availability"),
+        };
+        (slot, first_row)
     }
 
     /// One shared decode step for the active batch; terminating
@@ -1458,6 +1511,204 @@ impl Scheduler {
                 done.push((r, Outcome::Done)); // finish caps→Evicted
             } else {
                 sess.next_tok = tok;
+            }
+        }
+        for &(r, outcome) in done.iter().rev() {
+            let sess = self.active.remove(r);
+            self.finish(sess, outcome);
+        }
+        n
+    }
+
+    /// One self-speculative round for the active batch (DESIGN.md
+    /// §14), replacing [`decode_tick`](Scheduler::decode_tick) when
+    /// [`SchedulerConfig::speculate`] is on:
+    ///
+    /// 1. **window** — per session, `k = min(draft_len, cap headroom,
+    ///    budget headroom)` tokens may be speculated past the
+    ///    mandatory verify token (paged: each extra position must also
+    ///    secure a page, shrinking `k` instead of evicting — only the
+    ///    verify token's page preempts, exactly like `decode_tick`);
+    /// 2. **draft** — `k` greedy tokens through the cheap
+    ///    sparse+low-rank [`SlabModel::draft`] view, writing
+    ///    draft-quality K/V into the session's own cache;
+    /// 3. **verify** — one full-model multi-token pass re-feeds the
+    ///    last emitted token plus the draft run, overwriting every fed
+    ///    K/V row with full-model rows;
+    /// 4. **accept/emit** — the longest draft prefix matching the
+    ///    verify argmaxes is emitted plus the verify's own next token,
+    ///    through the *same* per-token EOS/budget gates as
+    ///    `decode_tick` — streams are token-identical to plain greedy
+    ///    decode, speculation only changes how many arrive per tick;
+    /// 5. **rollback** — paged sessions truncate to their new length,
+    ///    releasing pages past the divergence point (contiguous
+    ///    rollback is a no-op: stale rows are overwritten before any
+    ///    later read — `KvCache`'s lazy-growth contract).
+    ///
+    /// `k = 0` (cap/budget/page-starved) degrades to a single-token
+    /// verify with plain-decode semantics, so every session always
+    /// progresses. Cancellations and deadlines land at tick
+    /// boundaries, as in plain decode — a speculative tick may stream
+    /// up to `k` extra tokens first, all of them still exact.
+    fn speculative_tick(&mut self) -> usize {
+        let draft_len = self.cfg.draft_len.max(1);
+        // Per-session speculation window past the mandatory verify
+        // token. The window never reaches seq_cap (the fed run ends
+        // at pos + k ≤ seq_cap - 1) and never drafts past the token
+        // budget (at most budget-streamed tokens can still be
+        // emitted, consuming at most that many fed positions).
+        let window = |sess: &ActiveSession, cap: usize| -> usize {
+            draft_len
+                .min(cap.saturating_sub(sess.pos + 1))
+                .min(sess.core.budget.saturating_sub(sess.core.streamed + 1))
+        };
+        // Page securing, mirroring decode_tick's pre-pass: the verify
+        // token's page is mandatory (oldest-first securing,
+        // newest-first preemption, same livelock-freedom argument);
+        // draft positions just shrink the window when starved.
+        let mut ks: Vec<usize> = Vec::new();
+        let mut page_evicted: Vec<ActiveSession> = Vec::new();
+        match &mut self.kv {
+            KvBacking::Contiguous(_) => {
+                let cap = self.seq_cap;
+                ks = self.active.iter().map(|s| window(s, cap)).collect();
+            }
+            KvBacking::Paged(pool) => {
+                let mut i = 0;
+                while i < self.active.len() {
+                    let sid = self.active[i].slot.expect("active session owns a kv slot");
+                    let pos = self.active[i].pos;
+                    if !pool.can_write(sid, pos) {
+                        pool.evict_prefixes(1);
+                    }
+                    if !pool.prepare_write(sid, pos) {
+                        let victim = self.active.len() - 1;
+                        let mut sess = self.active.remove(victim);
+                        if let Some(slot) = sess.slot.take() {
+                            pool.release(slot);
+                        }
+                        page_evicted.push(sess);
+                        continue;
+                    }
+                    let want = window(&self.active[i], self.seq_cap);
+                    let mut k = 0;
+                    for j in 1..=want {
+                        if !pool.can_write(sid, pos + j) {
+                            pool.evict_prefixes(1);
+                        }
+                        if !pool.prepare_write(sid, pos + j) {
+                            break;
+                        }
+                        k = j;
+                    }
+                    ks.push(k);
+                    i += 1;
+                }
+            }
+        }
+        for sess in page_evicted {
+            self.stats.page_evictions += 1;
+            self.finish(sess, Outcome::Evicted);
+        }
+        if self.active.is_empty() {
+            return 0;
+        }
+        debug_assert_eq!(ks.len(), self.active.len());
+
+        // Draft phase: k greedy tokens per session through the cheap
+        // view. fed[i] = [next_tok, d_1, .., d_k] — the verify input.
+        let mut fed: Vec<Vec<i32>> = self.active.iter().map(|s| vec![s.next_tok]).collect();
+        let max_k = ks.iter().copied().max().unwrap_or(0);
+        let draft = self.model.draft(self.cfg.draft_rank);
+        for j in 0..max_k {
+            let mut idx: Vec<usize> = Vec::new();
+            let mut steps: Vec<DecodeSlot> = Vec::new();
+            for (i, sess) in self.active.iter().enumerate() {
+                if ks[i] > j {
+                    idx.push(i);
+                    steps.push(DecodeSlot {
+                        session: sess.slot.expect("active session owns a kv slot"),
+                        token: fed[i][j],
+                        pos: sess.pos + j,
+                    });
+                }
+            }
+            if steps.is_empty() {
+                break;
+            }
+            let toks = match &mut self.kv {
+                KvBacking::Contiguous(pool) => draft.decode_batch_greedy(pool, &steps),
+                KvBacking::Paged(pool) => draft.decode_batch_greedy_paged(pool, &steps),
+            };
+            for (&i, &t) in idx.iter().zip(&toks) {
+                fed[i].push(t);
+            }
+        }
+
+        // Verify: one full-model pass over every fed run. Row j of a
+        // session's run is bit-identical to what sequential decode of
+        // fed[..=j] would produce — the losslessness anchor.
+        let slots: Vec<VerifySlot> = self
+            .active
+            .iter()
+            .enumerate()
+            .map(|(i, s)| VerifySlot {
+                session: s.slot.expect("active session owns a kv slot"),
+                pos: s.pos,
+                tokens: fed[i].clone(),
+            })
+            .collect();
+        let logits = match &mut self.kv {
+            KvBacking::Contiguous(pool) => self.model.decode_batch_multi(pool, &slots),
+            KvBacking::Paged(pool) => self.model.decode_batch_multi_paged(pool, &slots),
+        };
+        self.stats.batches += 1;
+        self.stats.spec_rounds += 1;
+
+        // Accept & emit: per session, verify row j answers "what
+        // follows fed[..=j]?" — accept drafts while they agree, then
+        // the verify's own token, each through the exact per-token
+        // gates (EOS, then budget) of the plain decode path.
+        let n = self.active.len();
+        let mut done: Vec<(usize, Outcome)> = Vec::new();
+        let mut row = 0usize;
+        for (i, sess) in self.active.iter_mut().enumerate() {
+            let k = ks[i];
+            let f = &fed[i];
+            let mut accepted = 0;
+            while accepted < k && greedy_token(logits.row(row + accepted)) == f[accepted + 1] {
+                accepted += 1;
+            }
+            self.stats.spec_drafted += k;
+            self.stats.spec_accepted += accepted;
+            if accepted < k {
+                self.stats.spec_rollbacks += 1;
+            }
+            for j in 0..=accepted {
+                let tok = greedy_token(logits.row(row + j));
+                sess.pos += 1;
+                if tok == EOS {
+                    done.push((i, Outcome::Done));
+                    break;
+                }
+                sess.core.push(tok, &mut self.stats);
+                if sess.core.streamed >= sess.core.budget {
+                    done.push((i, Outcome::Done)); // finish caps→Evicted
+                    break;
+                }
+                sess.next_tok = tok;
+            }
+            row += f.len();
+        }
+        debug_assert_eq!(row, logits.rows);
+
+        // Rollback: drop KV state past each session's new length.
+        // Terminating sessions release everything in finish() anyway;
+        // live ones must not keep rejected-suffix pages pinned.
+        if let KvBacking::Paged(pool) = &mut self.kv {
+            for sess in &self.active {
+                let sid = sess.slot.expect("active session owns a kv slot");
+                pool.truncate(sid, sess.pos);
             }
         }
         for &(r, outcome) in done.iter().rev() {
@@ -1577,6 +1828,9 @@ pub(crate) mod test_support {
     use crate::data::{EOS, PAD};
     use crate::model::Params;
     use crate::runtime::ModelCfg;
+    use crate::slab::{decompose, ActStats, SlabConfig, SlabLayer};
+    use crate::tensor::Mat;
+    use crate::util::rng::Pcg64;
 
     /// Params whose EOS logit row duplicates PAD's, so first-max
     /// tie-breaking (PAD = 0 scans before EOS = 2) can never emit EOS
@@ -1590,6 +1844,32 @@ pub(crate) mod test_support {
         params.set_mat("lm_head", &head);
         params
     }
+
+    /// Decompose every pruned linear of `params` natively →
+    /// (packed layers, params with `Ŵ` swapped in), ready for
+    /// [`SlabModel::from_packed`](crate::model::SlabModel). The
+    /// speculative-decoding tests need a genuinely packed model: on a
+    /// dense one the draft view falls through to the full path and
+    /// every draft is accepted, so rejection/rollback never fires.
+    pub(crate) fn packed_params(params: &Params, seed: u64) -> (Vec<(String, SlabLayer)>, Params) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let scfg = SlabConfig {
+            iters: 3,
+            svd_iters: 6,
+            ..Default::default()
+        };
+        let mut packed = Vec::new();
+        let mut swapped = params.clone();
+        for (name, (_, din)) in params.cfg.pruned.clone() {
+            let w = params.mat(&name);
+            let stats = ActStats::from_activations(&Mat::randn(48, din, 1.0, &mut rng));
+            let d = decompose(&w, &stats, &scfg).expect("decompose");
+            let layer = SlabLayer::from_decomposition(&d);
+            swapped.set_mat(&name, &layer.reconstruct());
+            packed.push((name, layer));
+        }
+        (packed, swapped)
+    }
 }
 
 #[cfg(test)]
@@ -1598,7 +1878,7 @@ mod tests {
     //! streaming invariants get exercised on every `cargo test`, not
     //! only when `make artifacts` has run.
 
-    use super::test_support::eos_free_params;
+    use super::test_support::{eos_free_params, packed_params};
     use super::*;
     use crate::runtime::ModelCfg;
     use crate::util::prop::{check, Shrink};
@@ -2450,12 +2730,17 @@ mod tests {
             page_evictions: 1,
             kv_pages: 5,
             kv_pages_peak: 9,
+            spec_rounds: 4,
+            spec_drafted: 12,
+            spec_accepted: 9,
+            spec_rollbacks: 2,
             ttft_ms_total: 14.0,
             ttft_samples: 7,
             wall_secs: 2.0,
         };
         assert!((stats.mean_ttft_ms() - 2.0).abs() < 1e-12);
         assert!((stats.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((stats.acceptance_rate() - 0.75).abs() < 1e-12);
         let rendered = stats.table("serve").render();
         for key in [
             "requests",
@@ -2474,6 +2759,11 @@ mod tests {
             "page_evictions",
             "kv_pages",
             "kv_pages_peak",
+            "spec_rounds",
+            "spec_drafted",
+            "spec_accepted",
+            "spec_acceptance_rate",
+            "spec_rollbacks",
             "mean_ttft_ms",
             "wall_secs",
         ] {
@@ -2491,8 +2781,24 @@ mod tests {
         prompts: &[Vec<i32>],
         budgets: &[usize],
     ) -> (Vec<Response>, ServeStats) {
-        let model = Box::new(SlabModel::from_dense(params, 1));
-        let mut s = Scheduler::new(model, scfg);
+        sched_all_with(
+            || Box::new(SlabModel::from_dense(params, 1)),
+            scfg,
+            prompts,
+            budgets,
+        )
+    }
+
+    /// [`sched_all`] over an arbitrary engine factory — the
+    /// speculative tests serve genuinely *packed* models, where the
+    /// draft view really is a different (cheaper) forward.
+    fn sched_all_with(
+        mk: impl Fn() -> Box<SlabModel>,
+        scfg: SchedulerConfig,
+        prompts: &[Vec<i32>],
+        budgets: &[usize],
+    ) -> (Vec<Response>, ServeStats) {
+        let mut s = Scheduler::new(mk(), scfg);
         let rxs: Vec<_> = prompts
             .iter()
             .zip(budgets)
@@ -2649,5 +2955,193 @@ mod tests {
         assert_eq!(st.evicted, 1, "page preemption classifies Evicted");
         assert!(st.kv_pages_peak <= 8, "budget is a hard ceiling");
         assert_eq!(st.kv_pages, 0);
+    }
+
+    #[test]
+    fn speculative_decode_is_token_identical_to_plain_greedy() {
+        // The losslessness contract (DESIGN.md §14): speculation may
+        // only change *when* tokens arrive and the spec_* counters —
+        // never the tokens. Packed model (the draft view really is a
+        // different, sometimes-wrong forward), across contiguous and
+        // paged KV, draft_len 1..=6, full-rank / truncated /
+        // sparse-only drafts.
+        let cfg = tiny_cfg();
+        let params = eos_free_params(&cfg, 74);
+        let (packed, swapped) = packed_params(&params, 74);
+        let mk = || Box::new(SlabModel::from_packed(&swapped, &packed, 1));
+        let prompts: Vec<Vec<i32>> = vec![vec![5, 6, 7], vec![9], vec![11, 4, 13], vec![5, 6, 7]];
+        let budgets = [8usize, 3, 6, 5];
+        let plain_cfg = SchedulerConfig {
+            max_batch: 3,
+            ..Default::default()
+        };
+        let (plain, plain_stats) = sched_all_with(&mk, plain_cfg, &prompts, &budgets);
+        assert_eq!(plain_stats.spec_rounds, 0, "plain path never speculates");
+        for (draft_len, kv_page, draft_rank) in [
+            (1, 8, None),
+            (4, 8, None),
+            (6, 0, None),
+            (3, 2, Some(0)),
+            (4, 0, Some(0)),
+            (2, 8, Some(1)),
+        ] {
+            let scfg = SchedulerConfig {
+                max_batch: 3,
+                kv_page,
+                speculate: true,
+                draft_len,
+                draft_rank,
+                ..Default::default()
+            };
+            let (spec, st) = sched_all_with(&mk, scfg, &prompts, &budgets);
+            let label = format!("draft_len {draft_len} kv_page {kv_page} rank {draft_rank:?}");
+            for i in 0..prompts.len() {
+                assert!(!spec[i].rejected && !spec[i].cancelled, "{label}, req {i}");
+                assert_eq!(spec[i].tokens, plain[i].tokens, "{label}, req {i}");
+            }
+            assert_eq!(st.generated_tokens, plain_stats.generated_tokens, "{label}");
+            assert!(st.spec_rounds > 0 && st.spec_drafted > 0, "{label}");
+            assert!(st.spec_accepted <= st.spec_drafted, "{label}");
+            assert!(st.acceptance_rate() <= 1.0, "{label}");
+        }
+    }
+
+    #[test]
+    fn dense_draft_accepts_every_token_and_counts_it() {
+        // On a dense model the draft view falls through to the full
+        // forward, so every draft must be accepted: acceptance_rate
+        // exactly 1.0, zero rollbacks, and strictly fewer verify
+        // rounds than emitted decode tokens — speculation really
+        // batches multi-token emission. (This is also the HTTP e2e
+        // anchor: a served dense model reports acceptance 1.0.)
+        let cfg = tiny_cfg();
+        let params = eos_free_params(&cfg, 75);
+        let prompts: Vec<Vec<i32>> = vec![vec![5, 6], vec![9, 8, 7]];
+        let budgets = [6usize, 4];
+        let (plain, _) = sched_all(&params, SchedulerConfig::default(), &prompts, &budgets);
+        let spec_cfg = SchedulerConfig {
+            speculate: true,
+            draft_len: 3,
+            ..Default::default()
+        };
+        let (spec, st) = sched_all(&params, spec_cfg, &prompts, &budgets);
+        for i in 0..prompts.len() {
+            assert_eq!(spec[i].tokens, plain[i].tokens, "req {i}");
+        }
+        assert!(st.spec_rounds > 0 && st.spec_drafted > 0);
+        assert_eq!(st.spec_accepted, st.spec_drafted, "dense draft == full model");
+        assert_eq!(st.spec_rollbacks, 0);
+        assert!((st.acceptance_rate() - 1.0).abs() < 1e-12);
+        // 10 tokens total, 2 from prefill: 8 decode-emitted tokens in
+        // well under 8 verify rounds.
+        let decode_emitted = st.generated_tokens - prompts.len();
+        assert!(
+            st.spec_rounds < decode_emitted,
+            "{} rounds for {decode_emitted} decode tokens",
+            st.spec_rounds
+        );
+    }
+
+    #[test]
+    fn speculation_fuzz_streams_bit_exact_and_pages_balance() {
+        // Satellite: random prompts × draft_len 1..8 × cancellation
+        // and deadline injection × paged and contiguous KV, on a
+        // packed model. Undisturbed streams must be bit-exact to the
+        // serial plain-greedy reference, interrupted ones a prefix of
+        // it, and KV slot/page accounting must balance after every
+        // round's rollbacks.
+        let cfg = tiny_cfg();
+        let params = eos_free_params(&cfg, 76);
+        let (packed, swapped) = packed_params(&params, 76);
+        let reference_model = SlabModel::from_packed(&swapped, &packed, 1);
+        let seq_headroom = cfg.max_seq - cfg.prompt_len;
+        let mut rng = Pcg64::seed_from_u64(0x5bec ^ 0xf0);
+        for round in 0..8 {
+            let paged = round % 2 == 0;
+            let sharing = rng.below(2) == 0;
+            let model = Box::new(SlabModel::from_packed(&swapped, &packed, 1));
+            let mut s = Scheduler::new(
+                model,
+                SchedulerConfig {
+                    max_batch: 1 + rng.below_usize(3),
+                    queue_cap: 16,
+                    kv_page: if paged { 1 + rng.below_usize(4) } else { 0 },
+                    prefix_sharing: sharing,
+                    speculate: true,
+                    draft_len: 1 + rng.below_usize(8),
+                    draft_rank: match rng.below(3) {
+                        0 => None,
+                        1 => Some(0),
+                        _ => Some(1),
+                    },
+                    ..Default::default()
+                },
+            );
+            let n = 3 + rng.below_usize(5);
+            let mut rxs = Vec::new();
+            let mut handles = Vec::new();
+            let mut specs = Vec::new();
+            let mut enqueued = 0usize;
+            while enqueued < n || s.has_work() {
+                let op = rng.below(4);
+                if op == 0 && enqueued < n {
+                    let len = rng.below_usize(5);
+                    let prompt: Vec<i32> = (0..len).map(|_| 5 + rng.below(20) as i32).collect();
+                    let budget = 1 + rng.below_usize(6);
+                    // Occasional already-expired deadline: the session
+                    // is evicted at (or just after) admission with
+                    // whatever prefix it managed to stream.
+                    let deadline = (rng.below(5) == 0).then_some(Duration::ZERO);
+                    let (tx, rx) = channel();
+                    let handle = s.enqueue(
+                        Request {
+                            prompt: prompt.clone(),
+                            max_new: budget,
+                            deadline,
+                        },
+                        tx,
+                    );
+                    assert!(handle.is_some(), "queue_cap 16 never overflows here");
+                    rxs.push(rx);
+                    handles.push(handle.unwrap());
+                    specs.push((prompt, budget));
+                    enqueued += 1;
+                } else if op == 1 && !handles.is_empty() {
+                    handles[rng.below_usize(handles.len())].cancel();
+                } else {
+                    s.tick();
+                }
+            }
+            assert_eq!(s.active_sessions(), 0, "round {round}: drained");
+            assert_eq!(s.kv_active(), 0, "round {round}: every kv slot released");
+            for (i, rx) in rxs.iter().enumerate() {
+                let r = collect_events(rx);
+                let (prompt, budget) = &specs[i];
+                let reference = reference_model
+                    .generate_batch(&[prompt.clone()], *budget)
+                    .remove(0);
+                assert_eq!(reference.len(), (*budget).min(seq_headroom), "EOS-free");
+                if !r.cancelled && !r.evicted {
+                    assert_eq!(
+                        r.tokens, reference,
+                        "round {round} req {i}: undisturbed stream must be bit-identical"
+                    );
+                }
+                assert_eq!(
+                    r.tokens[..],
+                    reference[..r.tokens.len()],
+                    "round {round} req {i}: stream is a prefix of the serial reference"
+                );
+            }
+            let st = s.into_stats();
+            assert_eq!(st.requests, n, "round {round}: one terminal per session");
+            assert_eq!(st.rejected, 0, "round {round}");
+            assert!(st.spec_accepted <= st.spec_drafted, "round {round}");
+            if paged && !sharing {
+                // Sharing keeps cached prefill pages warm in the
+                // prefix index; without it every page must be back.
+                assert_eq!(st.kv_pages, 0, "round {round}: all pages released");
+            }
+        }
     }
 }

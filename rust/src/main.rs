@@ -18,6 +18,7 @@
 //!              [--packed runs/small_slab.packed] [--batch 8] [--queue-cap 64]
 //!              [--seq-cap N] [--deadline-ms 0] [--kv-page 8] [--page-budget 0]
 //!              [--no-prefix-share]                                           # artifact-free
+//!              [--speculate] [--draft-len 4] [--draft-rank R]  # lossless speculative decode
 //! ```
 //!
 //! `slab --sweep` / `slab --eval` (no subcommand) are shorthands for
@@ -246,6 +247,12 @@ fn run_http_serve(args: &Args, addr: &str) -> anyhow::Result<()> {
             kv_page: args.get_usize("kv-page", 8)?,
             page_budget: args.get_usize("page-budget", 0)?,
             prefix_sharing: !args.has_flag("no-prefix-share"),
+            // Self-speculative decoding (DESIGN.md §14): draft through
+            // the sparse+low-rank view, verify with the full model —
+            // lossless, so it's purely a throughput knob.
+            speculate: args.has_flag("speculate"),
+            draft_len: args.get_usize("draft-len", 4)?,
+            draft_rank: args.get("draft-rank").map(|r| r.parse()).transpose()?,
         },
         ..Default::default()
     };

@@ -22,8 +22,8 @@ pub mod native;
 pub mod params;
 
 pub use native::{
-    embed_rows, greedy_token, BlockActs, CaptureBlock, DecodeSlot, KvCache, KvCachePool, Linear,
-    SlabModel,
+    embed_rows, greedy_token, BlockActs, CaptureBlock, DecodeSlot, DraftModel, KvCache,
+    KvCachePool, Linear, SlabModel, VerifySlot,
 };
 pub use params::Params;
 
@@ -435,6 +435,29 @@ impl PagedKvPool {
         }
     }
 
+    /// Roll a session back past a rejected speculative suffix
+    /// (DESIGN.md §14): shrink `len` to `new_len` and release every
+    /// page wholly past it. `new_len` must not exceed the current
+    /// length — speculation only ever rolls *back*. Stale rows inside
+    /// the last kept page are left in place; decode overwrites a
+    /// position before attention ever reads it, so they are never
+    /// observed. Maintains the §13 audit's `pages == pages_for(len)`
+    /// invariant; released pages that are still held elsewhere (a COW
+    /// original retained by the prefix index or a sharer) merely drop
+    /// one reference.
+    pub fn truncate(&mut self, session: usize, new_len: usize) {
+        let keep = self.pages_for(new_len);
+        let dropped = {
+            let t = self.sessions.get_mut(session).expect("live session handle");
+            assert!(new_len <= t.len, "truncate to {new_len} past len {}", t.len);
+            t.len = new_len;
+            t.pages.split_off(keep)
+        };
+        for p in dropped {
+            self.pages.release(p);
+        }
+    }
+
     /// Drop prefix-index entries (oldest first) until at least
     /// `need_free` pages are free or the index is empty; returns how
     /// many entries were dropped. Pages still shared by live sessions
@@ -774,6 +797,82 @@ mod tests {
         let gc = model.decode_batch_greedy(&mut kv, &steps_c);
         let gp = model.decode_batch_greedy_paged(&mut paged, &steps_p);
         assert_eq!(gp, gc, "greedy emit parity");
+    }
+
+    #[test]
+    fn multi_token_paged_scoring_matches_contiguous_and_truncate_rolls_back() {
+        // The speculative verify pass over pages: multi-token scoring
+        // must be bit-identical to the contiguous pool, and truncating
+        // a rejected suffix must release exactly the wholly-dead pages
+        // while keeping the §13 audit green and later decodes
+        // bit-identical.
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 405);
+        let model = SlabModel::from_dense(&params, 2);
+        let t = cfg.prompt_len;
+        let prompt = vec![5, 6, 7];
+        let padded = model.pad_prompt(&prompt);
+        let (logits, cache) = model.prefill_session(&prompt);
+        let fed: Vec<i32> = vec![greedy_token(logits.row(0)), 9, 14, 3];
+
+        let mut kv = KvCachePool::for_model(&model, 1);
+        let sc = kv.adopt(model.prefill_session(&prompt).1).unwrap();
+        let lc = model
+            .decode_batch_multi(&mut kv, &[VerifySlot { session: sc, pos: t, tokens: fed.clone() }]);
+        assert_eq!(lc.rows, fed.len());
+
+        let mut paged = PagedKvPool::for_model(
+            &model,
+            2,
+            PagedKvConfig { page_size: 2, n_pages: 0, prefix_sharing: true },
+        );
+        let sp = paged.adopt_prefill(&padded, logits.row(0), &cache).unwrap();
+        // A sharer keeps the prompt pages multi-referenced so rollback
+        // interacts with live sharing.
+        let (sq, _) = paged.admit_shared(&padded).unwrap();
+        for j in 0..fed.len() {
+            assert!(paged.prepare_write(sp, t + j), "worst-case-safe budget");
+        }
+        let lp = model.decode_batch_multi_paged(
+            &mut paged,
+            &[VerifySlot { session: sp, pos: t, tokens: fed.clone() }],
+        );
+        assert_eq!(lp.data, lc.data, "paged vs contiguous multi-token logits");
+
+        // Overran by 3: only fed[0] stands. Roll back to len t+1.
+        assert_eq!(paged.session_len(sp), t + fed.len());
+        let pages_before = paged.session_pages(sp).len();
+        let free_before = paged.free_pages();
+        paged.truncate(sp, t + 1);
+        assert_eq!(paged.session_len(sp), t + 1);
+        assert_eq!(paged.session_pages(sp).len(), (t + 1).div_ceil(2), "audit shape");
+        assert_eq!(
+            paged.free_pages(),
+            free_before + (pages_before - paged.session_pages(sp).len()),
+            "dead pages returned to the arena"
+        );
+        paged.check_invariants();
+        // Idempotent at the same length.
+        paged.truncate(sp, t + 1);
+        assert_eq!(paged.session_pages(sp).len(), (t + 1).div_ceil(2));
+        paged.check_invariants();
+
+        // Continue decoding past the rollback point: position t+1 is
+        // re-secured and overwritten, and the logits still match the
+        // contiguous pool (whose stale rows are likewise overwritten).
+        let next = greedy_token(lp.row(0));
+        assert!(paged.prepare_write(sp, t + 1));
+        let step_p = model
+            .decode_batch_paged(&mut paged, &[DecodeSlot { session: sp, token: next, pos: t + 1 }]);
+        let step_c =
+            model.decode_batch(&mut kv, &[DecodeSlot { session: sc, token: next, pos: t + 1 }]);
+        assert_eq!(step_p.data, step_c.data, "post-rollback decode parity");
+        paged.check_invariants();
+
+        assert!(paged.release(sq));
+        assert!(paged.release(sp));
+        paged.evict_prefixes(paged.capacity_pages());
+        assert_eq!(paged.allocated_pages(), 0, "rollback leaked pages");
     }
 
     #[test]

@@ -79,11 +79,46 @@ impl Linear {
         }
     }
 
+    /// The **draft** application for self-speculative decoding
+    /// (DESIGN.md §14): packed linears forward only their sparse +
+    /// low-rank components ([`SlabLayer::forward_draft`], capped at
+    /// `rank_cap` ranks) — no bitplane work at all — while dense
+    /// linears have no cheap split and run [`apply`](Linear::apply)
+    /// unchanged. Draft outputs are approximate by design; the verify
+    /// pass through the full forward keeps decoding lossless.
+    pub fn apply_draft(&self, x: &Mat, pool: Option<&ThreadPool>, rank_cap: usize) -> Mat {
+        match self {
+            Linear::Packed(l) => l.forward_draft(x, pool, rank_cap),
+            Linear::Dense(_) => self.apply(x, pool),
+        }
+    }
+
     /// Weight bytes this linear occupies in the serving process.
     pub fn nbytes(&self) -> usize {
         match self {
             Linear::Dense(w) => w.numel() * 4,
             Linear::Packed(l) => l.nbytes_deploy(),
+        }
+    }
+}
+
+/// Which linear application a decode forward runs: the full packed
+/// path (the lossless reference — [`Linear::apply`] verbatim) or the
+/// sparse+low-rank draft ([`Linear::apply_draft`]). Threaded through
+/// one shared compute body so the two paths can never drift in
+/// operation order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LinPath {
+    Full,
+    Draft { rank_cap: usize },
+}
+
+impl LinPath {
+    #[inline]
+    fn apply(self, lin: &Linear, x: &Mat, pool: Option<&ThreadPool>) -> Mat {
+        match self {
+            LinPath::Full => lin.apply(x, pool),
+            LinPath::Draft { rank_cap } => lin.apply_draft(x, pool, rank_cap),
         }
     }
 }
@@ -307,6 +342,22 @@ pub struct DecodeSlot {
     pub session: usize,
     pub token: i32,
     pub pos: usize,
+}
+
+/// One session's contribution to a batched **multi-token** scoring
+/// pass ([`SlabModel::decode_batch_multi`]): feed `tokens[j]` at cache
+/// position `pos + j` for every `j`, attending causally within the
+/// run. The speculative verify pass feeds the last emitted token plus
+/// the draft run through this and reads one logits row per fed token —
+/// row `j` is bit-identical to what a sequential
+/// [`decode_batch`](SlabModel::decode_batch) of `tokens[..=j]` would
+/// have produced (DESIGN.md §14's losslessness anchor).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerifySlot {
+    pub session: usize,
+    /// Position of `tokens[0]`; token `j` lands at `pos + j`.
+    pub pos: usize,
+    pub tokens: Vec<i32>,
 }
 
 /// A whole model in serving form: per-layer [`Linear`]s (packed where
@@ -542,52 +593,106 @@ impl SlabModel {
     }
 
     fn decode_batch_in<S: KvStore>(&self, kv: &mut S, steps: &[DecodeSlot]) -> Mat {
-        let n = steps.len();
-        if n == 0 {
+        let slots: Vec<VerifySlot> = steps
+            .iter()
+            .map(|st| VerifySlot { session: st.session, pos: st.pos, tokens: vec![st.token] })
+            .collect();
+        self.decode_multi_in(kv, &slots, LinPath::Full)
+    }
+
+    /// Batched **multi-token** scoring over the contiguous pool — the
+    /// speculative *verify* pass (DESIGN.md §14). Each [`VerifySlot`]
+    /// feeds its run of tokens at consecutive positions; the cache rows
+    /// for every fed position are (over)written with full-model K/V,
+    /// and logits row `j` of a slot attends over `s ≤ pos + j`. Because
+    /// every kernel chunks over *weight* rows with a fixed accumulation
+    /// order, row `j` is bit-identical to a sequential
+    /// [`decode_batch`](SlabModel::decode_batch) of the same prefix —
+    /// the losslessness anchor the speculation tests pin. Returns
+    /// logits `(Σ tokens.len(), vocab)` in slot order.
+    pub fn decode_batch_multi(&self, kvpool: &mut KvCachePool, slots: &[VerifySlot]) -> Mat {
+        self.decode_multi_in(kvpool, slots, LinPath::Full)
+    }
+
+    /// [`decode_batch_multi`](SlabModel::decode_batch_multi) over the
+    /// block-paged pool. Every fed position must have been secured via
+    /// [`PagedKvPool::prepare_write`](crate::model::PagedKvPool::prepare_write)
+    /// first; scoring never allocates or COW-splits.
+    pub fn decode_batch_multi_paged(
+        &self,
+        kvpool: &mut crate::model::PagedKvPool,
+        slots: &[VerifySlot],
+    ) -> Mat {
+        self.decode_multi_in(kvpool, slots, LinPath::Full)
+    }
+
+    fn decode_multi_in<S: KvStore>(&self, kv: &mut S, slots: &[VerifySlot], path: LinPath) -> Mat {
+        if slots.is_empty() {
             return Mat::zeros(0, self.cfg.vocab);
         }
         kv.assert_model(&self.cfg);
-        for (i, st) in steps.iter().enumerate() {
-            assert!(st.pos < self.cfg.max_seq, "pos {} vs max_seq {}", st.pos, self.cfg.max_seq);
-            assert!(kv.has_session(st.session), "dead session {}", st.session);
-            for other in &steps[i + 1..] {
-                assert_ne!(st.session, other.session, "duplicate session in batch");
+        for (i, sl) in slots.iter().enumerate() {
+            assert!(!sl.tokens.is_empty(), "empty token run for session {}", sl.session);
+            assert!(
+                sl.pos + sl.tokens.len() <= self.cfg.max_seq,
+                "pos {}+{} vs max_seq {}",
+                sl.pos,
+                sl.tokens.len(),
+                self.cfg.max_seq
+            );
+            assert!(kv.has_session(sl.session), "dead session {}", sl.session);
+            for other in &slots[i + 1..] {
+                assert_ne!(sl.session, other.session, "duplicate session in batch");
             }
         }
-        for st in steps {
-            kv.begin_write(st.session, st.pos);
+        for sl in slots {
+            for j in 0..sl.tokens.len() {
+                kv.begin_write(sl.session, sl.pos + j);
+            }
         }
         let (dim, nh) = (self.cfg.dim, self.cfg.n_heads);
         let hd = dim / nh;
         let scale = 1.0 / (hd as f32).sqrt();
         let pool = Some(&self.pool);
 
-        let toks: Vec<i32> = steps.iter().map(|st| st.token).collect();
+        // Flatten slot-runs into rows; `rows[r]` = (session, position).
+        let mut toks: Vec<i32> = Vec::new();
+        let mut rows: Vec<(usize, usize)> = Vec::new();
+        for sl in slots {
+            for (j, &t) in sl.tokens.iter().enumerate() {
+                toks.push(t);
+                rows.push((sl.session, sl.pos + j));
+            }
+        }
+        let n = rows.len();
         let mut h = self.embed(&toks);
-        let tables: Vec<Vec<(f32, f32)>> = steps.iter().map(|st| rope_table(hd, st.pos)).collect();
+        let tables: Vec<Vec<(f32, f32)>> =
+            rows.iter().map(|&(_, pos)| rope_table(hd, pos)).collect();
         let mut scores: Vec<f32> = Vec::with_capacity(self.cfg.max_seq);
         for (li, blk) in self.layers.iter().enumerate() {
             let x = rmsnorm(&h, &blk.attn_norm);
-            let mut q = blk.wq.apply(&x, pool);
-            let mut k = blk.wk.apply(&x, pool);
-            let v = blk.wv.apply(&x, pool);
+            let mut q = path.apply(&blk.wq, &x, pool);
+            let mut k = path.apply(&blk.wk, &x, pool);
+            let v = path.apply(&blk.wv, &x, pool);
             for r in 0..n {
                 rope_apply(q.row_mut(r), nh, hd, &tables[r]);
                 rope_apply(k.row_mut(r), nh, hd, &tables[r]);
             }
-            for (r, st) in steps.iter().enumerate() {
-                kv.write_row(li, st.session, st.pos, k.row(r), v.row(r));
+            // Write *every* fed row before any attention read: row j of
+            // a run attends over its own and earlier fed positions.
+            for (r, &(session, pos)) in rows.iter().enumerate() {
+                kv.write_row(li, session, pos, k.row(r), v.row(r));
             }
             let mut att = Mat::zeros(n, dim);
-            for (r, st) in steps.iter().enumerate() {
+            for (r, &(session, pos)) in rows.iter().enumerate() {
                 scores.clear();
-                scores.resize(st.pos + 1, 0.0);
+                scores.resize(pos + 1, 0.0);
                 let qrow = q.row(r);
                 let arow = att.row_mut(r);
                 for hh in 0..nh {
                     let qh = &qrow[hh * hd..(hh + 1) * hd];
                     for (s, sc) in scores.iter_mut().enumerate() {
-                        let kh = &kv.k_row(li, st.session, s)[hh * hd..(hh + 1) * hd];
+                        let kh = &kv.k_row(li, session, s)[hh * hd..(hh + 1) * hd];
                         let mut d = 0.0f32;
                         for e in 0..hd {
                             d += qh[e] * kh[e];
@@ -597,7 +702,7 @@ impl SlabModel {
                     softmax_inplace(&mut scores);
                     for (s, &p) in scores.iter().enumerate() {
                         if p != 0.0 {
-                            let vh = &kv.v_row(li, st.session, s)[hh * hd..(hh + 1) * hd];
+                            let vh = &kv.v_row(li, session, s)[hh * hd..(hh + 1) * hd];
                             for e in 0..hd {
                                 arow[hh * hd + e] += p * vh[e];
                             }
@@ -605,9 +710,9 @@ impl SlabModel {
                     }
                 }
             }
-            let proj = blk.wo.apply(&att, pool);
+            let proj = path.apply(&blk.wo, &att, pool);
             h.add_assign(&proj);
-            self.mlp_inplace(blk, &mut h, pool);
+            self.mlp_inplace_in(blk, &mut h, pool, path);
         }
         let xf = rmsnorm(&h, &self.final_norm);
         matmul_bt(&xf, &self.lm_head)
@@ -637,6 +742,17 @@ impl SlabModel {
     ) -> Vec<i32> {
         let logits = self.decode_batch_paged(kvpool, steps);
         (0..logits.rows).map(|r| greedy_token(logits.row(r))).collect()
+    }
+
+    /// The self-speculative **draft view** over this model: same
+    /// weights, same KV machinery, but every packed linear forwards
+    /// only its sparse + low-rank components ([`Linear::apply_draft`]),
+    /// optionally truncated to the top `rank_cap` Hadamard rank-1
+    /// terms (`None` = full rank). Dense linears are unchanged, so on
+    /// an all-dense model the draft *is* the full model and every
+    /// speculated token is accepted. See DESIGN.md §14.
+    pub fn draft(&self, rank_cap: Option<usize>) -> DraftModel<'_> {
+        DraftModel { model: self, rank_cap: rank_cap.unwrap_or(usize::MAX) }
     }
 
     /// One decode step for the whole batch at shared position `pos`
@@ -752,9 +868,15 @@ impl SlabModel {
 
     /// Pre-norm SwiGLU MLP, residual-added into `h`.
     fn mlp_inplace(&self, blk: &Block, h: &mut Mat, pool: Option<&ThreadPool>) {
+        self.mlp_inplace_in(blk, h, pool, LinPath::Full);
+    }
+
+    /// [`mlp_inplace`](SlabModel::mlp_inplace) with the linear path
+    /// (full packed vs sparse+low-rank draft) chosen by `path`.
+    fn mlp_inplace_in(&self, blk: &Block, h: &mut Mat, pool: Option<&ThreadPool>, path: LinPath) {
         let x = rmsnorm(h, &blk.mlp_norm);
-        let gate = blk.w_gate.apply(&x, pool);
-        let up = blk.w_up.apply(&x, pool);
+        let gate = path.apply(&blk.w_gate, &x, pool);
+        let up = path.apply(&blk.w_up, &x, pool);
         let ffn = gate.cols;
         let mut inner = Mat::zeros(h.rows, ffn);
         for r in 0..h.rows {
@@ -765,7 +887,7 @@ impl SlabModel {
                 irow[j] = silu(g[j]) * u[j];
             }
         }
-        let down = blk.w_down.apply(&inner, pool);
+        let down = path.apply(&blk.w_down, &inner, pool);
         h.add_assign(&down);
     }
 
@@ -806,6 +928,59 @@ impl SlabModel {
             logits = self.decode_step(&mut cache, &next, t + step);
         }
         generated
+    }
+}
+
+/// Cheap-forward view over a [`SlabModel`] for self-speculative
+/// decoding ([`SlabModel::draft`]): runs the *same* decode body over
+/// the *same* KV cache, but every packed linear skips its binary
+/// bit-planes and forwards only `W_S + Σ u_k v_kᵀ` — no popcount, no
+/// bit-plane traffic, `O(nnz + r·(din+dout))` per token instead of the
+/// dense-equivalent bit-matrix pass.
+///
+/// The draft writes its (approximate) K/V rows into the session's real
+/// cache; the verify pass re-feeds the same positions through the full
+/// model and **overwrites every row it fed** before any of them is
+/// read again, so draft-quality cache rows are never observed by an
+/// emitted token — the reason losslessness needs no separate draft
+/// cache (DESIGN.md §14).
+#[derive(Debug, Clone, Copy)]
+pub struct DraftModel<'a> {
+    model: &'a SlabModel,
+    rank_cap: usize,
+}
+
+impl DraftModel<'_> {
+    /// Per-tick greedy draft step over the contiguous pool — the
+    /// cheap-path analogue of
+    /// [`decode_batch_greedy`](SlabModel::decode_batch_greedy), same
+    /// argmax policy. Any deterministic output preserves losslessness;
+    /// only its *agreement* with the full model buys speedup.
+    pub fn decode_batch_greedy(&self, kvpool: &mut KvCachePool, steps: &[DecodeSlot]) -> Vec<i32> {
+        let slots: Vec<VerifySlot> = steps
+            .iter()
+            .map(|st| VerifySlot { session: st.session, pos: st.pos, tokens: vec![st.token] })
+            .collect();
+        let logits =
+            self.model.decode_multi_in(kvpool, &slots, LinPath::Draft { rank_cap: self.rank_cap });
+        (0..logits.rows).map(|r| greedy_token(logits.row(r))).collect()
+    }
+
+    /// [`decode_batch_greedy`](DraftModel::decode_batch_greedy) over
+    /// the block-paged pool; every step's write target must already be
+    /// secured via `prepare_write`, exactly as for the full model.
+    pub fn decode_batch_greedy_paged(
+        &self,
+        kvpool: &mut crate::model::PagedKvPool,
+        steps: &[DecodeSlot],
+    ) -> Vec<i32> {
+        let slots: Vec<VerifySlot> = steps
+            .iter()
+            .map(|st| VerifySlot { session: st.session, pos: st.pos, tokens: vec![st.token] })
+            .collect();
+        let logits =
+            self.model.decode_multi_in(kvpool, &slots, LinPath::Draft { rank_cap: self.rank_cap });
+        (0..logits.rows).map(|r| greedy_token(logits.row(r))).collect()
     }
 }
 
@@ -1215,6 +1390,155 @@ mod tests {
         let got = model.decode_batch_greedy(&mut kv_b, &steps_b);
         assert_eq!(got, expect);
         assert!(model.decode_batch_greedy(&mut kv_b, &[]).is_empty(), "empty tick");
+    }
+
+    #[test]
+    fn multi_token_verify_is_bit_identical_to_sequential_decode() {
+        // The speculative verify pass scores a run of fed tokens in one
+        // forward; logits row j of a slot must be *bit-identical* to
+        // what a sequential decode_batch of the same prefix produces —
+        // the losslessness anchor of DESIGN.md §14 — on both engines
+        // and with slots of different run lengths sharing one batch.
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 230);
+        let (packed, _) = compress_native(&params, 231);
+        for model in
+            [SlabModel::from_dense(&params, 2), SlabModel::from_packed(&params, &packed, 2)]
+        {
+            let t = cfg.prompt_len;
+            let runs: [(Vec<i32>, Vec<i32>); 2] =
+                [(vec![5, 9, 17, 4], vec![7, 12, 3, 19]), (vec![21, 11], vec![8, 14])];
+            // Sequential reference, each session decoding alone.
+            let mut want: Vec<Vec<f32>> = Vec::new();
+            for (prompt, fed) in &runs {
+                let mut kv = KvCachePool::for_model(&model, 1);
+                let s = kv.adopt(model.prefill_session(prompt).1).unwrap();
+                for (j, &tok) in fed.iter().enumerate() {
+                    let l = model
+                        .decode_batch(&mut kv, &[DecodeSlot { session: s, token: tok, pos: t + j }]);
+                    want.push(l.row(0).to_vec());
+                }
+            }
+            // One batched multi-token pass over both sessions.
+            let mut kv = KvCachePool::for_model(&model, 2);
+            let slots: Vec<VerifySlot> = runs
+                .iter()
+                .map(|(prompt, fed)| VerifySlot {
+                    session: kv.adopt(model.prefill_session(prompt).1).unwrap(),
+                    pos: t,
+                    tokens: fed.clone(),
+                })
+                .collect();
+            let got = model.decode_batch_multi(&mut kv, &slots);
+            assert_eq!(got.rows, want.len());
+            for (r, wrow) in want.iter().enumerate() {
+                assert_eq!(got.row(r), &wrow[..], "verify row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn draft_overrun_rows_are_overwritten_before_any_emitted_read() {
+        // Contiguous "rollback" is a no-op by construction: the draft
+        // (and a rejected verify suffix) leave stale rows only at
+        // positions the accepted stream hasn't reached, and decode
+        // overwrites a position before attention ever reads it. Run a
+        // full draft → verify → accept → continue round against a pool
+        // that never speculated, then stomp NaN into every
+        // past-the-stream row to prove staleness is never observed.
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 232);
+        let (packed, _) = compress_native(&params, 233);
+        let model = SlabModel::from_packed(&params, &packed, 2);
+        let t = cfg.prompt_len;
+        let prompt: Vec<i32> = vec![6, 19, 3];
+        let k = 3;
+
+        // Plain-greedy reference stream + per-step logits.
+        let (rl, rc) = model.prefill_session(&prompt);
+        let t0 = greedy_token(rl.row(0));
+        let mut kv_r = KvCachePool::for_model(&model, 1);
+        let sr = kv_r.adopt(rc).unwrap();
+        let total = k + 4;
+        let mut ref_toks = vec![t0];
+        let mut ref_logits: Vec<Vec<f32>> = Vec::new();
+        for i in 0..total {
+            let l = model
+                .decode_batch(&mut kv_r, &[DecodeSlot { session: sr, token: ref_toks[i], pos: t + i }]);
+            ref_toks.push(greedy_token(l.row(0)));
+            ref_logits.push(l.row(0).to_vec());
+        }
+
+        // Speculative pool: draft k tokens with the adversarial
+        // pure-sparse draft (rank cap 0) — writes draft-quality K/V at
+        // t..t+k-1 — then verify all k+1 fed tokens in one pass.
+        let mut kv = KvCachePool::for_model(&model, 1);
+        let s = kv.adopt(model.prefill_session(&prompt).1).unwrap();
+        let draft = model.draft(Some(0));
+        let mut fed = vec![t0];
+        for j in 0..k {
+            let d = draft
+                .decode_batch_greedy(&mut kv, &[DecodeSlot { session: s, token: fed[j], pos: t + j }]);
+            fed.push(d[0]);
+        }
+        let vl = model
+            .decode_batch_multi(&mut kv, &[VerifySlot { session: s, pos: t, tokens: fed.clone() }]);
+        // Verify row j is conditioned on fed[..=j]; it matches the
+        // reference exactly while the fed prefix matches the stream.
+        let mut a = 0;
+        while a < k && fed[a + 1] == greedy_token(vl.row(a)) {
+            a += 1;
+        }
+        for j in 0..=a.min(k - 1) {
+            assert_eq!(vl.row(j), &ref_logits[j][..], "accepted verify row {j}");
+            assert_eq!(greedy_token(vl.row(j)), ref_toks[j + 1], "emitted token {j}");
+        }
+
+        // After the round the stream stands at pos t+a+1; rows past it
+        // hold rejected-suffix state. Make staleness unmissable: any
+        // read of those rows now poisons the logits with NaN.
+        let garbage = vec![f32::NAN; cfg.dim];
+        for li in 0..cfg.n_layers {
+            for pos in (t + a + 1)..(t + k + 1) {
+                kv.write_row(li, s, pos, &garbage, &garbage);
+            }
+        }
+        // Continue plain decode past the divergence point: every step
+        // must be bit-identical to the never-speculated reference.
+        for step in 0..3 {
+            let i = a + 1 + step;
+            let l = model
+                .decode_batch(&mut kv, &[DecodeSlot { session: s, token: ref_toks[i], pos: t + i }]);
+            assert_eq!(l.row(0), &ref_logits[i][..], "post-rollback step {step}");
+        }
+    }
+
+    #[test]
+    fn draft_view_on_dense_model_matches_full_path() {
+        // Dense linears have no sparse/low-rank split, so apply_draft
+        // falls through to apply and the draft view agrees with the
+        // full model token for token — the acceptance-rate-1.0 anchor
+        // the HTTP e2e leans on.
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, 234);
+        let model = SlabModel::from_dense(&params, 1);
+        let t = cfg.prompt_len;
+        let prompt: Vec<i32> = vec![5, 9, 4];
+        let (logits, cache) = model.prefill_session(&prompt);
+        let mut kv_a = KvCachePool::for_model(&model, 1);
+        let sa = kv_a.adopt(cache).unwrap();
+        let mut kv_b = KvCachePool::for_model(&model, 1);
+        let sb = kv_b.adopt(model.prefill_session(&prompt).1).unwrap();
+        let draft = model.draft(None);
+        let mut tok = greedy_token(logits.row(0));
+        for i in 0..5 {
+            let d = draft
+                .decode_batch_greedy(&mut kv_a, &[DecodeSlot { session: sa, token: tok, pos: t + i }]);
+            let f = model
+                .decode_batch_greedy(&mut kv_b, &[DecodeSlot { session: sb, token: tok, pos: t + i }]);
+            assert_eq!(d, f, "draft vs full on dense model, step {i}");
+            tok = f[0];
+        }
     }
 
     #[test]

@@ -64,12 +64,21 @@ impl Params {
         self.cfg.param_index(name)
     }
 
-    /// 2-D parameter as a Mat (panics on 1-D entries).
-    pub fn mat(&self, name: &str) -> Mat {
-        let i = self.index(name).unwrap_or_else(|| panic!("no param {name}"));
+    /// 2-D parameter as a Mat, `None` when `name` is not in the
+    /// config — the checked lookup job pipelines use to fail with
+    /// context instead of panicking. Still panics on 1-D entries:
+    /// shape is a config contract, not caller input.
+    pub fn try_mat(&self, name: &str) -> Option<Mat> {
+        let i = self.index(name)?;
         let shape = &self.cfg.param_shapes[i];
         assert_eq!(shape.len(), 2, "param {name} is not 2-D");
-        Mat::from_vec(shape[0], shape[1], self.tensors[i].clone())
+        Some(Mat::from_vec(shape[0], shape[1], self.tensors[i].clone()))
+    }
+
+    /// 2-D parameter as a Mat (panics on unknown names and 1-D
+    /// entries — the trusted-name convenience over [`Params::try_mat`]).
+    pub fn mat(&self, name: &str) -> Mat {
+        self.try_mat(name).unwrap_or_else(|| panic!("no param {name}"))
     }
 
     /// Replace a 2-D parameter (the compression swap).

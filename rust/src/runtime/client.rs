@@ -24,6 +24,8 @@ pub enum RuntimeError {
     Outputs(String, usize, usize),
     #[error("router: {0}")]
     Router(String),
+    #[error("missing parameter '{0}' in model config")]
+    MissingParam(String),
     #[error("manifest: {0}")]
     Manifest(#[from] super::manifest::ManifestError),
 }

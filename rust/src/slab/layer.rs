@@ -215,6 +215,63 @@ impl SlabLayer {
         }
     }
 
+    /// Draft forward for self-speculative decoding (DESIGN.md §14):
+    /// the **sparse + low-rank components only** —
+    ///
+    /// `y[i] = Σ_j W_S[i,j]·x[j] + Σ_{k < r'} u_k[i]·(Σ_j x[j]·v_k[j])`
+    ///
+    /// with `r' = min(rank, rank_cap)`. Dropping the bitplane term is
+    /// equivalent to replacing `W_B` with the all-ones sign matrix, so
+    /// the per-rank contribution collapses to a scalar `⟨x, v_k⟩` per
+    /// activation row — no popcount matmul, no bitplane reads at all.
+    /// This is the cheap "draft" view the self-speculative decoder
+    /// runs; its outputs are *approximate* by design (the verify pass
+    /// through the full packed forward keeps decoding lossless) but
+    /// deterministic: the sparse kernel is row-order bit-identical
+    /// serial or pooled, and the rank epilogue never fans out.
+    /// `rank_cap = usize::MAX` keeps every rank; smaller caps trade
+    /// acceptance rate for draft speed.
+    pub fn forward_draft(&self, x: &Mat, pool: Option<&ThreadPool>, rank_cap: usize) -> Mat {
+        let mut y = Mat::zeros(x.rows, self.dout());
+        self.forward_draft_into(x, pool, rank_cap, &mut y);
+        y
+    }
+
+    /// [`forward_draft`](SlabLayer::forward_draft) writing into a
+    /// caller-owned output (overwritten entirely). `y` must be
+    /// `(x.rows, dout)`.
+    pub fn forward_draft_into(
+        &self,
+        x: &Mat,
+        pool: Option<&ThreadPool>,
+        rank_cap: usize,
+        y: &mut Mat,
+    ) {
+        assert_eq!(x.cols, self.din());
+        assert_eq!((y.rows, y.cols), (x.rows, self.dout()), "forward_draft_into: bad output shape");
+        match pool {
+            Some(p) => self.w_s.spmm_bt_par_into(x, p, y),
+            None => self.w_s.spmm_bt_blocked_into(x, y),
+        };
+        let r = self.rank().min(rank_cap);
+        for k in 0..r {
+            let vk = &self.v[k];
+            let uk = &self.u[k];
+            for b in 0..x.rows {
+                let xrow = x.row(b);
+                // Same ascending-j order as forward_decode's totals.
+                let mut t = 0.0f32;
+                for j in 0..x.cols {
+                    t += xrow[j] * vk[j];
+                }
+                let yrow = y.row_mut(b);
+                for i in 0..self.dout() {
+                    yrow[i] += uk[i] * t;
+                }
+            }
+        }
+    }
+
     /// The per-row decode sweep over output rows `[r0, r0 + out.len())`.
     fn decode_rows(
         &self,
@@ -627,6 +684,63 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn draft_forward_equals_all_ones_bitplane() {
+        // The draft view is definitionally the layer with W_B replaced
+        // by the all-ones sign matrix: per rank the bitplane product
+        // degenerates to the scalar ⟨x, v_k⟩. Pin the cheap epilogue
+        // against that reference layer, serial and pooled, at several
+        // batch shapes.
+        let (_, l) = layer(117);
+        let ones = SlabLayer {
+            w_s: l.w_s.clone(),
+            u: l.u.clone(),
+            v: l.v.clone(),
+            w_b: BitMat::ones(l.dout(), l.din()),
+        };
+        let mut rng = Pcg64::seed_from_u64(118);
+        let pool = ThreadPool::new(4);
+        for batch in [1usize, 3, 8] {
+            let x = Mat::randn(batch, 72, 1.0, &mut rng);
+            let y_ref = ones.forward(&x);
+            let y_serial = l.forward_draft(&x, None, usize::MAX);
+            let y_pooled = l.forward_draft(&x, Some(&pool), usize::MAX);
+            assert!(y_serial.allclose(&y_ref, 1e-5, 1e-5), "draft vs all-ones batch {batch}");
+            assert_eq!(y_serial, y_pooled, "draft must be pool-invariant");
+        }
+    }
+
+    #[test]
+    fn draft_forward_rank_truncation() {
+        // rank_cap 0 is the pure-sparse draft; caps at or past the
+        // layer's rank keep every rank. Exercise a ragged din too.
+        let mut rng = Pcg64::seed_from_u64(119);
+        let din = 70;
+        let w = Mat::from_fn(9, din, |i, j| if (i * 7 + j) % 5 == 0 { 0.3 } else { 0.0 });
+        let signs = Mat::from_fn(9, din, |i, j| if (i + j) % 3 == 0 { 1.0 } else { -1.0 });
+        let l = SlabLayer {
+            w_s: Csr::from_dense(&w),
+            u: vec![vec![0.5; 9], vec![-0.25; 9]],
+            v: vec![vec![1.0; din], vec![0.1; din]],
+            w_b: BitMat::from_sign_of(&signs),
+        };
+        let x = Mat::randn(2, din, 1.0, &mut rng);
+        let sparse_only = l.w_s.spmm_bt(&x);
+        assert_eq!(l.forward_draft(&x, None, 0), sparse_only, "rank_cap 0 is pure sparse");
+        assert_eq!(
+            l.forward_draft(&x, None, 2),
+            l.forward_draft(&x, None, usize::MAX),
+            "cap at rank keeps every rank"
+        );
+        // A rank-1 cap must differ from both (the second rank has
+        // nonzero factors by construction).
+        assert_ne!(l.forward_draft(&x, None, 1), l.forward_draft(&x, None, 2));
+        // Into-form overwrites stale contents entirely.
+        let mut y = Mat::filled(2, 9, f32::NAN);
+        l.forward_draft_into(&x, None, usize::MAX, &mut y);
+        assert_eq!(y, l.forward_draft(&x, None, usize::MAX));
     }
 
     #[test]

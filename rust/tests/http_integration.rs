@@ -329,6 +329,133 @@ fn http_soak_shared_prefix_streams_stay_ordered_under_concurrency() {
     assert!(stats.cow_splits > 0, "divergence after a shared prefix COW-splits");
 }
 
+#[test]
+fn http_speculative_stream_matches_plain_and_metrics_report_acceptance() {
+    // The speculative-decode e2e (DESIGN.md §14): the lossless
+    // contract holds over the wire. A `speculate` session must stream
+    // frame-for-frame like a plain one — same token frames in the
+    // same order, same one-frame-per-token cadence, same terminal —
+    // and /metrics must report the acceptance-rate counters. The
+    // parity leg runs the *packed* engine, where the draft path
+    // (sparse + low-rank, no bit-planes) genuinely diverges from the
+    // full forward; the metrics leg uses the dense anchor, where the
+    // draft view falls through to the full forward and the served
+    // acceptance rate is therefore exactly 1.0.
+    let cfg = native_test_cfg();
+    let params = eos_free_params(&cfg, 106);
+    let (packed, _) = compress_native(&params, 107);
+    let budget = 8usize;
+    let prompts: Vec<Vec<i32>> = vec![vec![5, 9, 14, 20], vec![7], vec![33, 34, 35]];
+
+    let spin = |speculate: bool, dense: bool| {
+        let model = if dense {
+            SlabModel::from_dense(&params, 1)
+        } else {
+            SlabModel::from_packed(&params, &packed, 1)
+        };
+        let server = Server::start_with(
+            Backend::NativeBatched(Box::new(model)),
+            ServerConfig {
+                sched: SchedulerConfig {
+                    speculate,
+                    draft_len: 3,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        HttpServer::bind("127.0.0.1:0", server).expect("bind loopback")
+    };
+    // One streamed session: (tokens in frame order, total frame count
+    // after the id frame). Timing fields differ run to run, so
+    // "frame-for-frame identical" means framing and payload tokens.
+    let stream_tokens = |addr: std::net::SocketAddr, prompt: &[i32]| -> (Vec<i32>, usize) {
+        let body = Json::obj(vec![
+            ("prompt", Json::arr(prompt.iter().map(|&t| Json::num(t)))),
+            ("max_new", Json::from_usize(budget)),
+            ("stream", Json::Bool(true)),
+        ]);
+        let mut sse = client::SseStream::open(addr, &body.to_string()).expect("open sse");
+        assert_eq!(sse.status, 200);
+        let first = sse.next_frame().expect("frame").expect("id frame");
+        assert!(first.get("id").as_i64().is_some());
+        let mut tokens: Vec<i32> = Vec::new();
+        let mut frames = 0usize;
+        let mut done = false;
+        while let Some(frame) = sse.next_frame().expect("frame") {
+            frames += 1;
+            if let Some(t) = frame.get("token").as_i64() {
+                assert!(!done, "token frame after the terminal");
+                tokens.push(t as i32);
+            } else if !frame.get("done").is_null() {
+                assert_eq!(
+                    frame.get("done").get("tokens").as_usize(),
+                    Some(tokens.len()),
+                    "terminal token count vs streamed"
+                );
+                done = true;
+            } else {
+                panic!("unexpected frame {frame:?}");
+            }
+        }
+        assert!(done, "stream must end with a done frame");
+        (tokens, frames)
+    };
+
+    // Parity leg: packed engine, plain vs speculative, frame for frame.
+    let plain = spin(false, false);
+    let spec = spin(true, false);
+    for prompt in &prompts {
+        let (p_tokens, p_frames) = stream_tokens(plain.addr(), prompt);
+        let (s_tokens, s_frames) = stream_tokens(spec.addr(), prompt);
+        assert_eq!(
+            s_tokens, p_tokens,
+            "speculative stream diverged from plain greedy (prompt {prompt:?})"
+        );
+        assert_eq!(s_frames, p_frames, "same framing (prompt {prompt:?})");
+        assert_eq!(p_frames, p_tokens.len() + 1, "one frame per token + terminal");
+        assert_eq!(p_tokens.len(), budget, "EOS-free params run to budget");
+    }
+    let plain_stats = plain.shutdown().expect("shutdown plain");
+    assert_eq!(plain_stats.spec_rounds, 0, "plain mode never speculates");
+    let spec_stats = spec.shutdown().expect("shutdown spec");
+    assert!(spec_stats.spec_rounds > 0 && spec_stats.spec_drafted > 0);
+    assert!(spec_stats.spec_accepted <= spec_stats.spec_drafted);
+
+    // Metrics leg: dense anchor — every draft token verifies, so
+    // /metrics reports a non-zero acceptance rate of exactly 1.0.
+    let dense_spec = spin(true, true);
+    let addr = dense_spec.addr();
+    let (tokens, _) = stream_tokens(addr, &prompts[0]);
+    assert_eq!(tokens.len(), budget);
+    let metrics = client::get(addr, "/metrics").expect("metrics");
+    assert_eq!(metrics.status, 200);
+    let cell = |key: &str| -> f64 {
+        metrics
+            .body
+            .lines()
+            .find(|l| l.contains(key))
+            .unwrap_or_else(|| panic!("missing {key} row:\n{}", metrics.body))
+            .split('|')
+            .map(str::trim)
+            .filter(|c| !c.is_empty())
+            .nth(1)
+            .expect("value cell")
+            .parse()
+            .expect("numeric cell")
+    };
+    assert!(cell("spec_rounds") > 0.0);
+    assert!(cell("spec_drafted") > 0.0);
+    assert!(
+        (cell("spec_acceptance_rate") - 1.0).abs() < 1e-9,
+        "dense draft == full model, so served acceptance is exactly 1.0"
+    );
+    assert_eq!(cell("spec_rollbacks"), 0.0);
+    let stats = dense_spec.shutdown().expect("shutdown dense spec");
+    assert_eq!(stats.spec_accepted, stats.spec_drafted);
+    assert_eq!(stats.spec_rollbacks, 0);
+}
+
 /// Kill-on-drop guard so a failing assert never leaks the child.
 struct ChildGuard(std::process::Child);
 
@@ -339,17 +466,14 @@ impl Drop for ChildGuard {
     }
 }
 
-#[test]
-fn slab_serve_http_binary_serves_over_loopback() {
-    // The actual CLI: spawn `slab serve --http 127.0.0.1:0`, parse the
-    // bound address off stdout, and drive it over the socket.
-    let Some(exe) = option_env!("CARGO_BIN_EXE_slab") else {
-        eprintln!("skipping: CARGO_BIN_EXE_slab not set");
-        return;
-    };
+/// Spawn `slab serve --http 127.0.0.1:0 <extra args>` and parse the
+/// bound ephemeral address off its stdout.
+fn spawn_serve_http(exe: &str, extra: &[&str]) -> (ChildGuard, std::net::SocketAddr) {
     use std::io::BufRead;
+    let mut args = vec!["serve", "--http", "127.0.0.1:0", "--model", "small"];
+    args.extend_from_slice(extra);
     let child = std::process::Command::new(exe)
-        .args(["serve", "--http", "127.0.0.1:0", "--model", "small"])
+        .args(&args)
         .stdout(std::process::Stdio::piped())
         .stderr(std::process::Stdio::null())
         .spawn()
@@ -368,7 +492,21 @@ fn slab_serve_http_binary_serves_over_loopback() {
             break;
         }
     }
-    let addr = addr.expect("`listening on http://...` line on stdout");
+    (guard, addr.expect("`listening on http://...` line on stdout"))
+}
+
+#[test]
+fn slab_serve_http_binary_serves_over_loopback() {
+    // The actual CLI: spawn `slab serve --http 127.0.0.1:0`, parse the
+    // bound address off stdout, and drive it over the socket. A second
+    // child with `--speculate` must serve the identical tokens (the
+    // lossless contract through the real binary and flag parsing) and
+    // report the acceptance counters on /metrics.
+    let Some(exe) = option_env!("CARGO_BIN_EXE_slab") else {
+        eprintln!("skipping: CARGO_BIN_EXE_slab not set");
+        return;
+    };
+    let (_guard, addr) = spawn_serve_http(exe, &[]);
 
     let health = client::get(addr, "/healthz").expect("healthz");
     assert_eq!(health.status, 200);
@@ -382,5 +520,18 @@ fn slab_serve_http_binary_serves_over_loopback() {
     assert_eq!(r1.tokens, r2.tokens, "the served model is deterministic");
     let metrics = client::get(addr, "/metrics").expect("metrics");
     assert!(metrics.body.contains("requests"), "{}", metrics.body);
-    // ChildGuard kills the server on drop.
+
+    // Same model seed, `--speculate --draft-len 3`: identical output.
+    let (_spec_guard, spec_addr) = spawn_serve_http(exe, &["--speculate", "--draft-len", "3"]);
+    let spec = client::post(spec_addr, "/v1/generate", body).expect("speculative generate");
+    assert_eq!(spec.status, 200, "{}", spec.body);
+    let (_, r3) = client::parse_generate_reply(&spec.body).expect("parse");
+    assert_eq!(r3.tokens, r1.tokens, "--speculate must not change the stream");
+    let spec_metrics = client::get(spec_addr, "/metrics").expect("spec metrics");
+    assert!(
+        spec_metrics.body.contains("spec_acceptance_rate"),
+        "{}",
+        spec_metrics.body
+    );
+    // ChildGuards kill both servers on drop.
 }
