@@ -46,7 +46,8 @@ mod bench_common;
 use bench_common::compress_native;
 use slab::coordinator::http::client;
 use slab::coordinator::{
-    Backend, Event, HttpServer, Request, SchedulerConfig, ServeStats, Server, ServerConfig,
+    Backend, Event, HttpConfig, HttpServer, Request, SchedulerConfig, ServeStats, Server,
+    ServerConfig,
 };
 use slab::model::{DecodeSlot, KvCachePool, PagedKvConfig, PagedKvPool, Params, SlabModel};
 use slab::runtime::ModelCfg;
@@ -252,6 +253,117 @@ fn main() {
         "http loopback: {http_reqs} sequential requests, {http_tokens} tokens, {http_tps:.1} tok/s"
     );
 
+    // --- concurrent streaming sessions (event loop) -------------------
+    // 256 simultaneous SSE streams (32 under SLAB_BENCH_FAST) through
+    // the event-driven front-end (DESIGN.md §15): far more live
+    // connections than worker threads, every stream completing with
+    // its terminal frame. The per-sec rates gate event-loop
+    // regressions in CI.
+    let conc_streams = if fast { 32 } else { 256 };
+    let conc_budget = 8usize;
+    let conc_workers = 16usize;
+    let http = HttpServer::bind_with(
+        "127.0.0.1:0",
+        Server::start_with(
+            Backend::NativeBatched(Box::new(SlabModel::from_packed(&params, &packed, 0))),
+            ServerConfig {
+                queue_cap: 512,
+                sched: SchedulerConfig {
+                    max_batch: 8,
+                    queue_cap: 512,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        ),
+        HttpConfig {
+            max_conns: 512,
+            workers: conc_workers,
+            ..HttpConfig::default()
+        },
+    )
+    .expect("bind loopback");
+    let addr = http.addr();
+    let plen = cfg.prompt_len;
+    let t_conc = Instant::now();
+    let handles: Vec<_> = (0..conc_streams)
+        .map(|i| {
+            std::thread::spawn(move || -> usize {
+                let body = format!(
+                    "{{\"prompt\": {:?}, \"max_new\": {conc_budget}, \"stream\": true}}",
+                    bench_prompt(i, plen)
+                );
+                let mut sse = client::SseStream::open(addr, &body).expect("open sse");
+                assert_eq!(sse.status, 200);
+                let mut tokens = 0usize;
+                let mut terminal = false;
+                while let Some(frame) = sse.next_frame().expect("frame") {
+                    if frame.get("token").as_i64().is_some() {
+                        tokens += 1;
+                    } else if !frame.get("done").is_null() {
+                        terminal = true;
+                    }
+                }
+                assert!(terminal, "stream must end with a terminal frame");
+                tokens
+            })
+        })
+        .collect();
+    let conc_tokens: usize = handles
+        .into_iter()
+        .map(|h| h.join().expect("stream thread"))
+        .sum();
+    let conc_wall = t_conc.elapsed().as_secs_f64();
+    let conc_stats = http.shutdown().expect("concurrent http stats");
+    assert_eq!(conc_stats.requests, conc_streams, "exact terminal accounting");
+    let conc_tps = conc_tokens as f64 / conc_wall.max(1e-9);
+    let conc_sps = conc_streams as f64 / conc_wall.max(1e-9);
+    println!(
+        "http concurrent: {conc_streams} simultaneous streams over {conc_workers} workers, \
+         {conc_tokens} tokens, {conc_tps:.1} tok/s, {conc_sps:.1} streams/s"
+    );
+
+    // --- keep-alive reuse vs per-request connections ------------------
+    // The same blocking generate, once over a single reused keep-alive
+    // connection and once with a fresh connection per request: the
+    // delta is pure connect/teardown overhead the reuse path saves.
+    let ka_reqs = if fast { 8 } else { 64 };
+    let http = HttpServer::bind(
+        "127.0.0.1:0",
+        Server::start_with(
+            Backend::NativeBatched(Box::new(SlabModel::from_packed(&params, &packed, 0))),
+            ServerConfig::default(),
+        ),
+    )
+    .expect("bind loopback");
+    let addr = http.addr();
+    let ka_body = format!(
+        "{{\"prompt\": {:?}, \"max_new\": 2}}",
+        bench_prompt(0, cfg.prompt_len)
+    );
+    let t_ka = Instant::now();
+    let mut conn = client::HttpConn::connect(addr).expect("connect keep-alive");
+    for _ in 0..ka_reqs {
+        let reply = conn
+            .request("POST", "/v1/generate", Some(&ka_body))
+            .expect("keep-alive generate");
+        assert_eq!(reply.status, 200, "{}", reply.body);
+    }
+    let ka_wall = t_ka.elapsed().as_secs_f64();
+    drop(conn);
+    let t_os = Instant::now();
+    for _ in 0..ka_reqs {
+        let reply = client::post(addr, "/v1/generate", &ka_body).expect("one-shot generate");
+        assert_eq!(reply.status, 200, "{}", reply.body);
+    }
+    let os_wall = t_os.elapsed().as_secs_f64();
+    http.shutdown().expect("keep-alive http stats");
+    let ka_rps = ka_reqs as f64 / ka_wall.max(1e-9);
+    let os_rps = ka_reqs as f64 / os_wall.max(1e-9);
+    println!(
+        "http keep-alive: {ka_reqs} requests reused {ka_rps:.1} req/s vs one-shot {os_rps:.1} req/s"
+    );
+
     // --- shared-prefix churn ------------------------------------------
     // High session churn over one common prompt: every admission after
     // the first joins the cached prefill copy-on-write (DESIGN.md §13)
@@ -451,6 +563,24 @@ fn main() {
                 ("requests", Json::from_usize(http_reqs)),
                 ("generated_tokens", Json::from_usize(http_tokens)),
                 ("tokens_per_sec", Json::num(http_tps)),
+            ]),
+        ),
+        (
+            "http_concurrent",
+            Json::obj(vec![
+                ("streams", Json::from_usize(conc_streams)),
+                ("workers", Json::from_usize(conc_workers)),
+                ("generated_tokens", Json::from_usize(conc_tokens)),
+                ("tokens_per_sec", Json::num(conc_tps)),
+                ("streams_per_sec", Json::num(conc_sps)),
+            ]),
+        ),
+        (
+            "http_keepalive",
+            Json::obj(vec![
+                ("requests", Json::from_usize(ka_reqs)),
+                ("keepalive_requests_per_sec", Json::num(ka_rps)),
+                ("oneshot_requests_per_sec", Json::num(os_rps)),
             ]),
         ),
         (

@@ -1,7 +1,19 @@
 //! Dependency-free HTTP/1.1 front-end over the streaming session API
-//! (`slab serve --http <addr>`): pure `std::net`, no async runtime,
-//! no TLS, no external crates — a thread-per-connection JSON server
-//! sized for this testbed and its benches (DESIGN.md §12).
+//! (`slab serve --http <addr>`): pure `std::net` plus the
+//! [`evloop`](crate::util::evloop) readiness substrate — no async
+//! runtime, no TLS, no external crates (DESIGN.md §15).
+//!
+//! Architecture: one nonblocking **event-loop thread** (epoll on
+//! Linux, portable `poll(2)` fallback) owns the listener and every
+//! connection socket — reads, request framing, and all writes happen
+//! there, so ten thousand idle or slow connections cost zero threads.
+//! A small **fixed worker pool** drives the blocking session API
+//! (`submit`/`recv`/`collect`) and hands response bytes back to the
+//! loop over a channel + self-pipe waker. Connections are keep-alive
+//! by default with a per-connection request budget, a hard
+//! [`HttpConfig::max_conns`] limit, and per-connection write budgets:
+//! a client that stops reading its stream gets its session cancelled
+//! and its socket closed instead of pinning memory forever.
 //!
 //! Wire surface:
 //!
@@ -14,50 +26,249 @@
 //!   (`Session::collect` semantics). Streaming (`"stream": true`):
 //!   SSE-style chunked transfer — one `data: {...}\n\n` frame per
 //!   [`Event`], starting with `{"id": n}` so the client can cancel.
+//!   Bodies are parsed with the lazy path-scanning
+//!   [`LazyJson`](crate::util::json::LazyJson) reader — request
+//!   extraction never builds a value tree on the hot path.
 //! * `DELETE /v1/sessions/{id}` — cancel a live session mid-stream;
 //!   its KV slot frees immediately and the stream terminates with
 //!   `{"done": {..., "cancelled": true}}`.
-//! * `GET /healthz` — liveness probe.
+//! * `GET /healthz` — liveness probe (query string is ignored).
 //! * `GET /metrics` — the live [`ServeStats`] snapshot rendered
-//!   through [`report::Table`](crate::report::Table) (text/plain),
-//!   including the paged-KV gauges (`kv_pages`, `kv_pages_peak`) and
-//!   prefix-cache counters (`prefix_hits` / `prefix_misses` /
-//!   `prefix_hit_rate`, `cow_splits`, `page_evictions`) of
-//!   DESIGN.md §13, and the speculative-decode counters
-//!   (`spec_rounds`, `spec_drafted`, `spec_accepted`,
-//!   `spec_acceptance_rate`, `spec_rollbacks`) of DESIGN.md §14.
+//!   through [`report::Table`](crate::report::Table) (text/plain), or
+//!   as a JSON object with `?format=json`.
+//!
+//! Error contract (RFC 7807): every error response carries an
+//! `application/problem+json` body — `type` is
+//! `urn:slab:problem:<code>`, `title`/`status` echo the status line,
+//! `detail` is human-readable, and `field` names the request field at
+//! fault where one exists. `429` responses additionally carry a
+//! `Retry-After` header (and a `retry_after_secs` member) derived
+//! from the submit-gate depth: `1 + pending/queue_cap` seconds.
+//!
+//! Wire-contract hardening over the original thread-per-connection
+//! front-end: methods match **case-sensitively** (RFC 9110 §9.1 —
+//! `get` is 405 with an `Allow` header, not a silent alias of `GET`),
+//! the query string is stripped before routing (`/healthz?probe=1`
+//! works), `Transfer-Encoding` requests are refused with `411` rather
+//! than silently misread as empty bodies, and oversized heads are
+//! `431`.
 //!
 //! A client that disconnects mid-stream is treated as a cancellation
 //! (the router stops decoding for it); a malformed request gets a
-//! `400` and never reaches the engine. The [`client`] submodule holds
-//! the minimal blocking loopback client the benches and integration
-//! tests drive this server with.
+//! problem body and never reaches the engine. The [`client`]
+//! submodule holds the minimal blocking loopback client (one-shot and
+//! keep-alive) the benches and integration tests drive this server
+//! with.
 
-use super::serve::{CancelHandle, Event, Request, Server, SessionStats};
+use super::serve::{CancelHandle, Event, Request, Server, ServeStats, SessionStats};
 use crate::runtime::client::RuntimeError;
-use crate::util::json::Json;
+use crate::util::evloop::{self, PollEvent, Poller, WakeReader, Waker, EV_READ, EV_WRITE};
+use crate::util::json::{Json, LazyJson};
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Read/write guards on connection sockets so a stalled client —
-/// one that stops sending *or* stops reading its stream — cannot pin
-/// a handler thread (a timed-out write cancels the session like any
-/// other hang-up).
-const READ_TIMEOUT: Duration = Duration::from_secs(30);
-const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
 /// Request-body cap — far above any prompt this testbed serves.
 const MAX_BODY: usize = 1 << 20;
-/// Per-line cap for the request line and each header, and a header
-/// count cap: a client streaming newline-free bytes must hit a bound,
-/// not grow a String until the read timeout.
+/// Per-line cap for the request line and each header: anything longer
+/// is an attack or a bug, never a valid request of ours.
 const MAX_LINE: usize = 8 * 1024;
 const MAX_HEADERS: usize = 64;
+/// Total request-head cap (request line + all headers). A client
+/// streaming newline-free bytes hits this bound, not unbounded memory.
+const MAX_HEAD: usize = 32 * 1024;
+/// Read-buffer cap per connection: a full head plus a full body plus
+/// one pipelined head. Beyond this the client is flooding.
+const RBUF_CAP: usize = MAX_BODY + 2 * MAX_HEAD;
+/// Event-loop tick: the poll timeout, which bounds how often the
+/// timeout/budget sweep runs.
+const POLL_TICK: Duration = Duration::from_millis(25);
 
-/// State shared by the accept loop and every connection handler.
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Front-end tuning knobs (`HttpServer::bind` uses the defaults; the
+/// CLI exposes `--max-conns`, `--keep-alive`, `--http-workers`).
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Hard cap on simultaneously open connections. New connections
+    /// past the cap get a best-effort `503` + `Retry-After` and are
+    /// closed immediately.
+    pub max_conns: usize,
+    /// Worker threads driving the blocking session API. This bounds
+    /// in-flight request *handling*; open connections are bounded
+    /// only by `max_conns`.
+    pub workers: usize,
+    /// Requests served per connection before the server closes it
+    /// (`Connection: close` on the final response). `0` disables
+    /// keep-alive entirely (every response closes).
+    pub keep_alive_requests: usize,
+    /// Idle cap. A connection idle between requests this long is
+    /// closed silently; one idle *mid-request* (partial head or body)
+    /// gets a `408` problem first.
+    pub idle_timeout: Duration,
+    /// Pending-write cap per connection. When a client stops reading
+    /// and more than this many bytes are buffered for it, the
+    /// connection is killed and its session cancelled.
+    pub write_budget: usize,
+    /// Write-stall cap: buffered bytes but zero write progress for
+    /// this long also kills the connection (catches clients that stop
+    /// reading before the budget fills).
+    pub write_stall: Duration,
+    /// `SO_SNDBUF` for accepted sockets; `0` keeps the kernel
+    /// default. Tests shrink this to make the write budget bite
+    /// deterministically.
+    pub sndbuf: usize,
+    /// Use the portable `poll(2)` backend even where epoll is
+    /// available (exercised by tests so the fallback cannot rot).
+    pub force_poll: bool,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig {
+            max_conns: 256,
+            workers: 8,
+            keep_alive_requests: 64,
+            idle_timeout: Duration::from_secs(30),
+            write_budget: 1 << 20,
+            write_stall: Duration::from_secs(10),
+            sndbuf: 0,
+            force_poll: false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// RFC 7807 problem bodies
+// ---------------------------------------------------------------------
+
+/// An `application/problem+json` error response (RFC 7807): `type` is
+/// `urn:slab:problem:<code>`, plus our extension members `field`
+/// (request field at fault) and `retry_after_secs` (mirrors the
+/// `Retry-After` header on 429/503).
+struct Problem {
+    status: u16,
+    code: &'static str,
+    title: &'static str,
+    detail: String,
+    field: Option<&'static str>,
+    retry_after: Option<u64>,
+    allow: Option<&'static str>,
+    extra: Vec<(&'static str, Json)>,
+}
+
+impl Problem {
+    fn new<S: Into<String>>(status: u16, code: &'static str, title: &'static str, detail: S) -> Problem {
+        Problem {
+            status,
+            code,
+            title,
+            detail: detail.into(),
+            field: None,
+            retry_after: None,
+            allow: None,
+            extra: Vec::new(),
+        }
+    }
+
+    /// Name the request field at fault (problem `field` member).
+    fn field(mut self, f: &'static str) -> Problem {
+        self.field = Some(f);
+        self
+    }
+
+    /// Attach a `Retry-After` header + `retry_after_secs` member.
+    fn retry_after(mut self, secs: u64) -> Problem {
+        self.retry_after = Some(secs);
+        self
+    }
+
+    /// Attach an `Allow` header (405 responses, RFC 9110 §10.2.2).
+    fn allow(mut self, methods: &'static str) -> Problem {
+        self.allow = Some(methods);
+        self
+    }
+
+    /// Attach an arbitrary extension member.
+    fn with(mut self, key: &'static str, value: Json) -> Problem {
+        self.extra.push((key, value));
+        self
+    }
+
+    fn body(&self) -> String {
+        let mut pairs = vec![
+            ("type", Json::str(format!("urn:slab:problem:{}", self.code))),
+            ("title", Json::str(self.title)),
+            ("status", Json::from_usize(self.status as usize)),
+            ("detail", Json::str(self.detail.clone())),
+        ];
+        if let Some(f) = self.field {
+            pairs.push(("field", Json::str(f)));
+        }
+        if let Some(r) = self.retry_after {
+            pairs.push(("retry_after_secs", Json::from_usize(r as usize)));
+        }
+        for (k, v) in &self.extra {
+            pairs.push((k, v.clone()));
+        }
+        Json::obj(pairs).to_string()
+    }
+
+    /// Serialize to a full HTTP/1.1 response.
+    fn response(&self, reuse: bool) -> Vec<u8> {
+        let mut extra = String::new();
+        if let Some(a) = self.allow {
+            extra.push_str(&format!("Allow: {a}\r\n"));
+        }
+        if let Some(r) = self.retry_after {
+            extra.push_str(&format!("Retry-After: {r}\r\n"));
+        }
+        response_bytes(self.status, "application/problem+json", &extra, &self.body(), reuse)
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Content Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Error",
+    }
+}
+
+/// Serialize one complete response; `reuse` picks the `Connection`
+/// header (the loop closes the socket after flushing iff `!reuse`).
+fn response_bytes(status: u16, ctype: &str, extra: &str, body: &str, reuse: bool) -> Vec<u8> {
+    let conn = if reuse { "keep-alive" } else { "close" };
+    format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\nContent-Length: {len}\r\n{extra}Connection: {conn}\r\n\r\n{body}",
+        reason = reason(status),
+        len = body.len(),
+    )
+    .into_bytes()
+}
+
+// ---------------------------------------------------------------------
+// Shared state + server handle
+// ---------------------------------------------------------------------
+
+/// State shared by the event loop and the worker pool.
 struct HttpState {
     /// The serving router. `None` after shutdown — handlers answer
     /// `503` instead of panicking on a vanished server.
@@ -78,53 +289,101 @@ impl HttpState {
     }
 }
 
-/// The HTTP front-end handle: owns the accept loop and the inner
-/// [`Server`]. Bind, then either [`serve_forever`](HttpServer::serve_forever)
-/// (the CLI) or drive it from tests/benches and
-/// [`shutdown`](HttpServer::shutdown).
+/// Cancel a live session through the registry (used by the loop when
+/// it kills a connection whose worker is still streaming).
+fn cancel_session(state: &HttpState, sid: u64) {
+    if let Some(h) = state.lock_sessions().get(&sid).cloned() {
+        h.cancel();
+    }
+}
+
+/// The `Retry-After` convention (DESIGN.md §15): `1 + depth/cap`
+/// seconds, where `depth` is the number of submissions currently
+/// waiting at the admission gate. Coarse by design — the point is a
+/// parseable, monotone backoff hint, not a queueing model.
+fn retry_after_hint(state: &HttpState) -> u64 {
+    match state.lock_server().as_ref() {
+        Some(s) => 1 + (s.queue_depth() / s.queue_cap().max(1)) as u64,
+        None => 1,
+    }
+}
+
+/// The HTTP front-end handle: owns the event loop, the worker pool,
+/// and the inner [`Server`]. Bind, then either
+/// [`serve_forever`](HttpServer::serve_forever) (the CLI) or drive it
+/// from tests/benches and [`shutdown`](HttpServer::shutdown).
 pub struct HttpServer {
     addr: SocketAddr,
     state: Arc<HttpState>,
-    accept: Option<std::thread::JoinHandle<()>>,
+    waker: Waker,
+    event_loop: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl HttpServer {
     /// Bind `addr` (e.g. `127.0.0.1:8080`, or port `0` for an
-    /// ephemeral port — see [`addr`](HttpServer::addr)) and start the
-    /// accept loop over `server`. Any [`Backend`](super::serve::Backend)
-    /// works — the front-end only speaks the session API.
+    /// ephemeral port — see [`addr`](HttpServer::addr)) with default
+    /// [`HttpConfig`]. Any [`Backend`](super::serve::Backend) works —
+    /// the front-end only speaks the session API.
     pub fn bind(addr: &str, server: Server) -> std::io::Result<HttpServer> {
+        HttpServer::bind_with(addr, server, HttpConfig::default())
+    }
+
+    /// [`bind`](HttpServer::bind) with explicit tuning knobs.
+    pub fn bind_with(addr: &str, server: Server, cfg: HttpConfig) -> std::io::Result<HttpServer> {
         let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
+        let poller = Poller::new(cfg.force_poll)?;
+        let (waker, wake_rx) = evloop::waker()?;
         let state = Arc::new(HttpState {
             server: Mutex::new(Some(server)),
             sessions: Mutex::new(HashMap::new()),
             running: AtomicBool::new(true),
             started: Instant::now(),
         });
-        let accept_state = state.clone();
-        let accept = std::thread::Builder::new()
-            .name("slab-http".into())
+        let (msg_tx, msg_rx) = channel::<Msg>();
+        let (work_tx, work_rx) = channel::<Work>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for i in 0..cfg.workers.max(1) {
+            let rx = work_rx.clone();
+            let tx = msg_tx.clone();
+            let wk = waker.clone();
+            let st = state.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("slab-http-worker-{i}"))
+                    .spawn(move || worker_loop(&rx, &tx, &wk, &st))
+                    .expect("spawn http worker"),
+            );
+        }
+        drop(msg_tx); // the loop's msg_rx disconnects once workers exit
+        let loop_state = state.clone();
+        let loop_cfg = cfg;
+        let event_loop = std::thread::Builder::new()
+            .name("slab-http-loop".into())
             .spawn(move || {
-                for conn in listener.incoming() {
-                    if !accept_state.running.load(Ordering::Acquire) {
-                        break;
-                    }
-                    let Ok(stream) = conn else { continue };
-                    let conn_state = accept_state.clone();
-                    // Connection threads are detached: they end with
-                    // their connection, and shutdown() cancels any
-                    // session they might still be streaming.
-                    let _ = std::thread::Builder::new()
-                        .name("slab-http-conn".into())
-                        .spawn(move || handle_connection(stream, &conn_state));
-                }
+                let mut el = EventLoop {
+                    listener,
+                    poller,
+                    wake_rx,
+                    msg_rx,
+                    work_tx: Some(work_tx),
+                    state: loop_state,
+                    cfg: loop_cfg,
+                    conns: HashMap::new(),
+                    next_token: FIRST_CONN_TOKEN,
+                };
+                el.run();
             })
-            .expect("spawn http accept loop");
+            .expect("spawn http event loop");
         Ok(HttpServer {
             addr: local,
             state,
-            accept: Some(accept),
+            waker,
+            event_loop: Some(event_loop),
+            workers,
         })
     }
 
@@ -133,32 +392,39 @@ impl HttpServer {
         self.addr
     }
 
-    /// Block the calling thread on the accept loop — the CLI's
+    /// Block the calling thread until shutdown — the CLI's
     /// serve-until-killed mode.
     pub fn serve_forever(mut self) {
-        if let Some(h) = self.accept.take() {
+        if let Some(h) = self.event_loop.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
 
     /// Stop accepting, cancel in-flight sessions, and shut the inner
     /// [`Server`] down, returning its aggregate stats.
-    pub fn shutdown(mut self) -> Result<super::serve::ServeStats, RuntimeError> {
+    pub fn shutdown(mut self) -> Result<ServeStats, RuntimeError> {
         self.state.running.store(false, Ordering::Release);
-        // Unblock the accept loop with a throwaway connection.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept.take() {
+        self.waker.wake();
+        if let Some(h) = self.event_loop.take() {
             let _ = h.join();
         }
-        // Take the server *before* the cancel sweep: handlers that
+        // Take the server *before* the cancel sweep: workers that
         // race this point see `None` (503) and cannot submit past the
-        // sweep; a handler that already submitted either lands in the
+        // sweep; a worker that already submitted either lands in the
         // registry before the sweep (cancelled here) or observes
         // `running == false` right after registering and cancels
-        // itself (see `handle_generate`).
+        // itself (see `run_generate`).
         let server = self.state.lock_server().take();
         for (_, cancel) in self.state.lock_sessions().drain() {
             cancel.cancel();
+        }
+        // The loop's teardown dropped the work sender, so workers
+        // exit once their current session terminates.
+        for h in self.workers.drain(..) {
+            let _ = h.join();
         }
         match server {
             Some(s) => s.shutdown(),
@@ -168,135 +434,982 @@ impl HttpServer {
 }
 
 // ---------------------------------------------------------------------
-// Connection handling
+// Event loop
 // ---------------------------------------------------------------------
 
-struct HttpRequest {
+/// A generate request handed to the worker pool.
+struct Work {
+    conn: u64,
+    body: String,
+    /// Whether the response may keep the connection alive.
+    reuse: bool,
+}
+
+/// Worker → loop messages. All socket writes flow through these; the
+/// loop is the only thread that touches connection sockets.
+enum Msg {
+    /// A session was submitted for `conn`: register it so a client
+    /// hang-up can cancel it.
+    Started { conn: u64, session: u64 },
+    /// Response bytes to queue on `conn`.
+    Data { conn: u64, bytes: Vec<u8> },
+    /// The worker is done with `conn`; hand it back to the loop.
+    End { conn: u64, reuse: bool },
+}
+
+enum ConnState {
+    /// Parsing the request head (also the idle keep-alive state).
+    Head,
+    /// Head parsed; waiting for the full `Content-Length` body.
+    Body { head: ReqHead },
+    /// A `Work` item is with the worker pool.
+    Busy,
+    /// Flush `wbuf`, then close.
+    Drain,
+}
+
+struct Conn {
+    /// `None` after the socket died but a worker still owns the
+    /// connection token (the entry survives until its `Msg::End`).
+    stream: Option<TcpStream>,
+    fd: RawFd,
+    state: ConnState,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    /// Flushed prefix of `wbuf`.
+    woff: usize,
+    /// Requests answered on this connection (keep-alive budget).
+    served: usize,
+    /// Live session to cancel if the client vanishes.
+    session: Option<u64>,
+    busy: bool,
+    /// Client hung up while a worker was still running.
+    gone: bool,
+    last_read: Instant,
+    last_write_progress: Instant,
+    /// Currently registered interest bits.
+    interest: u8,
+}
+
+/// Parsed request head.
+struct ReqHead {
     method: String,
     path: String,
-    body: String,
+    query: String,
+    content_length: usize,
+    keep_alive: bool,
 }
 
-/// One connection, one request, one response (`Connection: close`) —
-/// the simplest correct HTTP/1.1 subset; curl, the benches, and the
-/// integration tests all speak it.
-fn handle_connection(mut stream: TcpStream, state: &Arc<HttpState>) {
-    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
-    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
-    let Ok(reader_half) = stream.try_clone() else { return };
-    let mut reader = BufReader::new(reader_half);
-    match read_request(&mut reader) {
-        Ok(Some(req)) => route(&req, &mut stream, state),
-        Ok(None) => {} // client connected and closed (shutdown poke)
-        Err(msg) => {
-            let body = Json::obj(vec![("error", Json::str(msg))]).to_string();
-            let _ = write_response(&mut stream, 400, "Bad Request", "application/json", &body);
-        }
+/// Offset just past the head terminator (`\r\n\r\n`, or the sloppy
+/// bare `\n\n`), if the buffer holds a complete head.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    let crlf = buf.windows(4).position(|w| w == b"\r\n\r\n").map(|i| i + 4);
+    let lf = buf.windows(2).position(|w| w == b"\n\n").map(|i| i + 2);
+    match (crlf, lf) {
+        (Some(a), Some(b)) => Some(a.min(b)),
+        (a, b) => a.or(b),
     }
 }
 
-/// One request/header line, bounded at [`MAX_LINE`] bytes (a line
-/// that long without a newline is an attack or a bug, never a valid
-/// request of ours). `Ok(None)` on a clean EOF before any byte.
-fn read_line_bounded(
-    reader: &mut BufReader<TcpStream>,
-    what: &str,
-) -> Result<Option<String>, String> {
-    let mut line = String::new();
-    let mut limited = reader.by_ref().take(MAX_LINE as u64);
-    match limited.read_line(&mut line) {
-        Ok(0) => Ok(None),
-        Ok(_) => {
-            if !line.ends_with('\n') && line.len() >= MAX_LINE {
-                return Err(format!("{what} exceeds {MAX_LINE} bytes"));
-            }
-            Ok(Some(line))
-        }
-        Err(e) => Err(format!("read {what}: {e}")),
+/// Parse a complete request head (request line + headers, terminator
+/// included). Every rejection is a [`Problem`] with the exact status
+/// the wire-contract tests pin.
+fn parse_head(raw: &[u8]) -> Result<ReqHead, Problem> {
+    let text = std::str::from_utf8(raw)
+        .map_err(|_| Problem::new(400, "malformed-head", "Bad Request", "request head is not utf-8"))?;
+    let mut lines = text.split('\n').map(|l| l.strip_suffix('\r').unwrap_or(l));
+    let request_line = lines.next().unwrap_or("");
+    if request_line.len() > MAX_LINE {
+        return Err(Problem::new(
+            431,
+            "line-too-large",
+            "Request Header Fields Too Large",
+            format!("request line exceeds {MAX_LINE} bytes"),
+        ));
     }
-}
-
-/// Parse request line, headers, and a `Content-Length` body.
-/// `Ok(None)` when the client closed without sending anything.
-fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<HttpRequest>, String> {
-    let Some(line) = read_line_bounded(reader, "request line")? else {
-        return Ok(None);
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || !target.starts_with('/') {
+        return Err(Problem::new(
+            400,
+            "malformed-request-line",
+            "Bad Request",
+            format!("malformed request line {request_line:?}"),
+        ));
+    }
+    if !version.starts_with("HTTP/") {
+        return Err(Problem::new(
+            400,
+            "malformed-request-line",
+            "Bad Request",
+            format!("missing HTTP version in {request_line:?}"),
+        ));
+    }
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(Problem::new(
+            505,
+            "http-version",
+            "HTTP Version Not Supported",
+            format!("{version} is not supported; use HTTP/1.1"),
+        ));
+    }
+    let http11 = version == "HTTP/1.1";
+    // Satellite fix: split the query string off before routing.
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
     };
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_uppercase();
-    let path = parts.next().unwrap_or("").to_string();
-    if method.is_empty() || !path.starts_with('/') {
-        return Err("malformed request line".into());
-    }
-    let mut content_length = 0usize;
-    for n_headers in 0.. {
-        if n_headers >= MAX_HEADERS {
-            return Err(format!("more than {MAX_HEADERS} headers"));
+    let mut content_length: Option<usize> = None;
+    let mut transfer_encoding = false;
+    let mut conn_close = false;
+    let mut conn_keep = false;
+    let mut n_headers = 0usize;
+    for line in lines {
+        if line.is_empty() {
+            continue;
         }
-        let Some(h) = read_line_bounded(reader, "header")? else {
-            return Err("unexpected eof in headers".into());
+        n_headers += 1;
+        if n_headers > MAX_HEADERS {
+            return Err(Problem::new(
+                431,
+                "too-many-headers",
+                "Request Header Fields Too Large",
+                format!("more than {MAX_HEADERS} headers"),
+            ));
+        }
+        if line.len() > MAX_LINE {
+            return Err(Problem::new(
+                431,
+                "line-too-large",
+                "Request Header Fields Too Large",
+                format!("header line exceeds {MAX_LINE} bytes"),
+            ));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            continue;
         };
-        let h = h.trim_end();
-        if h.is_empty() {
-            break;
-        }
-        if let Some((name, value)) = h.split_once(':') {
-            if name.trim().eq_ignore_ascii_case("content-length") {
-                content_length = value
-                    .trim()
-                    .parse()
-                    .map_err(|_| "bad content-length".to_string())?;
+        let name = name.trim();
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            let v = value.parse::<usize>().map_err(|_| {
+                Problem::new(
+                    400,
+                    "invalid-content-length",
+                    "Bad Request",
+                    format!("Content-Length {value:?} is not a non-negative integer"),
+                )
+                .field("Content-Length")
+            })?;
+            content_length = Some(v);
+        } else if name.eq_ignore_ascii_case("transfer-encoding") {
+            transfer_encoding = true;
+        } else if name.eq_ignore_ascii_case("connection") {
+            for tok in value.split(',') {
+                let tok = tok.trim();
+                if tok.eq_ignore_ascii_case("close") {
+                    conn_close = true;
+                } else if tok.eq_ignore_ascii_case("keep-alive") {
+                    conn_keep = true;
+                }
             }
         }
     }
-    if content_length > MAX_BODY {
-        return Err(format!("body {content_length} exceeds cap {MAX_BODY}"));
+    if transfer_encoding {
+        // Satellite fix: the old front-end ignored this header and
+        // misread the chunked payload as an empty body + garbage.
+        return Err(Problem::new(
+            411,
+            "length-required",
+            "Length Required",
+            "Transfer-Encoding is not supported; send a Content-Length body",
+        )
+        .field("Transfer-Encoding"));
     }
-    let mut body = vec![0u8; content_length];
-    reader
-        .read_exact(&mut body)
-        .map_err(|e| format!("read body: {e}"))?;
-    let body = String::from_utf8(body).map_err(|_| "body is not utf-8".to_string())?;
-    Ok(Some(HttpRequest { method, path, body }))
+    let keep_alive = if conn_close {
+        false
+    } else if http11 {
+        true
+    } else {
+        conn_keep
+    };
+    Ok(ReqHead {
+        method,
+        path,
+        query,
+        content_length: content_length.unwrap_or(0),
+        keep_alive,
+    })
 }
 
-fn route(req: &HttpRequest, stream: &mut TcpStream, state: &Arc<HttpState>) {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => {
-            let body = Json::obj(vec![
-                ("status", Json::str("ok")),
-                (
-                    "uptime_secs",
-                    Json::num(state.started.elapsed().as_secs_f64()),
-                ),
-            ])
-            .to_string();
-            let _ = write_response(stream, 200, "OK", "application/json", &body);
-        }
-        ("GET", "/metrics") => {
-            let stats = state.lock_server().as_ref().map(|s| s.stats());
-            match stats {
-                Some(stats) => {
-                    let body = stats.table("serve metrics").render();
-                    let _ = write_response(stream, 200, "OK", "text/plain; charset=utf-8", &body);
+/// Methods a known route answers to, for `Allow` headers on 405s.
+fn allowed_methods(path: &str) -> Option<&'static str> {
+    match path {
+        "/healthz" | "/metrics" => Some("GET"),
+        "/v1/generate" => Some("POST"),
+        p if p.starts_with("/v1/sessions/") => Some("DELETE"),
+        _ => None,
+    }
+}
+
+/// What `advance` decided to do with a connection, computed with the
+/// connection borrowed and executed after the borrow ends.
+enum Step {
+    Wait,
+    Again,
+    Dispatch(ReqHead, Vec<u8>),
+    Reject(Problem),
+}
+
+enum EndAction {
+    Nothing,
+    Remove,
+    Continue,
+    Flush,
+}
+
+struct EventLoop {
+    listener: TcpListener,
+    poller: Poller,
+    wake_rx: WakeReader,
+    msg_rx: Receiver<Msg>,
+    work_tx: Option<Sender<Work>>,
+    state: Arc<HttpState>,
+    cfg: HttpConfig,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+}
+
+impl EventLoop {
+    fn run(&mut self) {
+        let mut events: Vec<PollEvent> = Vec::new();
+        self.poller
+            .register(self.listener.as_raw_fd(), TOKEN_LISTENER, EV_READ)
+            .expect("register http listener");
+        self.poller
+            .register(self.wake_rx.fd(), TOKEN_WAKER, EV_READ)
+            .expect("register http waker");
+        while self.state.running.load(Ordering::Acquire) {
+            if self.poller.wait(&mut events, Some(POLL_TICK)).is_err() {
+                break;
+            }
+            for i in 0..events.len() {
+                let ev = events[i];
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => self.wake_rx.drain(),
+                    t => {
+                        // On error/hang-up, read first: the kernel may
+                        // still hold a final request before the EOF.
+                        if ev.readable || ev.error {
+                            self.read_ready(t);
+                        }
+                        if ev.writable {
+                            self.flush(t);
+                        }
+                    }
                 }
-                None => {
-                    let _ = write_response(stream, 503, "Service Unavailable", "text/plain", "shutting down");
+            }
+            while let Ok(m) = self.msg_rx.try_recv() {
+                self.apply_msg(m);
+            }
+            self.sweep();
+        }
+        self.teardown();
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if self.conns.len() >= self.cfg.max_conns {
+                        // Hard connection limit: best-effort 503 (the
+                        // fresh socket's send buffer is empty, so the
+                        // nonblocking write virtually always lands).
+                        let p = Problem::new(
+                            503,
+                            "overloaded",
+                            "Service Unavailable",
+                            format!("connection limit {} reached", self.cfg.max_conns),
+                        )
+                        .retry_after(1);
+                        let mut s = stream;
+                        let _ = s.set_nonblocking(true);
+                        let _ = s.write_all(&p.response(false));
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    if self.cfg.sndbuf > 0 {
+                        let _ = evloop::set_sndbuf(stream.as_raw_fd(), self.cfg.sndbuf);
+                    }
+                    let fd = stream.as_raw_fd();
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self.poller.register(fd, token, EV_READ).is_err() {
+                        continue;
+                    }
+                    let now = Instant::now();
+                    self.conns.insert(
+                        token,
+                        Conn {
+                            stream: Some(stream),
+                            fd,
+                            state: ConnState::Head,
+                            rbuf: Vec::new(),
+                            wbuf: Vec::new(),
+                            woff: 0,
+                            served: 0,
+                            session: None,
+                            busy: false,
+                            gone: false,
+                            last_read: now,
+                            last_write_progress: now,
+                            interest: EV_READ,
+                        },
+                    );
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn read_ready(&mut self, token: u64) {
+        let mut gone = false;
+        let mut got_data = false;
+        {
+            let Some(c) = self.conns.get_mut(&token) else { return };
+            let Some(stream) = c.stream.as_mut() else { return };
+            let mut buf = [0u8; 4096];
+            loop {
+                match stream.read(&mut buf) {
+                    Ok(0) => {
+                        gone = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        c.rbuf.extend_from_slice(&buf[..n]);
+                        c.last_read = Instant::now();
+                        got_data = true;
+                        if c.rbuf.len() > RBUF_CAP {
+                            // Flooding while a request is in flight
+                            // (or an absurd pipeline backlog).
+                            gone = true;
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        gone = true;
+                        break;
+                    }
                 }
             }
         }
-        ("POST", "/v1/generate") => handle_generate(req, stream, state),
-        ("DELETE", path) if path.starts_with("/v1/sessions/") => {
-            handle_cancel(path, stream, state);
+        if gone {
+            self.hang_up(token);
+            return;
         }
-        (_, "/healthz") | (_, "/metrics") | (_, "/v1/generate") => {
-            let body = Json::obj(vec![("error", Json::str("method not allowed"))]).to_string();
-            let _ = write_response(stream, 405, "Method Not Allowed", "application/json", &body);
+        if got_data {
+            self.advance(token);
         }
-        _ => {
-            let body = Json::obj(vec![("error", Json::str("not found"))]).to_string();
-            let _ = write_response(stream, 404, "Not Found", "application/json", &body);
+    }
+
+    /// Drive the per-connection state machine as far as the buffered
+    /// bytes allow — possibly several pipelined requests.
+    fn advance(&mut self, token: u64) {
+        loop {
+            let step = {
+                let Some(c) = self.conns.get_mut(&token) else { return };
+                match &c.state {
+                    ConnState::Busy | ConnState::Drain => Step::Wait,
+                    ConnState::Head => match find_head_end(&c.rbuf) {
+                        None => {
+                            if c.rbuf.len() > MAX_HEAD {
+                                Step::Reject(Problem::new(
+                                    431,
+                                    "head-too-large",
+                                    "Request Header Fields Too Large",
+                                    format!("request head exceeds {MAX_HEAD} bytes"),
+                                ))
+                            } else {
+                                Step::Wait
+                            }
+                        }
+                        Some(end) => match parse_head(&c.rbuf[..end]) {
+                            Err(p) => Step::Reject(p),
+                            Ok(head) => {
+                                c.rbuf.drain(..end);
+                                if head.content_length > MAX_BODY {
+                                    Step::Reject(Problem::new(
+                                        413,
+                                        "body-too-large",
+                                        "Content Too Large",
+                                        format!(
+                                            "body of {} bytes exceeds cap {MAX_BODY}",
+                                            head.content_length
+                                        ),
+                                    ))
+                                } else {
+                                    c.state = ConnState::Body { head };
+                                    Step::Again
+                                }
+                            }
+                        },
+                    },
+                    ConnState::Body { head } => {
+                        let need = head.content_length;
+                        if c.rbuf.len() < need {
+                            Step::Wait
+                        } else {
+                            let ConnState::Body { head } =
+                                std::mem::replace(&mut c.state, ConnState::Head)
+                            else {
+                                unreachable!("state checked above")
+                            };
+                            let body: Vec<u8> = c.rbuf.drain(..need).collect();
+                            Step::Dispatch(head, body)
+                        }
+                    }
+                }
+            };
+            match step {
+                Step::Wait => return,
+                Step::Again => continue,
+                Step::Reject(p) => {
+                    // Framing may be corrupt past a head-level error:
+                    // always close after the problem body.
+                    self.problem_close(token, p);
+                    return;
+                }
+                Step::Dispatch(head, body) => {
+                    self.dispatch(token, head, body);
+                    // Keep going only if the response was inline and
+                    // the connection stays in keep-alive (pipelining).
+                    match self.conns.get(&token) {
+                        Some(c) if matches!(c.state, ConnState::Head) && !c.busy => {}
+                        _ => return,
+                    }
+                }
+            }
         }
+    }
+
+    /// Route one complete request. Cheap routes answer inline on the
+    /// loop thread; `/v1/generate` ships to the worker pool.
+    fn dispatch(&mut self, token: u64, head: ReqHead, body: Vec<u8>) {
+        let reuse = {
+            let Some(c) = self.conns.get(&token) else { return };
+            head.keep_alive
+                && self.cfg.keep_alive_requests > 0
+                && c.served + 1 < self.cfg.keep_alive_requests
+        };
+        match (head.method.as_str(), head.path.as_str()) {
+            ("GET", "/healthz") => {
+                let body = Json::obj(vec![
+                    ("status", Json::str("ok")),
+                    (
+                        "uptime_secs",
+                        Json::num(self.state.started.elapsed().as_secs_f64()),
+                    ),
+                ])
+                .to_string();
+                self.respond(token, 200, "application/json", &body, reuse);
+            }
+            ("GET", "/metrics") => {
+                let stats = self.state.lock_server().as_ref().map(|s| s.stats());
+                match stats {
+                    None => self.respond_problem(
+                        token,
+                        Problem::new(503, "shutting-down", "Service Unavailable", "server is shutting down"),
+                        false,
+                    ),
+                    Some(st) => {
+                        if head.query.split('&').any(|kv| kv == "format=json") {
+                            let body = stats_to_json(&st).to_string();
+                            self.respond(token, 200, "application/json", &body, reuse);
+                        } else {
+                            let body = st.table("serve metrics").render();
+                            self.respond(token, 200, "text/plain; charset=utf-8", &body, reuse);
+                        }
+                    }
+                }
+            }
+            ("POST", "/v1/generate") => match String::from_utf8(body) {
+                Err(_) => self.respond_problem(
+                    token,
+                    Problem::new(400, "invalid-body", "Bad Request", "request body is not valid utf-8"),
+                    reuse,
+                ),
+                Ok(text) => {
+                    {
+                        let Some(c) = self.conns.get_mut(&token) else { return };
+                        c.busy = true;
+                        c.state = ConnState::Busy;
+                    }
+                    let sent = match &self.work_tx {
+                        Some(tx) => tx
+                            .send(Work {
+                                conn: token,
+                                body: text,
+                                reuse,
+                            })
+                            .is_ok(),
+                        None => false,
+                    };
+                    if !sent {
+                        // Worker pool is gone (shutdown race).
+                        if let Some(c) = self.conns.get_mut(&token) {
+                            c.busy = false;
+                            c.state = ConnState::Head;
+                        }
+                        self.respond_problem(
+                            token,
+                            Problem::new(503, "shutting-down", "Service Unavailable", "server is shutting down"),
+                            false,
+                        );
+                    }
+                }
+            },
+            ("DELETE", p) if p.starts_with("/v1/sessions/") => {
+                let id_str = &p["/v1/sessions/".len()..];
+                match id_str.parse::<u64>() {
+                    Err(_) => self.respond_problem(
+                        token,
+                        Problem::new(
+                            400,
+                            "bad-session-id",
+                            "Bad Request",
+                            format!("session id {id_str:?} is not an unsigned integer"),
+                        ),
+                        reuse,
+                    ),
+                    Ok(id) => {
+                        let handle = self.state.lock_sessions().get(&id).cloned();
+                        match handle {
+                            Some(cancel) => {
+                                cancel.cancel();
+                                let body = Json::obj(vec![
+                                    ("id", Json::from_usize(id as usize)),
+                                    ("cancelled", Json::Bool(true)),
+                                ])
+                                .to_string();
+                                self.respond(token, 200, "application/json", &body, reuse);
+                            }
+                            None => self.respond_problem(
+                                token,
+                                Problem::new(
+                                    404,
+                                    "unknown-session",
+                                    "Not Found",
+                                    format!("session {id} is unknown or already finished"),
+                                ),
+                                reuse,
+                            ),
+                        }
+                    }
+                }
+            }
+            (m, p) => {
+                if let Some(allow) = allowed_methods(p) {
+                    // Satellite fix: methods are case-sensitive (RFC
+                    // 9110 §9.1) — `get` is a 405 with `Allow`, never
+                    // a silent alias of `GET`.
+                    self.respond_problem(
+                        token,
+                        Problem::new(
+                            405,
+                            "method-not-allowed",
+                            "Method Not Allowed",
+                            format!("method {m:?} is not allowed for {p} (methods are case-sensitive)"),
+                        )
+                        .allow(allow),
+                        reuse,
+                    );
+                } else {
+                    self.respond_problem(
+                        token,
+                        Problem::new(404, "not-found", "Not Found", format!("no route for {p}")),
+                        reuse,
+                    );
+                }
+            }
+        }
+    }
+
+    /// Queue one inline response and account the keep-alive budget.
+    fn respond(&mut self, token: u64, status: u16, ctype: &str, body: &str, reuse: bool) {
+        let bytes = response_bytes(status, ctype, "", body, reuse);
+        self.queue_inline(token, bytes, reuse);
+    }
+
+    fn respond_problem(&mut self, token: u64, p: Problem, reuse: bool) {
+        let bytes = p.response(reuse);
+        self.queue_inline(token, bytes, reuse);
+    }
+
+    /// A head-level protocol error: problem body, then drain + close
+    /// (the connection's framing cannot be trusted afterwards).
+    fn problem_close(&mut self, token: u64, p: Problem) {
+        let bytes = p.response(false);
+        {
+            let Some(c) = self.conns.get_mut(&token) else { return };
+            c.wbuf.extend_from_slice(&bytes);
+            c.state = ConnState::Drain;
+        }
+        self.flush(token);
+    }
+
+    fn queue_inline(&mut self, token: u64, bytes: Vec<u8>, reuse: bool) {
+        {
+            let Some(c) = self.conns.get_mut(&token) else { return };
+            c.wbuf.extend_from_slice(&bytes);
+            c.served += 1;
+            if reuse {
+                c.state = ConnState::Head;
+                c.last_read = Instant::now();
+            } else {
+                c.state = ConnState::Drain;
+            }
+        }
+        self.flush(token);
+    }
+
+    /// Write as much of `wbuf` as the socket accepts; close when a
+    /// draining connection finishes, re-arm `EV_WRITE` otherwise.
+    fn flush(&mut self, token: u64) {
+        let mut gone = false;
+        {
+            let Some(c) = self.conns.get_mut(&token) else { return };
+            if let Some(stream) = c.stream.as_mut() {
+                let mut progressed = false;
+                while c.woff < c.wbuf.len() {
+                    match stream.write(&c.wbuf[c.woff..]) {
+                        Ok(0) => {
+                            gone = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            c.woff += n;
+                            progressed = true;
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            gone = true;
+                            break;
+                        }
+                    }
+                }
+                if progressed {
+                    c.last_write_progress = Instant::now();
+                }
+                if c.woff >= c.wbuf.len() {
+                    c.wbuf.clear();
+                    c.woff = 0;
+                }
+            }
+        }
+        if gone {
+            self.hang_up(token);
+            return;
+        }
+        let close_now = match self.conns.get(&token) {
+            Some(c) => matches!(c.state, ConnState::Drain) && c.wbuf.is_empty() && !c.busy,
+            None => false,
+        };
+        if close_now {
+            self.close_conn(token);
+            return;
+        }
+        self.update_interest(token);
+    }
+
+    fn update_interest(&mut self, token: u64) {
+        let target = {
+            let Some(c) = self.conns.get_mut(&token) else { return };
+            if c.stream.is_none() {
+                return;
+            }
+            let want = if c.wbuf.len() > c.woff {
+                EV_READ | EV_WRITE
+            } else {
+                EV_READ
+            };
+            if want == c.interest {
+                return;
+            }
+            c.interest = want;
+            (c.fd, want)
+        };
+        let _ = self.poller.modify(target.0, token, target.1);
+    }
+
+    /// The client vanished (EOF, reset, flood, or budget kill): close
+    /// the socket, cancel any live session, and — if a worker still
+    /// owns the token — keep a `gone` tombstone until its `Msg::End`.
+    fn hang_up(&mut self, token: u64) {
+        let (fd, had_stream, busy, sid) = {
+            let Some(c) = self.conns.get_mut(&token) else { return };
+            let had = c.stream.take().is_some();
+            c.gone = true;
+            c.wbuf.clear();
+            c.woff = 0;
+            (c.fd, had, c.busy, c.session.take())
+        };
+        if had_stream {
+            let _ = self.poller.deregister(fd, token);
+        }
+        if let Some(sid) = sid {
+            cancel_session(&self.state, sid);
+        }
+        if !busy {
+            self.conns.remove(&token);
+        }
+    }
+
+    /// Orderly close of an idle/drained connection.
+    fn close_conn(&mut self, token: u64) {
+        if let Some(c) = self.conns.remove(&token) {
+            if let Some(sid) = c.session {
+                cancel_session(&self.state, sid);
+            }
+            if c.stream.is_some() {
+                let _ = self.poller.deregister(c.fd, token);
+            }
+        }
+    }
+
+    fn apply_msg(&mut self, msg: Msg) {
+        match msg {
+            Msg::Started { conn, session } => match self.conns.get_mut(&conn) {
+                Some(c) if !c.gone => c.session = Some(session),
+                // The client vanished before the submit landed:
+                // cancel right away so the router stops decoding.
+                _ => cancel_session(&self.state, session),
+            },
+            Msg::Data { conn, bytes } => {
+                let queued = match self.conns.get_mut(&conn) {
+                    Some(c) if !c.gone && c.stream.is_some() => {
+                        c.wbuf.extend_from_slice(&bytes);
+                        true
+                    }
+                    _ => false,
+                };
+                if queued {
+                    self.flush(conn);
+                }
+            }
+            Msg::End { conn, reuse } => {
+                let action = match self.conns.get_mut(&conn) {
+                    None => EndAction::Nothing,
+                    Some(c) => {
+                        c.busy = false;
+                        c.session = None;
+                        c.served += 1;
+                        if c.gone {
+                            EndAction::Remove
+                        } else if reuse {
+                            c.state = ConnState::Head;
+                            c.last_read = Instant::now();
+                            EndAction::Continue
+                        } else {
+                            c.state = ConnState::Drain;
+                            EndAction::Flush
+                        }
+                    }
+                };
+                match action {
+                    EndAction::Nothing => {}
+                    EndAction::Remove => {
+                        self.conns.remove(&conn);
+                    }
+                    EndAction::Continue => {
+                        self.flush(conn);
+                        // A pipelined next request may already be
+                        // buffered.
+                        self.advance(conn);
+                    }
+                    EndAction::Flush => self.flush(conn),
+                }
+            }
+        }
+    }
+
+    /// Periodic policy sweep: idle timeouts, write budgets, write
+    /// stalls. Runs every poll tick (~[`POLL_TICK`]).
+    fn sweep(&mut self) {
+        let now = Instant::now();
+        let mut kills: Vec<u64> = Vec::new();
+        let mut timeouts: Vec<(u64, bool)> = Vec::new();
+        for (&t, c) in self.conns.iter() {
+            if c.stream.is_none() {
+                continue;
+            }
+            let buffered = c.wbuf.len() - c.woff;
+            if buffered > 0
+                && (buffered > self.cfg.write_budget
+                    || now.duration_since(c.last_write_progress) > self.cfg.write_stall)
+            {
+                // Slow-client policy: a stalled reader loses its
+                // connection and its session, not our memory.
+                kills.push(t);
+                continue;
+            }
+            match &c.state {
+                ConnState::Head | ConnState::Body { .. } => {
+                    if now.duration_since(c.last_read) > self.cfg.idle_timeout {
+                        let mid_request =
+                            !c.rbuf.is_empty() || matches!(c.state, ConnState::Body { .. });
+                        timeouts.push((t, mid_request));
+                    }
+                }
+                _ => {}
+            }
+        }
+        for t in kills {
+            self.hang_up(t);
+        }
+        for (t, mid_request) in timeouts {
+            if mid_request {
+                self.problem_close(
+                    t,
+                    Problem::new(
+                        408,
+                        "request-timeout",
+                        "Request Timeout",
+                        "client sent a partial request and went idle",
+                    ),
+                );
+            } else {
+                // Idle keep-alive connection: close silently.
+                self.close_conn(t);
+            }
+        }
+    }
+
+    /// Loop exit: cancel every live session, drop every socket, and
+    /// disconnect the worker pool (workers exit once their session
+    /// terminates and the work channel is empty).
+    fn teardown(&mut self) {
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for t in tokens {
+            if let Some(c) = self.conns.remove(&t) {
+                if let Some(sid) = c.session {
+                    cancel_session(&self.state, sid);
+                }
+                if c.stream.is_some() {
+                    let _ = self.poller.deregister(c.fd, t);
+                }
+            }
+        }
+        self.work_tx.take();
+    }
+}
+
+/// The [`ServeStats`] snapshot as a flat JSON object
+/// (`GET /metrics?format=json`).
+fn stats_to_json(s: &ServeStats) -> Json {
+    Json::obj(vec![
+        ("requests", Json::from_usize(s.requests)),
+        ("batches", Json::from_usize(s.batches)),
+        ("generated_tokens", Json::from_usize(s.generated_tokens)),
+        ("rejected", Json::from_usize(s.rejected)),
+        ("evicted", Json::from_usize(s.evicted)),
+        ("deadline_evicted", Json::from_usize(s.deadline_evicted)),
+        ("cancelled", Json::from_usize(s.cancelled)),
+        ("dropped_clients", Json::from_usize(s.dropped_clients)),
+        ("ttft_ms_total", Json::num(s.ttft_ms_total)),
+        ("ttft_samples", Json::from_usize(s.ttft_samples)),
+        ("prefix_hits", Json::from_usize(s.prefix_hits)),
+        ("prefix_misses", Json::from_usize(s.prefix_misses)),
+        ("cow_splits", Json::from_usize(s.cow_splits)),
+        ("page_evictions", Json::from_usize(s.page_evictions)),
+        ("kv_pages", Json::from_usize(s.kv_pages)),
+        ("kv_pages_peak", Json::from_usize(s.kv_pages_peak)),
+        ("spec_rounds", Json::from_usize(s.spec_rounds)),
+        ("spec_drafted", Json::from_usize(s.spec_drafted)),
+        ("spec_accepted", Json::from_usize(s.spec_accepted)),
+        ("spec_rollbacks", Json::from_usize(s.spec_rollbacks)),
+        ("wall_secs", Json::num(s.wall_secs)),
+    ])
+}
+
+// ---------------------------------------------------------------------
+// Worker pool
+// ---------------------------------------------------------------------
+
+/// Worker-side handle for one connection: every byte and lifecycle
+/// event goes through the loop's message channel + waker.
+struct Outbox<'a> {
+    conn: u64,
+    tx: &'a Sender<Msg>,
+    waker: &'a Waker,
+}
+
+impl Outbox<'_> {
+    fn started(&self, session: u64) {
+        if self
+            .tx
+            .send(Msg::Started {
+                conn: self.conn,
+                session,
+            })
+            .is_ok()
+        {
+            self.waker.wake();
+        }
+    }
+
+    fn data(&self, bytes: Vec<u8>) {
+        if self
+            .tx
+            .send(Msg::Data {
+                conn: self.conn,
+                bytes,
+            })
+            .is_ok()
+        {
+            self.waker.wake();
+        }
+    }
+
+    fn end(&self, reuse: bool) {
+        if self
+            .tx
+            .send(Msg::End {
+                conn: self.conn,
+                reuse,
+            })
+            .is_ok()
+        {
+            self.waker.wake();
+        }
+    }
+}
+
+/// Worker thread: pull one [`Work`] at a time (the `Mutex<Receiver>`
+/// hand-off is released while the request runs) until the loop drops
+/// the sender.
+fn worker_loop(
+    rx: &Arc<Mutex<Receiver<Work>>>,
+    tx: &Sender<Msg>,
+    waker: &Waker,
+    state: &Arc<HttpState>,
+) {
+    loop {
+        let work = {
+            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
+            guard.recv()
+        };
+        let Ok(work) = work else { return };
+        run_generate(work, tx, waker, state);
     }
 }
 
@@ -306,39 +1419,49 @@ struct GenerateBody {
     stream: bool,
 }
 
-fn parse_generate(body: &str) -> Result<GenerateBody, String> {
-    let v = Json::parse(body).map_err(|e| format!("bad json: {e}"))?;
-    let prompt_json = v.get("prompt");
-    let arr = prompt_json
-        .as_arr()
-        .ok_or_else(|| "missing or non-array 'prompt'".to_string())?;
-    let mut prompt = Vec::with_capacity(arr.len());
-    for item in arr {
-        let tok = item
-            .as_i64()
-            .and_then(|t| i32::try_from(t).ok())
-            .ok_or_else(|| "prompt entries must be i32 integers".to_string())?;
+/// Extract the request with the lazy path scanner — one validating
+/// skip-scan, then per-field raw-slice reads; no value tree.
+fn parse_generate(body: &str) -> Result<GenerateBody, Problem> {
+    fn bad(detail: String) -> Problem {
+        Problem::new(400, "invalid-request", "Bad Request", detail)
+    }
+    let lazy = LazyJson::parse(body).map_err(|e| bad(format!("bad json: {e}")))?;
+    let prompt_raw = lazy
+        .path(&["prompt"])
+        .ok_or_else(|| bad("missing 'prompt'".into()).field("prompt"))?;
+    let prompt64 = prompt_raw
+        .int_array()
+        .map_err(|_| bad("'prompt' must be an array of integer token ids".into()).field("prompt"))?;
+    let mut prompt = Vec::with_capacity(prompt64.len());
+    for t in prompt64 {
+        let tok = i32::try_from(t)
+            .map_err(|_| bad(format!("prompt token {t} is out of i32 range")).field("prompt"))?;
         prompt.push(tok);
     }
-    let max_new = match v.get("max_new") {
-        Json::Null => 16,
-        n => n
+    let max_new = match lazy.path(&["max_new"]) {
+        None => 16,
+        Some(raw) if raw.is_null() => 16,
+        Some(raw) => raw
             .as_usize()
-            .ok_or_else(|| "'max_new' must be a non-negative integer".to_string())?,
+            .ok_or_else(|| bad("'max_new' must be a non-negative integer".into()).field("max_new"))?,
     };
-    let stream = match v.get("stream") {
-        Json::Null => false,
-        b => b
+    let stream = match lazy.path(&["stream"]) {
+        None => false,
+        Some(raw) if raw.is_null() => false,
+        Some(raw) => raw
             .as_bool()
-            .ok_or_else(|| "'stream' must be a boolean".to_string())?,
+            .ok_or_else(|| bad("'stream' must be a boolean".into()).field("stream"))?,
     };
-    let deadline = match v.get("deadline_ms") {
-        Json::Null => None,
-        n => {
-            let ms = n
+    let deadline = match lazy.path(&["deadline_ms"]) {
+        None => None,
+        Some(raw) if raw.is_null() => None,
+        Some(raw) => {
+            let ms = raw
                 .as_f64()
                 .filter(|ms| *ms >= 0.0)
-                .ok_or_else(|| "'deadline_ms' must be a non-negative number".to_string())?;
+                .ok_or_else(|| {
+                    bad("'deadline_ms' must be a non-negative number".into()).field("deadline_ms")
+                })?;
             if ms == 0.0 {
                 // Same convention as `--deadline-ms 0` and
                 // `SchedulerConfig::deadline`: zero disables the
@@ -347,9 +1470,9 @@ fn parse_generate(body: &str) -> Result<GenerateBody, String> {
                 None
             } else {
                 // try_from: a finite-but-huge value must be a 400,
-                // not a panic in the connection handler.
+                // not a panic in a worker thread.
                 let d = Duration::try_from_secs_f64(ms / 1e3)
-                    .map_err(|_| "'deadline_ms' out of range".to_string())?;
+                    .map_err(|_| bad("'deadline_ms' out of range".into()).field("deadline_ms"))?;
                 Some(d)
             }
         }
@@ -364,12 +1487,18 @@ fn parse_generate(body: &str) -> Result<GenerateBody, String> {
     })
 }
 
-fn handle_generate(req: &HttpRequest, stream: &mut TcpStream, state: &Arc<HttpState>) {
-    let parsed = match parse_generate(&req.body) {
+/// One `POST /v1/generate`, end to end, on a worker thread.
+fn run_generate(work: Work, tx: &Sender<Msg>, waker: &Waker, state: &Arc<HttpState>) {
+    let out = Outbox {
+        conn: work.conn,
+        tx,
+        waker,
+    };
+    let parsed = match parse_generate(&work.body) {
         Ok(p) => p,
-        Err(msg) => {
-            let body = Json::obj(vec![("error", Json::str(msg))]).to_string();
-            let _ = write_response(stream, 400, "Bad Request", "application/json", &body);
+        Err(p) => {
+            out.data(p.response(work.reuse));
+            out.end(work.reuse);
             return;
         }
     };
@@ -378,7 +1507,9 @@ fn handle_generate(req: &HttpRequest, stream: &mut TcpStream, state: &Arc<HttpSt
     let session = match state.lock_server().as_ref() {
         Some(server) => server.submit(parsed.req),
         None => {
-            let _ = write_response(stream, 503, "Service Unavailable", "text/plain", "shutting down");
+            let p = Problem::new(503, "shutting-down", "Service Unavailable", "server is shutting down");
+            out.data(p.response(false));
+            out.end(false);
             return;
         }
     };
@@ -391,30 +1522,47 @@ fn handle_generate(req: &HttpRequest, stream: &mut TcpStream, state: &Arc<HttpSt
     if !state.running.load(Ordering::Acquire) {
         session.cancel();
     }
+    out.started(id);
     if parsed.stream {
-        stream_events(stream, id, &session);
+        stream_session(&out, id, &session, state, work.reuse);
     } else {
         let r = session.collect();
-        let body = Json::obj(vec![
-            ("id", Json::from_usize(id as usize)),
-            ("tokens", Json::arr(r.tokens.iter().map(|&t| Json::num(t)))),
-            ("queue_ms", Json::num(r.queue_ms)),
-            ("latency_ms", Json::num(r.latency_ms)),
-            ("ttft_ms", Json::num(r.ttft_ms)),
-            ("rejected", Json::Bool(r.rejected)),
-            ("evicted", Json::Bool(r.evicted)),
-            ("cancelled", Json::Bool(r.cancelled)),
-            ("incomplete", Json::Bool(r.incomplete)),
-        ])
-        .to_string();
         if r.rejected {
-            let _ = write_response(stream, 429, "Too Many Requests", "application/json", &body);
-        } else if r.incomplete {
-            // The router died mid-session; the tokens are truncated.
-            let _ =
-                write_response(stream, 500, "Internal Server Error", "application/json", &body);
+            // Satellite fix: 429s carry `Retry-After` derived from
+            // the submit-gate depth.
+            let retry = retry_after_hint(state);
+            let p = Problem::new(
+                429,
+                "queue-full",
+                "Too Many Requests",
+                format!("admission queue is full; retry in ~{retry}s"),
+            )
+            .retry_after(retry)
+            .with("id", Json::from_usize(id as usize));
+            out.data(p.response(work.reuse));
+            out.end(work.reuse);
         } else {
-            let _ = write_response(stream, 200, "OK", "application/json", &body);
+            let body = Json::obj(vec![
+                ("id", Json::from_usize(id as usize)),
+                ("tokens", Json::arr(r.tokens.iter().map(|&t| Json::num(t)))),
+                ("queue_ms", Json::num(r.queue_ms)),
+                ("latency_ms", Json::num(r.latency_ms)),
+                ("ttft_ms", Json::num(r.ttft_ms)),
+                ("rejected", Json::Bool(r.rejected)),
+                ("evicted", Json::Bool(r.evicted)),
+                ("cancelled", Json::Bool(r.cancelled)),
+                ("incomplete", Json::Bool(r.incomplete)),
+            ])
+            .to_string();
+            if r.incomplete {
+                // The router died mid-session; the tokens are
+                // truncated. Close the connection after.
+                out.data(response_bytes(500, "application/json", "", &body, false));
+                out.end(false);
+            } else {
+                out.data(response_bytes(200, "application/json", "", &body, work.reuse));
+                out.end(work.reuse);
+            }
         }
     }
     state.lock_sessions().remove(&id);
@@ -422,45 +1570,82 @@ fn handle_generate(req: &HttpRequest, stream: &mut TcpStream, state: &Arc<HttpSt
 
 /// SSE-style chunked token streaming: one `data: {...}\n\n` frame per
 /// event, opening with `{"id": n}` so the client can `DELETE` the
-/// session mid-stream. A client hang-up cancels the session — the
-/// router must not keep decoding for a socket nobody reads.
-fn stream_events(stream: &mut TcpStream, id: u64, session: &super::serve::Session) {
-    let header = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nTransfer-Encoding: chunked\r\nCache-Control: no-store\r\nConnection: close\r\n\r\n";
-    if stream.write_all(header.as_bytes()).is_err() {
-        session.cancel();
+/// session mid-stream.
+fn stream_session(
+    out: &Outbox<'_>,
+    id: u64,
+    session: &super::serve::Session,
+    state: &Arc<HttpState>,
+    reuse: bool,
+) {
+    // Gate rejections are synchronous in `Server::submit`, so an
+    // upfront `Rejected` is already in the channel: answer a plain
+    // 429 + `Retry-After` instead of opening an SSE stream.
+    let mut first = session.try_recv();
+    if matches!(first, Some(Event::Rejected)) {
+        let retry = retry_after_hint(state);
+        let p = Problem::new(
+            429,
+            "queue-full",
+            "Too Many Requests",
+            format!("admission queue is full; retry in ~{retry}s"),
+        )
+        .retry_after(retry)
+        .with("id", Json::from_usize(id as usize));
+        out.data(p.response(reuse));
+        out.end(reuse);
         return;
     }
-    let opening = Json::obj(vec![("id", Json::from_usize(id as usize))]);
-    if write_frame(stream, &opening).is_err() {
-        session.cancel();
-        return;
-    }
+    let header = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nTransfer-Encoding: chunked\r\nCache-Control: no-store\r\nConnection: {}\r\n\r\n",
+        if reuse { "keep-alive" } else { "close" }
+    );
+    out.data(header.into_bytes());
+    out.data(frame_bytes(&Json::obj(vec![(
+        "id",
+        Json::from_usize(id as usize),
+    )])));
     let mut saw_terminal = false;
-    while let Some(ev) = session.recv() {
+    loop {
+        let ev = match first.take() {
+            Some(ev) => Some(ev),
+            None => session.recv(),
+        };
+        let Some(ev) = ev else { break };
         let (frame, terminal) = match ev {
             Event::Token(t) => (Json::obj(vec![("token", Json::num(t))]), false),
             Event::Done(s) => (Json::obj(vec![("done", stats_json(&s))]), true),
             Event::Evicted(s) => (Json::obj(vec![("evicted", stats_json(&s))]), true),
-            Event::Rejected => (Json::obj(vec![("rejected", Json::Bool(true))]), true),
+            Event::Rejected => {
+                // Late scheduler-level rejection: the stream is
+                // already open, so the retry hint rides in the frame.
+                let retry = retry_after_hint(state);
+                (
+                    Json::obj(vec![
+                        ("rejected", Json::Bool(true)),
+                        ("retry_after_secs", Json::from_usize(retry as usize)),
+                    ]),
+                    true,
+                )
+            }
         };
-        if write_frame(stream, &frame).is_err() {
-            session.cancel();
-            return;
-        }
+        out.data(frame_bytes(&frame));
         if terminal {
             saw_terminal = true;
             break;
         }
     }
     if !saw_terminal {
-        // The stream closed with no terminal event: the router died
+        // The event stream closed with no terminal: the router died
         // mid-session. Tell the client explicitly — a truncated token
         // stream must not read as a completed one.
-        let aborted = Json::obj(vec![("aborted", Json::Bool(true))]);
-        let _ = write_frame(stream, &aborted);
+        out.data(frame_bytes(&Json::obj(vec![("aborted", Json::Bool(true))])));
     }
     // Terminal chunk.
-    let _ = stream.write_all(b"0\r\n\r\n");
+    out.data(b"0\r\n\r\n".to_vec());
+    // A healthy terminal keeps the connection; an aborted stream
+    // closes it (the client cannot trust our framing after that).
+    out.end(reuse && saw_terminal);
 }
 
 fn stats_json(s: &SessionStats) -> Json {
@@ -473,53 +1658,10 @@ fn stats_json(s: &SessionStats) -> Json {
     ])
 }
 
-/// One SSE frame as one HTTP chunk, flushed immediately — that is the
-/// whole point of streaming.
-fn write_frame(stream: &mut TcpStream, payload: &Json) -> std::io::Result<()> {
+/// One SSE frame as one HTTP chunk.
+fn frame_bytes(payload: &Json) -> Vec<u8> {
     let data = format!("data: {payload}\n\n");
-    write!(stream, "{:x}\r\n{data}\r\n", data.len())?;
-    stream.flush()
-}
-
-fn handle_cancel(path: &str, stream: &mut TcpStream, state: &Arc<HttpState>) {
-    let id_str = path.trim_start_matches("/v1/sessions/");
-    let Ok(id) = id_str.parse::<u64>() else {
-        let body = Json::obj(vec![("error", Json::str("bad session id"))]).to_string();
-        let _ = write_response(stream, 400, "Bad Request", "application/json", &body);
-        return;
-    };
-    let handle = state.lock_sessions().get(&id).cloned();
-    match handle {
-        Some(cancel) => {
-            cancel.cancel();
-            let body = Json::obj(vec![
-                ("id", Json::from_usize(id as usize)),
-                ("cancelled", Json::Bool(true)),
-            ])
-            .to_string();
-            let _ = write_response(stream, 200, "OK", "application/json", &body);
-        }
-        None => {
-            let body =
-                Json::obj(vec![("error", Json::str("unknown or finished session"))]).to_string();
-            let _ = write_response(stream, 404, "Not Found", "application/json", &body);
-        }
-    }
-}
-
-fn write_response(
-    stream: &mut TcpStream,
-    status: u16,
-    reason: &str,
-    ctype: &str,
-    body: &str,
-) -> std::io::Result<()> {
-    write!(
-        stream,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
-    )?;
-    stream.flush()
+    format!("{:x}\r\n{data}\r\n", data.len()).into_bytes()
 }
 
 // ---------------------------------------------------------------------
@@ -529,6 +1671,9 @@ fn write_response(
 /// Minimal blocking HTTP client for the loopback surface above — just
 /// enough protocol for the benches and integration tests to drive
 /// `slab serve --http` over a real socket without external crates.
+/// One-shot helpers ([`get`]/[`post`]/[`delete`]) send
+/// `Connection: close`; [`HttpConn`] keeps one connection alive
+/// across requests (and can pipeline them).
 pub mod client {
     use super::super::serve::Response;
     use crate::util::json::Json;
@@ -540,6 +1685,26 @@ pub mod client {
     pub struct HttpReply {
         pub status: u16,
         pub body: String,
+        /// Response headers, in wire order, names lower-cased.
+        pub headers: Vec<(String, String)>,
+    }
+
+    impl HttpReply {
+        /// Case-insensitive header lookup.
+        pub fn header(&self, name: &str) -> Option<&str> {
+            self.headers
+                .iter()
+                .find(|(n, _)| n.eq_ignore_ascii_case(name))
+                .map(|(_, v)| v.as_str())
+        }
+    }
+
+    /// Status line + parsed headers of one response.
+    struct ReplyHead {
+        status: u16,
+        chunked: bool,
+        content_length: Option<usize>,
+        headers: Vec<(String, String)>,
     }
 
     fn connect(addr: SocketAddr) -> std::io::Result<TcpStream> {
@@ -548,18 +1713,22 @@ pub mod client {
         Ok(stream)
     }
 
-    fn read_status_and_headers(
-        reader: &mut BufReader<TcpStream>,
-    ) -> std::io::Result<(u16, bool, usize)> {
+    fn read_head(reader: &mut BufReader<TcpStream>) -> std::io::Result<ReplyHead> {
         let mut line = String::new();
-        reader.read_line(&mut line)?;
+        if reader.read_line(&mut line)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed before a status line",
+            ));
+        }
         let status: u16 = line
             .split_whitespace()
             .nth(1)
             .and_then(|s| s.parse().ok())
             .unwrap_or(0);
         let mut chunked = false;
-        let mut content_length = 0usize;
+        let mut content_length = None;
+        let mut headers = Vec::new();
         loop {
             let mut h = String::new();
             if reader.read_line(&mut h)? == 0 {
@@ -576,11 +1745,44 @@ pub mod client {
                     chunked = true;
                 }
                 if name == "content-length" {
-                    content_length = value.parse().unwrap_or(0);
+                    content_length = value.parse().ok();
                 }
+                headers.push((name, value.to_string()));
             }
         }
-        Ok((status, chunked, content_length))
+        Ok(ReplyHead {
+            status,
+            chunked,
+            content_length,
+            headers,
+        })
+    }
+
+    /// Read one full response (headers + de-chunked or sized body).
+    /// Framing-aware, so it works on keep-alive connections.
+    fn read_reply(reader: &mut BufReader<TcpStream>) -> std::io::Result<HttpReply> {
+        let head = read_head(reader)?;
+        let body = if head.chunked {
+            let mut out = String::new();
+            while let Some(chunk) = read_chunk(reader)? {
+                out.push_str(&chunk);
+            }
+            out
+        } else if let Some(n) = head.content_length {
+            let mut buf = vec![0u8; n];
+            reader.read_exact(&mut buf)?;
+            String::from_utf8_lossy(&buf).into_owned()
+        } else {
+            // No framing: read to EOF (close-delimited body).
+            let mut out = String::new();
+            reader.read_to_string(&mut out)?;
+            out
+        };
+        Ok(HttpReply {
+            status: head.status,
+            body,
+            headers: head.headers,
+        })
     }
 
     /// One chunk of a chunked response body; `None` at the terminal
@@ -598,6 +1800,10 @@ pub mod client {
             )
         })?;
         if size == 0 {
+            // Consume the trailing CRLF after the terminal chunk so a
+            // keep-alive connection is left correctly framed.
+            let mut crlf = String::new();
+            let _ = reader.read_line(&mut crlf);
             return Ok(None);
         }
         let mut payload = vec![0u8; size];
@@ -614,17 +1820,20 @@ pub mod client {
         method: &str,
         path: &str,
         body: &str,
+        close: bool,
     ) -> std::io::Result<()> {
+        let conn = if close { "close" } else { "keep-alive" };
         write!(
             stream,
-            "{method} {path} HTTP/1.1\r\nHost: slab\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            "{method} {path} HTTP/1.1\r\nHost: slab\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n{body}",
             body.len()
         )?;
         stream.flush()
     }
 
-    /// Send `method path` with an optional JSON body; return the
-    /// fully-read reply (chunked bodies are de-chunked).
+    /// Send `method path` with an optional JSON body on a fresh
+    /// one-shot (`Connection: close`) connection; return the
+    /// fully-read reply.
     pub fn request(
         addr: SocketAddr,
         method: &str,
@@ -632,25 +1841,9 @@ pub mod client {
         body: Option<&str>,
     ) -> std::io::Result<HttpReply> {
         let mut stream = connect(addr)?;
-        write_request(&mut stream, method, path, body.unwrap_or(""))?;
+        write_request(&mut stream, method, path, body.unwrap_or(""), true)?;
         let mut reader = BufReader::new(stream);
-        let (status, chunked, content_length) = read_status_and_headers(&mut reader)?;
-        let body = if chunked {
-            let mut out = String::new();
-            while let Some(chunk) = read_chunk(&mut reader)? {
-                out.push_str(&chunk);
-            }
-            out
-        } else if content_length > 0 {
-            let mut buf = vec![0u8; content_length];
-            reader.read_exact(&mut buf)?;
-            String::from_utf8_lossy(&buf).into_owned()
-        } else {
-            let mut out = String::new();
-            reader.read_to_string(&mut out)?;
-            out
-        };
-        Ok(HttpReply { status, body })
+        read_reply(&mut reader)
     }
 
     pub fn get(addr: SocketAddr, path: &str) -> std::io::Result<HttpReply> {
@@ -665,6 +1858,46 @@ pub mod client {
         request(addr, "DELETE", path, None)
     }
 
+    /// A keep-alive client connection: issue many requests over one
+    /// socket, or pipeline them ([`send`](HttpConn::send) several,
+    /// then [`read_reply`](HttpConn::read_reply) each in order).
+    pub struct HttpConn {
+        writer: TcpStream,
+        reader: BufReader<TcpStream>,
+    }
+
+    impl HttpConn {
+        pub fn connect(addr: SocketAddr) -> std::io::Result<HttpConn> {
+            let stream = connect(addr)?;
+            let writer = stream.try_clone()?;
+            Ok(HttpConn {
+                writer,
+                reader: BufReader::new(stream),
+            })
+        }
+
+        /// Fire a request without waiting for the reply (pipelining).
+        pub fn send(&mut self, method: &str, path: &str, body: Option<&str>) -> std::io::Result<()> {
+            write_request(&mut self.writer, method, path, body.unwrap_or(""), false)
+        }
+
+        /// Read the next in-order reply off the connection.
+        pub fn read_reply(&mut self) -> std::io::Result<HttpReply> {
+            read_reply(&mut self.reader)
+        }
+
+        /// Blocking request/reply round trip on this connection.
+        pub fn request(
+            &mut self,
+            method: &str,
+            path: &str,
+            body: Option<&str>,
+        ) -> std::io::Result<HttpReply> {
+            self.send(method, path, body)?;
+            self.read_reply()
+        }
+    }
+
     /// An open SSE token stream (a `POST /v1/generate` with
     /// `"stream": true`): read frames one at a time, cancel from
     /// another connection, keep reading — exactly what an interactive
@@ -672,20 +1905,45 @@ pub mod client {
     pub struct SseStream {
         reader: BufReader<TcpStream>,
         pub status: u16,
+        /// Response headers (lower-cased names).
+        pub headers: Vec<(String, String)>,
+        chunked: bool,
+        content_length: Option<usize>,
     }
 
     impl SseStream {
         pub fn open(addr: SocketAddr, body: &str) -> std::io::Result<SseStream> {
             let mut stream = connect(addr)?;
-            write_request(&mut stream, "POST", "/v1/generate", body)?;
+            write_request(&mut stream, "POST", "/v1/generate", body, true)?;
             let mut reader = BufReader::new(stream);
-            let (status, _, _) = read_status_and_headers(&mut reader)?;
-            Ok(SseStream { reader, status })
+            let head = read_head(&mut reader)?;
+            Ok(SseStream {
+                reader,
+                status: head.status,
+                headers: head.headers,
+                chunked: head.chunked,
+                content_length: head.content_length,
+            })
+        }
+
+        /// Case-insensitive header lookup.
+        pub fn header(&self, name: &str) -> Option<&str> {
+            self.headers
+                .iter()
+                .find(|(n, _)| n.eq_ignore_ascii_case(name))
+                .map(|(_, v)| v.as_str())
         }
 
         /// Next `data:` frame parsed as JSON; `None` once the stream
-        /// is over.
+        /// is over. Errors if the reply was not a stream (e.g. a 429
+        /// problem body — use [`read_body`](SseStream::read_body)).
         pub fn next_frame(&mut self) -> std::io::Result<Option<Json>> {
+            if !self.chunked {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("reply {} is not a stream", self.status),
+                ));
+            }
             let Some(chunk) = read_chunk(&mut self.reader)? else {
                 return Ok(None);
             };
@@ -700,6 +1958,15 @@ pub mod client {
                 )
             })?;
             Ok(Some(v))
+        }
+
+        /// The plain (non-chunked) body of a rejected open — a 429
+        /// problem body, for instance.
+        pub fn read_body(&mut self) -> std::io::Result<String> {
+            let n = self.content_length.unwrap_or(0);
+            let mut buf = vec![0u8; n];
+            self.reader.read_exact(&mut buf)?;
+            Ok(String::from_utf8_lossy(&buf).into_owned())
         }
     }
 
@@ -733,7 +2000,10 @@ pub mod client {
 #[cfg(test)]
 mod tests {
     //! Loopback unit tests: every route over a real socket, native
-    //! engine, no artifacts — they run on every `cargo test`.
+    //! engine, no artifacts — they run on every `cargo test`. The
+    //! wire-contract corpus (raw-socket malformed requests, slow
+    //! clients, the 256-stream soak) lives in
+    //! `tests/http_integration.rs`.
 
     use super::client;
     use super::*;
@@ -746,10 +2016,14 @@ mod tests {
         ModelCfg::llama("tiny-http", 32, 8, 1, 2, 16, 12, 4)
     }
 
-    fn spin(cfg: &ModelCfg, seed: u64, scfg: ServerConfig) -> HttpServer {
+    fn spin_with(cfg: &ModelCfg, seed: u64, scfg: ServerConfig, hcfg: HttpConfig) -> HttpServer {
         let model = SlabModel::from_dense(&Params::init(cfg, seed), 1);
         let server = Server::start_with(Backend::NativeBatched(Box::new(model)), scfg);
-        HttpServer::bind("127.0.0.1:0", server).expect("bind loopback")
+        HttpServer::bind_with("127.0.0.1:0", server, hcfg).expect("bind loopback")
+    }
+
+    fn spin(cfg: &ModelCfg, seed: u64, scfg: ServerConfig) -> HttpServer {
+        spin_with(cfg, seed, scfg, HttpConfig::default())
     }
 
     #[test]
@@ -768,12 +2042,47 @@ mod tests {
         assert!(metrics.body.contains("spec_acceptance_rate"), "{}", metrics.body);
         let missing = client::get(addr, "/nope").expect("404");
         assert_eq!(missing.status, 404);
+        assert!(missing.body.contains("urn:slab:problem:not-found"), "{}", missing.body);
         let wrong_method = client::get(addr, "/v1/generate").expect("405");
         assert_eq!(wrong_method.status, 405);
         let bad_delete = client::delete(addr, "/v1/sessions/not-a-number").expect("400");
         assert_eq!(bad_delete.status, 400);
         let unknown_session = client::delete(addr, "/v1/sessions/999").expect("404");
         assert_eq!(unknown_session.status, 404);
+        http.shutdown().expect("shutdown");
+    }
+
+    #[test]
+    fn query_strings_allow_headers_and_problem_bodies() {
+        let http = spin(&tiny_cfg(), 85, ServerConfig::default());
+        let addr = http.addr();
+        // Satellite fix: the query string is stripped before routing.
+        let probed = client::get(addr, "/healthz?probe=1").expect("healthz with query");
+        assert_eq!(probed.status, 200, "{}", probed.body);
+        let json_metrics = client::get(addr, "/metrics?format=json").expect("metrics json");
+        assert_eq!(json_metrics.status, 200);
+        let v = Json::parse(&json_metrics.body).expect("metrics body is json");
+        assert!(v.get("requests").as_usize().is_some(), "{}", json_metrics.body);
+        assert!(v.get("generated_tokens").as_usize().is_some());
+        // 405s carry Allow (RFC 9110 §10.2.2) and a problem body.
+        let wrong = client::get(addr, "/v1/generate").expect("405");
+        assert_eq!(wrong.status, 405);
+        assert_eq!(wrong.header("allow"), Some("POST"));
+        assert_eq!(wrong.header("content-type"), Some("application/problem+json"));
+        assert!(
+            wrong.body.contains("urn:slab:problem:method-not-allowed"),
+            "{}",
+            wrong.body
+        );
+        // 400s carry field-level context.
+        let bad = client::post(addr, "/v1/generate", r#"{"prompt": "text"}"#).expect("400");
+        assert_eq!(bad.status, 400);
+        assert!(bad.body.contains("\"field\":\"prompt\""), "{}", bad.body);
+        assert!(
+            bad.body.contains("urn:slab:problem:invalid-request"),
+            "{}",
+            bad.body
+        );
         http.shutdown().expect("shutdown");
     }
 
@@ -791,11 +2100,16 @@ mod tests {
             r#"{"prompt": [5], "stream": "yes"}"#,
             r#"{"prompt": [5], "deadline_ms": -1}"#,
             // Finite but not representable as a Duration: must be a
-            // 400, not a panic in the connection handler.
+            // 400, not a panic in a worker thread.
             r#"{"prompt": [5], "deadline_ms": 1e300}"#,
         ] {
             let reply = client::post(addr, "/v1/generate", bad).expect("reply");
             assert_eq!(reply.status, 400, "body {bad:?} → {}", reply.body);
+            assert!(
+                reply.body.contains("urn:slab:problem:"),
+                "body {bad:?} → {}",
+                reply.body
+            );
         }
         // The server is still healthy afterwards.
         let ok = client::post(addr, "/v1/generate", r#"{"prompt": [5, 6], "max_new": 3}"#)
@@ -899,5 +2213,102 @@ mod tests {
         let stats = http.shutdown().expect("shutdown");
         assert_eq!(stats.cancelled, 1);
         assert_eq!(stats.requests, 1, "the cancelled session still counts");
+    }
+
+    #[test]
+    fn keep_alive_reuses_and_budgets_connections() {
+        let http = spin(&tiny_cfg(), 86, ServerConfig::default());
+        let addr = http.addr();
+        let mut conn = client::HttpConn::connect(addr).expect("connect");
+        for _ in 0..3 {
+            let r = conn.request("GET", "/healthz", None).expect("keep-alive request");
+            assert_eq!(r.status, 200);
+            assert_eq!(r.header("connection"), Some("keep-alive"));
+        }
+        // Pipelining: two requests written before either reply is
+        // read, answered in order on the same connection.
+        conn.send("GET", "/healthz", None).expect("send 1");
+        conn.send("POST", "/v1/generate", Some(r#"{"prompt": [5], "max_new": 2}"#))
+            .expect("send 2");
+        let r1 = conn.read_reply().expect("pipelined 1");
+        let r2 = conn.read_reply().expect("pipelined 2");
+        assert_eq!(r1.status, 200);
+        assert!(r1.body.contains("\"status\":\"ok\""), "{}", r1.body);
+        assert_eq!(r2.status, 200);
+        assert!(client::parse_generate_reply(&r2.body).is_some(), "{}", r2.body);
+        http.shutdown().expect("shutdown");
+
+        // A request budget of 2: the second response announces
+        // `Connection: close` and the socket really closes.
+        let http = spin_with(
+            &tiny_cfg(),
+            87,
+            ServerConfig::default(),
+            HttpConfig {
+                keep_alive_requests: 2,
+                ..HttpConfig::default()
+            },
+        );
+        let addr = http.addr();
+        let mut conn = client::HttpConn::connect(addr).expect("connect");
+        let r1 = conn.request("GET", "/healthz", None).expect("first");
+        assert_eq!(r1.header("connection"), Some("keep-alive"));
+        let r2 = conn.request("GET", "/healthz", None).expect("second");
+        assert_eq!(r2.header("connection"), Some("close"));
+        assert!(
+            conn.request("GET", "/healthz", None).is_err(),
+            "budget-exhausted connection must be closed"
+        );
+        http.shutdown().expect("shutdown");
+    }
+
+    #[test]
+    fn connection_limit_answers_503_with_retry_after() {
+        let http = spin_with(
+            &tiny_cfg(),
+            88,
+            ServerConfig::default(),
+            HttpConfig {
+                max_conns: 1,
+                ..HttpConfig::default()
+            },
+        );
+        let addr = http.addr();
+        // Occupy the single slot with a keep-alive connection; the
+        // completed request proves the loop registered it.
+        let mut held = client::HttpConn::connect(addr).expect("connect");
+        let ok = held.request("GET", "/healthz", None).expect("held conn request");
+        assert_eq!(ok.status, 200);
+        let refused = client::get(addr, "/healthz").expect("over-limit reply");
+        assert_eq!(refused.status, 503);
+        assert!(refused.header("retry-after").is_some(), "503 must carry Retry-After");
+        assert!(
+            refused.body.contains("urn:slab:problem:overloaded"),
+            "{}",
+            refused.body
+        );
+        drop(held);
+        http.shutdown().expect("shutdown");
+    }
+
+    #[test]
+    fn poll_fallback_backend_serves_requests() {
+        let http = spin_with(
+            &tiny_cfg(),
+            89,
+            ServerConfig::default(),
+            HttpConfig {
+                force_poll: true,
+                ..HttpConfig::default()
+            },
+        );
+        let addr = http.addr();
+        let ok = client::post(addr, "/v1/generate", r#"{"prompt": [5, 6], "max_new": 3}"#)
+            .expect("generate");
+        assert_eq!(ok.status, 200, "{}", ok.body);
+        let (_, r) = client::parse_generate_reply(&ok.body).expect("parse");
+        assert!(!r.rejected && !r.tokens.is_empty());
+        let stats = http.shutdown().expect("shutdown");
+        assert_eq!(stats.requests, 1);
     }
 }

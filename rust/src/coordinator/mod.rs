@@ -14,7 +14,7 @@ pub use compress::{
     compress_model, load_packed_checkpoint, CaptureEngine, CompressJob, CompressOut,
     CompressReport, CompressedModel, Engine, LayerReport, PipelineError,
 };
-pub use http::HttpServer;
+pub use http::{HttpConfig, HttpServer};
 pub use serve::{
     collect_events, Backend, CancelHandle, Event, Request, Response, Scheduler, SchedulerConfig,
     ServeStats, Server, ServerConfig, Session, SessionStats,

@@ -711,6 +711,18 @@ impl Server {
         s
     }
 
+    /// Submissions currently waiting at the admission gate (submitted
+    /// but not yet decoding). The HTTP front-end derives its
+    /// `Retry-After` hint from this depth (DESIGN.md §15).
+    pub fn queue_depth(&self) -> usize {
+        self.gate.pending.load(Ordering::Acquire)
+    }
+
+    /// The admission-gate capacity ([`ServerConfig::queue_cap`]).
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
+    }
+
     /// Stop accepting requests, drain, and return aggregate stats.
     /// Typed errors instead of panics: a vanished or panicked router
     /// thread surfaces as [`RuntimeError::Router`].

@@ -17,7 +17,8 @@
 //! slab serve   --http 127.0.0.1:8080 [--model small] [--ckpt runs/small.slabckpt]
 //!              [--packed runs/small_slab.packed] [--batch 8] [--queue-cap 64]
 //!              [--seq-cap N] [--deadline-ms 0] [--kv-page 8] [--page-budget 0]
-//!              [--no-prefix-share]                                           # artifact-free
+//!              [--no-prefix-share] [--max-conns 256] [--keep-alive 64]
+//!              [--http-workers 8]                                            # artifact-free
 //!              [--speculate] [--draft-len 4] [--draft-rank R]  # lossless speculative decode
 //! ```
 //!
@@ -55,8 +56,8 @@
 
 use slab::baselines::{Method, SparseGptConfig};
 use slab::coordinator::{
-    load_packed_checkpoint, Backend, CaptureEngine, CompressJob, Engine, HttpServer, Request,
-    SchedulerConfig, Server, ServerConfig,
+    load_packed_checkpoint, Backend, CaptureEngine, CompressJob, Engine, HttpConfig, HttpServer,
+    Request, SchedulerConfig, Server, ServerConfig,
 };
 use slab::eval::{perplexity, zero_shot};
 use slab::experiments::{self, Lab, SweepConfig};
@@ -257,7 +258,18 @@ fn run_http_serve(args: &Args, addr: &str) -> anyhow::Result<()> {
         ..Default::default()
     };
     let server = Server::start_with(Backend::NativeBatched(Box::new(model)), scfg);
-    let http = HttpServer::bind(addr, server).map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+    // Front-end knobs (DESIGN.md §15): --max-conns caps open
+    // connections, --keep-alive is the per-connection request budget
+    // (0 = Connection: close on every response), --http-workers sizes
+    // the pool driving the blocking session API.
+    let hcfg = HttpConfig {
+        max_conns: args.get_usize("max-conns", 256)?,
+        keep_alive_requests: args.get_usize("keep-alive", 64)?,
+        workers: args.get_usize("http-workers", 8)?,
+        ..Default::default()
+    };
+    let http = HttpServer::bind_with(addr, server, hcfg)
+        .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
     println!("listening on http://{}", http.addr());
     println!("  POST   /v1/generate       {{\"prompt\": [5,6,7], \"max_new\": 16, \"stream\": true, \"deadline_ms\": 500}}");
     println!("  DELETE /v1/sessions/{{id}}  cancel a live stream");

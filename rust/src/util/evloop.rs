@@ -1,0 +1,604 @@
+//! Readiness polling over raw file descriptors — the event substrate
+//! for the HTTP front-end (`coordinator::http`), standing in for what
+//! `mio`/`tokio` would provide in a crates.io build.
+//!
+//! Two interchangeable backends behind one [`Poller`] API:
+//!
+//! * **epoll** (Linux, default): `epoll_create1` / `epoll_ctl` /
+//!   `epoll_wait` through hand-declared FFI — O(ready) wakeups.
+//! * **poll** (portable fallback, and [`Poller::new`]`(force_poll =
+//!   true)` in tests): POSIX `poll(2)` over a rebuilt fd array —
+//!   O(registered) per wait, which is fine at the front-end's
+//!   connection limits and keeps the fallback exercised on Linux CI
+//!   instead of rotting.
+//!
+//! Plus a self-pipe [`Waker`] so worker threads can interrupt a
+//! blocked [`Poller::wait`], and `setsockopt` helpers the slow-client
+//! tests use to shrink kernel socket buffers to deterministic sizes.
+//!
+//! Every `unsafe` block here is a single FFI call whose arguments are
+//! fully owned by the caller (no retained pointers, no callbacks).
+//! This module is intentionally *not* in the miri unsafe-audit filter:
+//! foreign calls cannot run under the interpreter, so the audit
+//! surface for it is this one file plus its loopback unit tests.
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, TcpStream};
+use std::os::raw::{c_int, c_void};
+use std::os::unix::io::{FromRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Interest bit: readiness to read (or peer hang-up).
+pub const EV_READ: u8 = 0b01;
+/// Interest bit: readiness to write.
+pub const EV_WRITE: u8 = 0b10;
+
+/// One readiness report from [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct PollEvent {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    pub error: bool,
+}
+
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct PollFd {
+    fd: c_int,
+    events: i16,
+    revents: i16,
+}
+
+#[cfg(target_os = "linux")]
+type Nfds = std::os::raw::c_ulong;
+#[cfg(not(target_os = "linux"))]
+type Nfds = std::os::raw::c_uint;
+
+const POLLIN: i16 = 0x1;
+const POLLOUT: i16 = 0x4;
+const POLLERR: i16 = 0x8;
+const POLLHUP: i16 = 0x10;
+const POLLNVAL: i16 = 0x20;
+
+#[cfg(target_os = "linux")]
+const SOL_SOCKET: c_int = 1;
+#[cfg(target_os = "linux")]
+const SO_SNDBUF: c_int = 7;
+#[cfg(target_os = "linux")]
+const SO_RCVBUF: c_int = 8;
+#[cfg(not(target_os = "linux"))]
+const SOL_SOCKET: c_int = 0xffff;
+#[cfg(not(target_os = "linux"))]
+const SO_SNDBUF: c_int = 0x1001;
+#[cfg(not(target_os = "linux"))]
+const SO_RCVBUF: c_int = 0x1002;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: Nfds, timeout_ms: c_int) -> c_int;
+    fn pipe(fds: *mut c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    fn close(fd: c_int) -> c_int;
+    fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+    fn connect(fd: c_int, addr: *const c_void, len: u32) -> c_int;
+    fn setsockopt(fd: c_int, level: c_int, name: c_int, value: *const c_void, len: u32) -> c_int;
+}
+
+#[cfg(target_os = "linux")]
+mod ep {
+    use super::c_int;
+
+    /// Kernel ABI: `epoll_event` is packed on x86_64 only (the u64
+    /// payload would otherwise pad to 16 bytes); other arches use
+    /// natural alignment. Mirrors libc's `cfg_attr`.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+    pub const EPOLLIN: u32 = 0x1;
+    pub const EPOLLOUT: u32 = 0x4;
+    pub const EPOLLERR: u32 = 0x8;
+    pub const EPOLLHUP: u32 = 0x10;
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, ev: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            evs: *mut EpollEvent,
+            max_events: c_int,
+            timeout_ms: c_int,
+        ) -> c_int;
+    }
+}
+
+enum Backend {
+    #[cfg(target_os = "linux")]
+    Epoll { epfd: RawFd },
+    /// token -> (fd, interest); the pollfd array is rebuilt per wait.
+    Poll { fds: HashMap<u64, (RawFd, u8)> },
+}
+
+/// Level-triggered readiness poller. Register fds under caller-chosen
+/// `u64` tokens; [`wait`](Poller::wait) reports which tokens are
+/// ready. The caller keeps ownership of every fd (dropping a
+/// registered fd without `deregister` is reported as `error` by the
+/// poll backend and silently unregistered by epoll — the front-end
+/// always deregisters first).
+pub struct Poller {
+    backend: Backend,
+}
+
+#[cfg(target_os = "linux")]
+fn ep_ctl(epfd: RawFd, op: c_int, fd: RawFd, token: u64, interest: u8) -> io::Result<()> {
+    let mut ev = ep::EpollEvent {
+        events: interest_to_epoll(interest),
+        data: token,
+    };
+    let rc = unsafe { ep::epoll_ctl(epfd, op, fd, &mut ev) };
+    if rc < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn interest_to_epoll(interest: u8) -> u32 {
+    let mut e = 0u32;
+    if interest & EV_READ != 0 {
+        e |= ep::EPOLLIN;
+    }
+    if interest & EV_WRITE != 0 {
+        e |= ep::EPOLLOUT;
+    }
+    e
+}
+
+impl Poller {
+    /// `force_poll` selects the portable `poll(2)` backend even where
+    /// epoll is available, so both code paths run on Linux CI.
+    pub fn new(force_poll: bool) -> io::Result<Poller> {
+        #[cfg(target_os = "linux")]
+        if !force_poll {
+            let epfd = unsafe { ep::epoll_create1(ep::EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            return Ok(Poller {
+                backend: Backend::Epoll { epfd },
+            });
+        }
+        #[cfg(not(target_os = "linux"))]
+        let _ = force_poll;
+        Ok(Poller {
+            backend: Backend::Poll {
+                fds: HashMap::new(),
+            },
+        })
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: u8) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd } => ep_ctl(*epfd, ep::EPOLL_CTL_ADD, fd, token, interest),
+            Backend::Poll { fds } => {
+                fds.insert(token, (fd, interest));
+                Ok(())
+            }
+        }
+    }
+
+    pub fn modify(&mut self, fd: RawFd, token: u64, interest: u8) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd } => ep_ctl(*epfd, ep::EPOLL_CTL_MOD, fd, token, interest),
+            Backend::Poll { fds } => {
+                fds.insert(token, (fd, interest));
+                Ok(())
+            }
+        }
+    }
+
+    pub fn deregister(&mut self, fd: RawFd, token: u64) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd } => ep_ctl(*epfd, ep::EPOLL_CTL_DEL, fd, 0, 0),
+            Backend::Poll { fds } => {
+                fds.remove(&token);
+                Ok(())
+            }
+        }
+    }
+
+    /// Block up to `timeout` (`None` = indefinitely) and fill `out`
+    /// (cleared first) with ready tokens. `EINTR` is retried.
+    pub fn wait(&mut self, out: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()> {
+        out.clear();
+        let ms: c_int = match timeout {
+            None => -1,
+            Some(d) => d.as_millis().min(i32::MAX as u128) as c_int,
+        };
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd } => {
+                let mut evs = [ep::EpollEvent { events: 0, data: 0 }; 64];
+                let n = loop {
+                    let rc =
+                        unsafe { ep::epoll_wait(*epfd, evs.as_mut_ptr(), evs.len() as c_int, ms) };
+                    if rc >= 0 {
+                        break rc as usize;
+                    }
+                    let err = io::Error::last_os_error();
+                    if err.kind() != io::ErrorKind::Interrupted {
+                        return Err(err);
+                    }
+                };
+                for ev in evs.iter().take(n) {
+                    // By-value copies: never take references into the
+                    // (possibly packed) struct.
+                    let events = ev.events;
+                    let token = ev.data;
+                    out.push(PollEvent {
+                        token,
+                        readable: events & (ep::EPOLLIN | ep::EPOLLHUP) != 0,
+                        writable: events & ep::EPOLLOUT != 0,
+                        error: events & (ep::EPOLLERR | ep::EPOLLHUP) != 0,
+                    });
+                }
+                Ok(())
+            }
+            Backend::Poll { fds } => {
+                let mut pfds: Vec<PollFd> = Vec::with_capacity(fds.len());
+                let mut tokens: Vec<u64> = Vec::with_capacity(fds.len());
+                for (&token, &(fd, interest)) in fds.iter() {
+                    let mut events: i16 = 0;
+                    if interest & EV_READ != 0 {
+                        events |= POLLIN;
+                    }
+                    if interest & EV_WRITE != 0 {
+                        events |= POLLOUT;
+                    }
+                    pfds.push(PollFd {
+                        fd,
+                        events,
+                        revents: 0,
+                    });
+                    tokens.push(token);
+                }
+                let n = loop {
+                    let rc = unsafe { poll(pfds.as_mut_ptr(), pfds.len() as Nfds, ms) };
+                    if rc >= 0 {
+                        break rc;
+                    }
+                    let err = io::Error::last_os_error();
+                    if err.kind() != io::ErrorKind::Interrupted {
+                        return Err(err);
+                    }
+                };
+                if n == 0 {
+                    return Ok(());
+                }
+                for (i, p) in pfds.iter().enumerate() {
+                    if p.revents == 0 {
+                        continue;
+                    }
+                    out.push(PollEvent {
+                        token: tokens[i],
+                        readable: p.revents & (POLLIN | POLLHUP) != 0,
+                        writable: p.revents & POLLOUT != 0,
+                        error: p.revents & (POLLERR | POLLHUP | POLLNVAL) != 0,
+                    });
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        #[cfg(target_os = "linux")]
+        if let Backend::Epoll { epfd } = self.backend {
+            let _ = unsafe { close(epfd) };
+        }
+    }
+}
+
+struct WakerInner {
+    write_fd: RawFd,
+    armed: AtomicBool,
+}
+
+impl Drop for WakerInner {
+    fn drop(&mut self) {
+        let _ = unsafe { close(self.write_fd) };
+    }
+}
+
+/// Self-pipe waker: worker threads call [`Waker::wake`] to interrupt
+/// the event loop's [`Poller::wait`]. The `armed` flag coalesces
+/// wakes so the pipe holds at most one unread byte — `wake` can never
+/// block on a full pipe no matter how many messages are queued.
+#[derive(Clone)]
+pub struct Waker {
+    inner: Arc<WakerInner>,
+}
+
+/// Loop-side end of the waker pipe. Register [`fd`](WakeReader::fd)
+/// for `EV_READ`; on readiness call [`drain`](WakeReader::drain)
+/// *before* draining the message queue, so a send racing the drain
+/// still lands a fresh wake byte.
+pub struct WakeReader {
+    read_fd: RawFd,
+    inner: Arc<WakerInner>,
+}
+
+/// Create a connected (waker, reader) pair over a fresh pipe.
+pub fn waker() -> io::Result<(Waker, WakeReader)> {
+    let mut fds = [0 as c_int; 2];
+    let rc = unsafe { pipe(fds.as_mut_ptr()) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    let inner = Arc::new(WakerInner {
+        write_fd: fds[1],
+        armed: AtomicBool::new(false),
+    });
+    Ok((
+        Waker {
+            inner: inner.clone(),
+        },
+        WakeReader {
+            read_fd: fds[0],
+            inner,
+        },
+    ))
+}
+
+impl Waker {
+    pub fn wake(&self) {
+        // Only the first wake between two drains writes a byte; the
+        // rest piggyback. Rust ignores SIGPIPE, so writing after the
+        // reader closed is a plain EPIPE error we can drop.
+        if !self.inner.armed.swap(true, Ordering::AcqRel) {
+            let byte = [1u8];
+            let _ = unsafe { write(self.inner.write_fd, byte.as_ptr() as *const c_void, 1) };
+        }
+    }
+}
+
+impl WakeReader {
+    pub fn fd(&self) -> RawFd {
+        self.read_fd
+    }
+
+    /// Drain the wake byte and re-arm. Call only after the fd polled
+    /// readable (the pipe is blocking; level-triggered readiness
+    /// guarantees the byte is still there).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        let _ = unsafe { read(self.read_fd, buf.as_mut_ptr() as *mut c_void, buf.len()) };
+        self.inner.armed.store(false, Ordering::Release);
+    }
+}
+
+impl Drop for WakeReader {
+    fn drop(&mut self) {
+        let _ = unsafe { close(self.read_fd) };
+    }
+}
+
+fn set_buf_opt(fd: RawFd, opt: c_int, bytes: usize) -> io::Result<()> {
+    let v: c_int = bytes.min(i32::MAX as usize) as c_int;
+    let rc = unsafe {
+        setsockopt(
+            fd,
+            SOL_SOCKET,
+            opt,
+            (&v as *const c_int) as *const c_void,
+            std::mem::size_of::<c_int>() as u32,
+        )
+    };
+    if rc < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(())
+    }
+}
+
+/// Clamp a socket's kernel send buffer. The HTTP front-end applies
+/// this to accepted sockets when `HttpConfig::sndbuf` is set, making
+/// slow-client backpressure observable at small byte counts in tests
+/// instead of being absorbed by ~200 KB of default kernel buffering.
+pub fn set_sndbuf(fd: RawFd, bytes: usize) -> io::Result<()> {
+    set_buf_opt(fd, SO_SNDBUF, bytes)
+}
+
+/// Clamp a socket's kernel receive buffer (post-creation).
+pub fn set_rcvbuf(fd: RawFd, bytes: usize) -> io::Result<()> {
+    set_buf_opt(fd, SO_RCVBUF, bytes)
+}
+
+/// Connect a TCP socket whose receive buffer is clamped *before* the
+/// handshake — `SO_RCVBUF` set pre-connect caps the TCP window the
+/// peer is ever offered, which post-connect shrinking cannot
+/// retroactively do. Test-side lever for the slow-client
+/// write-budget path (IPv4 only; that is all the loopback tests use).
+#[cfg(target_os = "linux")]
+pub fn connect_with_rcvbuf(addr: SocketAddr, bytes: usize) -> io::Result<TcpStream> {
+    let SocketAddr::V4(v4) = addr else {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            "connect_with_rcvbuf supports ipv4 addresses only",
+        ));
+    };
+    const AF_INET: c_int = 2;
+    const SOCK_STREAM: c_int = 1;
+    #[repr(C)]
+    struct SockaddrIn {
+        sin_family: u16,
+        sin_port: u16,
+        sin_addr: u32,
+        sin_zero: [u8; 8],
+    }
+    let fd = unsafe { socket(AF_INET, SOCK_STREAM, 0) };
+    if fd < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    if let Err(e) = set_buf_opt(fd, SO_RCVBUF, bytes) {
+        let _ = unsafe { close(fd) };
+        return Err(e);
+    }
+    let sa = SockaddrIn {
+        sin_family: AF_INET as u16,
+        sin_port: v4.port().to_be(),
+        sin_addr: u32::from_ne_bytes(v4.ip().octets()),
+        sin_zero: [0u8; 8],
+    };
+    let rc = unsafe {
+        connect(
+            fd,
+            (&sa as *const SockaddrIn) as *const c_void,
+            std::mem::size_of::<SockaddrIn>() as u32,
+        )
+    };
+    if rc < 0 {
+        let err = io::Error::last_os_error();
+        let _ = unsafe { close(fd) };
+        return Err(err);
+    }
+    // The fd is a connected, healthy TCP socket we exclusively own.
+    Ok(unsafe { TcpStream::from_raw_fd(fd) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::time::Instant;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = l.accept().unwrap();
+        (a, b)
+    }
+
+    fn backend_reports_readiness(force_poll: bool) {
+        let (mut a, b) = pair();
+        b.set_nonblocking(true).unwrap();
+        let mut p = Poller::new(force_poll).unwrap();
+        p.register(b.as_raw_fd(), 7, EV_READ).unwrap();
+        let mut evs = Vec::new();
+        // Nothing to read yet: a short wait reports no readable token.
+        p.wait(&mut evs, Some(Duration::from_millis(10))).unwrap();
+        assert!(evs.iter().all(|e| e.token != 7 || !e.readable));
+        a.write_all(b"x").unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            p.wait(&mut evs, Some(Duration::from_millis(50))).unwrap();
+            if evs.iter().any(|e| e.token == 7 && e.readable) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "no readable event within 5s");
+        }
+        // Write interest on an empty send buffer reports writable.
+        p.modify(b.as_raw_fd(), 7, EV_READ | EV_WRITE).unwrap();
+        p.wait(&mut evs, Some(Duration::from_millis(100))).unwrap();
+        assert!(evs.iter().any(|e| e.token == 7 && e.writable));
+        p.deregister(b.as_raw_fd(), 7).unwrap();
+        p.wait(&mut evs, Some(Duration::from_millis(10))).unwrap();
+        assert!(evs.iter().all(|e| e.token != 7));
+        drop(a);
+        drop(b);
+    }
+
+    #[test]
+    fn default_backend_reports_readiness() {
+        backend_reports_readiness(false);
+    }
+
+    #[test]
+    fn poll_fallback_backend_reports_readiness() {
+        backend_reports_readiness(true);
+    }
+
+    fn waker_unblocks_wait(force_poll: bool) {
+        let (w, r) = waker().unwrap();
+        let mut p = Poller::new(force_poll).unwrap();
+        p.register(r.fd(), 9, EV_READ).unwrap();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            // Coalescing: many wakes land at most one pipe byte.
+            for _ in 0..100 {
+                w.wake();
+            }
+        });
+        let mut evs = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            p.wait(&mut evs, Some(Duration::from_millis(100))).unwrap();
+            if evs.iter().any(|e| e.token == 9 && e.readable) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "waker never fired");
+        }
+        t.join().unwrap();
+        r.drain();
+        // Drained and re-armed: the pipe is quiet again.
+        p.wait(&mut evs, Some(Duration::from_millis(10))).unwrap();
+        assert!(evs.iter().all(|e| e.token != 9 || !e.readable));
+    }
+
+    #[test]
+    fn waker_unblocks_default_backend() {
+        waker_unblocks_wait(false);
+    }
+
+    #[test]
+    fn waker_unblocks_poll_backend() {
+        waker_unblocks_wait(true);
+    }
+
+    #[test]
+    fn sndbuf_clamp_applies() {
+        let (a, _b) = pair();
+        set_sndbuf(a.as_raw_fd(), 4096).unwrap();
+        set_rcvbuf(a.as_raw_fd(), 4096).unwrap();
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn connect_with_rcvbuf_talks_tcp() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = l.accept().unwrap();
+            let mut buf = [0u8; 4];
+            s.read_exact(&mut buf).unwrap();
+            s.write_all(&buf).unwrap();
+        });
+        let mut s = connect_with_rcvbuf(addr, 4096).unwrap();
+        s.write_all(b"ping").unwrap();
+        let mut buf = [0u8; 4];
+        s.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"ping");
+        h.join().unwrap();
+    }
+}

@@ -492,6 +492,445 @@ fn utf8_len(b: u8) -> Option<usize> {
     }
 }
 
+// ----------------------------------------------------------------------
+// Lazy path-scanning reader
+// ----------------------------------------------------------------------
+
+/// Maximum container nesting the lazy scanner accepts. The tree
+/// parser above recurses and would exhaust the thread stack on an
+/// adversarial `[[[[…` body; the wire path must not, so the scanner
+/// is iterative with an explicit depth cap.
+pub const LAZY_MAX_DEPTH: usize = 64;
+
+/// Lazy path-scanning JSON reader: one allocation-free *skip-scan*
+/// validates well-formedness up front, then [`path`](LazyJson::path)
+/// re-scans to a key path and returns the raw value slice without
+/// ever building a tree. For request bodies where only a few fields
+/// are read (`/v1/generate` reads four), this skips the
+/// `BTreeMap`/`String`/`Vec` churn of [`Json::parse`] entirely; the
+/// prompt array additionally gets a digits-to-`i64` fast path
+/// ([`RawJson::int_array`]).
+///
+/// Contracts that differ from the tree parser, by design:
+/// * duplicate keys: **first** occurrence wins (scan order); the tree
+///   parser's `BTreeMap` keeps the last;
+/// * `\uXXXX` escapes are hex-validated when skipped, but surrogate
+///   pairing is only checked when a string is actually *extracted*.
+pub struct LazyJson<'a> {
+    src: &'a str,
+}
+
+/// A raw value slice from an already-validated document, returned by
+/// [`LazyJson::path`]. Conversions re-scan the (small) slice.
+#[derive(Clone, Copy, Debug)]
+pub struct RawJson<'a> {
+    src: &'a str,
+}
+
+struct Skip<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Skip<'a> {
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError {
+            msg: msg.to_string(),
+            pos: self.pos,
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(b) = self.peek() {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn literal(&mut self, word: &[u8]) -> Result<(), JsonError> {
+        if self.bytes[self.pos..].starts_with(word) {
+            self.pos += word.len();
+            Ok(())
+        } else {
+            Err(self.err("invalid literal"))
+        }
+    }
+
+    /// Skip one complete string, returning the raw inner slice
+    /// (between the quotes, escapes unresolved).
+    fn skip_string(&mut self) -> Result<&'a [u8], JsonError> {
+        self.expect(b'"')?;
+        let start = self.pos;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let inner = &self.bytes[start..self.pos];
+                    self.pos += 1;
+                    return Ok(inner);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'u') => {
+                            self.pos += 1;
+                            for _ in 0..4 {
+                                if !self.peek().is_some_and(|b| b.is_ascii_hexdigit()) {
+                                    return Err(self.err("bad \\u escape"));
+                                }
+                                self.pos += 1;
+                            }
+                        }
+                        Some(b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't') => {
+                            self.pos += 1;
+                        }
+                        _ => return Err(self.err("invalid escape")),
+                    }
+                }
+                Some(b) if b < 0x20 => return Err(self.err("control char in string")),
+                Some(_) => self.pos += 1,
+            }
+        }
+    }
+
+    fn skip_number(&mut self) -> Result<(), JsonError> {
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let mut digits = 0usize;
+        while self.peek().is_some_and(|b| b.is_ascii_digit()) {
+            self.pos += 1;
+            digits += 1;
+        }
+        if digits == 0 {
+            return Err(self.err("expected digits"));
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            let mut frac = 0usize;
+            while self.peek().is_some_and(|b| b.is_ascii_digit()) {
+                self.pos += 1;
+                frac += 1;
+            }
+            if frac == 0 {
+                return Err(self.err("expected fraction digits"));
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.pos += 1;
+            }
+            let mut exp = 0usize;
+            while self.peek().is_some_and(|b| b.is_ascii_digit()) {
+                self.pos += 1;
+                exp += 1;
+            }
+            if exp == 0 {
+                return Err(self.err("expected exponent digits"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Consume exactly one complete JSON value. Iterative — an
+    /// explicit container stack capped at [`LAZY_MAX_DEPTH`] — so
+    /// adversarial nesting cannot overflow the thread stack.
+    fn skip_value(&mut self) -> Result<(), JsonError> {
+        let mut stack: Vec<u8> = Vec::new();
+        'value: loop {
+            self.skip_ws();
+            match self.peek() {
+                Some(b'{') => {
+                    self.pos += 1;
+                    self.skip_ws();
+                    if self.peek() == Some(b'}') {
+                        self.pos += 1; // empty object: a finished value
+                    } else {
+                        if stack.len() >= LAZY_MAX_DEPTH {
+                            return Err(self.err("nesting too deep"));
+                        }
+                        stack.push(b'{');
+                        self.skip_string()?;
+                        self.skip_ws();
+                        self.expect(b':')?;
+                        continue 'value;
+                    }
+                }
+                Some(b'[') => {
+                    self.pos += 1;
+                    self.skip_ws();
+                    if self.peek() == Some(b']') {
+                        self.pos += 1;
+                    } else {
+                        if stack.len() >= LAZY_MAX_DEPTH {
+                            return Err(self.err("nesting too deep"));
+                        }
+                        stack.push(b'[');
+                        continue 'value;
+                    }
+                }
+                Some(b'"') => {
+                    self.skip_string()?;
+                }
+                Some(b't') => self.literal(b"true")?,
+                Some(b'f') => self.literal(b"false")?,
+                Some(b'n') => self.literal(b"null")?,
+                Some(b) if b == b'-' || b.is_ascii_digit() => self.skip_number()?,
+                _ => return Err(self.err("expected a JSON value")),
+            }
+            // One value finished; unwind enclosing containers.
+            loop {
+                let Some(&top) = stack.last() else {
+                    return Ok(());
+                };
+                self.skip_ws();
+                match (top, self.peek()) {
+                    (b'[', Some(b',')) => {
+                        self.pos += 1;
+                        continue 'value;
+                    }
+                    (b'[', Some(b']')) => {
+                        self.pos += 1;
+                        stack.pop();
+                    }
+                    (b'{', Some(b',')) => {
+                        self.pos += 1;
+                        self.skip_ws();
+                        self.skip_string()?;
+                        self.skip_ws();
+                        self.expect(b':')?;
+                        continue 'value;
+                    }
+                    (b'{', Some(b'}')) => {
+                        self.pos += 1;
+                        stack.pop();
+                    }
+                    (b'[', _) => return Err(self.err("expected ',' or ']'")),
+                    _ => return Err(self.err("expected ',' or '}'")),
+                }
+            }
+        }
+    }
+}
+
+fn key_matches(raw: &[u8], want: &str) -> bool {
+    if !raw.contains(&b'\\') {
+        return raw == want.as_bytes();
+    }
+    // Escaped key (rare): decode through the tree parser's string
+    // reader for exact escape semantics.
+    let Ok(raw_str) = std::str::from_utf8(raw) else {
+        return false;
+    };
+    let quoted = format!("\"{raw_str}\"");
+    let mut p = Parser {
+        bytes: quoted.as_bytes(),
+        pos: 0,
+    };
+    match p.string() {
+        Ok(s) => s == want,
+        Err(_) => false,
+    }
+}
+
+impl<'a> LazyJson<'a> {
+    /// Validate `src` as a single JSON document without building a
+    /// tree. Rejects trailing garbage and nesting beyond
+    /// [`LAZY_MAX_DEPTH`].
+    pub fn parse(src: &'a str) -> Result<LazyJson<'a>, JsonError> {
+        let mut s = Skip {
+            bytes: src.as_bytes(),
+            pos: 0,
+        };
+        s.skip_ws();
+        s.skip_value()?;
+        s.skip_ws();
+        if s.pos != s.bytes.len() {
+            return Err(s.err("trailing characters"));
+        }
+        Ok(LazyJson { src })
+    }
+
+    /// The whole document as a raw value.
+    pub fn root(&self) -> RawJson<'a> {
+        RawJson {
+            src: self.src.trim(),
+        }
+    }
+
+    /// Scan to `path` (object keys, outermost first) and return the
+    /// raw value slice; `None` if a segment is missing or the value
+    /// on the way is not an object.
+    pub fn path(&self, path: &[&str]) -> Option<RawJson<'a>> {
+        let mut s = Skip {
+            bytes: self.src.as_bytes(),
+            pos: 0,
+        };
+        for seg in path {
+            s.skip_ws();
+            if s.peek() != Some(b'{') {
+                return None;
+            }
+            s.pos += 1;
+            loop {
+                s.skip_ws();
+                if s.peek() == Some(b'}') {
+                    return None; // key absent in this object
+                }
+                let key = s.skip_string().ok()?;
+                s.skip_ws();
+                s.expect(b':').ok()?;
+                if key_matches(key, seg) {
+                    break;
+                }
+                s.skip_value().ok()?;
+                s.skip_ws();
+                match s.peek() {
+                    Some(b',') => s.pos += 1,
+                    _ => return None, // '}' closes without the key
+                }
+            }
+        }
+        s.skip_ws();
+        let start = s.pos;
+        s.skip_value().ok()?;
+        Some(RawJson {
+            src: &self.src[start..s.pos],
+        })
+    }
+}
+
+impl<'a> RawJson<'a> {
+    /// The raw text of the value.
+    pub fn text(&self) -> &'a str {
+        self.src
+    }
+
+    pub fn is_null(&self) -> bool {
+        self.src == "null"
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self.src {
+            "true" => Some(true),
+            "false" => Some(false),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        let b = *self.src.as_bytes().first()?;
+        if b != b'-' && !b.is_ascii_digit() {
+            return None; // not a number token ("inf"/"nan" never leak in)
+        }
+        self.src.parse::<f64>().ok()
+    }
+
+    /// Same integer contract as [`Json::as_i64`]: integral value with
+    /// |n| ≤ 2^53 (`3e2` is 300, `1.5` is rejected).
+    pub fn as_i64(&self) -> Option<i64> {
+        if let Ok(v) = self.src.parse::<i64>() {
+            return Some(v);
+        }
+        let n = self.as_f64()?;
+        if n.fract() == 0.0 && n.abs() <= 9_007_199_254_740_992.0 {
+            Some(n as i64)
+        } else {
+            None
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    /// Decode a string value (escapes resolved; allocates).
+    pub fn as_string(&self) -> Option<String> {
+        let mut p = Parser {
+            bytes: self.src.as_bytes(),
+            pos: 0,
+        };
+        if p.peek() != Some(b'"') {
+            return None;
+        }
+        let s = p.string().ok()?;
+        if p.pos == p.bytes.len() {
+            Some(s)
+        } else {
+            None
+        }
+    }
+
+    /// Fast path for `[1, 2, 3]`-style token arrays: one scan, digits
+    /// straight to `i64` (non-plain-integer elements fall back to the
+    /// [`Json::as_i64`] integral-float contract; anything else errors).
+    pub fn int_array(&self) -> Result<Vec<i64>, JsonError> {
+        let mut s = Skip {
+            bytes: self.src.as_bytes(),
+            pos: 0,
+        };
+        s.skip_ws();
+        s.expect(b'[')?;
+        let mut out = Vec::new();
+        s.skip_ws();
+        if s.peek() == Some(b']') {
+            s.pos += 1;
+            return Ok(out);
+        }
+        loop {
+            s.skip_ws();
+            let start = s.pos;
+            s.skip_number()?;
+            let tok = &self.src[start..s.pos];
+            let v = match tok.parse::<i64>() {
+                Ok(v) => v,
+                Err(_) => {
+                    let f: f64 = tok.parse().map_err(|_| JsonError {
+                        msg: "invalid number".to_string(),
+                        pos: start,
+                    })?;
+                    if f.fract() == 0.0 && f.abs() <= 9_007_199_254_740_992.0 {
+                        f as i64
+                    } else {
+                        return Err(JsonError {
+                            msg: format!("non-integer element '{tok}'"),
+                            pos: start,
+                        });
+                    }
+                }
+            };
+            out.push(v);
+            s.skip_ws();
+            match s.peek() {
+                Some(b',') => s.pos += 1,
+                Some(b']') => {
+                    s.pos += 1;
+                    break;
+                }
+                _ => return Err(s.err("expected ',' or ']'")),
+            }
+        }
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -559,5 +998,96 @@ mod tests {
     fn stable_key_order() {
         let v = Json::parse(r#"{"z":1,"a":2,"m":3}"#).unwrap();
         assert_eq!(v.to_string(), r#"{"a":2,"m":3,"z":1}"#);
+    }
+
+    #[test]
+    fn lazy_agrees_with_tree_parser_on_validity() {
+        let corpus = [
+            "null",
+            "true",
+            "-1.5e3",
+            r#""x\nA""#,
+            "[1,[2,{}],{\"a\":[]}]",
+            r#"{"a": {"b": null}, "c": [true, false]}"#,
+            "{",
+            "[1,",
+            "\"abc",
+            "tru",
+            "1.2.3",
+            "{\"a\" 1}",
+            "[] []",
+            "[1 2]",
+            "{\"a\":}",
+            "-",
+            "1e",
+            "[,]",
+        ];
+        for src in corpus {
+            let tree = Json::parse(src).is_ok();
+            let lazy = LazyJson::parse(src).is_ok();
+            assert_eq!(tree, lazy, "parsers disagree on {src:?}");
+        }
+    }
+
+    #[test]
+    fn lazy_depth_cap_rejects_nesting_bombs() {
+        let ok = "[".repeat(LAZY_MAX_DEPTH) + &"]".repeat(LAZY_MAX_DEPTH);
+        assert!(LazyJson::parse(&ok).is_ok());
+        let bomb = "[".repeat(LAZY_MAX_DEPTH + 1) + &"]".repeat(LAZY_MAX_DEPTH + 1);
+        assert!(LazyJson::parse(&bomb).is_err());
+    }
+
+    #[test]
+    fn lazy_path_extraction() {
+        let body = concat!(
+            r#"{"prompt": [1, 2, 3], "#,
+            r#""opts": {"max_new": 3e2, "stream": true}, "#,
+            r#""deadline_ms": 1.5}"#
+        );
+        let lz = LazyJson::parse(body).unwrap();
+        assert_eq!(
+            lz.path(&["prompt"]).unwrap().int_array().unwrap(),
+            vec![1, 2, 3]
+        );
+        assert_eq!(lz.path(&["opts", "max_new"]).unwrap().as_i64(), Some(300));
+        assert_eq!(lz.path(&["opts", "stream"]).unwrap().as_bool(), Some(true));
+        assert_eq!(lz.path(&["deadline_ms"]).unwrap().as_f64(), Some(1.5));
+        assert!(lz.path(&["missing"]).is_none());
+        assert!(lz.path(&["prompt", "nested"]).is_none());
+        assert!(lz.path(&["opts", "max_new", "deep"]).is_none());
+        assert_eq!(lz.root().text(), body);
+    }
+
+    #[test]
+    fn lazy_int_array_contract() {
+        let lz = LazyJson::parse(
+            r#"{"p": [1, 2.0, -3], "bad": [1.5], "worse": ["x"], "empty": []}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            lz.path(&["p"]).unwrap().int_array().unwrap(),
+            vec![1, 2, -3]
+        );
+        assert!(lz.path(&["bad"]).unwrap().int_array().is_err());
+        assert!(lz.path(&["worse"]).unwrap().int_array().is_err());
+        assert!(lz.path(&["empty"]).unwrap().int_array().unwrap().is_empty());
+    }
+
+    #[test]
+    fn lazy_escaped_and_duplicate_keys() {
+        // "\u0070" is 'p': escaped keys still match exactly.
+        let lz = LazyJson::parse(r#"{"\u0070rompt": 1}"#).unwrap();
+        assert_eq!(lz.path(&["prompt"]).unwrap().as_i64(), Some(1));
+        // First duplicate wins on the lazy path (documented divergence
+        // from the BTreeMap tree parser, which keeps the last).
+        let dup = LazyJson::parse(r#"{"a": 1, "a": 2}"#).unwrap();
+        assert_eq!(dup.path(&["a"]).unwrap().as_i64(), Some(1));
+        // String extraction resolves escapes.
+        let s = LazyJson::parse(r#"{"m": "a\nb"}"#).unwrap();
+        assert_eq!(s.path(&["m"]).unwrap().as_string().as_deref(), Some("a\nb"));
+        // Non-number tokens never coerce.
+        assert!(s.path(&["m"]).unwrap().as_f64().is_none());
+        assert!(s.path(&["m"]).unwrap().as_bool().is_none());
+        assert!(!s.path(&["m"]).unwrap().is_null());
     }
 }

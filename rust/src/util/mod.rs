@@ -7,6 +7,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod evloop;
 pub mod json;
 pub mod kernel;
 pub mod pool;

@@ -31,7 +31,7 @@ mod common;
 
 use common::{compress_native, eos_free_params, native_test_cfg};
 use slab::coordinator::http::client;
-use slab::coordinator::{Backend, HttpServer, SchedulerConfig, Server, ServerConfig};
+use slab::coordinator::{Backend, HttpConfig, HttpServer, SchedulerConfig, Server, ServerConfig};
 use slab::model::{Params, SlabModel};
 use slab::runtime::ModelCfg;
 use slab::util::json::Json;
@@ -534,4 +534,446 @@ fn slab_serve_http_binary_serves_over_loopback() {
         spec_metrics.body
     );
     // ChildGuards kill both servers on drop.
+}
+
+// ---------------------------------------------------------------------
+// Wire-contract corpus + event-loop policy tests (ISSUE 9)
+// ---------------------------------------------------------------------
+
+/// Read one framed reply (status line, headers, `Content-Length`
+/// body) off an already-connected reader. Returns (status, headers
+/// lower-cased one-per-line, body).
+fn read_framed_reply(
+    reader: &mut std::io::BufReader<std::net::TcpStream>,
+) -> (u16, String, String) {
+    use std::io::{BufRead, Read};
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).expect("status line");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let mut headers = String::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h).expect("header") == 0 {
+            break;
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap_or(0);
+            }
+        }
+        headers.push_str(&h.to_ascii_lowercase());
+        headers.push('\n');
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).expect("body");
+    (status, headers, String::from_utf8_lossy(&body).into_owned())
+}
+
+/// Write raw request bytes on a fresh connection and read one framed
+/// reply — the malformed-request corpus cannot go through the
+/// well-behaved `client` helpers.
+fn raw_roundtrip(addr: std::net::SocketAddr, request: &[u8]) -> (u16, String, String) {
+    use std::io::Write;
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(30)))
+        .expect("timeout");
+    stream.write_all(request).expect("write raw request");
+    let mut reader = std::io::BufReader::new(stream);
+    read_framed_reply(&mut reader)
+}
+
+#[test]
+fn http_wire_contract_malformed_request_corpus() {
+    // Every satellite wire-contract fix, pinned over a raw socket:
+    // exact status codes and problem-body shape. None of these may
+    // reach the engine (requests == 0 at shutdown).
+    let cfg = native_test_cfg();
+    let params = Params::init(&cfg, 108);
+    let server = Server::start_with(
+        Backend::NativeBatched(Box::new(SlabModel::from_dense(&params, 1))),
+        ServerConfig::default(),
+    );
+    let http = HttpServer::bind("127.0.0.1:0", server).expect("bind loopback");
+    let addr = http.addr();
+
+    // Chunked transfer: refused with 411 + problem body, not silently
+    // misread as an empty body followed by garbage.
+    let (status, headers, body) = raw_roundtrip(
+        addr,
+        b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nTransfer-Encoding: chunked\r\n\r\n5\r\n{\"p\":\r\n0\r\n\r\n",
+    );
+    assert_eq!(status, 411, "{body}");
+    assert!(headers.contains("application/problem+json"), "{headers}");
+    assert!(body.contains("urn:slab:problem:length-required"), "{body}");
+    assert!(body.contains("\"field\":\"Transfer-Encoding\""), "{body}");
+
+    // Lowercase / wrong-case methods: 405 with Allow (RFC 9110 §9.1),
+    // never a silent alias of the uppercase method.
+    let (status, headers, body) =
+        raw_roundtrip(addr, b"get /healthz HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n");
+    assert_eq!(status, 405, "{body}");
+    assert!(headers.contains("allow: get"), "{headers}");
+    assert!(body.contains("urn:slab:problem:method-not-allowed"), "{body}");
+    let (status, headers, _) = raw_roundtrip(
+        addr,
+        b"Post /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\nConnection: close\r\n\r\n",
+    );
+    assert_eq!(status, 405);
+    assert!(headers.contains("allow: post"), "{headers}");
+
+    // Query strings route instead of 404ing.
+    let (status, _, body) = raw_roundtrip(
+        addr,
+        b"GET /healthz?probe=1 HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+    );
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"status\":\"ok\""), "{body}");
+    let (status, _, body) = raw_roundtrip(
+        addr,
+        b"GET /metrics?format=json HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+    );
+    assert_eq!(status, 200, "{body}");
+    let v = Json::parse(&body).expect("metrics json body");
+    assert!(v.get("requests").as_usize().is_some(), "{body}");
+
+    // Oversized header line: 431.
+    let mut big = Vec::from(&b"GET /healthz HTTP/1.1\r\nX-Big: "[..]);
+    big.extend(vec![b'a'; 9000]);
+    big.extend_from_slice(b"\r\n\r\n");
+    let (status, _, body) = raw_roundtrip(addr, &big);
+    assert_eq!(status, 431, "{body}");
+    assert!(body.contains("urn:slab:problem:"), "{body}");
+
+    // Bad and overflowing Content-Length: 400 with field context.
+    let (status, _, body) = raw_roundtrip(
+        addr,
+        b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: nope\r\n\r\n",
+    );
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("\"field\":\"Content-Length\""), "{body}");
+    let (status, _, body) = raw_roundtrip(
+        addr,
+        b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 99999999999999999999999\r\n\r\n",
+    );
+    assert_eq!(status, 400, "{body}");
+    // In-range but over the body cap: 413.
+    let (status, _, body) = raw_roundtrip(
+        addr,
+        b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 2000000\r\n\r\n",
+    );
+    assert_eq!(status, 413, "{body}");
+
+    // Garbage request line and unsupported version.
+    let (status, _, _) = raw_roundtrip(addr, b"GARBAGE\r\n\r\n");
+    assert_eq!(status, 400);
+    let (status, _, _) = raw_roundtrip(addr, b"GET /healthz HTTP/2.0\r\nHost: x\r\n\r\n");
+    assert_eq!(status, 505);
+
+    // Pipelined keep-alive: two requests in one write, two in-order
+    // framed replies on the same socket.
+    {
+        use std::io::Write;
+        let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(30)))
+            .expect("timeout");
+        stream
+            .write_all(
+                b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\nGET /healthz HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+            )
+            .expect("write pipelined pair");
+        let mut reader = std::io::BufReader::new(stream);
+        let (s1, h1, b1) = read_framed_reply(&mut reader);
+        let (s2, h2, b2) = read_framed_reply(&mut reader);
+        assert_eq!((s1, s2), (200, 200), "{b1} / {b2}");
+        assert!(h1.contains("connection: keep-alive"), "{h1}");
+        assert!(h2.contains("connection: close"), "{h2}");
+        assert!(b1.contains("\"status\":\"ok\"") && b2.contains("\"status\":\"ok\""));
+    }
+
+    let stats = http.shutdown().expect("shutdown");
+    assert_eq!(stats.requests, 0, "no malformed request reaches the engine");
+}
+
+#[test]
+fn http_429_carries_retry_after() {
+    // queue_cap 1 + max_batch 1 on the slow config: one session
+    // decoding, one waiting at the admission gate; the next
+    // submission is rejected synchronously and must carry Retry-After
+    // (header + `retry_after_secs` problem member) — blocking and
+    // streaming alike.
+    let cfg = ModelCfg::llama("slow-429", 32, 64, 2, 2, 128, 4096, 4);
+    let params = eos_free_params(&cfg, 109);
+    let server = Server::start_with(
+        Backend::NativeBatched(Box::new(SlabModel::from_dense(&params, 1))),
+        ServerConfig {
+            queue_cap: 1,
+            sched: SchedulerConfig {
+                max_batch: 1,
+                queue_cap: 1,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let http = HttpServer::bind("127.0.0.1:0", server).expect("bind loopback");
+    let addr = http.addr();
+    let budget = cfg.max_seq - cfg.prompt_len;
+    let long = format!(r#"{{"prompt": [5, 6], "max_new": {budget}, "stream": true}}"#);
+
+    let mut a = client::SseStream::open(addr, &long).expect("open A");
+    assert_eq!(a.status, 200);
+    let a_id = a
+        .next_frame()
+        .expect("frame")
+        .expect("id frame")
+        .get("id")
+        .as_i64()
+        .expect("id") as u64;
+    // One token: A has departed the gate and holds the decode slot.
+    let f = a.next_frame().expect("frame").expect("token frame");
+    assert!(f.get("token").as_i64().is_some(), "{f:?}");
+
+    let mut b = client::SseStream::open(addr, &long).expect("open B");
+    assert_eq!(b.status, 200, "B queues at the gate, not rejected");
+    let b_id = b
+        .next_frame()
+        .expect("frame")
+        .expect("id frame")
+        .get("id")
+        .as_i64()
+        .expect("id") as u64;
+
+    // Gate full: a blocking submission bounces with Retry-After.
+    let refused =
+        client::post(addr, "/v1/generate", r#"{"prompt": [5], "max_new": 2}"#).expect("reply");
+    assert_eq!(refused.status, 429, "{}", refused.body);
+    let retry: u64 = refused
+        .header("retry-after")
+        .expect("429 must carry Retry-After")
+        .parse()
+        .expect("numeric Retry-After");
+    assert!(retry >= 1, "Retry-After must be at least a second");
+    assert!(refused.body.contains("urn:slab:problem:queue-full"), "{}", refused.body);
+    assert!(refused.body.contains("retry_after_secs"), "{}", refused.body);
+
+    // A streaming submission over a full gate gets the same plain 429
+    // problem reply — no SSE preamble to a doomed stream.
+    let mut rejected_stream =
+        client::SseStream::open(addr, r#"{"prompt": [5], "max_new": 2, "stream": true}"#)
+            .expect("open rejected stream");
+    assert_eq!(rejected_stream.status, 429);
+    assert!(rejected_stream.header("retry-after").is_some());
+    let body = rejected_stream.read_body().expect("problem body");
+    assert!(body.contains("urn:slab:problem:queue-full"), "{body}");
+
+    for id in [a_id, b_id] {
+        let c = client::delete(addr, &format!("/v1/sessions/{id}")).expect("cancel");
+        assert_eq!(c.status, 200);
+    }
+    while a.next_frame().expect("frame").is_some() {}
+    while b.next_frame().expect("frame").is_some() {}
+    let stats = http.shutdown().expect("shutdown");
+    assert_eq!(stats.rejected, 2, "blocking + streaming rejections both count");
+    assert!(stats.cancelled >= 1, "the decoding session was cancelled");
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn http_slow_client_write_budget_cancels_session() {
+    use slab::util::evloop::connect_with_rcvbuf;
+    // Tiny socket buffers + a 2 KiB write budget + a short stall cap:
+    // a client that opens a stream and never reads must get its
+    // session cancelled and its socket closed — long before the
+    // multi-thousand-token budget is produced.
+    let cfg = ModelCfg::llama("slow-stall", 32, 64, 2, 2, 128, 4096, 4);
+    let params = eos_free_params(&cfg, 110);
+    let server = Server::start_with(
+        Backend::NativeBatched(Box::new(SlabModel::from_dense(&params, 1))),
+        ServerConfig {
+            sched: SchedulerConfig {
+                max_batch: 1,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let http = HttpServer::bind_with(
+        "127.0.0.1:0",
+        server,
+        HttpConfig {
+            sndbuf: 4096,
+            write_budget: 2048,
+            write_stall: std::time::Duration::from_millis(500),
+            ..HttpConfig::default()
+        },
+    )
+    .expect("bind loopback");
+    let addr = http.addr();
+
+    // SO_RCVBUF must be set before connect to cap the TCP window.
+    let mut stream = connect_with_rcvbuf(addr, 4096).expect("connect with tiny rcvbuf");
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(60)))
+        .expect("timeout");
+    let budget = cfg.max_seq - cfg.prompt_len;
+    let body = format!(r#"{{"prompt": [5, 6], "max_new": {budget}, "stream": true}}"#);
+    {
+        use std::io::Write;
+        write!(
+            stream,
+            "POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .expect("send request");
+    }
+    // Read NOTHING: the kernel windows fill, the server's write
+    // budget/stall policy trips, and the session is cancelled. Watch
+    // it land via /metrics (bounded wait).
+    let t0 = std::time::Instant::now();
+    loop {
+        let m = client::get(addr, "/metrics?format=json").expect("metrics");
+        let v = Json::parse(&m.body).expect("metrics json");
+        if v.get("cancelled").as_usize() == Some(1) {
+            break;
+        }
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(120),
+            "server never cancelled the stalled client's session:\n{}",
+            m.body
+        );
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    // The socket was killed server-side: draining it yields only the
+    // kernel-buffered prefix, then EOF/reset — not the full stream.
+    use std::io::Read;
+    let mut total = 0usize;
+    let mut buf = [0u8; 4096];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => total += n,
+            Err(_) => break,
+        }
+    }
+    assert!(
+        total < 64 * 1024,
+        "only the buffered prefix should have been delivered ({total} bytes)"
+    );
+    let stats = http.shutdown().expect("shutdown");
+    assert_eq!(stats.cancelled, 1);
+    assert_eq!(
+        stats.dropped_clients, 0,
+        "the worker drains the terminal event even for a killed socket"
+    );
+}
+
+#[test]
+fn http_soak_256_concurrent_streams_through_event_loop() {
+    // The event-loop acceptance soak (ISSUE 9): 256 concurrent
+    // streaming connections — 16x the worker pool — all complete
+    // through one loop thread with ordered frames (id first, tokens
+    // in engine order, exactly one terminal) and exact terminal
+    // accounting at shutdown.
+    let cfg = native_test_cfg();
+    let params = Params::init(&cfg, 111);
+    let reference_model = SlabModel::from_dense(&params, 1);
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![5, 9, 14, 20],
+        vec![7, 8],
+        vec![33, 34, 35],
+        vec![11, 12, 13, 14, 15],
+    ];
+    let budget = 4usize;
+    let reference: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| reference_model.generate_batch(&[p.clone()], budget).remove(0))
+        .collect();
+    let server = Server::start_with(
+        Backend::NativeBatched(Box::new(SlabModel::from_dense(&params, 1))),
+        ServerConfig {
+            queue_cap: 512,
+            sched: SchedulerConfig {
+                max_batch: 8,
+                queue_cap: 512,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let http = HttpServer::bind_with(
+        "127.0.0.1:0",
+        server,
+        HttpConfig {
+            max_conns: 512,
+            workers: 16,
+            ..HttpConfig::default()
+        },
+    )
+    .expect("bind loopback");
+    let addr = http.addr();
+
+    let n_clients = 256usize;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|i| {
+            let pidx = i % prompts.len();
+            let prompt = prompts[pidx].clone();
+            std::thread::spawn(move || -> (usize, Vec<i32>) {
+                let body = Json::obj(vec![
+                    ("prompt", Json::arr(prompt.iter().map(|&t| Json::num(t)))),
+                    ("max_new", Json::from_usize(budget)),
+                    ("stream", Json::Bool(true)),
+                ]);
+                let mut sse = client::SseStream::open(addr, &body.to_string()).expect("open sse");
+                assert_eq!(sse.status, 200);
+                let id_frame = sse.next_frame().expect("frame").expect("id frame");
+                assert!(id_frame.get("id").as_i64().is_some(), "id frame must come first");
+                let mut tokens: Vec<i32> = Vec::new();
+                let mut terminals = 0usize;
+                while let Some(frame) = sse.next_frame().expect("frame") {
+                    if let Some(t) = frame.get("token").as_i64() {
+                        assert_eq!(terminals, 0, "token frame after the terminal");
+                        tokens.push(t as i32);
+                    } else if !frame.get("done").is_null() {
+                        terminals += 1;
+                        assert_eq!(
+                            frame.get("done").get("tokens").as_usize(),
+                            Some(tokens.len()),
+                            "terminal token count vs streamed"
+                        );
+                    } else {
+                        panic!("unexpected frame {frame:?}");
+                    }
+                }
+                assert_eq!(terminals, 1, "exactly one terminal frame");
+                (pidx, tokens)
+            })
+        })
+        .collect();
+    let mut completed = 0usize;
+    for h in handles {
+        let (pidx, tokens) = h.join().expect("client thread");
+        assert_eq!(
+            tokens, reference[pidx],
+            "soak stream diverged from the engine reference (prompt {pidx})"
+        );
+        completed += 1;
+    }
+    assert_eq!(completed, n_clients);
+
+    let stats = http.shutdown().expect("shutdown");
+    assert_eq!(stats.requests, n_clients, "exact terminal accounting");
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.cancelled, 0);
+    assert_eq!(stats.dropped_clients, 0);
 }
