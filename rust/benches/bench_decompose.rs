@@ -31,11 +31,14 @@
 )]
 
 use slab::baselines::{magnitude_prune, sparsegpt_prune, wanda_prune, Method, SparseGptConfig};
-use slab::coordinator::CompressJob;
+use slab::coordinator::{BudgetConfig, BudgetPlan, CompressJob, LayerProbe};
 use slab::data::TokenSet;
 use slab::model::Params;
 use slab::runtime::ModelCfg;
-use slab::slab::{decompose, decompose_par, ActStats, SlabConfig};
+use slab::slab::threshold::sorted_scores_desc;
+use slab::slab::{
+    decompose, decompose_par, refine, wanda_scores, ActStats, RefineConfig, SlabConfig,
+};
 use slab::tensor::Mat;
 use slab::util::bench::Bench;
 use slab::util::json::Json;
@@ -179,10 +182,102 @@ fn main() {
             ("peak_bytes_stream", Json::from_usize(stream_peak)),
         ]));
     }
+    // --- joint refinement + activation-aware allocation ---------------
+    // ISSUE-10 rows: refinement throughput on a representative layer,
+    // and the headline quality claim — alloc+refined activation-weighted
+    // error below the one-shot uniform fit at an *exactly equal* global
+    // keep budget. `rounds_per_sec` is a `*_per_sec` leaf, so the CI
+    // perf gate pins it automatically once a baseline lands.
+    println!("\n== bench group: refinement + budget allocation ==");
+    let (rdout, rdin) = if fast { (96usize, 128usize) } else { (256usize, 256usize) };
+    let rw = Mat::randn(rdout, rdin, 0.02, &mut rng);
+    let rx = Mat::randn(if fast { 64 } else { 256 }, rdin, 1.0, &mut rng);
+    let rstats = ActStats::from_activations(&rx);
+    let rcfg_fit = SlabConfig { iters: if fast { 2 } else { 5 }, ..Default::default() };
+    let rd = decompose(&rw, &rstats, &rcfg_fit).expect("decompose for refine bench");
+    // tol 0 disables the relative-improvement early stop, so the timing
+    // covers the configured round count (the accept guard can still
+    // stop a non-improving round — `rounds_run` is what we divide by).
+    let rc = RefineConfig { rounds: if fast { 2 } else { 6 }, tol: 0.0 };
+    let t0 = std::time::Instant::now();
+    let (_, rrep) = refine(&rw, &rd, &rstats, &rcfg_fit, &rc).expect("refine bench");
+    let refine_secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let rounds_per_sec = rrep.rounds_run.max(1) as f64 / refine_secs;
+    println!(
+        "refine {rdout}x{rdin}: {} rounds in {refine_secs:.3}s ({rounds_per_sec:.2} rounds/s)",
+        rrep.rounds_run
+    );
+
+    // Quality row: three linears with strongly heterogeneous activation
+    // scales (the setting water-filling exists for). One-shot uniform
+    // error comes from a rounds=0 refine (`err_trace[0]` is the fit
+    // error before any refinement); the contender re-plans the same
+    // global budget and refines each layer under its allocated config.
+    let (qdout, qdin) = if fast { (48usize, 96usize) } else { (96usize, 192usize) };
+    let qrows = if fast { 32 } else { 128 };
+    let qlayers: Vec<(String, Mat, ActStats)> = [1.0f32, 0.3, 0.02]
+        .iter()
+        .enumerate()
+        .map(|(i, &scale)| {
+            let w = Mat::randn(qdout, qdin, 0.05, &mut rng);
+            let x = Mat::randn(qrows, qdin, scale, &mut rng);
+            (format!("lin{i}"), w, ActStats::from_activations(&x))
+        })
+        .collect();
+    let probes: Vec<LayerProbe> = qlayers
+        .iter()
+        .map(|(name, w, stats)| LayerProbe {
+            name: name.clone(),
+            dout: qdout,
+            din: qdin,
+            scores: sorted_scores_desc(&wanda_scores(w, stats)),
+        })
+        .collect();
+    let plan = BudgetPlan::plan(&probes, &rcfg_fit, &BudgetConfig::default()).expect("budget plan");
+    assert_eq!(
+        plan.total_keep(),
+        plan.total_uniform_keep(),
+        "allocator must conserve the global keep budget exactly"
+    );
+    let qrc = RefineConfig::with_rounds(if fast { 2 } else { 4 });
+    let (mut oneshot_sq, mut refined_sq) = (0.0f64, 0.0f64);
+    for (name, w, stats) in &qlayers {
+        let du = decompose(w, stats, &rcfg_fit).expect("uniform decompose");
+        let (_, r0) = refine(w, &du, stats, &rcfg_fit, &RefineConfig::with_rounds(0))
+            .expect("rounds=0 probe");
+        oneshot_sq += (r0.err_before() as f64).powi(2);
+        let eff = plan.config_for(name);
+        let da = decompose(w, stats, &eff).expect("alloc decompose");
+        let (_, ra) = refine(w, &da, stats, &eff, &qrc).expect("alloc refine");
+        refined_sq += (ra.err_after() as f64).powi(2);
+    }
+    let oneshot_werr = oneshot_sq.sqrt();
+    let alloc_refined_werr = refined_sq.sqrt();
+    assert!(
+        alloc_refined_werr <= oneshot_werr,
+        "alloc+refined werr {alloc_refined_werr} must not exceed one-shot uniform {oneshot_werr}"
+    );
+    let werr_improvement_frac = 1.0 - alloc_refined_werr / oneshot_werr.max(1e-12);
+    println!(
+        "alloc+refine vs one-shot uniform ({} layers {qdout}x{qdin}): \
+         werr {alloc_refined_werr:.5} vs {oneshot_werr:.5} ({:.2}% better, equal budget)",
+        qlayers.len(),
+        werr_improvement_frac * 100.0
+    );
+    let refine_obj = Json::obj(vec![
+        ("layer", Json::str(format!("{rdout}x{rdin}"))),
+        ("rounds_run", Json::from_usize(rrep.rounds_run)),
+        ("rounds_per_sec", Json::num(rounds_per_sec)),
+        ("oneshot_werr", Json::num(oneshot_werr)),
+        ("alloc_refined_werr", Json::num(alloc_refined_werr)),
+        ("werr_improvement_frac", Json::num(werr_improvement_frac)),
+    ]);
+
     let summary = Json::obj(vec![
         ("bench", Json::str("compress_pipeline")),
         ("threads_parallel", Json::from_usize(pool.size())),
         ("configs", Json::arr(rows)),
+        ("refine", refine_obj),
     ]);
     std::fs::write("BENCH_decompose.json", summary.to_pretty())
         .expect("write BENCH_decompose.json");

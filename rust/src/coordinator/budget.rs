@@ -1,0 +1,423 @@
+//! Activation-aware per-layer budget allocation (ROADMAP item 2; the
+//! nested activation-aware-allocation direction of PAPERS.md).
+//!
+//! The uniform pipeline gives every linear the same Eq.-10 keep
+//! fraction, but layers differ wildly in how much activation-weighted
+//! error each kept element buys back — `wq` in block 0 and `w_down`
+//! in the last block are not equally sensitive. The allocator probes
+//! each linear from its captured [`ActStats`] and redistributes the
+//! **global** sparse budget by water-filling, holding the total
+//! parameter count exactly fixed:
+//!
+//! 1. *Probe*: a dense-weights capture pass yields per-linear Wanda
+//!    scores; sorted descending, their squared prefix sums form the
+//!    kept-energy curve `E_l(k)` ([`kept_energy_curve`]) — for
+//!    pruning-only selection, exactly the squared weighted error
+//!    bought back by budget `k`. The recorded per-layer sensitivity
+//!    is the finite-difference marginal
+//!    `(E_l(k·(1+δ)) − E_l(k·(1−δ))) / 2δk` around the uniform
+//!    budget.
+//! 2. *Water-fill*: keep every score above one global waterline `τ` —
+//!    the continuous optimum of "maximize kept energy subject to
+//!    Σ k_l = K" — found by binary search, with per-layer clamps
+//!    `k_l ∈ [min_scale·k_u, max_scale·k_u]` so no layer is starved
+//!    or flooded, then an exact greedy fix-up of the residual few
+//!    elements (ties at the waterline, clamp spill) so
+//!    `Σ k_l = Σ k_u` holds *exactly* — "equal global parameter
+//!    budget" is an invariant, not an approximation.
+//! 3. The resulting [`BudgetPlan`] hands each layer a
+//!    [`SlabConfig::with_keep`] override; `CompressJob` consumes it
+//!    in place of the uniform config and records it (and its
+//!    [`Table`] rendering) in the `CompressReport`.
+//!
+//! The plan is deterministic: scores are a deterministic function of
+//! the capture, the binary search is on fixed arithmetic, and every
+//! tie in the fix-up breaks by layer index.
+
+use crate::report::Table;
+use crate::slab::config::ConfigError;
+use crate::slab::threshold::kept_energy_curve;
+use crate::slab::SlabConfig;
+
+/// Allocator knobs (defaults are the shipped policy).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BudgetConfig {
+    /// Sensitivity-probe half-width as a fraction of the uniform
+    /// budget: the recorded sensitivity is the marginal energy between
+    /// `k·(1−delta)` and `k·(1+delta)`.
+    pub delta: f64,
+    /// Per-layer keep clamp, relative to the uniform budget: no layer
+    /// drops below `min_scale · k_u` …
+    pub min_scale: f64,
+    /// … or rises above `max_scale · k_u` (both further clamped to
+    /// `[1, numel − 1]` so every per-layer config stays feasible).
+    pub max_scale: f64,
+}
+
+impl Default for BudgetConfig {
+    fn default() -> Self {
+        BudgetConfig { delta: 0.25, min_scale: 0.5, max_scale: 2.0 }
+    }
+}
+
+/// Probe input for one linear: its Wanda scores against the dense
+/// weights, sorted descending ([`crate::slab::threshold::sorted_scores_desc`]).
+#[derive(Debug, Clone)]
+pub struct LayerProbe {
+    pub name: String,
+    pub dout: usize,
+    pub din: usize,
+    /// Wanda scores `|W_ij|·s_j`, sorted descending.
+    pub scores: Vec<f32>,
+}
+
+/// One layer's allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerBudget {
+    pub name: String,
+    pub dout: usize,
+    pub din: usize,
+    /// Eq.-10 keep count at the uniform config.
+    pub uniform_keep: usize,
+    /// Allocated keep count (Σ over layers equals Σ uniform exactly).
+    pub keep: usize,
+    /// Marginal kept energy per element around the uniform budget —
+    /// the ±delta sensitivity probe's reading (diagnostic; the
+    /// water-line is what actually allocates).
+    pub sensitivity: f64,
+}
+
+impl LayerBudget {
+    pub fn numel(&self) -> usize {
+        self.dout * self.din
+    }
+
+    /// The allocated keep fraction this layer's config override pins.
+    pub fn keep_frac(&self) -> f64 {
+        self.keep as f64 / self.numel() as f64
+    }
+}
+
+/// The allocator's output: per-layer keep budgets under the fixed
+/// global parameter count, plus the waterline that produced them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BudgetPlan {
+    /// The uniform base config the overrides modify (rank, group,
+    /// structure, iteration counts stay uniform — the allocator spends
+    /// the *sparse* budget; rank redistribution is a policy hook, not
+    /// implemented).
+    pub base: SlabConfig,
+    pub layers: Vec<LayerBudget>,
+    /// The global score waterline τ the water-filling pass settled on.
+    pub waterline: f64,
+}
+
+impl BudgetPlan {
+    /// Water-fill `probes` under the global budget implied by `base`'s
+    /// Eq. 10 across all layers. Errors if any layer is infeasible at
+    /// the uniform config (the caller renders that as an infeasible
+    /// row, same as the uniform pipeline would).
+    pub fn plan(
+        probes: &[LayerProbe],
+        base: &SlabConfig,
+        bcfg: &BudgetConfig,
+    ) -> Result<BudgetPlan, ConfigError> {
+        assert!(!probes.is_empty(), "no layers to plan");
+        assert!(bcfg.delta > 0.0 && bcfg.min_scale > 0.0 && bcfg.max_scale >= 1.0);
+        let n = probes.len();
+        let mut uniform = Vec::with_capacity(n);
+        for p in probes {
+            debug_assert_eq!(p.scores.len(), p.dout * p.din, "probe score count");
+            debug_assert!(p.scores.windows(2).all(|w| w[0] >= w[1]), "probe scores must be sorted descending");
+            uniform.push(base.keep_count(p.dout, p.din)?);
+        }
+        let total: usize = uniform.iter().sum();
+
+        // Feasible clamp window per layer.
+        let bounds: Vec<(usize, usize)> = probes
+            .iter()
+            .zip(uniform.iter())
+            .map(|(p, &ku)| {
+                let numel = p.dout * p.din;
+                let lo = ((bcfg.min_scale * ku as f64).floor() as usize).clamp(1, numel - 1);
+                let hi = ((bcfg.max_scale * ku as f64).ceil() as usize).clamp(lo, numel - 1);
+                (lo, hi)
+            })
+            .collect();
+
+        // keep_l(τ) = clamp(#scores > τ, lo, hi); Σ is monotone
+        // non-increasing in τ, so bisect τ down to the step where the
+        // budget is met. `count > τ` on a descending array is a
+        // partition point.
+        let count_above = |p: &LayerProbe, tau: f64| -> usize {
+            p.scores.partition_point(|&s| s as f64 > tau)
+        };
+        let keeps_at = |tau: f64| -> Vec<usize> {
+            probes
+                .iter()
+                .zip(bounds.iter())
+                .map(|(p, &(lo, hi))| count_above(p, tau).clamp(lo, hi))
+                .collect()
+        };
+        let mut tau_lo = 0.0f64; // keeps everything feasible → Σ ≥ K (clamped)
+        let mut tau_hi = probes
+            .iter()
+            .filter_map(|p| p.scores.first())
+            .fold(0.0f64, |m, &s| m.max(s as f64));
+        for _ in 0..64 {
+            let mid = 0.5 * (tau_lo + tau_hi);
+            if keeps_at(mid).iter().sum::<usize>() > total {
+                tau_lo = mid;
+            } else {
+                tau_hi = mid;
+            }
+        }
+        // Conservative side (Σ ≤ K), then grow greedily: each step
+        // adds the globally largest next marginal score among layers
+        // with clamp headroom — exactly the water-filling order. The
+        // shrink direction handles the all-clamped corner where even
+        // τ_hi overshoots.
+        let waterline = tau_hi;
+        let mut keeps = keeps_at(waterline);
+        let mut sum: usize = keeps.iter().sum();
+        while sum < total {
+            let mut best: Option<(f64, usize)> = None;
+            for (l, p) in probes.iter().enumerate() {
+                if keeps[l] >= bounds[l].1 {
+                    continue;
+                }
+                let next = p.scores[keeps[l]] as f64;
+                let better = match best {
+                    Some((b, _)) => next > b,
+                    None => true,
+                };
+                if better {
+                    best = Some((next, l));
+                }
+            }
+            match best {
+                Some((_, l)) => keeps[l] += 1,
+                None => break, // every layer at its cap: budget unreachable
+            }
+            sum += 1;
+        }
+        while sum > total {
+            // Drop the globally smallest kept marginal score.
+            let mut worst: Option<(f64, usize)> = None;
+            for (l, p) in probes.iter().enumerate() {
+                if keeps[l] <= bounds[l].0 {
+                    continue;
+                }
+                let last = p.scores[keeps[l] - 1] as f64;
+                let smaller = match worst {
+                    Some((w, _)) => last < w,
+                    None => true,
+                };
+                if smaller {
+                    worst = Some((last, l));
+                }
+            }
+            match worst {
+                Some((_, l)) => keeps[l] -= 1,
+                None => break,
+            }
+            sum -= 1;
+        }
+
+        let layers = probes
+            .iter()
+            .zip(uniform.iter())
+            .zip(keeps.iter())
+            .map(|((p, &ku), &k)| {
+                let curve = kept_energy_curve(&p.scores);
+                let numel = p.dout * p.din;
+                let klo = ((ku as f64 * (1.0 - bcfg.delta)) as usize).clamp(0, numel);
+                let khi = ((ku as f64 * (1.0 + bcfg.delta)) as usize).clamp(klo, numel);
+                let sensitivity = if khi > klo {
+                    (curve[khi] - curve[klo]) / (khi - klo) as f64
+                } else {
+                    0.0
+                };
+                LayerBudget {
+                    name: p.name.clone(),
+                    dout: p.dout,
+                    din: p.din,
+                    uniform_keep: ku,
+                    keep: k,
+                    sensitivity,
+                }
+            })
+            .collect();
+        Ok(BudgetPlan { base: *base, layers, waterline })
+    }
+
+    /// Σ allocated keep across layers.
+    pub fn total_keep(&self) -> usize {
+        self.layers.iter().map(|l| l.keep).sum()
+    }
+
+    /// Σ uniform (Eq. 10) keep across layers — equals
+    /// [`total_keep`](BudgetPlan::total_keep) by the allocator's
+    /// budget-conservation invariant.
+    pub fn total_uniform_keep(&self) -> usize {
+        self.layers.iter().map(|l| l.uniform_keep).sum()
+    }
+
+    /// The per-layer config the decompose stage uses: the uniform base
+    /// with this layer's keep fraction pinned. Unknown names fall back
+    /// to the base config (defensive; the pipeline only asks for
+    /// planned layers).
+    pub fn config_for(&self, name: &str) -> SlabConfig {
+        match self.layers.iter().find(|l| l.name == name) {
+            Some(l) => self.base.with_keep(l.keep_frac()),
+            None => self.base,
+        }
+    }
+
+    /// Serialize allocator decisions per layer (text + CSV via the
+    /// shared [`Table`] renderer) — the auditability surface.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Budget allocation — water-filled keep per layer (τ = {:.5}, Σ keep {} = Σ uniform {})",
+                self.waterline,
+                self.total_keep(),
+                self.total_uniform_keep()
+            ),
+            &["layer", "shape", "uniform keep", "alloc keep", "Δ%", "sensitivity"],
+        );
+        for l in &self.layers {
+            let delta_pct = if l.uniform_keep > 0 {
+                100.0 * (l.keep as f64 - l.uniform_keep as f64) / l.uniform_keep as f64
+            } else {
+                0.0
+            };
+            t.push_row(vec![
+                l.name.clone(),
+                format!("{}x{}", l.dout, l.din),
+                l.uniform_keep.to_string(),
+                l.keep.to_string(),
+                format!("{delta_pct:+.1}"),
+                format!("{:.3e}", l.sensitivity),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slab::threshold::sorted_scores_desc;
+    use crate::tensor::Mat;
+    use crate::util::rng::Pcg64;
+
+    fn probe(name: &str, dout: usize, din: usize, scale: f32, seed: u64) -> LayerProbe {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let m = Mat::rand_uniform(dout, din, 0.0, scale, &mut rng);
+        LayerProbe {
+            name: name.into(),
+            dout,
+            din,
+            scores: sorted_scores_desc(&m),
+        }
+    }
+
+    fn base() -> SlabConfig {
+        SlabConfig { cr: 0.5, ..Default::default() }
+    }
+
+    #[test]
+    fn budget_is_conserved_exactly() {
+        let probes = vec![
+            probe("a", 24, 48, 1.0, 1),
+            probe("b", 24, 48, 0.1, 2),
+            probe("c", 32, 32, 0.5, 3),
+        ];
+        let plan = BudgetPlan::plan(&probes, &base(), &BudgetConfig::default()).unwrap();
+        assert_eq!(plan.total_keep(), plan.total_uniform_keep(), "exact conservation");
+        assert_eq!(plan.layers.len(), 3);
+    }
+
+    #[test]
+    fn hot_layers_win_budget_from_cold_layers() {
+        // Two same-shape layers, one with 10x the score scale: the hot
+        // layer must end with more keep than uniform, the cold one
+        // with less — and the clamps must hold.
+        let bcfg = BudgetConfig::default();
+        let probes = vec![probe("hot", 24, 48, 1.0, 4), probe("cold", 24, 48, 0.05, 5)];
+        let plan = BudgetPlan::plan(&probes, &base(), &bcfg).unwrap();
+        let hot = &plan.layers[0];
+        let cold = &plan.layers[1];
+        assert!(hot.keep > hot.uniform_keep, "hot {} !> {}", hot.keep, hot.uniform_keep);
+        assert!(cold.keep < cold.uniform_keep, "cold {} !< {}", cold.keep, cold.uniform_keep);
+        assert!(hot.sensitivity > cold.sensitivity);
+        for l in &plan.layers {
+            let lo = (bcfg.min_scale * l.uniform_keep as f64).floor() as usize;
+            let hi = (bcfg.max_scale * l.uniform_keep as f64).ceil() as usize;
+            assert!(l.keep >= lo.max(1) && l.keep <= hi.min(l.numel() - 1), "{}: {}", l.name, l.keep);
+        }
+        assert_eq!(plan.total_keep(), plan.total_uniform_keep());
+    }
+
+    #[test]
+    fn allocation_improves_kept_energy_over_uniform() {
+        // The point of the exercise, at the proxy level: kept score
+        // energy under the plan ≥ kept energy under uniform, at equal
+        // total budget.
+        let probes = vec![
+            probe("a", 16, 64, 1.0, 6),
+            probe("b", 16, 64, 0.2, 7),
+            probe("c", 16, 64, 0.01, 8),
+        ];
+        let plan = BudgetPlan::plan(&probes, &base(), &BudgetConfig::default()).unwrap();
+        let energy = |keeps: Vec<usize>| -> f64 {
+            probes
+                .iter()
+                .zip(keeps)
+                .map(|(p, k)| kept_energy_curve(&p.scores)[k])
+                .sum()
+        };
+        let e_alloc = energy(plan.layers.iter().map(|l| l.keep).collect());
+        let e_uniform = energy(plan.layers.iter().map(|l| l.uniform_keep).collect());
+        assert!(
+            e_alloc >= e_uniform,
+            "alloc energy {e_alloc} < uniform {e_uniform}"
+        );
+        assert!(e_alloc > e_uniform, "scale spread this wide must strictly improve");
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_configs_are_feasible() {
+        let probes = vec![probe("x", 20, 40, 1.0, 9), probe("y", 40, 20, 0.3, 10)];
+        let a = BudgetPlan::plan(&probes, &base(), &BudgetConfig::default()).unwrap();
+        let b = BudgetPlan::plan(&probes, &base(), &BudgetConfig::default()).unwrap();
+        assert_eq!(a, b);
+        for l in &a.layers {
+            let cfg = a.config_for(&l.name);
+            let f = cfg.keep_fraction(l.dout, l.din).expect("planned config feasible");
+            assert!((f - l.keep_frac()).abs() < 1e-12);
+        }
+        // Unknown layers fall back to the base config.
+        assert_eq!(a.config_for("nope"), a.base);
+    }
+
+    #[test]
+    fn infeasible_uniform_base_propagates() {
+        let probes = vec![probe("tiny", 2, 2, 1.0, 11)];
+        assert!(BudgetPlan::plan(&probes, &base(), &BudgetConfig::default()).is_err());
+    }
+
+    #[test]
+    fn table_renders_every_layer_and_csv() {
+        let probes = vec![probe("l0.wq", 16, 32, 1.0, 12), probe("l0.wo", 16, 16, 0.2, 13)];
+        let plan = BudgetPlan::plan(&probes, &base(), &BudgetConfig::default()).unwrap();
+        let t = plan.to_table();
+        let md = t.render();
+        assert!(md.contains("l0.wq") && md.contains("l0.wo"));
+        assert!(md.contains("τ ="));
+        let csv = t.render_csv();
+        assert!(csv.starts_with("layer,shape,uniform keep,alloc keep,"));
+        assert_eq!(csv.lines().count(), 1 + 2);
+    }
+}

@@ -18,8 +18,9 @@
 use super::capture::BlockWeights;
 use super::{Engine, LayerReport, PipelineError};
 use crate::baselines::{Method, MethodError};
+use crate::coordinator::budget::BudgetPlan;
 use crate::runtime::{lit_mat, lit_scalar_i32, to_vec_f32, Runtime};
-use crate::slab::{ActStats, SlabConfig, SlabLayer};
+use crate::slab::{ActStats, RefineConfig, RefineReport, SlabConfig, SlabLayer};
 use crate::tensor::Mat;
 use crate::util::pool::ThreadPool;
 
@@ -31,21 +32,32 @@ pub(crate) struct LinearOut {
     /// only on `keep_dense` jobs.
     pub w_hat: Mat,
     pub packed: Option<SlabLayer>,
+    /// Refinement diagnostics when the job opted into `refine`.
+    pub refine: Option<RefineReport>,
 }
 
 /// Decompose every linear of `blockw` against its activation source.
+/// `plan` (per-layer keep budgets) and `rcfg` (joint refinement) are
+/// SLaB-native-only extras; the job validates that up front, so here
+/// they are simply unused on the other paths.
 pub(crate) fn decompose_block(
     method: &Method,
     engine: Engine,
     rt: Option<&Runtime>,
     blockw: &BlockWeights,
     stats: &[ActStats; 4],
+    plan: Option<&BudgetPlan>,
+    rcfg: Option<&RefineConfig>,
     pool: Option<&ThreadPool>,
 ) -> Result<Vec<LinearOut>, PipelineError> {
     // SLaB through the AOT `decompose_{shape}` artifact stays serial:
     // the PJRT client is not a fan-out target, and the artifact path
     // exists as the paper-faithful cross-check, not the fast path.
     if let (Method::Slab(scfg), Engine::Artifact) = (method, engine) {
+        debug_assert!(
+            plan.is_none() && rcfg.is_none(),
+            "job validation rejects refine/budget on the artifact engine"
+        );
         let rt = rt.ok_or_else(|| {
             PipelineError::Other(
                 "artifact decompose engine requires the artifact capture engine".into(),
@@ -64,12 +76,14 @@ pub(crate) fn decompose_block(
         .collect();
     match pool {
         Some(p) if p.size() > 1 => p
-            .scoped_map(items, |(name, w, st)| decompose_one(method, name, w, st))
+            .scoped_map(items, |(name, w, st)| {
+                decompose_one(method, name, w, st, plan, rcfg)
+            })
             .into_iter()
             .collect(),
         _ => items
             .into_iter()
-            .map(|(name, w, st)| decompose_one(method, name, w, st))
+            .map(|(name, w, st)| decompose_one(method, name, w, st, plan, rcfg))
             .collect(),
     }
 }
@@ -77,23 +91,39 @@ pub(crate) fn decompose_block(
 /// Compress one linear natively. This is the unit of work a pool
 /// worker runs, so it must not touch the pool itself (no nested
 /// fork-join); the per-row inner parallelism of
-/// [`crate::slab::decompose_par`] is for single-layer callers.
+/// [`crate::slab::decompose_par`] is for single-layer callers. The
+/// optional refinement rounds run serially *inside* the worker, so the
+/// fan-out's bit-identical-to-serial contract extends to them for
+/// free.
 fn decompose_one(
     method: &Method,
     name: &str,
     w: &Mat,
     stats: &ActStats,
+    plan: Option<&BudgetPlan>,
+    rcfg: Option<&RefineConfig>,
 ) -> Result<LinearOut, PipelineError> {
-    let (w_hat, kept, frob, packed) = match method {
+    let (w_hat, kept, frob, packed, refine) = match method {
         Method::Slab(scfg) => {
-            let d = crate::slab::decompose(w, stats, scfg).map_err(MethodError::Config)?;
+            // The budget plan swaps the uniform config for this
+            // layer's keep-override variant; everything else (rank,
+            // group, structure, seeds) stays uniform.
+            let eff = plan.map_or(*scfg, |p| p.config_for(name));
+            let mut d = crate::slab::decompose(w, stats, &eff).map_err(MethodError::Config)?;
+            let mut rep = None;
+            if let Some(rc) = rcfg {
+                let (refined, r) =
+                    crate::slab::refine(w, &d, stats, &eff, rc).map_err(MethodError::Config)?;
+                d = refined;
+                rep = Some(r);
+            }
             let packed = SlabLayer::from_decomposition(&d);
             let frob = *d.frob_trace.last().unwrap_or(&0.0);
-            (d.reconstruct(), d.kept, frob, Some(packed))
+            (d.reconstruct(), d.kept, frob, Some(packed), rep)
         }
         _ => {
             let c = method.compress_layer(w, stats)?;
-            (c.w_hat, c.kept, c.frob_err, None)
+            (c.w_hat, c.kept, c.frob_err, None, None)
         }
     };
     Ok(LinearOut {
@@ -105,6 +135,7 @@ fn decompose_one(
         },
         w_hat,
         packed,
+        refine,
     })
 }
 
@@ -158,5 +189,6 @@ fn decompose_one_artifact(
         },
         w_hat,
         packed: Some(packed),
+        refine: None,
     })
 }

@@ -30,12 +30,14 @@ pub mod emit;
 pub use capture::{BlockWeights, CaptureEngine};
 pub use emit::load_packed_checkpoint;
 
+use super::budget::{BudgetConfig, BudgetPlan, LayerProbe};
 use crate::baselines::{Method, MethodError};
 use crate::data::TokenSet;
 use crate::model::{Params, SlabModel};
 use crate::runtime::client::RuntimeError;
 use crate::runtime::Runtime;
-use crate::slab::SlabLayer;
+use crate::slab::threshold::sorted_scores_desc;
+use crate::slab::{wanda_scores_par, RefineConfig, RefineReport, SlabLayer};
 use crate::util::pool::ThreadPool;
 use std::path::PathBuf;
 
@@ -67,9 +69,19 @@ pub struct CompressReport {
     pub mean_frob: f64,
     /// Peak resident tensor bytes — an accounting proxy (inputs +
     /// calibration stream + retained outputs + the largest per-block
-    /// transient), not an RSS measurement; comparable across job
-    /// configurations, which is what the streaming-emit story needs.
+    /// transient, including the budget probe's score arrays and the
+    /// refinement loop's per-linear scratch when those stages run),
+    /// not an RSS measurement; comparable across job configurations,
+    /// which is what the streaming-emit story needs.
     pub peak_bytes: usize,
+    /// The activation-aware per-layer budget plan, when the job ran
+    /// with [`CompressJob::budget`] (render with
+    /// [`BudgetPlan::to_table`]).
+    pub budget: Option<BudgetPlan>,
+    /// Per-layer refinement diagnostics, when the job ran with
+    /// [`CompressJob::refine`] (render with
+    /// [`crate::slab::refine_table`]). Emission order.
+    pub refine: Vec<(String, RefineReport)>,
 }
 
 #[derive(Debug, thiserror::Error)]
@@ -160,6 +172,8 @@ pub struct CompressJob<'a> {
     keep_dense: bool,
     keep_packed: bool,
     stream_to: Option<PathBuf>,
+    refine: Option<RefineConfig>,
+    budget: Option<BudgetConfig>,
 }
 
 impl<'a> CompressJob<'a> {
@@ -175,6 +189,8 @@ impl<'a> CompressJob<'a> {
             keep_dense: true,
             keep_packed: true,
             stream_to: None,
+            refine: None,
+            budget: None,
         }
     }
 
@@ -229,6 +245,27 @@ impl<'a> CompressJob<'a> {
         self
     }
 
+    /// Run [`crate::slab::refine`] after each linear's one-shot
+    /// decomposition (SLaB + native engine only — validated at
+    /// [`run`](CompressJob::run)). Rounds execute inside the same
+    /// per-linear fan-out unit, so any thread setting stays
+    /// bit-identical to serial.
+    pub fn refine(mut self, rcfg: RefineConfig) -> Self {
+        self.refine = Some(rcfg);
+        self
+    }
+
+    /// Replace the uniform Eq.-10 keep fraction with an
+    /// activation-aware per-layer allocation ([`super::budget`]): a
+    /// dense-weights probe pass scores every linear, then water-fills
+    /// the *global* sparse budget across layers (SLaB + native engine
+    /// only — validated at [`run`](CompressJob::run)). The resulting
+    /// plan is recorded in [`CompressReport::budget`].
+    pub fn budget(mut self, bcfg: BudgetConfig) -> Self {
+        self.budget = Some(bcfg);
+        self
+    }
+
     /// Run capture → decompose → emit over every block.
     pub fn run(self) -> Result<CompressOut, PipelineError> {
         let t0 = std::time::Instant::now();
@@ -254,6 +291,80 @@ impl<'a> CompressJob<'a> {
                 self.method.name()
             )));
         }
+        // Refinement and budget allocation are SLaB concepts (they
+        // re-fit/re-budget a decomposition) and run natively — same
+        // up-front rejection policy as stream_to.
+        if self.refine.is_some() || self.budget.is_some() {
+            let what = if self.refine.is_some() { "refine" } else { "budget" };
+            if !matches!(self.method, Method::Slab(_)) {
+                return Err(PipelineError::Other(format!(
+                    "{what} set but method '{}' has no decomposition to {what} (SLaB only)",
+                    self.method.name()
+                )));
+            }
+            if self.engine == Engine::Artifact {
+                return Err(PipelineError::Other(format!(
+                    "{what} is not supported by the artifact decompose engine (use Engine::Native)"
+                )));
+            }
+        }
+
+        // Budget probe pre-pass: one extra capture pass over the
+        // *dense* weights (no reconstruction swap-in, so later blocks
+        // see unpruned activations — the allocator scores layers
+        // before any budget is spent), folding each linear's Wanda
+        // scores into a sorted probe. The probes and the plan they
+        // produce are all the pass retains.
+        let mut probe_peak = 0usize;
+        let params_bytes = cfg.n_params() * 4;
+        let plan: Option<BudgetPlan> = match (&self.budget, self.method) {
+            (Some(bcfg), Method::Slab(scfg)) => {
+                let mut probe_cap = capture::Capture::start(
+                    self.capture,
+                    self.params,
+                    self.calib,
+                    self.batch,
+                    pool,
+                )?;
+                let mut probes: Vec<LayerProbe> = Vec::new();
+                let mut probe_bytes = 0usize;
+                for layer in 0..cfg.n_layers {
+                    let blockw = BlockWeights::from_params(self.params, layer)?;
+                    let stats = probe_cap.capture_block(&blockw, false)?;
+                    for (name, src, w) in &blockw.linears {
+                        let scores = wanda_scores_par(w, &stats[*src], pool);
+                        probes.push(LayerProbe {
+                            name: name.clone(),
+                            dout: w.rows,
+                            din: w.cols,
+                            scores: sorted_scores_desc(&scores),
+                        });
+                        probe_bytes += w.numel() * 4;
+                    }
+                    // Retained probes + this block's weights, stats and
+                    // in-flight score matrix.
+                    probe_peak = probe_peak.max(
+                        params_bytes
+                            + probe_cap.resident_bytes()
+                            + probe_bytes
+                            + 2 * blockw.nbytes()
+                            + stats.iter().map(|s| s.nbytes()).sum::<usize>(),
+                    );
+                    if layer + 1 < cfg.n_layers {
+                        probe_cap.advance(&blockw)?;
+                    }
+                }
+                let plan = BudgetPlan::plan(&probes, scfg, bcfg)
+                    .map_err(|e| PipelineError::Method(MethodError::Config(e)))?;
+                eprintln!(
+                    "[compress] budget plan: {} layers water-filled at τ = {:.5}",
+                    plan.layers.len(),
+                    plan.waterline
+                );
+                Some(plan)
+            }
+            _ => None,
+        };
 
         let mut cap = capture::Capture::start(self.capture, self.params, self.calib, self.batch, pool)?;
         let needs_gram = self.method.needs_gram();
@@ -261,23 +372,37 @@ impl<'a> CompressJob<'a> {
         let mut sink = emit::Sink::new(self.stream_to.as_deref())?;
         let mut slab_layers: Vec<(String, SlabLayer)> = Vec::new();
         let mut reports: Vec<LayerReport> = Vec::new();
+        let mut refine_reports: Vec<(String, RefineReport)> = Vec::new();
 
         // Peak-resident accounting (a proxy, not an RSS reading):
         // inputs + calibration stream (+ the keep_dense clone) are
         // always live; retained packed layers accumulate; per-block
         // transients add the current weights, their reconstructions,
-        // the packed triples, and the stats.
-        let params_bytes = cfg.n_params() * 4;
+        // the packed triples, and the stats. A refining job adds the
+        // loop's per-linear scratch (residual, |residual|, low-rank
+        // product, score matrix, mask — ≈ 5 dense copies of each
+        // in-flight linear, i.e. 5× the block on a full fan-out); the
+        // budget probe's peak was tracked by the pre-pass above.
         let base = params_bytes * (1 + self.keep_dense as usize) + cap.resident_bytes();
         let mut retained = 0usize;
-        let mut peak = base;
+        let mut peak = base.max(probe_peak);
 
         for layer in 0..cfg.n_layers {
             let mut blockw = BlockWeights::from_params(self.params, layer)?;
             let stats = cap.capture_block(&blockw, needs_gram)?;
-            let outs =
-                decompose::decompose_block(self.method, self.engine, rt, &blockw, &stats, pool)?;
+            let outs = decompose::decompose_block(
+                self.method,
+                self.engine,
+                rt,
+                &blockw,
+                &stats,
+                plan.as_ref(),
+                self.refine.as_ref(),
+                pool,
+            )?;
+            let refine_scratch = if self.refine.is_some() { 5 * blockw.nbytes() } else { 0 };
             let transient = 2 * blockw.nbytes()
+                + refine_scratch
                 + stats.iter().map(|s| s.nbytes()).sum::<usize>()
                 + outs
                     .iter()
@@ -285,9 +410,12 @@ impl<'a> CompressJob<'a> {
                     .sum::<usize>();
             peak = peak.max(base + retained + transient);
             for (slot, out) in outs.into_iter().enumerate() {
-                let decompose::LinearOut { report, w_hat, packed } = out;
+                let decompose::LinearOut { report, w_hat, packed, refine } = out;
                 if let Some(p) = &mut out_params {
                     p.set_mat(&report.name, &w_hat);
+                }
+                if let Some(r) = refine {
+                    refine_reports.push((report.name.clone(), r));
                 }
                 if let Some(packed) = packed {
                     sink.emit(&report.name, &packed)?;
@@ -329,6 +457,8 @@ impl<'a> CompressJob<'a> {
                 wall_secs: t0.elapsed().as_secs_f64(),
                 mean_frob,
                 peak_bytes: peak,
+                budget: plan,
+                refine: refine_reports,
             },
         })
     }
@@ -559,6 +689,101 @@ mod tests {
             .run()
             .expect("streaming job");
         assert!(matches!(lean.serving_model(&params, 1), Err(PipelineError::Other(_))));
+    }
+
+    #[test]
+    fn refined_alloc_job_is_bit_identical_parallel_vs_serial() {
+        // The tentpole determinism contract extended to the new
+        // stages: budget probe + plan + per-layer refinement rounds
+        // under a 4-worker fan-out must match the serial run bit for
+        // bit — packed layers, dense reconstructions, reports, refine
+        // traces, and the plan itself.
+        let cfg = tiny_cfg(2);
+        let params = Params::init(&cfg, 408);
+        let cal = calib(&cfg, 4);
+        let method = slab_method();
+        let rc = crate::slab::RefineConfig { rounds: 2, tol: 0.0 };
+        let serial = CompressJob::new(&params, &cal, &method)
+            .refine(rc)
+            .budget(BudgetConfig::default())
+            .run()
+            .expect("serial refined job");
+        let par = CompressJob::new(&params, &cal, &method)
+            .refine(rc)
+            .budget(BudgetConfig::default())
+            .threads(4)
+            .run()
+            .expect("parallel refined job");
+        assert_eq!(serial.slab_layers, par.slab_layers, "packed layers");
+        assert_eq!(
+            serial.params.as_ref().expect("serial params").tensors,
+            par.params.as_ref().expect("parallel params").tensors,
+            "dense reconstructions"
+        );
+        assert_eq!(serial.report.layers, par.report.layers, "reports");
+        assert_eq!(serial.report.refine, par.report.refine, "refine traces");
+        assert_eq!(serial.report.budget, par.report.budget, "budget plan");
+        // Every pruned linear got a refine report, in emission order.
+        assert_eq!(serial.report.refine.len(), cfg.pruned.len());
+        let names: Vec<&str> = serial.report.refine.iter().map(|(n, _)| n.as_str()).collect();
+        let expect: Vec<String> = (0..cfg.n_layers)
+            .flat_map(|l| cfg.block_linears(l).map(|(n, _)| n))
+            .collect();
+        assert_eq!(names, expect.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn budget_plan_conserves_global_keep_and_refine_never_regresses() {
+        let cfg = tiny_cfg(2);
+        let params = Params::init(&cfg, 409);
+        let cal = calib(&cfg, 4);
+        let method = slab_method();
+        let out = CompressJob::new(&params, &cal, &method)
+            .refine(crate::slab::RefineConfig { rounds: 2, tol: 0.0 })
+            .budget(BudgetConfig::default())
+            .run()
+            .expect("refined alloc job");
+        let plan = out.report.budget.as_ref().expect("plan recorded");
+        assert_eq!(
+            plan.total_keep(),
+            plan.total_uniform_keep(),
+            "equal global parameter budget is an invariant"
+        );
+        assert_eq!(plan.layers.len(), cfg.pruned.len());
+        // The accept guard makes per-layer non-regression structural.
+        for (name, r) in &out.report.refine {
+            assert!(
+                r.err_after() <= r.err_before(),
+                "{name}: {} > {}",
+                r.err_after(),
+                r.err_before()
+            );
+        }
+        // The plan's table renders every layer.
+        let t = plan.to_table();
+        assert_eq!(t.rows.len(), cfg.pruned.len());
+    }
+
+    #[test]
+    fn refine_and_budget_reject_non_slab_and_artifact_engine() {
+        let cfg = tiny_cfg(1);
+        let params = Params::init(&cfg, 410);
+        let cal = calib(&cfg, 2);
+        let wanda = Method::Wanda { sparsity: 0.5, pattern: None };
+        let err = CompressJob::new(&params, &cal, &wanda)
+            .refine(crate::slab::RefineConfig::default())
+            .run();
+        assert!(matches!(err, Err(PipelineError::Other(_))), "refine on wanda");
+        let err = CompressJob::new(&params, &cal, &wanda)
+            .budget(BudgetConfig::default())
+            .run();
+        assert!(matches!(err, Err(PipelineError::Other(_))), "budget on wanda");
+        let slab = slab_method();
+        let err = CompressJob::new(&params, &cal, &slab)
+            .engine(Engine::Artifact)
+            .refine(crate::slab::RefineConfig::default())
+            .run();
+        assert!(matches!(err, Err(PipelineError::Other(_))), "refine on artifact engine");
     }
 
     #[test]

@@ -1,15 +1,19 @@
 //! Layer-3 coordination: the staged one-shot compression pipeline
 //! ([`compress`] — capture → decompose → emit behind one
-//! [`compress::CompressJob`]), the streaming serving router
+//! [`compress::CompressJob`]), the activation-aware per-layer budget
+//! allocator ([`budget`] — water-filling the global sparse budget
+//! across linears, DESIGN.md §16), the streaming serving router
 //! ([`serve`]) over its three engines ([`serve::Backend`]) — two
 //! dynamic batchers and the continuous-batching [`serve::Scheduler`]
 //! — and the dependency-free HTTP/1.1 front-end ([`http`]) that
 //! exposes the session API over a socket (DESIGN.md §12).
 
+pub mod budget;
 pub mod compress;
 pub mod http;
 pub mod serve;
 
+pub use budget::{BudgetConfig, BudgetPlan, LayerBudget, LayerProbe};
 pub use compress::{
     compress_model, load_packed_checkpoint, CaptureEngine, CompressJob, CompressOut,
     CompressReport, CompressedModel, Engine, LayerReport, PipelineError,

@@ -5,14 +5,14 @@
 //! identical rows. See DESIGN.md §5 for the experiment index.
 
 use crate::baselines::{Method, SparseGptConfig};
-use crate::coordinator::{compress_model, CompressJob, Engine, PipelineError};
+use crate::coordinator::{compress_model, BudgetConfig, CompressJob, Engine, PipelineError};
 use crate::data::{build_corpus, CorpusBundle, Grammar, Task, TaskItem, ALL_TASKS};
 use crate::eval::native::EvalOptions;
 use crate::eval::{perplexity, zero_shot};
 use crate::model::{Params, SlabModel};
 use crate::report::Table;
 use crate::runtime::{ModelCfg, Runtime};
-use crate::slab::{GroupShape, SlabConfig, Structure, Variant};
+use crate::slab::{GroupShape, RefineConfig, SlabConfig, Structure, Variant};
 use crate::sparse::{PATTERN_2_4, PATTERN_4_8};
 use crate::train::train;
 use std::path::{Path, PathBuf};
@@ -374,6 +374,10 @@ pub struct SweepConfig {
     pub iters: usize,
     /// Rank of the naive sparse+low-rank baseline (Fig. 1's knob).
     pub lowrank_rank: usize,
+    /// Joint-refinement rounds for the sweep's `SLaB+refine` /
+    /// `SLaB+alloc` rows (`crate::slab::refine`; 0 degenerates them to
+    /// plain SLaB).
+    pub refine_rounds: usize,
 }
 
 impl SweepConfig {
@@ -392,6 +396,7 @@ impl SweepConfig {
             eval_batch: 8,
             iters: 8,
             lowrank_rank: 2,
+            refine_rounds: 2,
         }
     }
 }
@@ -506,9 +511,14 @@ pub fn eval_native_table(
 /// (native capture, `threads` fan-out), serve each result natively
 /// (SLaB straight out of the packed format, baselines via their dense
 /// reconstruction), and score perplexity + the seven zero-shot suites
-/// through `eval::native` — **no XLA artifacts anywhere**. Rows the
-/// budget cannot realize (e.g. an infeasible low-rank allocation)
-/// render as `infeasible` instead of aborting the sweep.
+/// through `eval::native` — **no XLA artifacts anywhere**. Each ratio
+/// also carries two SLaB variants at the *same* global parameter
+/// budget: `SLaB+refine` (joint refinement of the uniform allocation,
+/// [`crate::slab::refine`]) and `SLaB+alloc` (refinement on top of the
+/// activation-aware water-filled budget,
+/// [`crate::coordinator::budget`]). Rows the budget cannot realize
+/// (e.g. an infeasible low-rank allocation) render as `infeasible`
+/// instead of aborting the sweep.
 pub fn sweep(scfg: &SweepConfig, params: &Params) -> anyhow::Result<Table> {
     let cfg = &params.cfg;
     let (corpus, suites) = native_eval_setup(scfg, cfg)?;
@@ -574,6 +584,39 @@ pub fn sweep(scfg: &SweepConfig, params: &Params) -> anyhow::Result<Table> {
                     eprintln!("[sweep] {} at {cr}: infeasible ({e})", method.name());
                     let mut row =
                         vec![method.name(), method.sparsity_label(), "infeasible".into()];
+                    row.extend(vec!["-".to_string(); ALL_TASKS.len() + 1]);
+                    table.push_row(row);
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+
+        // The two refined SLaB variants, same ratio, same global
+        // parameter budget (the allocator conserves Σ keep exactly).
+        let slab = Method::Slab(SlabConfig {
+            cr,
+            iters: scfg.iters,
+            ..Default::default()
+        });
+        let rc = RefineConfig::with_rounds(scfg.refine_rounds);
+        for (name, alloc) in [("SLaB+refine", false), ("SLaB+alloc", true)] {
+            let mut job = CompressJob::new(params, &corpus.calib, &slab)
+                .threads(scfg.threads)
+                .refine(rc);
+            if alloc {
+                job = job.budget(BudgetConfig::default());
+            }
+            match job.run() {
+                Ok(out) => {
+                    let model = out
+                        .serving_model(params, 1)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                    let row = score(name.to_string(), slab.sparsity_label(), &model);
+                    table.push_row(row);
+                }
+                Err(PipelineError::Method(e)) => {
+                    eprintln!("[sweep] {name} at {cr}: infeasible ({e})");
+                    let mut row = vec![name.to_string(), slab.sparsity_label(), "infeasible".into()];
                     row.extend(vec!["-".to_string(); ALL_TASKS.len() + 1]);
                     table.push_row(row);
                 }

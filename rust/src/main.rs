@@ -6,11 +6,15 @@
 //! slab compress --model base --method slab --cr 0.5 [--pattern 2:4 | --semi]
 //!              [--engine artifact]
 //!              [--capture native|artifact] [--threads N] [--stream out.slabckpt]
+//!              [--refine [--refine-rounds N]] [--budget alloc|uniform]
+//!              # --refine: joint weighted re-fit after Algorithm 1;
+//!              # --budget alloc: water-filled per-layer keep budgets
 //! slab eval    --model base [--ckpt runs/base_slab.slabckpt]
 //! slab eval    --engine native [--model small --ckpt runs/small.slabckpt]
 //!              [--method slab --cr 0.5] [--threads 0]                   # artifact-free
 //! slab sweep   [--model small|base|large] [--ratios 0.5,0.6] [--threads 0]
-//!              [--items 8] [--rows 16] [--csv runs/sweep.csv]           # artifact-free
+//!              [--items 8] [--rows 16] [--refine-rounds 2]
+//!              [--csv runs/sweep.csv]                                   # artifact-free
 //! slab table1  --models small,base,large [--groups "US (50%)"]
 //! slab table2 | table3 | fig1 | fig3
 //! slab serve   --model base --requests 64
@@ -56,15 +60,15 @@
 
 use slab::baselines::{Method, SparseGptConfig};
 use slab::coordinator::{
-    load_packed_checkpoint, Backend, CaptureEngine, CompressJob, Engine, HttpConfig, HttpServer,
-    Request, SchedulerConfig, Server, ServerConfig,
+    load_packed_checkpoint, Backend, BudgetConfig, CaptureEngine, CompressJob, Engine, HttpConfig,
+    HttpServer, Request, SchedulerConfig, Server, ServerConfig,
 };
 use slab::eval::{perplexity, zero_shot};
 use slab::experiments::{self, Lab, SweepConfig};
 use slab::model::{Params, SlabModel};
 use slab::report::Table;
 use slab::runtime::ModelCfg;
-use slab::slab::{SlabConfig, Structure};
+use slab::slab::{refine_table, RefineConfig, SlabConfig, Structure};
 use slab::sparse::{PATTERN_2_4, PATTERN_4_8};
 use slab::util::cli::Args;
 use std::path::PathBuf;
@@ -174,6 +178,7 @@ fn sweep_config(args: &Args) -> anyhow::Result<SweepConfig> {
     scfg.threads = args.get_usize("threads", scfg.threads)?;
     scfg.eval_batch = args.get_usize("batch", scfg.eval_batch)?;
     scfg.iters = args.get_usize("iters", scfg.iters)?;
+    scfg.refine_rounds = args.get_usize("refine-rounds", scfg.refine_rounds)?;
     Ok(scfg)
 }
 
@@ -343,7 +348,25 @@ fn run(args: &Args) -> anyhow::Result<()> {
             if let Some(p) = args.get("stream") {
                 job = job.stream_to(PathBuf::from(p));
             }
+            // --refine: joint activation-weighted re-fit after each
+            // linear's one-shot decomposition; --budget alloc replaces
+            // the uniform Eq.-10 keep fraction with the water-filled
+            // per-layer plan (both SLaB + native engine only).
+            if args.has_flag("refine") {
+                job = job.refine(RefineConfig::with_rounds(args.get_usize("refine-rounds", 3)?));
+            }
+            match args.get_str("budget", "uniform").as_str() {
+                "alloc" => job = job.budget(BudgetConfig::default()),
+                "uniform" => {}
+                b => anyhow::bail!("unknown --budget {b} (alloc | uniform)"),
+            }
             let c = job.run()?;
+            if let Some(plan) = &c.report.budget {
+                plan.to_table().print();
+            }
+            if !c.report.refine.is_empty() {
+                refine_table(&c.report.refine).print();
+            }
             let out = lab
                 .runs_dir
                 .join(format!("{model}_{}.slabckpt", method.name().to_lowercase()));

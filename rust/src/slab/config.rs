@@ -83,6 +83,12 @@ pub struct SlabConfig {
     pub svd_iters: usize,
     /// Seed for the (deterministic) SVD initialization.
     pub seed: u64,
+    /// Per-layer keep-fraction override. `None` (the default) derives
+    /// the keep fraction from `cr` via Eq. 10; `Some(f)` pins it
+    /// directly — the hook the budget allocator
+    /// (`coordinator::budget`) uses to spend one layer's sparse budget
+    /// on another while the *global* parameter count stays fixed.
+    pub keep_override: Option<f64>,
 }
 
 impl Default for SlabConfig {
@@ -96,6 +102,7 @@ impl Default for SlabConfig {
             rank: 1,
             svd_iters: 8,
             seed: 0x51ab,
+            keep_override: None,
         }
     }
 }
@@ -107,13 +114,23 @@ pub enum ConfigError {
 }
 
 impl SlabConfig {
-    /// Eq. 10 — the fraction of elements retained in `W_S`.
+    /// Eq. 10 — the fraction of elements retained in `W_S` — unless a
+    /// [`keep_override`](SlabConfig::keep_override) pins it (the
+    /// budget allocator's per-layer hook; validated the same way).
     pub fn keep_fraction(&self, dout: usize, din: usize) -> Result<f64, ConfigError> {
-        let f = 1.0 - self.cr - 1.0 / self.bits as f64 - 1.0 / dout as f64 - 1.0 / din as f64;
+        let f = match self.keep_override {
+            Some(f) => f,
+            None => 1.0 - self.cr - 1.0 / self.bits as f64 - 1.0 / dout as f64 - 1.0 / din as f64,
+        };
         if f <= 0.0 || f >= 1.0 {
             return Err(ConfigError::Infeasible(f, self.cr, dout, din, self.bits));
         }
         Ok(f)
+    }
+
+    /// `self` with the keep fraction pinned to `f` (Eq. 10 bypassed).
+    pub fn with_keep(&self, f: f64) -> SlabConfig {
+        SlabConfig { keep_override: Some(f), ..*self }
     }
 
     /// Non-zeros `k` retained for a layer (floor, ≥ 0).
@@ -168,6 +185,25 @@ mod tests {
         assert!(mk(0.5) > mk(0.6));
         assert!(mk(0.6) > mk(0.7));
         assert!(mk(0.7) > mk(0.8));
+    }
+
+    #[test]
+    fn keep_override_bypasses_eq10_and_is_validated() {
+        // An override that Eq. 10 would reject (CR 0.95 at 64x64) is
+        // honored when explicitly pinned…
+        let cfg = SlabConfig { cr: 0.95, ..Default::default() }.with_keep(0.3);
+        assert_eq!(cfg.keep_fraction(64, 64).unwrap(), 0.3);
+        assert_eq!(cfg.keep_count(64, 64).unwrap(), (0.3 * 4096.0) as usize);
+        // …but the override itself is range-checked like Eq. 10's value.
+        for bad in [0.0, 1.0, -0.2, 1.5] {
+            let cfg = SlabConfig::default().with_keep(bad);
+            assert!(cfg.keep_fraction(64, 64).is_err(), "keep {bad} must be rejected");
+        }
+        // No override: unchanged Eq. 10 semantics.
+        let base = SlabConfig::default();
+        assert!(base.keep_override.is_none());
+        let f = base.keep_fraction(4096, 4096).unwrap();
+        assert!((f - (0.5 - 0.0625 - 2.0 / 4096.0)).abs() < 1e-9);
     }
 
     #[test]

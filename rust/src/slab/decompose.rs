@@ -37,7 +37,7 @@ use crate::util::pool::{chunk_ranges, ThreadPool};
 
 /// Decomposition output (dense form; see [`crate::slab::layer`] for
 /// the packed deployment format).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Decomposition {
     pub w_s: Mat,
     /// Rank-r factors, √σ-split: w_l = Σ_k u[k]·v[k]ᵀ. Paper default r=1.
@@ -147,8 +147,13 @@ pub fn decompose_par(
 
 /// `Σ_k u_k v_kᵀ ⊙ B` without materializing `W_L` separately; rows
 /// optionally chunked across `pool` (row-wise independent, so the
-/// parallel result is bit-identical).
-fn low_rank_binary(u: &[Vec<f32>], v: &[Vec<f32>], b: &Mat, pool: Option<&ThreadPool>) -> Mat {
+/// parallel result is bit-identical). Shared with [`super::refine`].
+pub(crate) fn low_rank_binary(
+    u: &[Vec<f32>],
+    v: &[Vec<f32>],
+    b: &Mat,
+    pool: Option<&ThreadPool>,
+) -> Mat {
     let (dout, din) = b.shape();
     let mut m = Mat::zeros(dout, din);
     match pool {

@@ -4,6 +4,8 @@
 //! * [`scores`] — activation-aware (Wanda) scoring.
 //! * [`threshold`] — group-wise hard thresholding + N:M composition.
 //! * [`decompose`] — Algorithm 1 (alternating optimization).
+//! * [`refine`] — activation-weighted joint refinement of a
+//!   decomposition (the opt-in quality stage; DESIGN.md §16).
 //! * [`layer`] — packed CSR + rank-1 + bitplane deployment format.
 //! * [`ablation`] — Table III component ablations.
 
@@ -11,6 +13,7 @@ pub mod ablation;
 pub mod config;
 pub mod decompose;
 pub mod layer;
+pub mod refine;
 pub mod scores;
 pub mod threshold;
 
@@ -18,5 +21,6 @@ pub use ablation::{ablate, AblationOut, Variant};
 pub use config::{GroupShape, SlabConfig, Structure};
 pub use decompose::{decompose, decompose_par, Decomposition};
 pub use layer::SlabLayer;
-pub use scores::{wanda_scores, wanda_scores_par, ActStats};
+pub use refine::{refine, refine_table, RefineConfig, RefineReport};
+pub use scores::{wanda_scores, wanda_scores_par, weighted_frob_norm, ActStats};
 pub use threshold::{group_topk_mask, semi_structured_mask};

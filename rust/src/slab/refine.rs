@@ -1,0 +1,391 @@
+//! Joint refinement of a SLaB decomposition (ROADMAP item 2; the
+//! HASSLE-free direction of PAPERS.md).
+//!
+//! Algorithm 1 fits `W_L` with a *plain* truncated SVD of `|W − W_S|`
+//! — the activation statistics only enter through the Wanda mask.
+//! [`refine`] runs additional alternating-minimization rounds over an
+//! already-decomposed layer, but under the **activation-weighted
+//! metric** `‖(W − Ŵ)·diag(s)‖_F` the evaluation actually cares
+//! about (`s` = the RMS activation norms of [`ActStats`]):
+//!
+//! 1. re-threshold the binary part: `W_B ← sign(W − W_S)`;
+//! 2. re-fit the rank-r factors against the sparse residual under the
+//!    weighted metric — the weighted problem
+//!    `min ‖(|W − W_S| − W_L)·diag(s)‖_F` is solved *exactly* by the
+//!    truncated SVD of the column-scaled matrix `|W − W_S|·diag(s)`
+//!    followed by unscaling the right factors by `1/s`;
+//! 3. re-select the sparse mask against the new low-rank-binary
+//!    residual (same group-wise Wanda thresholding as Algorithm 1).
+//!
+//! **Contracts** (DESIGN.md §16, pinned by the tests below and at the
+//! job level):
+//! * *identity* — `rounds = 0` returns the input decomposition
+//!   bit-identically;
+//! * *monotonicity* — the per-round weighted error trace never
+//!   increases: a round whose re-selection would regress is rejected
+//!   (the previous state is kept) and the loop stops early;
+//! * *early stop* — the loop also stops once a round improves by less
+//!   than `tol · previous`;
+//! * *determinism* — given the same inputs the output is bit-exact
+//!   regardless of parallelism: the compression pipeline fans whole
+//!   linears across `ThreadPool::scoped_map` workers and each linear's
+//!   rounds run serially inside its worker, so parallel == serial by
+//!   construction (same contract as the decompose stage).
+
+use super::config::{ConfigError, SlabConfig, Structure};
+use super::decompose::{low_rank_binary, Decomposition};
+use super::scores::{wanda_scores, weighted_frob_norm, ActStats};
+use super::threshold::{group_topk_mask, semi_structured_mask};
+use crate::report::Table;
+use crate::tensor::{svd_truncated, Mat};
+
+/// Seed salt for the refinement SVDs — distinct from the Algorithm-1
+/// iteration seeds (`cfg.seed ^ t`) so a refine round never replays a
+/// decompose-round subspace initialization.
+const REFINE_SEED_SALT: u64 = 0x5ef1_4e00;
+
+/// Knobs of the refinement loop. The *budget* contract (keep
+/// fraction, group geometry, structure, rank, SVD iterations) comes
+/// from the layer's [`SlabConfig`], which [`refine`] takes alongside —
+/// refinement never changes what a layer is allowed to store, only
+/// how well it uses it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RefineConfig {
+    /// Maximum alternating rounds (0 = identity).
+    pub rounds: usize,
+    /// Relative early-stop tolerance: stop once a round improves the
+    /// weighted error by ≤ `tol · previous`.
+    pub tol: f64,
+}
+
+impl Default for RefineConfig {
+    fn default() -> Self {
+        RefineConfig { rounds: 3, tol: 1e-3 }
+    }
+}
+
+impl RefineConfig {
+    pub fn with_rounds(rounds: usize) -> RefineConfig {
+        RefineConfig { rounds, ..Default::default() }
+    }
+}
+
+/// Per-layer refinement diagnostics, serialized through
+/// [`refine_table`] into the compression report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RefineReport {
+    /// Rounds actually *accepted* (≤ `cfg.rounds`).
+    pub rounds_run: usize,
+    /// Activation-weighted reconstruction error before refinement and
+    /// after each accepted round (`len = rounds_run + 1`); monotone
+    /// non-increasing by the accept guard.
+    pub err_trace: Vec<f32>,
+    /// Whether the loop stopped before exhausting its round budget
+    /// (tolerance reached or a rejected round).
+    pub early_stopped: bool,
+}
+
+impl RefineReport {
+    /// Weighted error entering refinement (the one-shot Algorithm-1
+    /// quality under the activation metric).
+    pub fn err_before(&self) -> f32 {
+        self.err_trace[0]
+    }
+
+    /// Weighted error after the last accepted round.
+    pub fn err_after(&self) -> f32 {
+        *self.err_trace.last().expect("non-empty trace")
+    }
+
+    /// Fractional improvement over the one-shot decomposition.
+    pub fn improvement(&self) -> f64 {
+        let e0 = self.err_before() as f64;
+        if e0 <= 0.0 {
+            return 0.0;
+        }
+        (e0 - self.err_after() as f64) / e0
+    }
+}
+
+/// Refine `d` (a decomposition of `w`) for up to `rcfg.rounds`
+/// alternating rounds under the activation-weighted metric. The
+/// budget contract (keep fraction — including any
+/// [`SlabConfig::keep_override`] — group geometry, structure, rank)
+/// is taken from `cfg`, so a refined layer stores exactly what the
+/// one-shot layer stored. Returns the refined decomposition and its
+/// per-round [`RefineReport`].
+pub fn refine(
+    w: &Mat,
+    d: &Decomposition,
+    stats: &ActStats,
+    cfg: &SlabConfig,
+    rcfg: &RefineConfig,
+) -> Result<(Decomposition, RefineReport), ConfigError> {
+    let (dout, din) = w.shape();
+    assert_eq!(d.w_s.shape(), (dout, din), "decomposition shape mismatch");
+    assert_eq!(stats.din(), din, "stats Din mismatch");
+
+    let mut cur = d.clone();
+    let mut trace = vec![weighted_frob_norm(&w.sub(&cur.reconstruct()), stats) as f32];
+    if rcfg.rounds == 0 {
+        return Ok((
+            cur,
+            RefineReport { rounds_run: 0, err_trace: trace, early_stopped: false },
+        ));
+    }
+
+    let keep = cfg.keep_fraction(dout, din)?;
+    let (gr, gc) = cfg.group.resolve(dout, din);
+    let rank = cfg.rank;
+    // Column weights for the low-rank re-fit. A dead input feature
+    // (s_j = 0) is invisible to the metric; weight 1 there keeps the
+    // unscaling well-defined (the factor values at such columns are
+    // arbitrary but deterministic).
+    let wt: Vec<f32> = stats
+        .col_norms
+        .iter()
+        .map(|&s| if s > 0.0 { s } else { 1.0 })
+        .collect();
+
+    let mut early_stopped = false;
+    for round in 0..rcfg.rounds {
+        let mut next = cur.clone();
+
+        // (1) binary re-threshold against the sparse residual.
+        let y_bl = w.sub(&next.w_s);
+        next.w_b = y_bl.sign_pm1();
+
+        // (2) activation-weighted rank-r re-fit: tSVD of
+        // |residual|·diag(s), right factors unscaled by 1/s.
+        if rank > 0 {
+            let mut a = y_bl.abs();
+            for i in 0..dout {
+                let row = a.row_mut(i);
+                for j in 0..din {
+                    row[j] *= wt[j];
+                }
+            }
+            let svd = svd_truncated(&a, rank, cfg.svd_iters, cfg.seed ^ (REFINE_SEED_SALT + round as u64));
+            next.u.clear();
+            next.v.clear();
+            for k in 0..rank.min(svd.s.len()) {
+                let (uk, mut vk) = svd.sqrt_split(k);
+                for (vj, &s) in vk.iter_mut().zip(wt.iter()) {
+                    *vj /= s;
+                }
+                next.u.push(uk);
+                next.v.push(vk);
+            }
+        }
+
+        // (3) sparse re-selection against the low-rank-binary residual.
+        let lb = low_rank_binary(&next.u, &next.v, &next.w_b, None);
+        let y_s = w.sub(&lb);
+        let s = wanda_scores(&y_s, stats);
+        let mask = match cfg.structure {
+            Structure::Unstructured => group_topk_mask(&s, keep, gr, gc),
+            Structure::SemiStructured(p) => semi_structured_mask(&s, keep, p, gr, gc),
+        };
+        next.w_s = y_s.hadamard(&mask);
+        next.kept = mask.count_nonzero();
+
+        let approx = next.w_s.add(&lb);
+        let err = weighted_frob_norm(&w.sub(&approx), stats) as f32;
+        let prev = *trace.last().expect("non-empty trace");
+        // Accept guard: a regressing (or NaN) round is rejected and
+        // the loop stops — this is what makes the trace monotone
+        // rather than merely "usually decreasing".
+        if !(err <= prev) {
+            early_stopped = true;
+            break;
+        }
+        next.frob_trace.push(w.frob_dist(&approx));
+        cur = next;
+        trace.push(err);
+        if (prev - err) as f64 <= rcfg.tol * prev as f64 {
+            early_stopped = true;
+            break;
+        }
+    }
+
+    let rounds_run = trace.len() - 1;
+    Ok((cur, RefineReport { rounds_run, err_trace: trace, early_stopped }))
+}
+
+/// Render per-layer refinement reports as a [`Table`] (text + CSV via
+/// the usual `render`/`render_csv`) — the auditability surface the
+/// compress CLI prints.
+pub fn refine_table(rows: &[(String, RefineReport)]) -> Table {
+    let mut t = Table::new(
+        "Refinement — activation-weighted error per layer",
+        &["layer", "rounds", "werr before", "werr after", "improv %", "early stop"],
+    );
+    for (name, r) in rows {
+        t.push_row(vec![
+            name.clone(),
+            r.rounds_run.to_string(),
+            format!("{:.5}", r.err_before()),
+            format!("{:.5}", r.err_after()),
+            format!("{:.2}", r.improvement() * 100.0),
+            r.early_stopped.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slab::decompose;
+    use crate::util::rng::Pcg64;
+
+    fn setup(dout: usize, din: usize, seed: u64) -> (Mat, ActStats) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let w = Mat::randn(dout, din, 0.05, &mut rng);
+        let x = Mat::randn(64, din, 1.0, &mut rng);
+        (w, ActStats::from_activations(&x))
+    }
+
+    fn cfg() -> SlabConfig {
+        SlabConfig { cr: 0.5, iters: 2, svd_iters: 8, ..Default::default() }
+    }
+
+    #[test]
+    fn zero_rounds_is_bit_identical_identity() {
+        let (w, stats) = setup(32, 64, 11);
+        let c = cfg();
+        let d = decompose(&w, &stats, &c).unwrap();
+        let (r, rep) = refine(&w, &d, &stats, &c, &RefineConfig::with_rounds(0)).unwrap();
+        assert_eq!(r, d, "rounds = 0 must be the identity, bit for bit");
+        assert_eq!(rep.rounds_run, 0);
+        assert_eq!(rep.err_trace.len(), 1);
+        assert!(!rep.early_stopped);
+    }
+
+    #[test]
+    fn refinement_improves_weighted_error_of_a_short_oneshot() {
+        // A 2-iteration one-shot leaves headroom; three weighted
+        // rounds must claw some of it back under the weighted metric.
+        let (w, stats) = setup(48, 96, 12);
+        let c = cfg();
+        let d = decompose(&w, &stats, &c).unwrap();
+        let (r, rep) = refine(&w, &d, &stats, &c, &RefineConfig { rounds: 3, tol: 0.0 }).unwrap();
+        assert!(rep.rounds_run >= 1, "at least one round must be accepted");
+        assert!(
+            rep.err_after() < rep.err_before(),
+            "refined {} vs one-shot {}",
+            rep.err_after(),
+            rep.err_before()
+        );
+        // The report's trace is consistent with the returned state.
+        let werr = weighted_frob_norm(&w.sub(&r.reconstruct()), &stats) as f32;
+        assert!((werr - rep.err_after()).abs() <= 1e-4 * (1.0 + werr.abs()));
+        // Budget contract: the refined layer stores what the one-shot
+        // layer stored.
+        assert_eq!(r.kept, d.kept);
+        assert_eq!(r.u.len(), d.u.len());
+    }
+
+    #[test]
+    fn budget_override_is_honored() {
+        // With keep_override the refined mask must track the
+        // override's keep count, not Eq. 10's.
+        let (w, stats) = setup(32, 64, 13);
+        let c = SlabConfig { keep_override: Some(0.25), ..cfg() };
+        let d = decompose(&w, &stats, &c).unwrap();
+        assert_eq!(d.kept, (0.25 * 64.0) as usize * 32);
+        let (r, _) = refine(&w, &d, &stats, &c, &RefineConfig::with_rounds(2)).unwrap();
+        assert_eq!(r.kept, d.kept);
+    }
+
+    #[test]
+    fn prop_err_trace_is_monotone_non_increasing() {
+        // The satellite property: every accepted round non-increases
+        // the activation-weighted error — exactly, not approximately
+        // (the accept guard rejects regressions).
+        crate::util::prop::check(
+            "refine-monotone-werr",
+            10,
+            |rng| crate::util::prop::gens::dims(rng, 8, 48),
+            |&(dout, din)| {
+                let (w, stats) = setup(dout, din, (dout * 977 + din) as u64);
+                let c = cfg();
+                let d = match decompose(&w, &stats, &c) {
+                    Ok(d) => d,
+                    Err(_) => return Ok(()), // infeasible tiny shape
+                };
+                let (_, rep) =
+                    refine(&w, &d, &stats, &c, &RefineConfig { rounds: 4, tol: 0.0 }).unwrap();
+                for t in 1..rep.err_trace.len() {
+                    if rep.err_trace[t] > rep.err_trace[t - 1] {
+                        return Err(format!(
+                            "{dout}x{din}: round {t} regressed {} → {}",
+                            rep.err_trace[t - 1],
+                            rep.err_trace[t]
+                        ));
+                    }
+                }
+                if rep.rounds_run + 1 != rep.err_trace.len() {
+                    return Err("trace length / rounds_run mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn refine_is_deterministic() {
+        let (w, stats) = setup(24, 40, 14);
+        let c = cfg();
+        let d = decompose(&w, &stats, &c).unwrap();
+        let rc = RefineConfig::with_rounds(3);
+        let (a, ra) = refine(&w, &d, &stats, &c, &rc).unwrap();
+        let (b, rb) = refine(&w, &d, &stats, &c, &rc).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn tight_tolerance_stops_early() {
+        let (w, stats) = setup(32, 48, 15);
+        let c = cfg();
+        let d = decompose(&w, &stats, &c).unwrap();
+        // tol = 1 (100% relative improvement required) stops after the
+        // first accepted (or rejected) round.
+        let (_, rep) = refine(&w, &d, &stats, &c, &RefineConfig { rounds: 8, tol: 1.0 }).unwrap();
+        assert!(rep.early_stopped);
+        assert!(rep.rounds_run <= 1);
+    }
+
+    #[test]
+    fn semi_structured_pattern_survives_refinement() {
+        use crate::sparse::PATTERN_2_4;
+        let (w, stats) = setup(16, 64, 16);
+        let c = SlabConfig {
+            structure: Structure::SemiStructured(PATTERN_2_4),
+            ..cfg()
+        };
+        let d = decompose(&w, &stats, &c).unwrap();
+        let (r, _) = refine(&w, &d, &stats, &c, &RefineConfig::with_rounds(2)).unwrap();
+        PATTERN_2_4.validate(&r.w_s).unwrap();
+    }
+
+    #[test]
+    fn refine_table_renders_text_and_csv() {
+        let rows = vec![(
+            "l0.wq".to_string(),
+            RefineReport {
+                rounds_run: 2,
+                err_trace: vec![1.0, 0.8, 0.75],
+                early_stopped: false,
+            },
+        )];
+        let t = refine_table(&rows);
+        let md = t.render();
+        assert!(md.contains("l0.wq"));
+        assert!(md.contains("25.00") || md.contains("25.0"), "{md}");
+        let csv = t.render_csv();
+        assert!(csv.starts_with("layer,rounds,"));
+        assert!(csv.contains("l0.wq,2,"));
+    }
+}

@@ -142,6 +142,25 @@ impl ActStats {
     }
 }
 
+/// Activation-weighted Frobenius norm `‖Y · diag(s)‖_F` (`s` = the
+/// RMS activation norms) — the reconstruction-error metric the
+/// refinement loop minimizes and the budget allocator probes: column
+/// `j`'s contribution to a layer's output error scales with how hard
+/// feature `j` is actually driven. f64 accumulation for stability
+/// across layer sizes.
+pub fn weighted_frob_norm(y: &Mat, stats: &ActStats) -> f64 {
+    assert_eq!(y.cols, stats.din(), "weighted norm dims: y cols {} vs stats {}", y.cols, stats.din());
+    let mut acc = 0.0f64;
+    for i in 0..y.rows {
+        let row = y.row(i);
+        for j in 0..y.cols {
+            let v = row[j] as f64 * stats.col_norms[j] as f64;
+            acc += v * v;
+        }
+    }
+    acc.sqrt()
+}
+
 /// `S = |Y| ⊙ S_X` (broadcast over rows): the Wanda score of every
 /// element of `y` (usually the residual `W − W_L ⊙ W_B`).
 pub fn wanda_scores(y: &Mat, stats: &ActStats) -> Mat {
@@ -324,6 +343,20 @@ mod tests {
         let y = Mat::randn(5, 7, 1.0, &mut rng);
         let s = wanda_scores(&y, &ActStats::uniform(7));
         assert_eq!(s, y.abs());
+    }
+
+    #[test]
+    fn weighted_frob_norm_matches_manual_and_reduces_to_frob() {
+        // 2x2 hand check: ‖Y·diag(s)‖_F.
+        let y = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let stats = ActStats { col_norms: vec![2.0, 0.5], gram: None, samples: 1 };
+        let want = (4.0f64 + 1.0 + 36.0 + 4.0).sqrt();
+        assert!((weighted_frob_norm(&y, &stats) - want).abs() < 1e-9);
+        // Uniform stats: plain Frobenius norm.
+        let mut rng = Pcg64::seed_from_u64(76);
+        let y = Mat::randn(6, 9, 1.0, &mut rng);
+        let w = weighted_frob_norm(&y, &ActStats::uniform(9));
+        assert!((w - y.frob_norm() as f64).abs() < 1e-4 * (1.0 + w));
     }
 
     #[test]

@@ -83,6 +83,38 @@ pub fn semi_structured_mask(
     mask.hadamard(&nm)
 }
 
+/// Scores of a layer sorted descending — the per-layer primitive of
+/// the budget allocator's water-filling pass (`coordinator::budget`).
+/// Deterministic for the non-negative finite scores Wanda produces.
+pub fn sorted_scores_desc(scores: &Mat) -> Vec<f32> {
+    let mut s = scores.data.clone();
+    s.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+    s
+}
+
+/// Kept-energy curve of a descending-sorted score slice:
+/// `curve[k] = Σ_{i<k} s_(i)²` (f64 accumulation), for `k = 0..=n`.
+///
+/// For *pruning-only* selection the squared activation-weighted
+/// reconstruction error at keep budget `k` is exactly the dropped
+/// score energy `curve[n] − curve[k]` — a Wanda score is
+/// `|W_ij|·s_j`, so `Σ_dropped (W_ij·s_j)² = Σ_dropped score²`. The
+/// budget allocator probes layer sensitivity and water-fills against
+/// this curve; for the full sparse+low-rank+binary decomposition it
+/// is a proxy (the low-rank part absorbs part of the drop), which is
+/// why the pipeline re-measures the true weighted error per layer
+/// after decomposing.
+pub fn kept_energy_curve(sorted: &[f32]) -> Vec<f64> {
+    let mut curve = Vec::with_capacity(sorted.len() + 1);
+    let mut acc = 0.0f64;
+    curve.push(0.0);
+    for &s in sorted {
+        acc += s as f64 * s as f64;
+        curve.push(acc);
+    }
+    curve
+}
+
 /// Count of kept elements per full group that `group_topk_mask`
 /// guarantees — exposed for tests and CR verification.
 pub fn kept_per_group(keep_frac: f64, gr: usize, gc: usize) -> usize {
@@ -169,6 +201,37 @@ mod tests {
         let m2 = group_topk_mask(&s, 0.5, 1, 8);
         assert_eq!(m1, m2);
         assert_eq!(m1.count_nonzero(), 4);
+    }
+
+    #[test]
+    fn energy_curve_matches_dropped_score_energy_of_topk() {
+        // The allocator's exactness claim for pruning-only selection:
+        // dropped score energy at keep k == squared weighted error of
+        // keeping the top-k scorers.
+        let mut rng = Pcg64::seed_from_u64(82);
+        let s = Mat::rand_uniform(1, 16, 0.0, 1.0, &mut rng);
+        let sorted = sorted_scores_desc(&s);
+        assert!(sorted.windows(2).all(|w| w[0] >= w[1]), "descending");
+        let curve = kept_energy_curve(&sorted);
+        assert_eq!(curve.len(), 17);
+        assert_eq!(curve[0], 0.0);
+        for k in [0usize, 4, 9, 16] {
+            let mask = group_topk_mask(&s, k as f64 / 16.0, 1, 16);
+            let dropped: f64 = s
+                .data
+                .iter()
+                .zip(mask.data.iter())
+                .filter(|(_, &m)| m == 0.0)
+                .map(|(&v, _)| v as f64 * v as f64)
+                .sum();
+            let want = curve[16] - curve[k];
+            assert!(
+                (dropped - want).abs() <= 1e-9 * (1.0 + want),
+                "k={k}: dropped {dropped} vs curve {want}"
+            );
+        }
+        // Monotone non-decreasing curve.
+        assert!(curve.windows(2).all(|w| w[1] >= w[0]));
     }
 
     #[test]

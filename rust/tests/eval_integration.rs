@@ -124,10 +124,14 @@ fn sweep_quick_emits_full_paper_style_table_artifact_free() {
     let params = Params::init(&scfg.model, scfg.seed ^ 0x1417);
     let table = sweep(&scfg, &params).unwrap();
     assert_eq!(table.header.len(), 3 + 7 + 1, "Method/CR/ppl + 7 tasks + avg");
-    assert_eq!(table.rows.len(), 1 + 5, "dense anchor + five methods");
+    assert_eq!(
+        table.rows.len(),
+        1 + 5 + 2,
+        "dense anchor + five methods + the refined/allocated SLaB variants"
+    );
     assert_eq!(table.rows[0][0], "Dense");
     let methods: Vec<&str> = table.rows.iter().map(|r| r[0].as_str()).collect();
-    for want in ["SLaB", "Wanda", "SparseGPT", "Magnitude"] {
+    for want in ["SLaB", "Wanda", "SparseGPT", "Magnitude", "SLaB+refine", "SLaB+alloc"] {
         assert!(methods.contains(&want), "missing {want} in {methods:?}");
     }
     assert!(

@@ -31,13 +31,13 @@ mod common;
 
 use common::{compress_native, eos_free_params, fuzz_seed, native_test_cfg, runtime};
 use slab::coordinator::{
-    collect_events, Backend, CancelHandle, Event, Request, Scheduler, SchedulerConfig, Server,
-    ServerConfig,
+    collect_events, load_packed_checkpoint, Backend, BudgetConfig, CancelHandle, CompressJob,
+    Event, Request, Scheduler, SchedulerConfig, Server, ServerConfig,
 };
 use slab::data::{build_corpus, Grammar};
 use slab::model::{Params, SlabModel};
 use slab::runtime::{lit_f32, lit_i32, lit_scalar_i32, to_vec_f32};
-use slab::slab::{decompose, ActStats, SlabConfig, SlabLayer};
+use slab::slab::{decompose, ActStats, RefineConfig, RefineReport, SlabConfig, SlabLayer};
 use slab::tensor::Mat;
 use slab::util::rng::Pcg64;
 use std::path::Path;
@@ -748,6 +748,143 @@ fn page_eviction_frees_pages_for_same_tick_admission() {
     assert_eq!(st.page_evictions, 0, "blocking, not preemption, under admission pressure");
     assert_eq!(st.kv_pages, 0, "sharing off: every page returned");
     assert!(st.kv_pages_peak <= 10);
+}
+
+#[test]
+fn refined_alloc_checkpoint_streams_reloads_and_serves_conformantly() {
+    // ISSUE-10 acceptance e2e: a refine+alloc job streamed through the
+    // CheckpointWriter reloads bit-identical to the keep-everything
+    // run, serves token-identically across the three serve shapes
+    // (contiguous KV, paged KV, speculative decode), and beats the
+    // one-shot uniform job on activation-weighted error at an exactly
+    // equal planned global budget.
+    let cfg = native_test_cfg();
+    let params = Params::init(&cfg, 0x10aa);
+    let g = Grammar::standard();
+    let corpus = build_corpus(&g, 11, 16, 8, 16, cfg.max_seq);
+    let method = slab::baselines::Method::Slab(SlabConfig {
+        iters: 2,
+        svd_iters: 4,
+        ..Default::default()
+    });
+    let rc = RefineConfig::with_rounds(2);
+
+    let kept = CompressJob::new(&params, &corpus.calib, &method)
+        .threads(0)
+        .refine(rc)
+        .budget(BudgetConfig::default())
+        .run()
+        .expect("refine+alloc job");
+    let plan = kept.report.budget.as_ref().expect("plan recorded in report");
+    assert_eq!(
+        plan.total_keep(),
+        plan.total_uniform_keep(),
+        "allocator must conserve the global keep budget exactly"
+    );
+    assert_eq!(kept.report.refine.len(), cfg.pruned.len(), "one refine report per linear");
+
+    // Same job streamed block-by-block: the checkpoint must reload
+    // the exact packed layers the keep-everything run retained.
+    let path = std::env::temp_dir().join("slab-tests/refined-alloc.slabckpt");
+    let streamed = CompressJob::new(&params, &corpus.calib, &method)
+        .threads(0)
+        .refine(rc)
+        .budget(BudgetConfig::default())
+        .keep_dense(false)
+        .keep_packed(false)
+        .stream_to(path.clone())
+        .run()
+        .expect("streaming refine+alloc job");
+    assert!(streamed.slab_layers.is_empty() && streamed.params.is_none());
+    assert_eq!(streamed.report.layers, kept.report.layers, "streaming is emit-only");
+    let reloaded = load_packed_checkpoint(&path).expect("reload streamed checkpoint");
+    assert_eq!(reloaded, kept.slab_layers, "streamed checkpoint == retained layers");
+
+    // Serve-path conformance over the reloaded model: contiguous KV,
+    // paged KV, and self-speculative decode must stream the same
+    // tokens (speculation is lossless by contract).
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![5, 9, 14],
+        vec![33, 34, 35, 36],
+        vec![7],
+        vec![40, 11, 22, 3, 8],
+    ];
+    let serve = |model: SlabModel, sched: SchedulerConfig| -> Vec<Vec<i32>> {
+        let server = Server::start_with(
+            Backend::NativeBatched(Box::new(model)),
+            ServerConfig { sched, ..Default::default() },
+        );
+        let sessions: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                server.submit(Request {
+                    prompt: p.clone(),
+                    max_new: 8,
+                    deadline: None,
+                })
+            })
+            .collect();
+        let out = sessions.into_iter().map(|s| s.collect().tokens).collect();
+        server.shutdown().expect("stats");
+        out
+    };
+    let model = |layers: &[(String, SlabLayer)]| SlabModel::from_packed(&params, layers, 2);
+    let contiguous = serve(
+        model(&reloaded),
+        SchedulerConfig { kv_page: 0, ..Default::default() },
+    );
+    let paged = serve(
+        model(&reloaded),
+        SchedulerConfig { kv_page: 2, page_budget: 64, ..Default::default() },
+    );
+    let speculative = serve(
+        model(&reloaded),
+        SchedulerConfig { speculate: true, draft_len: 3, ..Default::default() },
+    );
+    assert_eq!(contiguous, paged, "paged KV diverged on the refined checkpoint");
+    assert_eq!(contiguous, speculative, "speculation diverged on the refined checkpoint");
+    // And reloaded vs retained layers are interchangeable end to end.
+    let retained = serve(
+        model(&kept.slab_layers),
+        SchedulerConfig { kv_page: 0, ..Default::default() },
+    );
+    assert_eq!(contiguous, retained, "reload must be token-identical to the kept run");
+
+    // Equal-budget quality acceptance: the alloc+refined run's
+    // activation-weighted errors (err_after) must beat the one-shot
+    // uniform run's (a rounds=0 refine records the fit error without
+    // changing the decomposition).
+    let uniform = CompressJob::new(&params, &corpus.calib, &method)
+        .threads(0)
+        .refine(RefineConfig::with_rounds(0))
+        .run()
+        .expect("uniform one-shot job");
+    let werr = |reports: &[(String, RefineReport)], after: bool| -> f64 {
+        reports
+            .iter()
+            .map(|(_, r)| {
+                let e = if after { r.err_after() } else { r.err_before() } as f64;
+                e * e
+            })
+            .sum::<f64>()
+            .sqrt()
+    };
+    let oneshot_werr = werr(&uniform.report.refine, false);
+    let refined_werr = werr(&kept.report.refine, true);
+    assert!(
+        refined_werr < oneshot_werr,
+        "alloc+refine must reduce weighted error: {refined_werr} vs one-shot {oneshot_werr}"
+    );
+    // The planned budget is conserved exactly (asserted above); the
+    // realized kept counts may drift only by per-row flooring.
+    let total = |layers: &[slab::coordinator::LayerReport]| -> usize {
+        layers.iter().map(|l| l.kept).sum()
+    };
+    let (ka, ku) = (total(&kept.report.layers), total(&uniform.report.layers));
+    assert!(
+        (ka as f64 - ku as f64).abs() <= 0.02 * ku as f64,
+        "realized kept drift beyond flooring: alloc {ka} vs uniform {ku}"
+    );
 }
 
 #[test]
